@@ -1,0 +1,44 @@
+//! Paper-scale what-if: use the discrete-event simulator to project every
+//! algorithm's wall-clock and MFU on the paper's three hardware configs
+//! without owning a single GPU.
+//!
+//!     cargo run --release --example cluster_sim
+
+use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+
+fn main() {
+    let scenarios = [
+        ("CIFAR-100 / ResNet-50", Cluster::c1(), Workload::resnet50_cifar(3), 12),
+        ("ImageNet-1k / ResNet-50", Cluster::c1(), Workload::resnet50_imagenet(3), 48),
+        ("MiniPile / GPT-2 Medium", Cluster::c2(), Workload::gpt2_medium(8), 20),
+        ("WikiText-103 / GPT-2 XL", Cluster::c3(), Workload::gpt2_xl(4), 48),
+    ];
+    for (label, cluster, w, period) in scenarios {
+        println!("\n=== {label} on {} ({} devices) ===", cluster.name, cluster.m);
+        println!(
+            "{:<10} {:>12} {:>9} {:>8} {:>12}",
+            "method", "wall (s)", "occup.", "MFU", "comm (GB)"
+        );
+        for algo in SimAlgo::paper_set(period) {
+            let r = simulate(&cluster, &w, algo, 1);
+            println!(
+                "{:<10} {:>12.0} {:>8.1}% {:>7.1}% {:>12.0}",
+                r.algo,
+                r.wall_s,
+                100.0 * r.occupancy,
+                100.0 * r.mfu,
+                r.comm_gbytes
+            );
+        }
+    }
+    println!("\nand the straggler sweep (Fig 3B shape), ResNet-18/CIFAR @C1:");
+    println!("{:<10} {:>8} {:>12}", "method", "delay", "wall (s)");
+    for algo in [SimAlgo::Ddp, SimAlgo::Co2 { period: 12 }, SimAlgo::AdPsgd, SimAlgo::GoSgd, SimAlgo::LayUp] {
+        for d in [0.0, 8.0, 32.0] {
+            let c = Cluster::c1().with_straggler(0, d);
+            let w = Workload::resnet18_cifar(c.m);
+            let r = simulate(&c, &w, algo, 1);
+            println!("{:<10} {:>8.0} {:>12.0}", r.algo, d, r.wall_s);
+        }
+    }
+}

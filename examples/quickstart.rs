@@ -1,0 +1,36 @@
+//! Quickstart: train one model with LayUp on a 2-worker thread cluster and
+//! print the learning curve — the 30-second tour of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use layup::config::{Algorithm, TrainConfig};
+use layup::coordinator;
+use layup::manifest::Manifest;
+
+fn main() -> Result<()> {
+    // 1. load the AOT artifact manifest produced by `make artifacts`
+    let manifest = Manifest::load(&layup::artifacts_dir())?;
+
+    // 2. describe the run: model, algorithm, cluster size, steps
+    let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
+    cfg.eval_every = 10;
+
+    // 3. run — worker threads execute the per-layer XLA artifacts; LayUp's
+    //    updater threads gossip layer-wise updates concurrently
+    let summary = coordinator::run(&cfg, &manifest)?;
+
+    // 4. inspect the results
+    println!("algorithm: {}", summary.algorithm);
+    println!("{:<8} {:>8} {:>10} {:>10}", "step", "time(s)", "loss", "accuracy");
+    for p in &summary.curve.points {
+        println!("{:<8} {:>8.2} {:>10.4} {:>9.1}%", p.step, p.time_s, p.loss, 100.0 * p.accuracy);
+    }
+    println!(
+        "\nbest accuracy {:.1}%   gossip pushes applied {}, skipped-on-contention {}",
+        100.0 * summary.curve.best_accuracy(),
+        summary.gossip_applied,
+        summary.gossip_skipped
+    );
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Vision workload (CIFAR-analog): train the MLPNet-18 residual network with
+//! every algorithm of the paper on the same data and compare convergence —
+//! a miniature Table 1/2.
+//!
+//!     cargo run --release --example vision_training
+
+use anyhow::Result;
+use layup::config::Algorithm;
+use layup::config::TrainConfig;
+use layup::coordinator;
+use layup::manifest::Manifest;
+use layup::optim::{OptimKind, Schedule};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&layup::artifacts_dir())?;
+    let steps: usize = std::env::var("LAYUP_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    let workers = 3;
+
+    println!("mlpnet18 on synthetic-100, {workers} workers, {steps} steps\n");
+    println!("{:<14} {:>10} {:>10} {:>12}", "method", "best acc", "TTC (s)", "occupancy");
+    for &algo in Algorithm::all_paper() {
+        let mut cfg = TrainConfig::new("mlpnet18", algo, workers, steps);
+        cfg.optim = OptimKind::sgd(0.9, 5e-4);
+        cfg.schedule = Schedule::Cosine { lr: 0.04, t_max: steps, warmup_steps: 0, warmup_lr: 0.0 };
+        cfg.eval_every = (steps / 12).max(1);
+        let r = coordinator::run(&cfg, &manifest)?;
+        println!(
+            "{:<14} {:>9.1}% {:>10.1} {:>11.1}%",
+            r.algorithm,
+            100.0 * r.curve.best_accuracy(),
+            r.curve.time_to_convergence(0.01).unwrap_or(r.total_time_s),
+            100.0 * r.compute_occupancy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT compile path: lower every layer's fwd/bwd to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the `xla` crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Layers whose `share_key` matches share one artifact pair (e.g. all GPT blocks
+of one config lower to a single fwd/bwd HLO that Rust compiles once and
+executes per layer) — this keeps both AOT time and PJRT compile time linear
+in the number of *distinct* layer shapes, not network depth.
+
+Python runs exactly once (`make artifacts`); the Rust binary is self-contained
+afterwards and never touches Python on the training path.
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts [--scale smoke]
+                                       [--models gpt_mini,mlpnet18]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def kept_inputs(lowered, n_args: int):
+    """Indices of the flat inputs jax actually kept after DCE.
+
+    jax.jit prunes unused inputs from the lowered module (e.g. a bias that
+    only receives `sum(gy)` in the backward is not *read* by it). The Rust
+    runtime must supply exactly the kept buffers, so the manifest records
+    this list per artifact.
+    """
+    kept = lowered._lowering.compile_args.get("kept_var_idx")
+    if kept is None:
+        return list(range(n_args))
+    return sorted(kept)
+
+
+def lower_layer(layer: M.LayerDef):
+    """Returns (fwd_hlo_text, bwd_hlo_text, fwd_kept, bwd_kept)."""
+    fwd_specs = M.fwd_arg_specs(layer)
+    bwd_specs = M.bwd_arg_specs(layer)
+    fwd = jax.jit(M.fwd_flat(layer)).lower(*fwd_specs)
+    bwd = jax.jit(M.bwd_flat(layer)).lower(*bwd_specs)
+    return (
+        to_hlo_text(fwd),
+        to_hlo_text(bwd),
+        kept_inputs(fwd, len(fwd_specs)),
+        kept_inputs(bwd, len(bwd_specs)),
+    )
+
+
+def emit(out_dir: str, scale: str, only_models=None, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    reg = M.registry(scale)
+    if only_models:
+        reg = {k: v for k, v in reg.items() if k in only_models}
+
+    manifest = {"format": 1, "scale": scale, "models": {}}
+    emitted: dict[str, tuple] = {}  # share_key -> (fwd_file, bwd_file, fwd_kept, bwd_kept)
+
+    for mname, mdef in reg.items():
+        mlayers = []
+        for layer in mdef.layers:
+            if layer.share_key not in emitted:
+                fwd_txt, bwd_txt, fwd_kept, bwd_kept = lower_layer(layer)
+                stem = hashlib.sha1(layer.share_key.encode()).hexdigest()[:10]
+                fwd_file = f"{layer.share_key.split('_')[0]}_{stem}.fwd.hlo.txt"
+                bwd_file = f"{layer.share_key.split('_')[0]}_{stem}.bwd.hlo.txt"
+                with open(os.path.join(out_dir, fwd_file), "w") as f:
+                    f.write(fwd_txt)
+                with open(os.path.join(out_dir, bwd_file), "w") as f:
+                    f.write(bwd_txt)
+                emitted[layer.share_key] = (fwd_file, bwd_file, fwd_kept, bwd_kept)
+                if verbose:
+                    print(f"  lowered {layer.share_key} "
+                          f"({len(fwd_txt)//1024} KiB fwd, {len(bwd_txt)//1024} KiB bwd)")
+            fwd_file, bwd_file, fwd_kept, bwd_kept = emitted[layer.share_key]
+            mlayers.append({
+                "name": layer.name,
+                "kind": layer.kind,
+                "share_key": layer.share_key,
+                "fwd": fwd_file,
+                "bwd": bwd_file,
+                "fwd_kept": fwd_kept,
+                "bwd_kept": bwd_kept,
+                "params": [
+                    {"name": p.name, "shape": list(p.shape),
+                     "init": p.init, "scale": p.scale}
+                    for p in layer.params
+                ],
+                "x_shape": list(layer.x_shape),
+                "x_dtype": layer.x_dtype,
+                "y_shape": list(layer.y_shape) if layer.y_shape else None,
+                "targets_shape": (list(layer.targets_shape)
+                                  if layer.targets_shape else None),
+                "fwd_flops": layer.fwd_flops,
+                "bwd_flops": layer.bwd_flops,
+            })
+        manifest["models"][mname] = {
+            "batch": mdef.batch,
+            "task": mdef.task,
+            "n_valid_classes": mdef.n_valid_classes,
+            "metric": mdef.metric,
+            "data": mdef.data,
+            "param_count": mdef.param_count(),
+            "layers": mlayers,
+        }
+        if verbose:
+            print(f"model {mname}: {len(mdef.layers)} layers, "
+                  f"{mdef.param_count():,} params")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--scale", default="default", choices=["default", "smoke"])
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of models to emit")
+    args = ap.parse_args()
+    only = args.models.split(",") if args.models else None
+    emit(args.out, args.scale, only)
+    print(f"manifest + artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

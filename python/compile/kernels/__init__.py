@@ -1,0 +1,29 @@
+"""L1 Pallas kernels for the LayUp reproduction.
+
+Every kernel runs under `interpret=True` (CPU PJRT), is tiled for the TPU
+memory hierarchy (see DESIGN.md §Hardware-Adaptation), and carries a custom
+VJP whose backward is itself Pallas. `ref.py` is the pure-jnp oracle used by
+the pytest/hypothesis suite.
+"""
+
+from .matmul import matmul, linear, matmul_fwd_pallas, actgrad_pallas
+from .layernorm import layernorm, layernorm_nd, layernorm_fwd_pallas, layernorm_bwd_pallas
+from .softmax_xent import softmax_xent, softmax_xent_fwd_pallas, softmax_xent_bwd_pallas
+from .attention import attention, attention_fwd_pallas, attention_bwd_pallas
+
+__all__ = [
+    "matmul",
+    "linear",
+    "matmul_fwd_pallas",
+    "actgrad_pallas",
+    "layernorm",
+    "layernorm_nd",
+    "layernorm_fwd_pallas",
+    "layernorm_bwd_pallas",
+    "softmax_xent",
+    "softmax_xent_fwd_pallas",
+    "softmax_xent_bwd_pallas",
+    "attention",
+    "attention_fwd_pallas",
+    "attention_bwd_pallas",
+]

@@ -1,0 +1,107 @@
+"""Causal scaled-dot-product attention Pallas kernels (fwd + bwd).
+
+GPU→TPU rethink (DESIGN.md §Hardware-Adaptation): instead of a
+threadblock-per-query-tile flash decomposition with shared-memory softmax
+state, the kernel processes one head per grid step with the full (S, S)
+score tile resident in VMEM — at the sequence lengths this repo trains
+(S ≤ 256), S² f32 scores fit VMEM many times over, so the online-softmax
+machinery would only add passes. Both matmuls in the kernel hit the MXU;
+the mask/softmax run on the VPU between them, fused so scores never leave
+VMEM.
+
+The backward kernel implements the standard attention VJP per head
+(recompute-style: p is rebuilt from q, k rather than stashed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(row >= col, scores, -1e9)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention_fwd_pallas(q, k, v, causal: bool = True):
+    """q, k, v: [H, S, Dh] (batch and heads folded together). Returns [H, S, Dh]."""
+    h, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_fwd_kernel, causal=causal, scale=scale),
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attn_bwd_kernel(
+    q_ref, k_ref, v_ref, gy_ref, gq_ref, gk_ref, gv_ref, *, causal: bool, scale: float
+):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    gy = gy_ref[0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(row >= col, scores, -1e9)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    gv_ref[0] = jnp.dot(p.T, gy, preferred_element_type=jnp.float32)
+    gp = jnp.dot(gy, v.T, preferred_element_type=jnp.float32)
+    gs = p * (gp - jnp.sum(gp * p, axis=-1, keepdims=True))
+    gq_ref[0] = jnp.dot(gs, k, preferred_element_type=jnp.float32) * scale
+    gk_ref[0] = jnp.dot(gs.T, q, preferred_element_type=jnp.float32) * scale
+
+
+def attention_bwd_pallas(q, k, v, gy, causal: bool = True):
+    h, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    shape = jax.ShapeDtypeStruct((h, s, dh), q.dtype)
+    return pl.pallas_call(
+        functools.partial(_attn_bwd_kernel, causal=causal, scale=scale),
+        grid=(h,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shape, shape, shape],
+        interpret=True,
+    )(q, k, v, gy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Differentiable causal attention over folded heads: [H, S, Dh]."""
+    return attention_fwd_pallas(q, k, v, causal)
+
+
+def _attn_vjp_fwd(q, k, v, causal):
+    return attention_fwd_pallas(q, k, v, causal), (q, k, v)
+
+
+def _attn_vjp_bwd(causal, res, gy):
+    q, k, v = res
+    return attention_bwd_pallas(q, k, v, gy, causal)
+
+
+attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)

@@ -1,0 +1,124 @@
+"""Row-tiled LayerNorm Pallas kernels (forward + analytic backward).
+
+LayerNorm is VPU work on TPU: each grid step normalizes a (bm, D) block of
+rows held in VMEM. The backward kernel implements the standard analytic
+gradient; the per-row parts (gx) are computed in-kernel while the parameter
+gradients (dgamma, dbeta) are per-block partial sums reduced outside the
+kernel (a [nblocks, D] tensor summed over axis 0) to keep the kernel free of
+cross-block communication.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+EPS = 1e-5
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + EPS)
+    o_ref[...] = xhat * g_ref[...] + b_ref[...]
+
+
+def layernorm_fwd_pallas(x, gamma, beta):
+    m, d = x.shape
+    bm = _pick(BM, m)
+    return pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def _ln_bwd_kernel(x_ref, g_ref, gy_ref, gx_ref, dg_ref, db_ref):
+    x = x_ref[...]
+    gy = gy_ref[...]
+    gamma = g_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + EPS)
+    xhat = (x - mu) * rstd
+    gxhat = gy * gamma
+    gx_ref[...] = rstd * (
+        gxhat
+        - jnp.mean(gxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gxhat * xhat, axis=-1, keepdims=True)
+    )
+    dg_ref[...] = jnp.sum(gy * xhat, axis=0)[None, :]
+    db_ref[...] = jnp.sum(gy, axis=0)[None, :]
+
+
+def layernorm_bwd_pallas(x, gamma, gy):
+    """Returns (gx, dgamma, dbeta)."""
+    m, d = x.shape
+    bm = _pick(BM, m)
+    nb = m // bm
+    gx, dg_part, db_part = pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), x.dtype),
+            jax.ShapeDtypeStruct((nb, d), x.dtype),
+            jax.ShapeDtypeStruct((nb, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, gy)
+    return gx, jnp.sum(dg_part, axis=0), jnp.sum(db_part, axis=0)
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """Differentiable row-wise LayerNorm over the last axis. x: [M, D]."""
+    return layernorm_fwd_pallas(x, gamma, beta)
+
+
+def _ln_vjp_fwd(x, gamma, beta):
+    return layernorm_fwd_pallas(x, gamma, beta), (x, gamma)
+
+
+def _ln_vjp_bwd(res, gy):
+    x, gamma = res
+    gx, dgamma, dbeta = layernorm_bwd_pallas(x, gamma, gy)
+    return gx, dgamma, dbeta
+
+
+layernorm.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)
+
+
+def layernorm_nd(x, gamma, beta):
+    """layernorm() over the last axis for inputs with leading batch dims."""
+    lead = x.shape[:-1]
+    y = layernorm(x.reshape(-1, x.shape[-1]), gamma, beta)
+    return y.reshape(*lead, x.shape[-1])

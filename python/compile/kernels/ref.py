@@ -1,0 +1,113 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the ground-truth implementations used by pytest (and hypothesis
+sweeps) to validate the Pallas kernels in matmul.py / layernorm.py /
+softmax_xent.py / attention.py. They are deliberately written in the most
+direct jnp style possible — no tiling, no tricks — so that a mismatch
+always points at the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def act_apply(z, act: str):
+    """Reference activation. `act` in {'none', 'relu', 'gelu'}."""
+    if act == "none":
+        return z
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "gelu":
+        # tanh-approximation GELU (what the kernel implements, matching GPT-2)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        return 0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def act_grad(z, act: str):
+    """d act(z) / d z, reference."""
+    if act == "none":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        inner = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * dinner
+    raise ValueError(f"unknown act {act!r}")
+
+
+def matmul(x, w, b=None, act: str = "none"):
+    """y = act(x @ w + b). x: [M, K], w: [K, N], b: [N] or None."""
+    z = x @ w
+    if b is not None:
+        z = z + b
+    return act_apply(z, act)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise layernorm over the last axis. x: [M, D]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + eps)
+    return xhat * gamma + beta
+
+
+def layernorm_bwd(x, gamma, gy, eps: float = 1e-5):
+    """Analytic layernorm backward. Returns (gx, ggamma, gbeta)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mu) * rstd
+    ggamma = jnp.sum(gy * xhat, axis=0)
+    gbeta = jnp.sum(gy, axis=0)
+    gxhat = gy * gamma
+    gx = rstd * (
+        gxhat
+        - jnp.mean(gxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gxhat * xhat, axis=-1, keepdims=True)
+    )
+    return gx, ggamma, gbeta
+
+
+def softmax_xent(logits, targets, n_valid: int):
+    """Mean cross-entropy over rows, with classes >= n_valid masked out.
+
+    logits: [M, C] f32, targets: [M] i32 (< n_valid). Returns scalar mean
+    NLL and the count of argmax-correct rows (restricted to valid classes).
+    """
+    m, c = logits.shape
+    mask = jnp.arange(c) < n_valid
+    masked = jnp.where(mask, logits, -1e9)
+    mx = masked.max(-1)
+    lse = jnp.log(jnp.sum(jnp.exp(masked - mx[:, None]), -1)) + mx
+    nll = lse - masked[jnp.arange(m), targets]
+    correct = jnp.sum((jnp.argmax(masked, axis=-1) == targets).astype(jnp.float32))
+    return jnp.mean(nll), correct
+
+
+def softmax_xent_bwd(logits, targets, n_valid: int, gloss=1.0):
+    """d mean-NLL / d logits."""
+    m, c = logits.shape
+    mask = jnp.arange(c) < n_valid
+    masked = jnp.where(mask, logits, -1e9)
+    p = jnp.exp(masked - masked.max(-1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    onehot = jnp.zeros_like(p).at[jnp.arange(m), targets].set(1.0)
+    return (p - onehot) * (gloss / m) * mask.astype(logits.dtype)
+
+
+def attention(q, k, v, causal: bool = True):
+    """Scaled dot-product attention. q,k,v: [H, S, Dh] (heads folded out front)."""
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        causal_mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(causal_mask, scores, -1e9)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

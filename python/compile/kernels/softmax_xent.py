@@ -1,0 +1,127 @@
+"""Softmax cross-entropy Pallas kernels (loss head of every model).
+
+Forward: a row-tiled kernel computes, per (bm, C) block of logits held in
+VMEM, the per-row NLL (numerically stable logsumexp) and the per-block count
+of argmax-correct rows. Classes >= `n_valid` are masked to -1e9 so models can
+pad their class dimension up to an MXU-friendly multiple (e.g. 100 classes
+padded to 128 — see DESIGN.md).
+
+Backward: a second kernel computes (softmax(logits) - onehot(targets)) *
+gloss / M in one pass, masked to the valid classes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _xent_fwd_kernel(logits_ref, tgt_ref, nll_ref, correct_ref, *, n_valid: int):
+    logits = logits_ref[...]
+    tgt = tgt_ref[...]
+    bm, c = logits.shape
+    mask = jax.lax.broadcasted_iota(jnp.int32, (bm, c), 1) < n_valid
+    masked = jnp.where(mask, logits, -1e9)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(masked - mx), axis=-1)) + mx[:, 0]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (bm, c), 1) == tgt[:, None]
+    picked = jnp.sum(jnp.where(onehot, masked, 0.0), axis=-1)
+    nll_ref[...] = lse - picked
+    pred = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    correct_ref[...] = jnp.sum((pred == tgt).astype(jnp.float32))[None]
+
+
+def softmax_xent_fwd_pallas(logits, targets, n_valid: int):
+    """Returns (nll_rows [M], correct_per_block [nb])."""
+    m, c = logits.shape
+    bm = _pick(BM, m)
+    nb = m // bm
+    return pl.pallas_call(
+        functools.partial(_xent_fwd_kernel, n_valid=n_valid),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), logits.dtype),
+            jax.ShapeDtypeStruct((nb,), logits.dtype),
+        ],
+        interpret=True,
+    )(logits, targets)
+
+
+def _xent_bwd_kernel(logits_ref, tgt_ref, gl_ref, o_ref, *, n_valid: int, m_total: int):
+    logits = logits_ref[...]
+    tgt = tgt_ref[...]
+    bm, c = logits.shape
+    mask = jax.lax.broadcasted_iota(jnp.int32, (bm, c), 1) < n_valid
+    masked = jnp.where(mask, logits, -1e9)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    p = jnp.exp(masked - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (bm, c), 1) == tgt[:, None]).astype(
+        logits.dtype
+    )
+    o_ref[...] = (p - onehot) * (gl_ref[0] / m_total) * mask.astype(logits.dtype)
+
+
+def softmax_xent_bwd_pallas(logits, targets, gloss, n_valid: int):
+    m, c = logits.shape
+    bm = _pick(BM, m)
+    return pl.pallas_call(
+        functools.partial(_xent_bwd_kernel, n_valid=n_valid, m_total=m),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), logits.dtype),
+        interpret=True,
+    )(logits, targets, gloss.reshape(1))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def softmax_xent(logits, targets, n_valid: int):
+    """Mean masked cross-entropy. Returns (mean_nll, correct_count).
+
+    logits: [M, C] f32; targets: [M] i32 with values < n_valid. Only the
+    mean NLL is differentiable (the correct count gets a zero cotangent).
+    """
+    nll, correct = softmax_xent_fwd_pallas(logits, targets, n_valid)
+    return jnp.mean(nll), jnp.sum(correct)
+
+
+def _xent_vjp_fwd(logits, targets, n_valid):
+    out = softmax_xent(logits, targets, n_valid)
+    return out, (logits, targets)
+
+
+def _xent_vjp_bwd(n_valid, res, g):
+    logits, targets = res
+    gloss, _gcorrect = g
+    glogits = softmax_xent_bwd_pallas(logits, targets, jnp.asarray(gloss), n_valid)
+    gtargets = np.zeros(targets.shape, jax.dtypes.float0)
+    return glogits, gtargets
+
+
+softmax_xent.defvjp(_xent_vjp_fwd, _xent_vjp_bwd)

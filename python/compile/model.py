@@ -1,0 +1,454 @@
+"""L2 — layered JAX model definitions for the LayUp reproduction.
+
+Every model is expressed as an ordered list of `LayerDef`s. For each layer we
+AOT-lower TWO flat-signature functions to HLO text (see aot.py):
+
+    fwd:  (*params, x[, targets])      -> (y,)            kind: first|mid
+                                       -> (loss, metric)   kind: loss
+    bwd:  (*params, x, gy)             -> (*gparams, gx)   kind: mid
+          (*params, x, gy)             -> (*gparams,)      kind: first
+          (*params, x, targets)        -> (*gparams, gx)   kind: loss  (cotangent 1 on loss)
+
+This per-layer factoring is the load-bearing design decision of the repo: it
+lets the Rust coordinator (L3) run backpropagation layer by layer, publishing
+each layer's gradient to the gossip/updater threads the moment it exists —
+the mechanism of LayUp Algorithm 1. Backward functions are recompute-style
+(they take the same inputs as forward plus the output cotangent), which keeps
+artifact interfaces flat and reproduces the paper's ~2x bwd/fwd timing ratio
+(Table A4).
+
+All heavy compute inside `fwd` goes through the L1 Pallas kernels
+(`kernels.linear`, `kernels.layernorm_nd`, `kernels.attention`,
+`kernels.softmax_xent`); their custom VJPs make the lowered backward HLO
+Pallas-built as well.
+
+Models defined here (shapes chosen as powers of two for the 128-tile kernels;
+see DESIGN.md for the paper-scale → repo-scale substitution table):
+
+  mlpnet18 / mlpnet50  — residual-MLP analogs of ResNet-18/50 (stem + K
+                         residual blocks + classifier), 100-way synthetic
+                         vision classification (class dim padded to 128).
+  gpt_mini             — GPT-2-architecture LM (learned pos-emb, pre-LN
+                         blocks, causal attention, untied head).
+  rnn_sentiment        — 2-layer tanh-RNN sentiment classifier (Table A3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'uniform'
+    scale: float = 0.02   # stddev for normal, limit for uniform
+
+
+@dataclasses.dataclass
+class LayerDef:
+    name: str
+    kind: str                   # 'first' | 'mid' | 'loss'
+    share_key: str              # layers with equal keys share HLO artifacts
+    params: list                # list[ParamSpec]
+    x_shape: tuple
+    x_dtype: str                # 'f32' | 'i32'
+    y_shape: Optional[tuple]    # None for loss layers
+    fwd: Callable               # fwd(params_list, x[, targets])
+    has_targets: bool = False
+    targets_shape: Optional[tuple] = None
+    fwd_flops: int = 0
+    bwd_flops: int = 0
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    layers: list
+    batch: int
+    task: str                   # 'classification' | 'lm'
+    n_valid_classes: int        # classes (classification) or vocab (lm)
+    data: dict                  # dataset spec consumed by rust data generators
+    metric: str                 # 'acc_count' (correct predictions) | 'acc_count_tokens'
+
+    def param_count(self) -> int:
+        n = 0
+        for l in self.layers:
+            for p in l.params:
+                sz = 1
+                for d in p.shape:
+                    sz *= d
+                n += sz
+        return n
+
+
+def _mm_flops(m, k, n):
+    return 2 * m * k * n
+
+
+# ---------------------------------------------------------------------------
+# Vision: residual-MLP analog of ResNet ("MLPNet")
+# ---------------------------------------------------------------------------
+
+def _stem_fwd(params, x):
+    w, b = params
+    return K.matmul(x, w, b, "relu")
+
+
+def _resblock_fwd(params, x):
+    g, beta, w1, b1, w2, b2 = params
+    h = K.layernorm(x, g, beta)
+    h = K.matmul(h, w1, b1, "relu")
+    h = K.matmul(h, w2, b2, "none")
+    return x + h
+
+
+def _make_cls_fwd(n_valid):
+    def _cls_fwd(params, x, targets):
+        w, b = params
+        logits = K.matmul(x, w, b, "none")
+        return K.softmax_xent(logits, targets, n_valid)
+    return _cls_fwd
+
+
+def mlpnet(name: str, n_blocks: int, batch=128, n_in=256, hidden=256,
+           n_classes=100, class_pad=128) -> ModelDef:
+    """Residual-MLP vision model: stem -> n_blocks residual blocks -> classifier."""
+    layers = []
+    he = (2.0 / n_in) ** 0.5
+    layers.append(LayerDef(
+        name="stem", kind="first", share_key=f"mlp_stem_{batch}x{n_in}x{hidden}",
+        params=[ParamSpec("w", (n_in, hidden), "normal", he),
+                ParamSpec("b", (hidden,), "zeros")],
+        x_shape=(batch, n_in), x_dtype="f32", y_shape=(batch, hidden),
+        fwd=_stem_fwd,
+        fwd_flops=_mm_flops(batch, n_in, hidden),
+        bwd_flops=2 * _mm_flops(batch, n_in, hidden),
+    ))
+    heh = (2.0 / hidden) ** 0.5
+    for i in range(n_blocks):
+        layers.append(LayerDef(
+            name=f"block{i}", kind="mid", share_key=f"mlp_block_{batch}x{hidden}",
+            params=[ParamSpec("ln_g", (hidden,), "ones"),
+                    ParamSpec("ln_b", (hidden,), "zeros"),
+                    ParamSpec("w1", (hidden, hidden), "normal", heh),
+                    ParamSpec("b1", (hidden,), "zeros"),
+                    ParamSpec("w2", (hidden, hidden), "normal", heh / (2 * n_blocks) ** 0.5),
+                    ParamSpec("b2", (hidden,), "zeros")],
+            x_shape=(batch, hidden), x_dtype="f32", y_shape=(batch, hidden),
+            fwd=_resblock_fwd,
+            fwd_flops=2 * _mm_flops(batch, hidden, hidden),
+            bwd_flops=4 * _mm_flops(batch, hidden, hidden),
+        ))
+    layers.append(LayerDef(
+        name="classifier", kind="loss", share_key=f"mlp_cls_{batch}x{hidden}x{class_pad}v{n_classes}",
+        params=[ParamSpec("w", (hidden, class_pad), "normal", (1.0 / hidden) ** 0.5),
+                ParamSpec("b", (class_pad,), "zeros")],
+        x_shape=(batch, hidden), x_dtype="f32", y_shape=None,
+        fwd=_make_cls_fwd(n_classes),
+        has_targets=True, targets_shape=(batch,),
+        fwd_flops=_mm_flops(batch, hidden, class_pad),
+        bwd_flops=2 * _mm_flops(batch, hidden, class_pad),
+    ))
+    return ModelDef(
+        name=name, layers=layers, batch=batch, task="classification",
+        n_valid_classes=n_classes,
+        data={"kind": "vision", "n_in": n_in, "n_classes": n_classes},
+        metric="acc_count",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GPT: pre-LN transformer LM (GPT-2 architecture at repo scale)
+# ---------------------------------------------------------------------------
+
+def _make_embed_fwd(seq, dim):
+    def _embed_fwd(params, tokens):
+        wte, wpe = params
+        return wte[tokens] + wpe[None, :, :]
+    return _embed_fwd
+
+
+def _make_block_fwd(n_head):
+    def _block_fwd(params, x):
+        (ln1_g, ln1_b, wqkv, bqkv, wproj, bproj,
+         ln2_g, ln2_b, wfc1, bfc1, wfc2, bfc2) = params
+        b, s, d = x.shape
+        dh = d // n_head
+        a = K.layernorm_nd(x, ln1_g, ln1_b)
+        qkv = K.linear(a, wqkv, bqkv, "none")          # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def fold(t):  # [B, S, D] -> [B*H, S, Dh]
+            return t.reshape(b, s, n_head, dh).transpose(0, 2, 1, 3).reshape(b * n_head, s, dh)
+
+        def unfold(t):
+            return t.reshape(b, n_head, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+
+        o = K.attention(fold(q), fold(k), fold(v), True)
+        x = x + K.linear(unfold(o), wproj, bproj, "none")
+        m = K.layernorm_nd(x, ln2_g, ln2_b)
+        h = K.linear(m, wfc1, bfc1, "gelu")
+        return x + K.linear(h, wfc2, bfc2, "none")
+    return _block_fwd
+
+
+def _make_lmhead_fwd(vocab):
+    def _lmhead_fwd(params, x, targets):
+        lnf_g, lnf_b, wout = params
+        b, s, d = x.shape
+        h = K.layernorm_nd(x, lnf_g, lnf_b)
+        logits = K.matmul(h.reshape(b * s, d), wout, jnp.zeros((wout.shape[1],), x.dtype), "none")
+        return K.softmax_xent(logits, targets.reshape(b * s), vocab)
+    return _lmhead_fwd
+
+
+def gpt(name: str, batch=8, seq=64, vocab=512, dim=128, n_head=4,
+        n_layer=4, ffn=None) -> ModelDef:
+    """GPT-2-architecture causal LM at repo scale."""
+    ffn = ffn or 4 * dim
+    rows = batch * seq
+    layers = [LayerDef(
+        name="embed", kind="first", share_key=f"gpt_embed_{batch}x{seq}x{vocab}x{dim}",
+        params=[ParamSpec("wte", (vocab, dim), "normal", 0.02),
+                ParamSpec("wpe", (seq, dim), "normal", 0.01)],
+        x_shape=(batch, seq), x_dtype="i32", y_shape=(batch, seq, dim),
+        fwd=_make_embed_fwd(seq, dim),
+        fwd_flops=2 * rows * dim,
+        bwd_flops=4 * rows * dim,
+    )]
+    attn_flops = _mm_flops(rows, dim, 3 * dim) + 4 * batch * n_head * seq * seq * (dim // n_head) \
+        + _mm_flops(rows, dim, dim)
+    mlp_flops = 2 * _mm_flops(rows, dim, ffn)
+    proj_std = 0.02 / (2 * n_layer) ** 0.5
+    for i in range(n_layer):
+        layers.append(LayerDef(
+            name=f"block{i}", kind="mid",
+            share_key=f"gpt_block_{batch}x{seq}x{dim}h{n_head}f{ffn}",
+            params=[ParamSpec("ln1_g", (dim,), "ones"), ParamSpec("ln1_b", (dim,), "zeros"),
+                    ParamSpec("wqkv", (dim, 3 * dim), "normal", 0.02),
+                    ParamSpec("bqkv", (3 * dim,), "zeros"),
+                    ParamSpec("wproj", (dim, dim), "normal", proj_std),
+                    ParamSpec("bproj", (dim,), "zeros"),
+                    ParamSpec("ln2_g", (dim,), "ones"), ParamSpec("ln2_b", (dim,), "zeros"),
+                    ParamSpec("wfc1", (dim, ffn), "normal", 0.02),
+                    ParamSpec("bfc1", (ffn,), "zeros"),
+                    ParamSpec("wfc2", (ffn, dim), "normal", proj_std),
+                    ParamSpec("bfc2", (dim,), "zeros")],
+            x_shape=(batch, seq, dim), x_dtype="f32", y_shape=(batch, seq, dim),
+            fwd=_make_block_fwd(n_head),
+            fwd_flops=attn_flops + mlp_flops,
+            bwd_flops=2 * (attn_flops + mlp_flops),
+        ))
+    layers.append(LayerDef(
+        name="lm_head", kind="loss", share_key=f"gpt_head_{batch}x{seq}x{dim}x{vocab}",
+        params=[ParamSpec("lnf_g", (dim,), "ones"), ParamSpec("lnf_b", (dim,), "zeros"),
+                ParamSpec("wout", (dim, vocab), "normal", 0.02)],
+        x_shape=(batch, seq, dim), x_dtype="f32", y_shape=None,
+        fwd=_make_lmhead_fwd(vocab),
+        has_targets=True, targets_shape=(batch, seq),
+        fwd_flops=_mm_flops(rows, dim, vocab),
+        bwd_flops=2 * _mm_flops(rows, dim, vocab),
+    ))
+    return ModelDef(
+        name=name, layers=layers, batch=batch, task="lm", n_valid_classes=vocab,
+        data={"kind": "lm", "vocab": vocab, "seq": seq},
+        metric="acc_count_tokens",
+    )
+
+
+# ---------------------------------------------------------------------------
+# RNN sentiment classifier (Table A3 analog)
+# ---------------------------------------------------------------------------
+
+def _make_rnn1_fwd(hidden):
+    def _rnn1_fwd(params, tokens):
+        emb, wx, wh, bh = params
+        b, s = tokens.shape
+        xseq = emb[tokens]                             # [B, S, E]
+        h0 = jnp.zeros((b, hidden), xseq.dtype)
+
+        def step(h, x_t):
+            h = jnp.tanh(K.matmul(x_t, wx, bh, "none") + h @ wh)
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, xseq.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2)                   # [B, S, H]
+    return _rnn1_fwd
+
+
+def _make_rnn2_fwd():
+    def _rnn2_fwd(params, xseq):
+        wx, wh, bh = params
+        b, s, hdim = xseq.shape
+        h0 = jnp.zeros((b, hdim), xseq.dtype)
+
+        def step(h, x_t):
+            h = jnp.tanh(K.matmul(x_t, wx, bh, "none") + h @ wh)
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, xseq.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2)
+    return _rnn2_fwd
+
+
+def _make_sentiment_cls_fwd(n_classes):
+    def _fwd(params, xseq, targets):
+        w, b = params
+        pooled = jnp.mean(xseq, axis=1)                # [B, H]
+        logits = K.matmul(pooled, w, b, "none")
+        return K.softmax_xent(logits, targets, n_classes)
+    return _fwd
+
+
+def rnn_sentiment(name="rnn_sentiment", batch=64, seq=32, vocab=256,
+                  emb=64, hidden=128, n_classes=2, class_pad=128) -> ModelDef:
+    """2-layer tanh-RNN mean-pool sentiment classifier (IMDb/LSTM analog)."""
+    rows = batch * seq
+    layers = [
+        LayerDef(
+            name="rnn1", kind="first", share_key=f"rnn1_{batch}x{seq}x{vocab}x{emb}x{hidden}",
+            params=[ParamSpec("emb", (vocab, emb), "normal", 0.1),
+                    ParamSpec("wx", (emb, hidden), "normal", (1.0 / emb) ** 0.5),
+                    ParamSpec("wh", (hidden, hidden), "normal", (0.5 / hidden) ** 0.5),
+                    ParamSpec("bh", (hidden,), "zeros")],
+            x_shape=(batch, seq), x_dtype="i32", y_shape=(batch, seq, hidden),
+            fwd=_make_rnn1_fwd(hidden),
+            fwd_flops=rows * 2 * (emb + hidden) * hidden,
+            bwd_flops=2 * rows * 2 * (emb + hidden) * hidden,
+        ),
+        LayerDef(
+            name="rnn2", kind="mid", share_key=f"rnn2_{batch}x{seq}x{hidden}",
+            params=[ParamSpec("wx", (hidden, hidden), "normal", (1.0 / hidden) ** 0.5),
+                    ParamSpec("wh", (hidden, hidden), "normal", (0.5 / hidden) ** 0.5),
+                    ParamSpec("bh", (hidden,), "zeros")],
+            x_shape=(batch, seq, hidden), x_dtype="f32", y_shape=(batch, seq, hidden),
+            fwd=_make_rnn2_fwd(),
+            fwd_flops=rows * 4 * hidden * hidden,
+            bwd_flops=2 * rows * 4 * hidden * hidden,
+        ),
+        LayerDef(
+            name="classifier", kind="loss", share_key=f"rnn_cls_{batch}x{seq}x{hidden}v{n_classes}",
+            params=[ParamSpec("w", (hidden, class_pad), "normal", (1.0 / hidden) ** 0.5),
+                    ParamSpec("b", (class_pad,), "zeros")],
+            x_shape=(batch, seq, hidden), x_dtype="f32", y_shape=None,
+            fwd=_make_sentiment_cls_fwd(n_classes),
+            has_targets=True, targets_shape=(batch,),
+            fwd_flops=2 * batch * hidden * class_pad,
+            bwd_flops=4 * batch * hidden * class_pad,
+        ),
+    ]
+    return ModelDef(
+        name=name, layers=layers, batch=batch, task="classification",
+        n_valid_classes=n_classes,
+        data={"kind": "sentiment", "vocab": vocab, "seq": seq, "n_classes": n_classes},
+        metric="acc_count",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry + flat-signature artifact functions
+# ---------------------------------------------------------------------------
+
+def registry(scale: str = "default") -> dict:
+    """All models emitted by `make artifacts`.
+
+    `scale='smoke'` shrinks everything for fast CI-style runs.
+    """
+    if scale == "smoke":
+        return {
+            "mlpnet18": mlpnet("mlpnet18", 2, batch=32, n_in=64, hidden=64,
+                               n_classes=10, class_pad=16),
+            "gpt_mini": gpt("gpt_mini", batch=2, seq=16, vocab=64, dim=32,
+                            n_head=2, n_layer=2),
+            "rnn_sentiment": rnn_sentiment(batch=8, seq=8, vocab=32, emb=8,
+                                           hidden=16, class_pad=16),
+        }
+    # Default scale is sized for the single-CPU PJRT substrate this repo
+    # trains on (DESIGN.md substitution table): depth structure matches the
+    # paper's models (8 vs 16 residual blocks ~ ResNet-18/50; pre-LN GPT),
+    # widths are cut so a full multi-algorithm table regenerates in minutes.
+    return {
+        "mlpnet18": mlpnet("mlpnet18", 8, batch=64, n_in=128, hidden=128),
+        "mlpnet50": mlpnet("mlpnet50", 16, batch=64, n_in=128, hidden=128),
+        "gpt_mini": gpt("gpt_mini", batch=4, seq=64, vocab=256, dim=128,
+                        n_head=4, n_layer=3, ffn=256),
+        "rnn_sentiment": rnn_sentiment(batch=32, seq=16, vocab=128, emb=32,
+                                       hidden=64),
+    }
+
+
+def _dtype(s: str):
+    return {"f32": jnp.float32, "i32": jnp.int32}[s]
+
+
+def fwd_flat(layer: LayerDef) -> Callable:
+    """Flat-signature forward: (*params, x[, targets]) -> tuple of outputs."""
+    n_p = len(layer.params)
+
+    def f(*args):
+        params = list(args[:n_p])
+        out = layer.fwd(params, *args[n_p:])
+        return out if isinstance(out, tuple) else (out,)
+
+    return f
+
+
+def bwd_flat(layer: LayerDef) -> Callable:
+    """Flat-signature recompute-style backward (see module docstring)."""
+    n_p = len(layer.params)
+
+    if layer.kind == "loss":
+        def f(*args):
+            params = list(args[:n_p])
+            x, targets = args[n_p], args[n_p + 1]
+
+            def scalar_loss(params, x):
+                loss, _metric = layer.fwd(params, x, targets)
+                return loss
+
+            gp, gx = jax.grad(scalar_loss, argnums=(0, 1))(params, x)
+            return (*gp, gx)
+        return f
+
+    if layer.kind == "first":
+        def f(*args):
+            params = list(args[:n_p])
+            x, gy = args[n_p], args[n_p + 1]
+            _, vjp = jax.vjp(lambda p: layer.fwd(p, x), params)
+            (gp,) = vjp(gy)
+            return tuple(gp)
+        return f
+
+    def f(*args):
+        params = list(args[:n_p])
+        x, gy = args[n_p], args[n_p + 1]
+        _, vjp = jax.vjp(lambda p, x: layer.fwd(p, x), params, x)
+        gp, gx = vjp(gy)
+        return (*gp, gx)
+    return f
+
+
+def fwd_arg_specs(layer: LayerDef):
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in layer.params]
+    specs.append(jax.ShapeDtypeStruct(layer.x_shape, _dtype(layer.x_dtype)))
+    if layer.kind == "loss":
+        specs.append(jax.ShapeDtypeStruct(layer.targets_shape, jnp.int32))
+    return specs
+
+
+def bwd_arg_specs(layer: LayerDef):
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in layer.params]
+    specs.append(jax.ShapeDtypeStruct(layer.x_shape, _dtype(layer.x_dtype)))
+    if layer.kind == "loss":
+        specs.append(jax.ShapeDtypeStruct(layer.targets_shape, jnp.int32))
+    else:
+        specs.append(jax.ShapeDtypeStruct(layer.y_shape, jnp.float32))
+    return specs

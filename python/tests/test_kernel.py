@@ -1,0 +1,218 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/seeds; explicit cases pin the shapes the AOT
+models actually use. These tests are the core correctness signal for the
+artifacts the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+# shapes are powers of two (kernel block-picking contract)
+POW2 = st.sampled_from([8, 16, 32, 64, 128, 256])
+POW2_SMALL = st.sampled_from([8, 16, 32, 64])
+ACTS = st.sampled_from(["none", "relu", "gelu"])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype("float32"))
+
+
+# ---------------------------------------------------------------------------
+# matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(m=POW2, k=POW2, n=POW2, act=ACTS, seed=SEEDS)
+def test_matmul_fwd_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, m, k), rnd(rng, k, n), rnd(rng, n)
+    got = K.matmul(x, w, b, act)
+    want = ref.matmul(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=POW2_SMALL, k=POW2_SMALL, n=POW2_SMALL, act=ACTS, seed=SEEDS)
+def test_matmul_grads_match_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, m, k), rnd(rng, k, n), rnd(rng, n)
+
+    def loss_k(x, w, b):
+        return jnp.sum(K.matmul(x, w, b, act) ** 2)
+
+    def loss_r(x, w, b):
+        return jnp.sum(ref.matmul(x, w, b, act) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(a, c, rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_large_tiled_shape():
+    """M, K, N > 128 exercises the multi-block accumulation path."""
+    rng = np.random.default_rng(7)
+    x, w, b = rnd(rng, 256, 256), rnd(rng, 256, 256), rnd(rng, 256)
+    np.testing.assert_allclose(
+        K.matmul(x, w, b, "gelu"), ref.matmul(x, w, b, "gelu"), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_linear_batched_3d():
+    rng = np.random.default_rng(8)
+    x = rnd(rng, 4, 16, 32)
+    w, b = rnd(rng, 32, 64), rnd(rng, 64)
+    got = K.linear(x, w, b, "relu")
+    want = ref.matmul(x.reshape(-1, 32), w, b, "relu").reshape(4, 16, 64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=POW2, d=POW2, seed=SEEDS)
+def test_layernorm_fwd_matches_ref(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = rnd(rng, m, d), rnd(rng, d), rnd(rng, d)
+    np.testing.assert_allclose(
+        K.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=POW2_SMALL, d=POW2_SMALL, seed=SEEDS)
+def test_layernorm_bwd_matches_analytic(m, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g = rnd(rng, m, d), rnd(rng, d)
+    gy = rnd(rng, m, d)
+    gx, dg, db = K.layernorm_bwd_pallas(x, g, gy)
+    rgx, rdg, rdb = ref.layernorm_bwd(x, g, gy)
+    np.testing.assert_allclose(gx, rgx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dg, rdg, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db, rdb, rtol=1e-3, atol=1e-3)
+
+
+def test_layernorm_bwd_multiblock_param_reduction():
+    """M > 128 forces the cross-block dgamma/dbeta partial-sum reduction."""
+    rng = np.random.default_rng(9)
+    x, g, gy = rnd(rng, 512, 64), rnd(rng, 64), rnd(rng, 512, 64)
+    gx, dg, db = K.layernorm_bwd_pallas(x, g, gy)
+    rgx, rdg, rdb = ref.layernorm_bwd(x, g, gy)
+    np.testing.assert_allclose(dg, rdg, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db, rdb, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gx, rgx, rtol=1e-3, atol=1e-3)
+
+
+def test_layernorm_grad_through_custom_vjp():
+    rng = np.random.default_rng(10)
+    x, g, b = rnd(rng, 64, 32), rnd(rng, 32), rnd(rng, 32)
+    gk = jax.grad(lambda x, g, b: jnp.sum(jnp.sin(K.layernorm(x, g, b))),
+                  argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(lambda x, g, b: jnp.sum(jnp.sin(ref.layernorm(x, g, b))),
+                  argnums=(0, 1, 2))(x, g, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=POW2, c=st.sampled_from([16, 64, 128]), seed=SEEDS,
+       frac_valid=st.sampled_from([1.0, 0.8, 0.5]))
+def test_xent_fwd_matches_ref(m, c, seed, frac_valid):
+    n_valid = max(2, int(c * frac_valid))
+    rng = np.random.default_rng(seed)
+    logits = rnd(rng, m, c)
+    tg = jnp.asarray(rng.integers(0, n_valid, size=(m,)).astype("int32"))
+    l, corr = K.softmax_xent(logits, tg, n_valid)
+    lr, corr_r = ref.softmax_xent(logits, tg, n_valid)
+    np.testing.assert_allclose(l, lr, rtol=1e-5, atol=1e-5)
+    assert float(corr) == float(corr_r)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=POW2_SMALL, seed=SEEDS)
+def test_xent_bwd_matches_ref(m, seed):
+    c, n_valid = 64, 50
+    rng = np.random.default_rng(seed)
+    logits = rnd(rng, m, c)
+    tg = jnp.asarray(rng.integers(0, n_valid, size=(m,)).astype("int32"))
+    gk = jax.grad(lambda lg: K.softmax_xent(lg, tg, n_valid)[0])(logits)
+    gr = ref.softmax_xent_bwd(logits, tg, n_valid)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_xent_padded_classes_get_zero_grad():
+    rng = np.random.default_rng(11)
+    logits = rnd(rng, 32, 128)
+    tg = jnp.asarray(rng.integers(0, 100, size=(32,)).astype("int32"))
+    g = jax.grad(lambda lg: K.softmax_xent(lg, tg, 100)[0])(logits)
+    assert float(jnp.max(jnp.abs(g[:, 100:]))) == 0.0
+
+
+def test_xent_loss_scales_with_cotangent():
+    """The bwd kernel must honor a non-unit loss cotangent."""
+    rng = np.random.default_rng(12)
+    logits = rnd(rng, 16, 16)
+    tg = jnp.asarray(rng.integers(0, 16, size=(16,)).astype("int32"))
+    g1 = jax.grad(lambda lg: 1.0 * K.softmax_xent(lg, tg, 16)[0])(logits)
+    g3 = jax.grad(lambda lg: 3.0 * K.softmax_xent(lg, tg, 16)[0])(logits)
+    np.testing.assert_allclose(3.0 * g1, g3, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.sampled_from([1, 2, 4, 8]), s=st.sampled_from([8, 16, 64]),
+       dh=st.sampled_from([8, 16, 32]), causal=st.booleans(), seed=SEEDS)
+def test_attention_fwd_matches_ref(h, s, dh, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rnd(rng, h, s, dh), rnd(rng, h, s, dh), rnd(rng, h, s, dh)
+    np.testing.assert_allclose(
+        K.attention(q, k, v, causal), ref.attention(q, k, v, causal),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS, causal=st.booleans())
+def test_attention_bwd_matches_ref(seed, causal):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rnd(rng, 4, 16, 8) for _ in range(3))
+
+    def loss_k(q, k, v):
+        return jnp.sum(K.attention(q, k, v, causal) ** 2)
+
+    def loss_r(q, k, v):
+        return jnp.sum(ref.attention(q, k, v, causal) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-3)
+
+
+def test_attention_causal_masks_future():
+    """Output at position t must not depend on tokens > t."""
+    rng = np.random.default_rng(13)
+    q, k, v = (rnd(rng, 1, 16, 8) for _ in range(3))
+    o1 = K.attention(q, k, v, True)
+    v2 = v.at[0, 10:, :].set(999.0)
+    k2 = k.at[0, 10:, :].set(-7.0)
+    o2 = K.attention(q, k2, v2, True)
+    np.testing.assert_allclose(o1[0, :10], o2[0, :10], rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(o1[0, 10:] - o2[0, 10:]))) > 1e-3

@@ -1,0 +1,102 @@
+//! Shared bench harness (criterion is not in the offline crate set, so each
+//! bench is a plain binary that prints the paper's table rows and writes
+//! CSV/JSON under results/).
+//!
+//! Environment knobs:
+//!   LAYUP_STEPS    steps per run (default per-bench)
+//!   LAYUP_WORKERS  simulated devices (default 3 — the paper's C1)
+//!   LAYUP_SEEDS    number of seeds to average over (default 1; paper uses 3)
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use layup::config::{Algorithm, TrainConfig};
+use layup::coordinator;
+use layup::manifest::Manifest;
+use layup::metrics::RunSummary;
+use layup::optim::{OptimKind, Schedule};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn workers() -> usize {
+    env_usize("LAYUP_WORKERS", 3)
+}
+
+pub fn seeds() -> usize {
+    env_usize("LAYUP_SEEDS", 1)
+}
+
+pub fn results_dir() -> PathBuf {
+    // keep results next to the repo root (where artifacts/ lives)
+    let dir = layup::artifacts_dir().parent().unwrap().join("results");
+    std::fs::create_dir_all(&dir).expect("mkdir results");
+    dir
+}
+
+pub fn manifest() -> Manifest {
+    Manifest::load(&layup::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Baseline config for a vision-table run (paper Table A6 style: SGD with
+/// momentum + cosine schedule).
+pub fn vision_cfg(model: &str, algorithm: Algorithm, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(model, algorithm, workers(), steps);
+    cfg.optim = OptimKind::sgd(0.9, 5e-4);
+    let lr = if matches!(algorithm, Algorithm::LayUp | Algorithm::GoSgd) { 0.035 } else { 0.045 };
+    let warmup = if matches!(algorithm, Algorithm::LayUp | Algorithm::GoSgd) { steps / 20 } else { 0 };
+    cfg.schedule = Schedule::Cosine {
+        lr,
+        t_max: steps,
+        warmup_steps: warmup,
+        warmup_lr: lr / 3.0,
+    };
+    cfg.sync_period = 12;
+    cfg.eval_every = (steps / 15).max(1);
+    cfg
+}
+
+/// Config for the LM runs (paper Tables A7/A8 style: AdamW + cosine).
+pub fn lm_cfg(model: &str, algorithm: Algorithm, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(model, algorithm, workers(), steps);
+    cfg.optim = OptimKind::adamw(0.01);
+    let lr = 3e-3f32;
+    cfg.schedule = Schedule::Cosine {
+        lr,
+        t_max: steps,
+        warmup_steps: steps / 10,
+        warmup_lr: lr / 5.0,
+    };
+    cfg.sync_period = 12;
+    cfg.eval_every = (steps / 12).max(1);
+    cfg
+}
+
+/// Run `cfg` over `seeds()` seeds; returns all summaries.
+pub fn run_seeds(base: &TrainConfig, man: &Manifest) -> Vec<RunSummary> {
+    (0..seeds())
+        .map(|s| {
+            let mut cfg = base.clone();
+            cfg.seed = 42 + 1000 * s as u64;
+            coordinator::run(&cfg, man).expect("run failed")
+        })
+        .collect()
+}
+
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n.max(1.0);
+    (mean, var.sqrt())
+}
+
+/// The six-algorithm set of the paper's tables.
+pub fn paper_algorithms() -> &'static [Algorithm] {
+    Algorithm::all_paper()
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(78));
+}

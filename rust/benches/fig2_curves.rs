@@ -1,0 +1,41 @@
+//! **Figure 2** — learning curves (metric vs wall-clock AND vs steps) for all
+//! algorithms on the vision task (2A analog) and GPT pretraining (2B analog).
+//! Emits one CSV per (panel, algorithm) under results/fig2/ — the paper's
+//! zoomed insets are just re-plots of the same series.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let man = common::manifest();
+    let dir = common::results_dir().join("fig2");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (panel, model, steps, lm) in [
+        ("A_vision", "mlpnet50", common::env_usize("LAYUP_STEPS", 160), false),
+        ("B_pretrain", "gpt_mini", common::env_usize("LAYUP_STEPS", 50), true),
+    ] {
+        println!("Fig 2{panel}: {model}");
+        for &algo in common::paper_algorithms() {
+            let cfg = if lm {
+                common::lm_cfg(model, algo, steps)
+            } else {
+                common::vision_cfg(model, algo, steps)
+            };
+            let r = common::run_seeds(&cfg, &man).remove(0);
+            let path = dir.join(format!("{panel}_{}.csv", r.algorithm.replace(['(', ')'], "")));
+            std::fs::write(&path, r.curve.to_csv()).unwrap();
+            let last = r.curve.points.last().unwrap();
+            println!(
+                "  {:<12} final loss {:.4} acc {:.3} @ {:.1}s -> {}",
+                r.algorithm,
+                last.loss,
+                last.accuracy,
+                last.time_s,
+                path.display()
+            );
+        }
+    }
+    println!("\nplots: each CSV has (step, time_s, loss, accuracy, perplexity) — the paper's");
+    println!("wall-clock panels plot loss vs time_s; the step-insets plot loss vs step.");
+}

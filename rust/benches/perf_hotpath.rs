@@ -1,0 +1,111 @@
+//! **§Perf** — hot-path microbenchmarks backing EXPERIMENTS.md §Perf:
+//!   1. per-layer fwd/bwd executable latency (L2/L1 compute path),
+//!   2. parameter-upload cost with vs without the version cache,
+//!   3. lock-free gossip mix throughput (updater-thread inner loop),
+//!   4. full train-step latency per algorithm (1 worker vs M workers).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use layup::config::{Algorithm, TrainConfig};
+use layup::coordinator::{self, Shared};
+use layup::data;
+use layup::model::ModelExec;
+use layup::runtime::Runtime;
+use layup::tensor::{AtomicTensor, Tensor};
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let man = common::manifest();
+    let model_name = "mlpnet18";
+    let model = man.model(model_name).unwrap();
+
+    // --- 1. per-layer executable latency -----------------------------------
+    let mut rt = Runtime::new().unwrap();
+    let mut exec = ModelExec::load(&mut rt, &man, model_name).unwrap();
+    let cfg = TrainConfig::new(model_name, Algorithm::LocalSgd, 1, 1);
+    let shared = Shared::new(&cfg, &man).unwrap();
+    let params = &shared.params[0];
+    let mut ds = data::build(model, 0, 1, 7);
+    let batch = ds.next_batch();
+    // warmup
+    let pass = exec.forward(params, &batch).unwrap();
+    exec.backward(params, &pass, &mut |_, _| {}).unwrap();
+
+    let fwd = time(10, || {
+        let _ = exec.forward(params, &batch).unwrap();
+    });
+    let pass = exec.forward(params, &batch).unwrap();
+    let bwd = time(10, || {
+        exec.backward(params, &pass, &mut |_, _| {}).unwrap();
+    });
+    println!("fwd  {:.2} ms   bwd {:.2} ms   ({} layers, {:.2e} step FLOPs)",
+        1e3 * fwd, 1e3 * bwd, model.layers.len(), model.step_flops() as f64);
+
+    // --- 2. upload cache hit-rate effect ------------------------------------
+    exec.upload_hits = 0;
+    exec.upload_misses = 0;
+    let cached = time(10, || {
+        let _ = exec.forward(params, &batch).unwrap();
+    });
+    let hits_frac = exec.upload_hits as f64 / (exec.upload_hits + exec.upload_misses) as f64;
+    // now invalidate every layer every step (simulated gossip storm)
+    let uncached = time(10, || {
+        for l in &params.layers {
+            for t in &l.tensors {
+                let snap = t.snapshot();
+                t.store_from(&snap.data); // bump version, same values
+            }
+        }
+        let _ = exec.forward(params, &batch).unwrap();
+    });
+    println!(
+        "fwd with param-literal cache: {:.2} ms (hit rate {:.0}%)   all-invalidated: {:.2} ms  ({:+.1}%)",
+        1e3 * cached,
+        100.0 * hits_frac,
+        1e3 * uncached,
+        100.0 * (uncached / cached - 1.0)
+    );
+
+    // --- 3. gossip mix throughput -------------------------------------------
+    let n = 1 << 20;
+    let at = AtomicTensor::from_tensor(&Tensor::full(&[n], 1.0));
+    let src = vec![0.5f32; n];
+    let mix = time(20, || at.mix_from(0.5, 0.5, &src));
+    println!(
+        "gossip mix_from: {:.2} ms for {} elems = {:.2} GB/s effective",
+        1e3 * mix,
+        n,
+        (n * 8) as f64 / mix / 1e9
+    );
+    let sub = time(20, || at.sub_scaled(0.001, &src));
+    println!(
+        "optimizer sub_scaled: {:.2} ms = {:.2} GB/s effective",
+        1e3 * sub,
+        (n * 8) as f64 / sub / 1e9
+    );
+
+    // --- 4. end-to-end step latency per algorithm ---------------------------
+    let steps = common::env_usize("LAYUP_STEPS", 20);
+    println!("\nend-to-end avg step wall time ({} workers, {} steps):", common::workers(), steps);
+    for algo in [Algorithm::LayUp, Algorithm::Ddp, Algorithm::GoSgd] {
+        let mut cfg = common::vision_cfg(model_name, algo, steps);
+        cfg.eval_every = usize::MAX / 2;
+        let r = coordinator::run(&cfg, &man).unwrap();
+        println!(
+            "  {:<12} {:.1} ms/step  occupancy {:.1}%",
+            r.algorithm,
+            1e3 * r.total_time_s / steps as f64,
+            100.0 * r.compute_occupancy
+        );
+    }
+}

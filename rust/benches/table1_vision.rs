@@ -1,0 +1,56 @@
+//! **Table 1** — vision: convergence accuracy, TTC and epochs for all six
+//! algorithms (paper: ResNet-50 on CIFAR-100/ImageNet-1k; here: the
+//! MLPNet-50 analog on synthetic-100 — DESIGN.md substitution table).
+//!
+//! Two panels are produced:
+//!  * measured accuracy/TTC on the live thread cluster (real gradients);
+//!  * paper-scale TTC from the DES on C1 (3xA100) for both CIFAR-100 and
+//!    ImageNet-1k ResNet-50 workloads.
+
+#[path = "common.rs"]
+mod common;
+
+use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 160);
+    let mut csv = String::from("algorithm,accuracy_mean,accuracy_std,ttc_s_mean,ttc_s_std,epochs\n");
+
+    println!("Table 1 (measured, thread cluster): mlpnet50 on synthetic-100, {} workers, {} steps",
+             common::workers(), steps);
+    println!("{:<14} {:>12} {:>12} {:>8}", "method", "conv acc", "TTC (s)", "epochs");
+    common::hr();
+    for &algo in common::paper_algorithms() {
+        let cfg = common::vision_cfg("mlpnet50", algo, steps);
+        let runs = common::run_seeds(&cfg, &man);
+        let accs: Vec<f64> = runs.iter().map(|r| r.curve.best_accuracy()).collect();
+        let ttcs: Vec<f64> = runs
+            .iter()
+            .map(|r| r.curve.time_to_convergence(0.01).unwrap_or(r.total_time_s))
+            .collect();
+        let (am, asd) = common::mean_std(&accs);
+        let (tm, tsd) = common::mean_std(&ttcs);
+        let epochs = runs[0].epochs;
+        println!("{:<14} {:>7.2}±{:<4.2} {:>7.1}±{:<4.1} {:>8}",
+                 runs[0].algorithm, 100.0 * am, 100.0 * asd, tm, tsd, epochs);
+        csv.push_str(&format!("{},{:.4},{:.4},{:.2},{:.2},{}\n",
+            runs[0].algorithm, am, asd, tm, tsd, epochs));
+    }
+
+    println!("\nTable 1 (paper-scale TTC shape, DES):");
+    for (label, cluster, w) in [
+        ("CIFAR-100/ResNet-50 @C1", Cluster::c1(), Workload::resnet50_cifar(3)),
+        ("ImageNet-1k/ResNet-50 @C1", Cluster::c1(), Workload::resnet50_imagenet(3)),
+    ] {
+        println!("  {label}");
+        println!("  {:<12} {:>12} {:>9}", "method", "TTC (s)", "MFU");
+        for algo in SimAlgo::paper_set(12) {
+            let r = simulate(&cluster, &w, algo, 1);
+            println!("  {:<12} {:>12.0} {:>8.1}%", r.algo, r.wall_s, 100.0 * r.mfu);
+        }
+    }
+
+    std::fs::write(common::results_dir().join("table1_vision.csv"), csv).unwrap();
+    println!("\nwrote results/table1_vision.csv");
+}

@@ -1,0 +1,51 @@
+//! **Table 2** — time-to-accuracy (TTA): wall-clock and steps until each
+//! algorithm first reaches a fixed target accuracy, chosen (as in the paper)
+//! as the best accuracy of the *worst* performing algorithm.
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 160);
+
+    // run all algorithms once to find the target, reusing the runs for TTA
+    let mut runs = Vec::new();
+    for &algo in common::paper_algorithms() {
+        let cfg = common::vision_cfg("mlpnet50", algo, steps);
+        runs.push(common::run_seeds(&cfg, &man));
+    }
+    let target = runs
+        .iter()
+        .map(|rs| {
+            let accs: Vec<f64> = rs.iter().map(|r| r.curve.best_accuracy()).collect();
+            common::mean_std(&accs).0
+        })
+        .fold(f64::INFINITY, f64::min)
+        * 0.98; // slight slack so every algorithm can reach it
+
+    println!(
+        "Table 2 (measured): TTA to {:.2}% on mlpnet50/synthetic-100, {} workers",
+        100.0 * target,
+        common::workers()
+    );
+    println!("{:<14} {:>12} {:>10}", "method", "TTA (s)", "steps");
+    common::hr();
+    let mut csv = String::from("algorithm,target,tta_s_mean,tta_s_std,steps\n");
+    for rs in &runs {
+        let ttas: Vec<f64> = rs
+            .iter()
+            .map(|r| r.curve.time_to_accuracy(target).unwrap_or(f64::NAN))
+            .collect();
+        let steps_to: Vec<f64> = rs
+            .iter()
+            .map(|r| r.curve.step_to_accuracy(target).map(|s| s as f64).unwrap_or(f64::NAN))
+            .collect();
+        let (tm, tsd) = common::mean_std(&ttas);
+        let (sm, _) = common::mean_std(&steps_to);
+        println!("{:<14} {:>7.1}±{:<4.1} {:>10.0}", rs[0].algorithm, tm, tsd, sm);
+        csv.push_str(&format!("{},{:.4},{:.2},{:.2},{:.0}\n", rs[0].algorithm, target, tm, tsd, sm));
+    }
+    std::fs::write(common::results_dir().join("table2_tta.csv"), csv).unwrap();
+    println!("\nwrote results/table2_tta.csv");
+}

@@ -1,0 +1,70 @@
+//! **Table 4** — Model FLOPs Utilization per algorithm.
+//!
+//! Measured panel: thread-cluster runs with evaluation disabled; MFU is the
+//! achieved FLOPs/s divided by the calibrated single-worker compute-only
+//! peak (the "theoretical peak" of this substrate — exactly how Chowdhery et
+//! al. define MFU, with our peak standing in for the accelerator datasheet).
+//! Paper-scale panel: DES on C2/C3 with the paper's sync periods.
+
+#[path = "common.rs"]
+mod common;
+
+use layup::config::Algorithm;
+use layup::coordinator;
+use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 40);
+
+    // calibrate single-worker peak (no eval, one worker, gossip-free)
+    let mut calib = common::lm_cfg("gpt_mini", Algorithm::LocalSgd, steps.min(40));
+    calib.workers = 1;
+    calib.sync_period = usize::MAX / 2; // never syncs with itself anyway
+    calib.eval_every = usize::MAX / 2;
+    let peak = {
+        let r = coordinator::run(&calib, &man).expect("calibration");
+        r.extras["achieved_flops_per_s"]
+    };
+    println!("calibrated single-worker peak: {peak:.3e} FLOP/s\n");
+
+    println!(
+        "Table 4 (measured): GPT-mini pretraining MFU, {} workers, {} steps",
+        common::workers(),
+        steps
+    );
+    println!("{:<14} {:>10} {:>12}", "method", "MFU", "occupancy");
+    common::hr();
+    let mut csv = String::from("algorithm,mfu,occupancy\n");
+    for &algo in common::paper_algorithms() {
+        let mut cfg = common::lm_cfg("gpt_mini", algo, steps);
+        cfg.eval_every = usize::MAX / 2; // measurement window excludes eval
+        let r = coordinator::run(&cfg, &man).expect("run");
+        let mfu = r.extras["achieved_flops_per_s"] / peak / common::workers() as f64
+            * 1.0_f64.max(1.0);
+        // achieved flops are summed across workers; peak is per worker
+        println!(
+            "{:<14} {:>9.1}% {:>11.1}%",
+            r.algorithm,
+            100.0 * mfu,
+            100.0 * r.compute_occupancy
+        );
+        csv.push_str(&format!("{},{:.4},{:.4}\n", r.algorithm, mfu, r.compute_occupancy));
+    }
+
+    println!("\nTable 4 (paper-scale MFU shape, DES):");
+    for (label, cluster, w, period) in [
+        ("GPT-2 Medium pretrain @C2", Cluster::c2(), Workload::gpt2_medium(8), 20),
+        ("GPT-2 XL finetune @C3", Cluster::c3(), Workload::gpt2_xl(4), 48),
+    ] {
+        println!("  {label}");
+        println!("  {:<12} {:>9}", "method", "MFU");
+        for algo in SimAlgo::paper_set(period) {
+            let r = simulate(&cluster, &w, algo, 1);
+            println!("  {:<12} {:>8.1}%", r.algo, 100.0 * r.mfu);
+        }
+    }
+
+    std::fs::write(common::results_dir().join("table4_mfu.csv"), csv).unwrap();
+    println!("\nwrote results/table4_mfu.csv");
+}

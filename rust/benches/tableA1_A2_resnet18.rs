@@ -1,0 +1,64 @@
+//! **Tables A1/A2** — the ResNet-18 analog (MLPNet-18) on synthetic-100:
+//! convergence accuracy + TTC (A2) and TTA to a fixed target (A1).
+
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 140);
+
+    let mut runs = Vec::new();
+    for &algo in common::paper_algorithms() {
+        let cfg = common::vision_cfg("mlpnet18", algo, steps);
+        runs.push(common::run_seeds(&cfg, &man));
+    }
+
+    println!(
+        "Table A2 (measured): mlpnet18 on synthetic-100, {} workers, {} steps",
+        common::workers(),
+        steps
+    );
+    println!("{:<14} {:>12} {:>12} {:>8}", "method", "conv acc", "TTC (s)", "epochs");
+    common::hr();
+    let mut csv = String::from("table,algorithm,metric1,metric2\n");
+    for rs in &runs {
+        let accs: Vec<f64> = rs.iter().map(|r| r.curve.best_accuracy()).collect();
+        let ttcs: Vec<f64> = rs
+            .iter()
+            .map(|r| r.curve.time_to_convergence(0.01).unwrap_or(r.total_time_s))
+            .collect();
+        let (am, asd) = common::mean_std(&accs);
+        let (tm, _) = common::mean_std(&ttcs);
+        println!(
+            "{:<14} {:>7.2}±{:<4.2} {:>12.1} {:>8}",
+            rs[0].algorithm,
+            100.0 * am,
+            100.0 * asd,
+            tm,
+            rs[0].epochs
+        );
+        csv.push_str(&format!("A2,{},{:.4},{:.2}\n", rs[0].algorithm, am, tm));
+    }
+
+    let target = runs
+        .iter()
+        .map(|rs| common::mean_std(&rs.iter().map(|r| r.curve.best_accuracy()).collect::<Vec<_>>()).0)
+        .fold(f64::INFINITY, f64::min)
+        * 0.98;
+    println!("\nTable A1 (measured): TTA to {:.2}%", 100.0 * target);
+    println!("{:<14} {:>12} {:>10}", "method", "TTA (s)", "steps");
+    common::hr();
+    for rs in &runs {
+        let ttas: Vec<f64> = rs
+            .iter()
+            .map(|r| r.curve.time_to_accuracy(target).unwrap_or(f64::NAN))
+            .collect();
+        let (tm, tsd) = common::mean_std(&ttas);
+        let st = rs[0].curve.step_to_accuracy(target).map(|s| s as f64).unwrap_or(f64::NAN);
+        println!("{:<14} {:>7.1}±{:<4.1} {:>10.0}", rs[0].algorithm, tm, tsd, st);
+        csv.push_str(&format!("A1,{},{:.2},{:.0}\n", rs[0].algorithm, tm, st));
+    }
+    std::fs::write(common::results_dir().join("tableA1_A2_resnet18.csv"), csv).unwrap();
+    println!("\nwrote results/tableA1_A2_resnet18.csv");
+}

@@ -1,0 +1,70 @@
+//! **Table A4** — forward/backward pass timing per architecture, plus the
+//! per-layer breakdown LayUp's drift analysis builds on (Section 3.2:
+//! gradients become available output-layer-first, D_l grows towards the
+//! input). Also prints the paper's C1 constants the DES uses.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use layup::coordinator::Shared;
+use layup::data;
+use layup::model::ModelExec;
+use layup::runtime::Runtime;
+
+fn main() {
+    let man = common::manifest();
+    let reps = common::env_usize("LAYUP_STEPS", 15);
+    println!("Table A4 (measured on this substrate): fwd/bwd wall time per step");
+    println!("{:<16} {:>12} {:>12} {:>8}", "architecture", "fwd (ms)", "bwd (ms)", "bwd/fwd");
+    common::hr();
+    let mut csv = String::from("model,fwd_ms,bwd_ms,ratio\n");
+
+    for model_name in ["mlpnet18", "mlpnet50", "gpt_mini", "rnn_sentiment"] {
+        if man.models.get(model_name).is_none() {
+            continue;
+        }
+        let mut rt = Runtime::new().expect("runtime");
+        let mut exec = ModelExec::load(&mut rt, &man, model_name).expect("load");
+        let model = man.model(model_name).unwrap();
+        let mut ds = data::build(model, 0, 1, 7);
+        let cfg = layup::config::TrainConfig::new(
+            model_name,
+            layup::config::Algorithm::LocalSgd,
+            1,
+            1,
+        );
+        let shared = Shared::new(&cfg, &man).expect("shared");
+        let params = &shared.params[0];
+
+        // warmup
+        let b = ds.next_batch();
+        let pass = exec.forward(params, &b).unwrap();
+        exec.backward(params, &pass, &mut |_, _| {}).unwrap();
+
+        let (mut fwd_s, mut bwd_s) = (0.0, 0.0);
+        for _ in 0..reps {
+            let b = ds.next_batch();
+            let t0 = Instant::now();
+            let pass = exec.forward(params, &b).unwrap();
+            fwd_s += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            exec.backward(params, &pass, &mut |_, _| {}).unwrap();
+            bwd_s += t1.elapsed().as_secs_f64();
+        }
+        let (f, bw) = (1e3 * fwd_s / reps as f64, 1e3 * bwd_s / reps as f64);
+        println!("{:<16} {:>12.2} {:>12.2} {:>8.2}", model_name, f, bw, bw / f);
+        csv.push_str(&format!("{},{:.3},{:.3},{:.3}\n", model_name, f, bw, bw / f));
+    }
+
+    println!("\npaper constants used by the DES (Table A4, C1):");
+    println!("  resnet18: fwd 4.9 ms, bwd 10.2 ms (ratio 2.08)");
+    println!("  resnet50: fwd 16.6 ms, bwd 29.9 ms (ratio 1.80)");
+    println!("\nSection 3.2 drift check: relative drift D = βT(L+1)/2 grows with depth:");
+    for (l, beta_t) in [(8usize, 10.2e-3), (16, 29.9e-3)] {
+        println!("  L={l:<3} βT={beta_t:.4}s  ->  D = {:.4}s", beta_t * (l as f64 + 1.0) / 2.0);
+    }
+    std::fs::write(common::results_dir().join("tableA4_timing.csv"), csv).unwrap();
+    println!("\nwrote results/tableA4_timing.csv");
+}

@@ -1,0 +1,80 @@
+//! **AD-PSGD** baseline (Lian et al., 2018): asynchronous decentralized
+//! parallel SGD with *symmetric* pairwise averaging.
+//!
+//! After each local SGD step the worker picks a random peer and both models
+//! are set to their elementwise average. The symmetry is what distinguishes
+//! it from push-style gossip (GoSGD/LayUp) — and what doubles communication
+//! volume, as the paper notes. Our lock-free implementation mirrors the
+//! paper's atomics: the average is computed from a snapshot and written to
+//! both replicas; concurrent writers may interleave (races lose updates,
+//! never safety).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+use crate::topology::Topology;
+use crate::util::rng::Pcg32;
+
+pub struct AdPsgd {
+    wid: usize,
+    shared: Arc<Shared>,
+    stash: GradStash,
+    opt: PerLayerOpt,
+    topology: Topology,
+    rng: Pcg32,
+    comm_latency_s: f64,
+}
+
+impl AdPsgd {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> AdPsgd {
+        AdPsgd {
+            wid,
+            shared,
+            stash: GradStash::new(manifest.layers.len()),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            topology: cfg.topology.clone(),
+            rng: Pcg32::new(cfg.seed ^ 0xadb5d ^ ((wid as u64) << 24)),
+            comm_latency_s: cfg.comm_latency_s,
+        }
+    }
+}
+
+impl WorkerAlgo for AdPsgd {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        self.stash.put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        let my = &self.shared.params[self.wid];
+        let grads = self.stash.take();
+        for (li, g) in grads.iter().enumerate() {
+            self.opt.step_layer(my, li, g, step);
+        }
+
+        // symmetric pairwise averaging — two transfers (there and back),
+        // hence 2x the communication volume of a push-only scheme
+        let peer = self
+            .topology
+            .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
+        let peer_params = &self.shared.params[peer];
+        comm_delay(2.0 * self.comm_latency_s);
+        for (li, layer) in my.layers.iter().enumerate() {
+            for (ti, t) in layer.tensors.iter().enumerate() {
+                let mine = t.snapshot();
+                // peer = (peer + mine)/2
+                peer_params.layers[li].tensors[ti].mix_from(0.5, 0.5, &mine.data);
+                // mine = the freshly averaged peer value (symmetric result)
+                let avg = peer_params.layers[li].tensors[ti].snapshot();
+                t.store_from(&avg.data);
+            }
+        }
+        Ok(())
+    }
+}

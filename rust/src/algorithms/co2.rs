@@ -1,0 +1,103 @@
+//! **CO2** baseline (Sun et al., 2024): Local SGD with *overlapped*
+//! communication and an outer momentum step.
+//!
+//! CO2's point is that the global average need not stall the inner loop: the
+//! averaging runs concurrently with the next round of local steps, at the
+//! cost of using one-round-*stale* snapshots. We implement exactly that
+//! semantics without a barrier: at each sync point a worker (1) publishes its
+//! current parameters to its slot, (2) averages whatever snapshots the other
+//! workers last published (possibly from the previous round — that is the
+//! overlap), and (3) applies the SlowMo-style outer momentum step. No worker
+//! ever waits, so a straggler cannot stall the others — but the staleness
+//! adds drift, which is why CO2 trails LayUp on task metrics in the paper.
+//!
+//! Following the paper (footnote 3), the penalty-gap correction of the CO2
+//! paper is not implemented — the published CO2 code omits it too.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{comm_delay, localsgd::LocalSgd, slowmo::SlowMo, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+pub struct Co2 {
+    inner: LocalSgd,
+    outer_momentum: f32,
+    outer_lr: f32,
+    u: Vec<f32>,
+    x_prev: Vec<f32>,
+}
+
+impl Co2 {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> Co2 {
+        let x_prev = shared.params[wid].flatten();
+        // seed own slot so peers always have something to average
+        *shared.param_slots[wid].lock().unwrap() = Some(x_prev.clone());
+        Co2 {
+            inner: LocalSgd::new(cfg, wid, shared, manifest),
+            outer_momentum: cfg.outer_momentum,
+            outer_lr: cfg.outer_lr,
+            u: vec![0.0; x_prev.len()],
+            x_prev,
+        }
+    }
+
+    /// Barrier-free average over the latest published snapshots.
+    fn stale_average(&self) -> Vec<f32> {
+        let shared = &self.inner.shared;
+        let mut acc: Option<Vec<f32>> = None;
+        let mut count = 0usize;
+        for slot in shared.param_slots.iter() {
+            let guard = slot.lock().unwrap();
+            if let Some(v) = guard.as_ref() {
+                match &mut acc {
+                    None => acc = Some(v.clone()),
+                    Some(a) => {
+                        for (x, &y) in a.iter_mut().zip(v.iter()) {
+                            *x += y;
+                        }
+                    }
+                }
+                count += 1;
+            }
+        }
+        let mut a = acc.expect("own slot always published");
+        for x in &mut a {
+            *x /= count as f32;
+        }
+        a
+    }
+}
+
+impl WorkerAlgo for Co2 {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        self.inner.stash_put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        self.inner.local_step(step);
+        if (step + 1) % self.inner.sync_period == 0 {
+            let shared = Arc::clone(&self.inner.shared);
+            // publish fresh snapshot (starts the overlapped "all-reduce")
+            let mine = shared.params[self.inner.wid].flatten();
+            *shared.param_slots[self.inner.wid].lock().unwrap() = Some(mine);
+            comm_delay(self.inner.comm_latency_s);
+            // average whatever is available — NO barrier (the overlap)
+            let avg = self.stale_average();
+            let x_new = SlowMo::outer_step(
+                &mut self.u,
+                &mut self.x_prev,
+                &avg,
+                self.outer_momentum,
+                self.outer_lr,
+            );
+            shared.params[self.inner.wid].store_flat(&x_new);
+        }
+        Ok(())
+    }
+}

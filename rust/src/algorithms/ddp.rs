@@ -1,0 +1,87 @@
+//! **DDP** baseline: synchronous data-parallel SGD (Li et al., 2020).
+//!
+//! Every step: each worker stashes its full gradient set during backward,
+//! then all workers meet at a barrier, all-reduce (average) the gradients,
+//! and apply the identical averaged update with identical optimizer state —
+//! so replicas stay bit-identical, exactly like torch DDP with NCCL
+//! all-reduce. The two barriers bracket the exchange so no worker can
+//! overwrite a slot that another worker has not read yet.
+//!
+//! The synchronization barrier is DDP's weakness the paper targets: a
+//! straggler (Section 5.4) stalls *everyone*, and the serial
+//! backward -> all-reduce -> step dependency caps MFU (Table 4).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::{average_grad_sets, comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+pub struct Ddp {
+    wid: usize,
+    shared: Arc<Shared>,
+    stash: GradStash,
+    opt: PerLayerOpt,
+    comm_latency_s: f64,
+}
+
+impl Ddp {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> Ddp {
+        Ddp {
+            wid,
+            shared,
+            stash: GradStash::new(manifest.layers.len()),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            comm_latency_s: cfg.comm_latency_s,
+        }
+    }
+}
+
+impl WorkerAlgo for Ddp {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        // synchronous DDP can only buffer: updates wait for the barrier
+        self.stash.put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        // publish my gradients
+        *self.shared.grad_slots[self.wid].lock().unwrap() = Some(self.stash.take());
+
+        // all-reduce: barrier, average everyone's grads, barrier
+        comm_delay(self.comm_latency_s);
+        if !self.shared.barrier.wait(&self.shared.stop) {
+            return Ok(()); // run is stopping
+        }
+        let avg = {
+            let guards: Vec<_> = self
+                .shared
+                .grad_slots
+                .iter()
+                .map(|s| s.lock().unwrap())
+                .collect();
+            let sets: Vec<&crate::algorithms::GradSet> = guards
+                .iter()
+                .map(|g| g.as_ref().expect("worker missed grad publish"))
+                .collect();
+            if sets.len() != self.shared.m {
+                bail!("ddp: incomplete gradient exchange");
+            }
+            average_grad_sets(&sets)
+        };
+        if !self.shared.barrier.wait(&self.shared.stop) {
+            return Ok(());
+        }
+
+        // identical update on every worker keeps replicas in lock-step
+        let my = &self.shared.params[self.wid];
+        for (li, grads) in avg.iter().enumerate() {
+            self.opt.step_layer(my, li, grads, step);
+        }
+        Ok(())
+    }
+}

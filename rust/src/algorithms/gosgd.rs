@@ -1,0 +1,85 @@
+//! **GoSGD** baseline (Blot et al., 2019): asynchronous push-sum gossip SGD
+//! at *whole-model* granularity.
+//!
+//! Each worker performs a local SGD step, then pushes its entire parameter
+//! vector to one uniformly random peer using the same push-sum weight
+//! protocol as LayUp. The difference from LayUp is exactly the paper's
+//! contribution in negative: updates are exchanged only after the complete
+//! backward pass, from the worker thread itself — no per-layer overlap —
+//! so information mixes less frequently and the communication sits on the
+//! critical path of the step.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+use crate::topology::Topology;
+use crate::util::rng::Pcg32;
+
+pub struct GoSgd {
+    wid: usize,
+    shared: Arc<Shared>,
+    stash: GradStash,
+    opt: PerLayerOpt,
+    topology: Topology,
+    rng: Pcg32,
+    comm_latency_s: f64,
+}
+
+impl GoSgd {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> GoSgd {
+        GoSgd {
+            wid,
+            shared,
+            stash: GradStash::new(manifest.layers.len()),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            topology: cfg.topology.clone(),
+            rng: Pcg32::new(cfg.seed ^ 0x60560d ^ ((wid as u64) << 32)),
+            comm_latency_s: cfg.comm_latency_s,
+        }
+    }
+}
+
+impl WorkerAlgo for GoSgd {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        self.stash.put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        // local SGD step over all layers at once
+        let my = &self.shared.params[self.wid];
+        let grads = self.stash.take();
+        for (li, g) in grads.iter().enumerate() {
+            self.opt.step_layer(my, li, g, step);
+        }
+
+        // push-sum gossip of the whole model
+        let peer = self
+            .topology
+            .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
+        let shipped = self.shared.weights[self.wid].halve();
+        match self.shared.weights[peer].try_accept(shipped) {
+            None => {
+                self.shared.weights[self.wid].reclaim(shipped);
+            }
+            Some(frac) => {
+                comm_delay(self.comm_latency_s);
+                let peer_params = &self.shared.params[peer];
+                for (li, layer) in my.layers.iter().enumerate() {
+                    for (ti, t) in layer.tensors.iter().enumerate() {
+                        let snap = t.snapshot();
+                        peer_params.layers[li].tensors[ti].mix_from(1.0 - frac, frac, &snap.data);
+                    }
+                }
+                self.shared.weights[peer].release();
+            }
+        }
+        Ok(())
+    }
+}

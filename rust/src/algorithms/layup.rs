@@ -1,0 +1,219 @@
+//! **LayUp** (paper Algorithm 1): asynchronous decentralized SGD with
+//! lock-free, layer-wise, randomized-gossip push-sum updates.
+//!
+//! Per worker there are two threads:
+//!
+//! * the **computation thread** (the coordinator's training loop) runs
+//!   forward + backward and, as each layer's gradient pops out of the
+//!   backward pass, notifies the updater (`on_layer_grads` -> mpsc send —
+//!   the "Notify: updater thread i" line of Algorithm 1);
+//! * the **updater thread** (spawned here) receives those notifications and,
+//!   for each layer: applies the local SGD update to its own shared store
+//!   (`x^{i,l} <- x̃^{i,l} - η ∇L`), then pushes the freshly updated layer
+//!   into the chosen peer's store with the push-sum mixing fraction.
+//!
+//! Push-sum bookkeeping per iteration: at the first layer of an iteration the
+//! updater picks a uniform random peer j, halves its own weight, and tries to
+//! claim j's accept slot. If j is busy (another updater is mid-push — the
+//! contention case of Section 3.1) the whole iteration's peer updates are
+//! *skipped* and the shipped weight reclaimed; the local updates still apply,
+//! so no gradient information is lost, only its propagation is delayed. At
+//! the last layer (layer 0 — backward runs output->input) the slot is
+//! released and `w_j += w_i` has already been folded in by `try_accept`.
+//!
+//! The `model_granularity` flag turns off the paper's core idea (updates are
+//! buffered and applied/pushed only after the full backward pass) — this is
+//! the GoSGD-like ablation used to isolate the contribution of layer-wise
+//! updates.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{comm_delay, PerLayerOpt, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+use crate::topology::Topology;
+use crate::util::rng::Pcg32;
+
+enum Msg {
+    Layer { step: usize, layer: usize, grads: Vec<Tensor> },
+    Done,
+}
+
+pub struct LayUp {
+    tx: Sender<Msg>,
+    updater: Option<JoinHandle<Result<()>>>,
+    /// buffer for the model-granularity ablation
+    stash: Vec<(usize, Vec<Tensor>)>,
+    model_granularity: bool,
+}
+
+impl LayUp {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+        model_granularity: bool,
+    ) -> LayUp {
+        let (tx, rx) = channel();
+        let opt = PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest);
+        let updater = UpdaterThread {
+            wid,
+            shared,
+            opt,
+            topology: cfg.topology.clone(),
+            rng: Pcg32::new(cfg.seed ^ (0x1a1a << 8) ^ wid as u64),
+            comm_latency_s: cfg.comm_latency_s,
+            n_layers: manifest.layers.len(),
+            scratch: Vec::new(),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("updater-{wid}"))
+            .spawn(move || updater.run(rx))
+            .expect("spawning updater thread");
+        LayUp {
+            tx,
+            updater: Some(handle),
+            stash: Vec::new(),
+            model_granularity,
+        }
+    }
+}
+
+impl WorkerAlgo for LayUp {
+    fn on_layer_grads(&mut self, step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        if self.model_granularity {
+            // ablation: buffer until the backward pass completes
+            self.stash.push((layer, grads));
+            return Ok(());
+        }
+        self.tx
+            .send(Msg::Layer { step, layer, grads })
+            .context("updater thread gone")
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        if self.model_granularity {
+            for (layer, grads) in self.stash.drain(..) {
+                self.tx
+                    .send(Msg::Layer { step, layer, grads })
+                    .context("updater thread gone")?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Done);
+        if let Some(h) = self.updater.take() {
+            h.join().expect("updater panicked")?;
+        }
+        Ok(())
+    }
+}
+
+/// The paper's "Updater Thread i".
+struct UpdaterThread {
+    wid: usize,
+    shared: Arc<Shared>,
+    opt: PerLayerOpt,
+    topology: Topology,
+    rng: Pcg32,
+    comm_latency_s: f64,
+    n_layers: usize,
+    /// reusable send buffer (§Perf: allocation-free updater inner loop)
+    scratch: Vec<f32>,
+}
+
+/// Per-iteration push state.
+struct PushState {
+    step: usize,
+    peer: usize,
+    /// mixing fraction w_i/(w_i+w_j); None => skipped on contention
+    frac: Option<f32>,
+    shipped_w: f32,
+}
+
+impl UpdaterThread {
+    fn run(mut self, rx: Receiver<Msg>) -> Result<()> {
+        let mut push: Option<PushState> = None;
+        loop {
+            let msg = match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // sender dropped (worker errored out)
+            };
+            match msg {
+                Msg::Done => break,
+                Msg::Layer { step, layer, grads } => {
+                    if push.as_ref().map(|p| p.step) != Some(step) {
+                        // a previous iteration that never reached layer 0
+                        // (shouldn't happen, but don't leak the busy slot)
+                        if let Some(p) = push.take() {
+                            self.close_iteration(p);
+                        }
+                        push = Some(self.open_iteration(step));
+                    }
+                    let p = push.as_ref().unwrap();
+
+                    // Local Update: x^{i,l} <- x̃^{i,l} - η ∇L(S_k, x̂^{i,l})
+                    let my = &self.shared.params[self.wid];
+                    self.opt.step_layer(my, layer, &grads, step);
+
+                    // Communication + Peer Update (layer-wise, lock-free)
+                    if let Some(frac) = p.frac {
+                        comm_delay(self.comm_latency_s);
+                        let peer_params = &self.shared.params[p.peer];
+                        for (ti, t) in my.layers[layer].tensors.iter().enumerate() {
+                            self.scratch.resize(t.numel(), 0.0);
+                            t.load_into(&mut self.scratch);
+                            peer_params.layers[layer].tensors[ti]
+                                .mix_from(1.0 - frac, frac, &self.scratch);
+                        }
+                    }
+
+                    // layer 0 is the last gradient of the backward pass
+                    if layer == 0 {
+                        if let Some(p) = push.take() {
+                            self.close_iteration(p);
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(p) = push.take() {
+            self.close_iteration(p);
+        }
+        Ok(())
+    }
+
+    /// Start of an iteration: pick a peer, halve own weight, claim the
+    /// peer's accept slot (skip on contention).
+    fn open_iteration(&mut self, step: usize) -> PushState {
+        let m = self.shared.m;
+        let peer = self
+            .topology
+            .peer(self.wid, m, step as u64, &mut self.rng);
+        let shipped_w = self.shared.weights[self.wid].halve();
+        let frac = self.shared.weights[peer].try_accept(shipped_w);
+        if frac.is_none() {
+            // contention: reclaim the weight — the paper's "no information
+            // is really lost", the push is simply retried next iteration.
+            self.shared.weights[self.wid].reclaim(shipped_w);
+        }
+        PushState { step, peer, frac, shipped_w }
+    }
+
+    fn close_iteration(&mut self, p: PushState) {
+        if p.frac.is_some() {
+            self.shared.weights[p.peer].release();
+        }
+        let _ = p.shipped_w;
+        let _ = self.n_layers;
+    }
+}

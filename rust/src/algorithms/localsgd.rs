@@ -1,0 +1,102 @@
+//! **Local SGD** baseline (Stich, 2019): run `sync_period` purely local SGD
+//! steps, then synchronize by global parameter averaging.
+//!
+//! This file also hosts the shared periodic-averaging machinery reused by
+//! SlowMo and CO2 (both are Local SGD plus an outer optimizer step).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+pub struct LocalSgd {
+    pub(crate) wid: usize,
+    pub(crate) shared: Arc<Shared>,
+    stash: GradStash,
+    opt: PerLayerOpt,
+    pub(crate) sync_period: usize,
+    pub(crate) comm_latency_s: f64,
+}
+
+impl LocalSgd {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> LocalSgd {
+        LocalSgd {
+            wid,
+            shared,
+            stash: GradStash::new(manifest.layers.len()),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            sync_period: cfg.sync_period.max(1),
+            comm_latency_s: cfg.comm_latency_s,
+        }
+    }
+
+    pub(crate) fn local_step(&mut self, step: usize) {
+        let my = &self.shared.params[self.wid];
+        let grads = self.stash.take();
+        for (li, g) in grads.iter().enumerate() {
+            self.opt.step_layer(my, li, g, step);
+        }
+    }
+
+    pub(crate) fn stash_put(&mut self, layer: usize, grads: Vec<Tensor>) {
+        self.stash.put(layer, grads);
+    }
+
+    /// Barrier-synchronized global parameter average (the "outer" sync).
+    /// Returns `None` when the run is stopping, otherwise the averaged flat
+    /// parameter vector (callers may post-process it, e.g. SlowMo momentum).
+    pub(crate) fn global_average(&mut self) -> Result<Option<Vec<f32>>> {
+        let my = &self.shared.params[self.wid];
+        *self.shared.param_slots[self.wid].lock().unwrap() = Some(my.flatten());
+        comm_delay(self.comm_latency_s);
+        if !self.shared.barrier.wait(&self.shared.stop) {
+            return Ok(None);
+        }
+        let avg = {
+            let guards: Vec<_> = self
+                .shared
+                .param_slots
+                .iter()
+                .map(|s| s.lock().unwrap())
+                .collect();
+            let mut acc = guards[0].as_ref().expect("missing param slot").clone();
+            for g in &guards[1..] {
+                let v = g.as_ref().expect("missing param slot");
+                for (a, &b) in acc.iter_mut().zip(v.iter()) {
+                    *a += b;
+                }
+            }
+            let m = self.shared.m as f32;
+            for a in &mut acc {
+                *a /= m;
+            }
+            acc
+        };
+        if !self.shared.barrier.wait(&self.shared.stop) {
+            return Ok(None);
+        }
+        Ok(Some(avg))
+    }
+}
+
+impl WorkerAlgo for LocalSgd {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        self.stash_put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        self.local_step(step);
+        if (step + 1) % self.sync_period == 0 {
+            if let Some(avg) = self.global_average()? {
+                self.shared.params[self.wid].store_flat(&avg);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,189 @@
+//! Distributed training algorithms (the paper's Section 4 "Baseline" set).
+//!
+//! Every algorithm implements [`WorkerAlgo`], driven by the per-worker
+//! training loop in [`crate::coordinator`]:
+//!
+//! ```text
+//! for step {
+//!     forward();
+//!     backward(|layer, grads| algo.on_layer_grads(step, layer, grads));  // reverse layer order
+//!     algo.on_step_end(step);
+//! }
+//! ```
+//!
+//! `on_layer_grads` fires the moment a layer's gradient exists — LayUp hands
+//! it straight to its updater thread (overlapping the rest of the backward
+//! pass); synchronous baselines merely stash it until `on_step_end`.
+
+pub mod adpsgd;
+pub mod co2;
+pub mod ddp;
+pub mod gosgd;
+pub mod layup;
+pub mod localsgd;
+pub mod slowmo;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, TrainConfig};
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::model::ModelParams;
+use crate::optim::{LayerOptimizer, OptimKind, Schedule};
+use crate::tensor::Tensor;
+
+/// Per-worker hook object; lives on the worker thread.
+pub trait WorkerAlgo: Send {
+    /// Called during backward, in reverse layer order, as each layer's
+    /// gradient becomes available.
+    fn on_layer_grads(&mut self, step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()>;
+
+    /// Called after the backward pass of `step` completed.
+    fn on_step_end(&mut self, step: usize) -> Result<()>;
+
+    /// Called once after the last step (join helper threads, flush state).
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Instantiate the algorithm for worker `wid`.
+pub fn build(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: Arc<Shared>,
+    manifest: &ModelManifest,
+) -> Result<Box<dyn WorkerAlgo>> {
+    Ok(match cfg.algorithm {
+        Algorithm::Ddp => Box::new(ddp::Ddp::new(cfg, wid, shared, manifest)),
+        Algorithm::LayUp => Box::new(layup::LayUp::new(cfg, wid, shared, manifest, false)),
+        Algorithm::LayUpModelGranularity => {
+            Box::new(layup::LayUp::new(cfg, wid, shared, manifest, true))
+        }
+        Algorithm::GoSgd => Box::new(gosgd::GoSgd::new(cfg, wid, shared, manifest)),
+        Algorithm::AdPsgd => Box::new(adpsgd::AdPsgd::new(cfg, wid, shared, manifest)),
+        Algorithm::LocalSgd => Box::new(localsgd::LocalSgd::new(cfg, wid, shared, manifest)),
+        Algorithm::SlowMo => Box::new(slowmo::SlowMo::new(cfg, wid, shared, manifest)),
+        Algorithm::Co2 => Box::new(co2::Co2::new(cfg, wid, shared, manifest)),
+    })
+}
+
+/// One optimizer per layer — the granularity LayUp steps at.
+pub struct PerLayerOpt {
+    pub opts: Vec<LayerOptimizer>,
+    pub schedule: Schedule,
+}
+
+impl PerLayerOpt {
+    pub fn new(kind: &OptimKind, schedule: &Schedule, manifest: &ModelManifest) -> Self {
+        let opts = manifest
+            .layers
+            .iter()
+            .map(|lm| {
+                let sizes: Vec<usize> = lm.params.iter().map(|p| p.numel()).collect();
+                LayerOptimizer::new(kind.clone(), &sizes)
+            })
+            .collect();
+        PerLayerOpt { opts, schedule: schedule.clone() }
+    }
+
+    /// Apply one layer's gradient to the shared store at `step`'s LR.
+    pub fn step_layer(&mut self, params: &ModelParams, li: usize, grads: &[Tensor], step: usize) {
+        let lr = self.schedule.lr_at(step);
+        self.opts[li].step(&params.layers[li].tensors, grads, lr);
+    }
+}
+
+/// A full gradient set: grads[layer][param].
+pub type GradSet = Vec<Vec<Tensor>>;
+
+/// Stash used by step-granularity algorithms: collects layer grads during
+/// backward, hands the complete set to `on_step_end`.
+#[derive(Default)]
+pub struct GradStash {
+    slots: Vec<Option<Vec<Tensor>>>,
+}
+
+impl GradStash {
+    pub fn new(n_layers: usize) -> Self {
+        GradStash { slots: (0..n_layers).map(|_| None).collect() }
+    }
+
+    pub fn put(&mut self, layer: usize, grads: Vec<Tensor>) {
+        self.slots[layer] = Some(grads);
+    }
+
+    /// Take the complete gradient set (panics if any layer is missing —
+    /// that would be a coordinator bug).
+    pub fn take(&mut self) -> GradSet {
+        self.slots
+            .iter_mut()
+            .map(|s| s.take().expect("missing layer grads"))
+            .collect()
+    }
+}
+
+/// Average `sets` elementwise into a fresh GradSet.
+pub fn average_grad_sets(sets: &[&GradSet]) -> GradSet {
+    let n = sets.len() as f32;
+    let first = sets[0];
+    first
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            layer
+                .iter()
+                .enumerate()
+                .map(|(pi, t)| {
+                    let mut acc = t.clone();
+                    for other in &sets[1..] {
+                        acc.axpy(1.0, &other[li][pi]);
+                    }
+                    acc.scale(1.0 / n);
+                    acc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Simulated communication latency: sleep if configured (thread cluster has
+/// no real network; the DES models paper-scale links instead).
+pub fn comm_delay(seconds: f64) {
+    if seconds > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(seconds));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_stash_roundtrip() {
+        let mut s = GradStash::new(2);
+        s.put(1, vec![Tensor::from_vec(&[1], vec![2.0])]);
+        s.put(0, vec![Tensor::from_vec(&[1], vec![1.0])]);
+        let set = s.take();
+        assert_eq!(set[0][0].data, vec![1.0]);
+        assert_eq!(set[1][0].data, vec![2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing layer grads")]
+    fn grad_stash_incomplete_panics() {
+        let mut s = GradStash::new(2);
+        s.put(0, vec![]);
+        let _ = s.take();
+    }
+
+    #[test]
+    fn average_grad_sets_means() {
+        let a: GradSet = vec![vec![Tensor::from_vec(&[2], vec![0.0, 2.0])]];
+        let b: GradSet = vec![vec![Tensor::from_vec(&[2], vec![4.0, 0.0])]];
+        let avg = average_grad_sets(&[&a, &b]);
+        assert_eq!(avg[0][0].data, vec![2.0, 1.0]);
+    }
+}

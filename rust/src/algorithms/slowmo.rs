@@ -1,0 +1,114 @@
+//! **SlowMo** baseline (Wang et al.): Local SGD with a slow outer momentum
+//! step at every synchronization point.
+//!
+//! At sync `t`, with `x_prev` the (identical) post-sync parameters of the
+//! previous sync and `x_avg` the fresh global average:
+//!
+//! ```text
+//! u <- β u + (x_prev − x_avg)          (slow momentum buffer)
+//! x <- x_prev − α u                    (outer step, α = outer_lr)
+//! ```
+//!
+//! With β=0, α=1 this reduces exactly to Local SGD (property-tested). The
+//! momentum buffer costs one extra model-size buffer — the memory overhead
+//! the paper contrasts with LayUp's buffer-free design.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{localsgd::LocalSgd, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::tensor::Tensor;
+
+pub struct SlowMo {
+    inner: LocalSgd,
+    outer_momentum: f32,
+    outer_lr: f32,
+    /// slow momentum buffer u (model-size)
+    u: Vec<f32>,
+    /// parameters right after the previous outer step
+    x_prev: Vec<f32>,
+}
+
+impl SlowMo {
+    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> SlowMo {
+        let x_prev = shared.params[wid].flatten();
+        SlowMo {
+            inner: LocalSgd::new(cfg, wid, shared, manifest),
+            outer_momentum: cfg.outer_momentum,
+            outer_lr: cfg.outer_lr,
+            u: vec![0.0; x_prev.len()],
+            x_prev,
+        }
+    }
+
+    /// The outer step; shared with CO2.
+    pub(crate) fn outer_step(
+        u: &mut [f32],
+        x_prev: &mut [f32],
+        avg: &[f32],
+        beta: f32,
+        alpha: f32,
+    ) -> Vec<f32> {
+        let mut x_new = vec![0.0f32; avg.len()];
+        for i in 0..avg.len() {
+            u[i] = beta * u[i] + (x_prev[i] - avg[i]);
+            x_new[i] = x_prev[i] - alpha * u[i];
+        }
+        x_prev.copy_from_slice(&x_new);
+        x_new
+    }
+}
+
+impl WorkerAlgo for SlowMo {
+    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+        self.inner.stash_put(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, step: usize) -> Result<()> {
+        self.inner.local_step(step);
+        if (step + 1) % self.inner.sync_period == 0 {
+            if let Some(avg) = self.inner.global_average()? {
+                let x_new = Self::outer_step(
+                    &mut self.u,
+                    &mut self.x_prev,
+                    &avg,
+                    self.outer_momentum,
+                    self.outer_lr,
+                );
+                self.inner.shared.params[self.inner.wid].store_flat(&x_new);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_zero_alpha_one_reduces_to_plain_averaging() {
+        let mut u = vec![0.0; 3];
+        let mut x_prev = vec![1.0, 2.0, 3.0];
+        let avg = vec![0.5, 1.5, 2.5];
+        let x_new = SlowMo::outer_step(&mut u, &mut x_prev, &avg, 0.0, 1.0);
+        assert_eq!(x_new, avg);
+    }
+
+    #[test]
+    fn momentum_accumulates_drift_direction() {
+        let mut u = vec![0.0];
+        let mut x_prev = vec![1.0];
+        // two syncs that each pull x down by 0.1
+        let x1 = SlowMo::outer_step(&mut u, &mut x_prev, &[0.9], 0.5, 1.0);
+        assert!((x1[0] - 0.9).abs() < 1e-6); // u = 0.1
+        let x2 = SlowMo::outer_step(&mut u, &mut x_prev, &[0.8], 0.5, 1.0);
+        // u = 0.5*0.1 + (0.9-0.8) = 0.15; x = 0.9 - 0.15 = 0.75 (overshoots avg)
+        assert!((x2[0] - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,205 @@
+//! Empirical validation of the paper's theory (Section 6, Appendix C):
+//!
+//! * **Elastic consistency** (Assumption 6): `E‖x̄_t − x_t^i‖² ≤ η²B²` with
+//!   `B = B'τ_max`, `B' = (M−1)S/M` — we measure the LHS during a live run
+//!   and compare against the bound with `S` estimated from observed gradient
+//!   norms.
+//! * **Lemma 6.1** (gradient-bias bound): `E‖b(x)‖² ≤ 4K_b²η²B²` — we
+//!   measure the bias as the squared distance between gradients evaluated at
+//!   a worker's snapshot and at the consensus mean (the definition used in
+//!   the proof of C.4), with `K_b` estimated as an empirical Lipschitz
+//!   constant of the stochastic gradient field.
+//!
+//! These checks are what Figure A1 ("model disagreement is bounded and goes
+//! to zero") and the Lemma-6.1 bench rely on.
+
+use anyhow::Result;
+
+use crate::coordinator::Shared;
+use crate::data::Dataset;
+use crate::model::{ModelExec, ModelParams};
+use crate::tensor::Tensor;
+
+/// One sample of the theory diagnostics at some step.
+#[derive(Clone, Debug)]
+pub struct BiasSample {
+    pub step: usize,
+    /// measured max_i ‖x̄ − x_i‖²
+    pub consistency_sq: f64,
+    /// measured ‖g(x_i) − g(x̄)‖² (the bias second moment proxy)
+    pub bias_sq: f64,
+    /// measured ‖g(x_i) − g(x̄)‖ / ‖x_i − x̄‖  (local Lipschitz estimate)
+    pub lipschitz_est: f64,
+    /// measured ‖g(x̄)‖ (stochastic gradient norm, feeds S)
+    pub grad_norm: f64,
+}
+
+/// Accumulates samples plus the constants needed to evaluate the bounds.
+#[derive(Clone, Debug, Default)]
+pub struct BiasTracker {
+    pub samples: Vec<BiasSample>,
+}
+
+impl BiasTracker {
+    /// Evaluate the diagnostics for worker `wid` against the consensus of
+    /// all replicas. Runs two extra gradient evaluations on a probe batch
+    /// (expensive — call sparsely).
+    pub fn measure(
+        &mut self,
+        step: usize,
+        exec: &mut ModelExec,
+        shared: &Shared,
+        wid: usize,
+        data: &dyn Dataset,
+    ) -> Result<()> {
+        // consensus parameters x̄
+        let flats: Vec<Vec<f32>> = shared.params.iter().map(|p| p.flatten()).collect();
+        let d = flats[0].len();
+        let mut mean = vec![0.0f32; d];
+        for f in &flats {
+            for (m, &x) in mean.iter_mut().zip(f.iter()) {
+                *m += x;
+            }
+        }
+        for m in &mut mean {
+            *m /= flats.len() as f32;
+        }
+        let consistency_sq = flats
+            .iter()
+            .map(|f| sq_dist(f, &mean))
+            .fold(0.0f64, f64::max);
+
+        // probe gradients at x_i and at x̄ on the SAME batch
+        let probe = data.eval_batch(0);
+        let scratch = ModelParams::init(&exec.manifest, 0);
+
+        scratch.store_flat(&flats[wid]);
+        let g_i = full_gradient(exec, &scratch, &probe)?;
+        scratch.store_flat(&mean);
+        let g_bar = full_gradient(exec, &scratch, &probe)?;
+
+        let bias_sq = sq_dist(&g_i, &g_bar);
+        let param_dist = sq_dist(&flats[wid], &mean).sqrt();
+        let lipschitz_est = if param_dist > 1e-12 {
+            bias_sq.sqrt() / param_dist
+        } else {
+            0.0
+        };
+        let grad_norm = g_bar.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+
+        self.samples.push(BiasSample { step, consistency_sq, bias_sq, lipschitz_est, grad_norm });
+        Ok(())
+    }
+
+    /// Check Lemma 6.1 on the collected samples: every measured bias second
+    /// moment must sit below `4 K² η² B²` with empirical K, S and the given
+    /// (η, M, τ_max). Returns (worst measured bias, worst bound) — callers
+    /// assert `bias <= bound * slack`.
+    pub fn lemma61_check(&self, eta: f64, m: usize, tau_max: f64) -> (f64, f64) {
+        let k = self
+            .samples
+            .iter()
+            .map(|s| s.lipschitz_est)
+            .fold(0.0f64, f64::max);
+        let s_max = self.samples.iter().map(|s| s.grad_norm).fold(0.0f64, f64::max);
+        let b_prime = (m as f64 - 1.0) / m as f64 * s_max;
+        let b = b_prime * tau_max;
+        let bound = 4.0 * k * k * eta * eta * b * b;
+        let worst = self.samples.iter().map(|s| s.bias_sq).fold(0.0f64, f64::max);
+        (worst, bound)
+    }
+
+    /// Check elastic consistency: worst measured ‖x̄−x_i‖² vs η²B².
+    pub fn elastic_check(&self, eta: f64, m: usize, tau_max: f64) -> (f64, f64) {
+        let s_max = self.samples.iter().map(|s| s.grad_norm).fold(0.0f64, f64::max);
+        let b = (m as f64 - 1.0) / m as f64 * s_max * tau_max;
+        let bound = eta * eta * b * b;
+        let worst = self
+            .samples
+            .iter()
+            .map(|s| s.consistency_sq)
+            .fold(0.0f64, f64::max);
+        (worst, bound)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,consistency_sq,bias_sq,lipschitz_est,grad_norm\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{:.6e},{:.6e},{:.6e},{:.6e}\n",
+                s.step, s.consistency_sq, s.bias_sq, s.lipschitz_est, s.grad_norm
+            ));
+        }
+        out
+    }
+}
+
+/// Full flat gradient of the model at `params` on `batch`.
+pub fn full_gradient(
+    exec: &mut ModelExec,
+    params: &ModelParams,
+    batch: &crate::data::Batch,
+) -> Result<Vec<f32>> {
+    let pass = exec.forward(params, batch)?;
+    let n_layers = exec.manifest.layers.len();
+    let mut per_layer: Vec<Option<Vec<Tensor>>> = (0..n_layers).map(|_| None).collect();
+    {
+        let mut sink = |li: usize, grads: Vec<Tensor>| {
+            per_layer[li] = Some(grads);
+        };
+        exec.backward(params, &pass, &mut sink)?;
+    }
+    let mut flat = Vec::new();
+    for g in per_layer.into_iter() {
+        for t in g.expect("missing layer gradient") {
+            flat.extend_from_slice(&t.data);
+        }
+    }
+    Ok(flat)
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_dist_basic() {
+        assert_eq!(sq_dist(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn lemma61_bound_uses_worst_case_constants() {
+        let mut t = BiasTracker::default();
+        t.samples.push(BiasSample {
+            step: 0,
+            consistency_sq: 0.01,
+            bias_sq: 0.001,
+            lipschitz_est: 2.0,
+            grad_norm: 5.0,
+        });
+        t.samples.push(BiasSample {
+            step: 1,
+            consistency_sq: 0.02,
+            bias_sq: 0.004,
+            lipschitz_est: 1.0,
+            grad_norm: 3.0,
+        });
+        let (worst, bound) = t.lemma61_check(0.1, 4, 2.0);
+        assert_eq!(worst, 0.004);
+        // K=2, S=5, B' = 3.75, B = 7.5, bound = 4*4*0.01*56.25 = 9.0
+        assert!((bound - 9.0).abs() < 1e-9);
+        let (ec_worst, ec_bound) = t.elastic_check(0.1, 4, 2.0);
+        assert_eq!(ec_worst, 0.02);
+        assert!((ec_bound - 0.5625).abs() < 1e-9);
+    }
+}

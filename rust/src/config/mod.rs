@@ -1,0 +1,369 @@
+//! Experiment configuration: a TOML-subset parser plus typed experiment
+//! presets mirroring the paper's hyper-parameter tables (A5–A9).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! bool, integer, float and homogeneous-array values, `#` comments. That is
+//! everything our experiment files use; exotic TOML (dates, inline tables,
+//! multiline strings) is intentionally rejected.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::{OptimKind, Schedule};
+use crate::topology::Topology;
+
+/// Parsed TOML-subset document: section -> key -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            doc.sections
+                .get_mut(&section)
+                .unwrap()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quotes is preserved
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items = inner.trim();
+        if items.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let vals: Result<Vec<_>> = items.split(',').map(|x| parse_value(x.trim())).collect();
+        return Ok(TomlValue::Arr(vals?));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unrecognized value")
+}
+
+/// Which distributed algorithm a run uses (Section 4 "Baseline").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Ddp,
+    LayUp,
+    GoSgd,
+    AdPsgd,
+    SlowMo,
+    Co2,
+    LocalSgd,
+    /// Ablation: LayUp with model-granularity (whole-model) updates.
+    LayUpModelGranularity,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ddp" => Algorithm::Ddp,
+            "layup" => Algorithm::LayUp,
+            "gosgd" => Algorithm::GoSgd,
+            "adpsgd" | "ad-psgd" => Algorithm::AdPsgd,
+            "slowmo" => Algorithm::SlowMo,
+            "co2" => Algorithm::Co2,
+            "localsgd" | "local-sgd" => Algorithm::LocalSgd,
+            "layup-model" | "layup_model" => Algorithm::LayUpModelGranularity,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Ddp => "DDP",
+            Algorithm::LayUp => "LayUp",
+            Algorithm::GoSgd => "GoSGD",
+            Algorithm::AdPsgd => "AD-PSGD",
+            Algorithm::SlowMo => "SlowMo",
+            Algorithm::Co2 => "CO2",
+            Algorithm::LocalSgd => "LocalSGD",
+            Algorithm::LayUpModelGranularity => "LayUp(model)",
+        }
+    }
+
+    pub fn all_paper() -> &'static [Algorithm] {
+        &[
+            Algorithm::Ddp,
+            Algorithm::Co2,
+            Algorithm::SlowMo,
+            Algorithm::GoSgd,
+            Algorithm::AdPsgd,
+            Algorithm::LayUp,
+        ]
+    }
+}
+
+/// Full configuration of one training run on the thread cluster.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub algorithm: Algorithm,
+    pub workers: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub optim: OptimKind,
+    pub schedule: Schedule,
+    pub topology: Topology,
+    /// outer-loop period for LocalSGD/SlowMo/CO2 (paper's `out_freq`)
+    pub sync_period: usize,
+    /// outer (slow) momentum for SlowMo/CO2
+    pub outer_momentum: f32,
+    pub outer_lr: f32,
+    /// injected straggler: (worker id, extra iterations of delay per step)
+    pub straggler: Option<(usize, f64)>,
+    /// simulated per-message communication latency (seconds, thread cluster)
+    pub comm_latency_s: f64,
+    /// track drift/bias every k steps (0 = off; it is expensive)
+    pub track_drift_every: usize,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, algorithm: Algorithm, workers: usize, steps: usize) -> Self {
+        TrainConfig {
+            model: model.to_string(),
+            algorithm,
+            workers,
+            steps,
+            eval_every: (steps / 20).max(1),
+            seed: 42,
+            optim: OptimKind::sgd(0.9, 0.0),
+            schedule: Schedule::Cosine { lr: 0.05, t_max: steps, warmup_steps: 0, warmup_lr: 0.0 },
+            topology: Topology::Random,
+            sync_period: 12,
+            outer_momentum: 0.5,
+            outer_lr: 1.0,
+            straggler: None,
+            comm_latency_s: 0.0,
+            track_drift_every: 0,
+        }
+    }
+
+    /// Load from a TOML-subset file (see configs/ for examples).
+    pub fn from_toml(doc: &Toml) -> Result<TrainConfig> {
+        let model = doc.str_or("run", "model", "mlpnet18").to_string();
+        let algorithm = Algorithm::parse(doc.str_or("run", "algorithm", "layup"))?;
+        let workers = doc.usize_or("run", "workers", 4);
+        let steps = doc.usize_or("run", "steps", 200);
+        let mut cfg = TrainConfig::new(&model, algorithm, workers, steps);
+        cfg.eval_every = doc.usize_or("run", "eval_every", cfg.eval_every);
+        cfg.seed = doc.usize_or("run", "seed", 42) as u64;
+        cfg.sync_period = doc.usize_or("run", "sync_period", cfg.sync_period);
+        cfg.outer_momentum = doc.f64_or("run", "outer_momentum", 0.5) as f32;
+        cfg.outer_lr = doc.f64_or("run", "outer_lr", 1.0) as f32;
+        cfg.comm_latency_s = doc.f64_or("run", "comm_latency_s", 0.0);
+        cfg.track_drift_every = doc.usize_or("run", "track_drift_every", 0);
+
+        let lr = doc.f64_or("optim", "lr", 0.05) as f32;
+        let wd = doc.f64_or("optim", "weight_decay", 0.0) as f32;
+        cfg.optim = match doc.str_or("optim", "optimizer", "sgd") {
+            "adamw" => OptimKind::adamw(wd),
+            _ => OptimKind::sgd(doc.f64_or("optim", "momentum", 0.9) as f32, wd),
+        };
+        let warmup = doc.usize_or("optim", "warmup_steps", 0);
+        let warmup_lr = doc.f64_or("optim", "warmup_lr", 0.0) as f32;
+        let t_max = doc.usize_or("optim", "t_max", steps);
+        cfg.schedule = match doc.str_or("optim", "schedule", "cosine") {
+            "linear" => Schedule::Linear { lr, t_max, warmup_steps: warmup, warmup_lr },
+            "constant" => Schedule::Constant { lr },
+            _ => Schedule::Cosine { lr, t_max, warmup_steps: warmup, warmup_lr },
+        };
+        if let Some(w) = doc.get("straggler", "worker").and_then(|v| v.as_usize()) {
+            let delay = doc.f64_or("straggler", "delay_iterations", 1.0);
+            cfg.straggler = Some((w, delay));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_subset() {
+        let doc = Toml::parse(
+            r#"
+            # an experiment
+            [run]
+            model = "gpt_mini"   # the model
+            algorithm = "layup"
+            workers = 4
+            steps = 300
+            [optim]
+            optimizer = "adamw"
+            lr = 3e-4
+            flags = [1, 2, 3]
+            on = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("run", "model", ""), "gpt_mini");
+        assert_eq!(doc.usize_or("run", "workers", 0), 4);
+        assert_eq!(doc.f64_or("optim", "lr", 0.0), 3e-4);
+        assert!(doc.bool_or("optim", "on", false));
+        assert_eq!(
+            doc.get("optim", "flags"),
+            Some(&TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+    }
+
+    #[test]
+    fn train_config_from_toml() {
+        let doc = Toml::parse(
+            r#"
+            [run]
+            model = "mlpnet18"
+            algorithm = "slowmo"
+            workers = 3
+            steps = 100
+            sync_period = 48
+            [optim]
+            optimizer = "sgd"
+            lr = 0.045
+            momentum = 0.9
+            schedule = "cosine"
+            [straggler]
+            worker = 1
+            delay_iterations = 4.0
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::SlowMo);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.sync_period, 48);
+        assert_eq!(cfg.straggler, Some((1, 4.0)));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Toml::parse("[run]\nkey value").is_err());
+        assert!(Toml::parse("[run]\nkey = @@").is_err());
+        assert!(Algorithm::parse("sgd??").is_err());
+    }
+
+    #[test]
+    fn algorithm_roundtrip() {
+        for a in Algorithm::all_paper() {
+            let parsed = Algorithm::parse(&a.name().to_ascii_lowercase().replace("(model)", "-model"));
+            assert!(parsed.is_ok(), "{a:?}");
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Cluster coordinator: spawns one worker thread per simulated device (plus
+//! whatever helper threads the algorithm needs, e.g. LayUp's updaters), wires
+//! them to the shared lock-free parameter stores, injects stragglers, and
+//! collects metrics.
+//!
+//! This is the L3 runtime of the paper: the training loop below is the
+//! "computation thread" of Figure 1; algorithms hook it via
+//! [`crate::algorithms::WorkerAlgo`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{self, GradSet};
+use crate::config::{Algorithm, TrainConfig};
+use crate::data;
+use crate::manifest::Manifest;
+use crate::metrics::{Curve, CurvePoint, DriftTracker, RunSummary};
+use crate::model::{ModelExec, ModelParams};
+use crate::runtime::Runtime;
+use crate::topology::PushSumWeight;
+
+/// A barrier that can be abandoned when the run is stopping (a plain
+/// `std::sync::Barrier` would deadlock the surviving workers if one worker
+/// errors out mid-run).
+pub struct StopBarrier {
+    n: usize,
+    state: Mutex<(usize, u64)>, // (arrived count, generation)
+    cv: Condvar,
+}
+
+impl StopBarrier {
+    pub fn new(n: usize) -> Self {
+        StopBarrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    /// Returns `true` when all workers arrived, `false` if `stop` was raised
+    /// while waiting (caller should wind down).
+    pub fn wait(&self, stop: &AtomicBool) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        loop {
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(20))
+                .unwrap();
+            st = guard;
+            if st.1 != gen {
+                return true;
+            }
+            if stop.load(Ordering::Relaxed) {
+                // undo our arrival so a later generation isn't corrupted
+                st.0 = st.0.saturating_sub(1);
+                return false;
+            }
+        }
+    }
+}
+
+/// State shared by all worker + updater threads of one run.
+pub struct Shared {
+    pub m: usize,
+    /// per-worker model replicas (lock-free stores)
+    pub params: Vec<Arc<ModelParams>>,
+    /// push-sum weights (gossip algorithms)
+    pub weights: Vec<PushSumWeight>,
+    /// synchronization barrier (DDP / LocalSGD family)
+    pub barrier: StopBarrier,
+    /// gradient exchange slots (DDP all-reduce)
+    pub grad_slots: Vec<Mutex<Option<GradSet>>>,
+    /// flat parameter exchange slots (LocalSGD / SlowMo / CO2)
+    pub param_slots: Vec<Mutex<Option<Vec<f32>>>>,
+    /// cooperative shutdown (set on worker error)
+    pub stop: AtomicBool,
+    /// eval learning curve (written by worker 0)
+    pub curve: Mutex<Curve>,
+    /// model disagreement samples (Fig A1)
+    pub drift: Mutex<DriftTracker>,
+    /// per-worker completed step counters (straggler visibility)
+    pub steps_done: Vec<AtomicU64>,
+    pub start: Instant,
+}
+
+impl Shared {
+    pub fn new(cfg: &TrainConfig, manifest: &Manifest) -> Result<Arc<Shared>> {
+        let model = manifest.model(&cfg.model)?;
+        let m = cfg.workers;
+        // All replicas start identical (same init seed): the paper's methods
+        // assume a common initial consensus.
+        let proto = ModelParams::init(model, cfg.seed);
+        let params: Vec<Arc<ModelParams>> = (0..m)
+            .map(|_| {
+                let p = ModelParams::init(model, cfg.seed);
+                p.copy_from(&proto);
+                p
+            })
+            .collect();
+        Ok(Arc::new(Shared {
+            m,
+            params,
+            weights: (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect(),
+            barrier: StopBarrier::new(m),
+            grad_slots: (0..m).map(|_| Mutex::new(None)).collect(),
+            param_slots: (0..m).map(|_| Mutex::new(None)).collect(),
+            stop: AtomicBool::new(false),
+            curve: Mutex::new(Curve::default()),
+            drift: Mutex::new(DriftTracker::default()),
+            steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
+            start: Instant::now(),
+        }))
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Sum of gossip (applied, skipped) counters.
+    pub fn gossip_counts(&self) -> (u64, u64) {
+        let applied = self.weights.iter().map(|w| w.applied.load(Ordering::Relaxed)).sum();
+        let skipped = self.weights.iter().map(|w| w.skipped.load(Ordering::Relaxed)).sum();
+        (applied, skipped)
+    }
+}
+
+/// Per-worker accounting returned from the worker thread.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub compute_s: f64,
+    pub flops: u64,
+    pub steps: usize,
+    pub upload_hits: u64,
+    pub upload_misses: u64,
+}
+
+/// Run one full training job on the thread cluster. Returns the learning
+/// curve, MFU/occupancy, drift samples and gossip counters.
+pub fn run(cfg: &TrainConfig, manifest: &Manifest) -> Result<RunSummary> {
+    let shared = Shared::new(cfg, manifest)?;
+    let t0 = Instant::now();
+
+    let stats: Vec<WorkerStats> = std::thread::scope(|scope| -> Result<Vec<WorkerStats>> {
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || {
+                let r = worker_main(&cfg, wid, &shared, manifest);
+                if r.is_err() {
+                    shared.stop.store(true, Ordering::Relaxed);
+                }
+                r
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    })?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let total_compute: f64 = stats.iter().map(|s| s.compute_s).sum();
+    let total_flops: u64 = stats.iter().map(|s| s.flops).sum();
+    let occupancy = (total_compute / (wall * cfg.workers as f64)).min(1.0);
+    let (applied, skipped) = shared.gossip_counts();
+
+    let model = manifest.model(&cfg.model)?;
+    let mut data0 = data::build(model, 0, cfg.workers, cfg.seed);
+    let batches_per_epoch = data0.batches_per_epoch();
+    let _ = data0.next_batch();
+
+    let curve = shared.curve.lock().unwrap().clone();
+    let drift = shared.drift.lock().unwrap().clone();
+    let mut extras = std::collections::BTreeMap::new();
+    extras.insert("achieved_flops_per_s".into(), total_flops as f64 / wall);
+    extras.insert("max_disagreement".into(), drift.max_disagreement());
+    extras.insert("final_disagreement".into(), drift.final_disagreement());
+    extras.insert(
+        "upload_hit_rate".into(),
+        stats.iter().map(|s| s.upload_hits).sum::<u64>() as f64
+            / (stats.iter().map(|s| s.upload_hits + s.upload_misses).sum::<u64>() as f64).max(1.0),
+    );
+
+    Ok(RunSummary {
+        algorithm: cfg.algorithm.name().to_string(),
+        curve,
+        mfu: occupancy, // benches calibrate against single-worker peak
+        compute_occupancy: occupancy,
+        total_time_s: wall,
+        total_steps: cfg.steps * cfg.workers,
+        epochs: cfg.steps / batches_per_epoch.max(1),
+        gossip_skipped: skipped,
+        gossip_applied: applied,
+        extras,
+    })
+}
+
+/// The paper's "computation thread" for one device.
+fn worker_main(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: &Arc<Shared>,
+    manifest: &Manifest,
+) -> Result<WorkerStats> {
+    let mut rt = Runtime::new().context("worker runtime")?;
+    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
+        .with_context(|| format!("worker {wid}: loading model"))?;
+    let model = manifest.model(&cfg.model)?;
+    let mut dataset = data::build(model, wid, cfg.workers, cfg.seed);
+    let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), &exec.manifest)?;
+
+    let my_params = Arc::clone(&shared.params[wid]);
+    let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
+    let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
+    let mut baseline_step_s = 0.0f64;
+
+    for step in 0..cfg.steps {
+        if shared.should_stop() {
+            break;
+        }
+        // Straggler injection (Section 5.4): idle for a multiple of the
+        // measured fwd+bwd time.
+        if is_straggler && delay_iters > 0.0 && baseline_step_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                baseline_step_s * delay_iters,
+            ));
+        }
+        let step_t0 = Instant::now();
+
+        let batch = dataset.next_batch();
+        let pass = exec.forward(&my_params, &batch)?;
+        if !pass.loss.is_finite() {
+            anyhow::bail!("worker {wid}: loss diverged (step {step})");
+        }
+        {
+            let mut err: Option<anyhow::Error> = None;
+            let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
+                if err.is_none() {
+                    if let Err(e) = algo.on_layer_grads(step, li, grads) {
+                        err = Some(e);
+                    }
+                }
+            };
+            exec.backward(&my_params, &pass, &mut sink)?;
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+        algo.on_step_end(step)?;
+        shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+
+        if step < 3 {
+            // calibrate the straggler delay unit on undelayed steps
+            let dt = step_t0.elapsed().as_secs_f64();
+            baseline_step_s = if step == 0 { dt } else { 0.5 * (baseline_step_s + dt) };
+        }
+
+        // Evaluation + drift tracking (worker 0 evaluates its replica;
+        // compute/flop counters are excluded from training accounting).
+        if wid == 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+            let flops_before = exec.flops_retired;
+            let compute_before = exec.compute_s;
+            let (loss, acc) = exec.evaluate(&my_params, dataset.as_ref(), 4)?;
+            exec.flops_retired = flops_before;
+            exec.compute_s = compute_before;
+            shared.curve.lock().unwrap().push(CurvePoint {
+                step,
+                time_s: shared.start.elapsed().as_secs_f64(),
+                loss,
+                accuracy: acc,
+            });
+        }
+        if wid == 0
+            && cfg.track_drift_every > 0
+            && step % cfg.track_drift_every == 0
+        {
+            let flats: Vec<Vec<f32>> = shared.params.iter().map(|p| p.flatten()).collect();
+            shared.drift.lock().unwrap().record(step, &flats);
+        }
+    }
+
+    algo.finish()?;
+    Ok(WorkerStats {
+        compute_s: exec.compute_s,
+        flops: exec.flops_retired,
+        steps: cfg.steps,
+        upload_hits: exec.upload_hits,
+        upload_misses: exec.upload_misses,
+    })
+}
+
+/// Convenience: run every paper algorithm on the same config, returning
+/// summaries in paper-table order (used by the bench harness).
+pub fn run_all(base: &TrainConfig, manifest: &Manifest) -> Result<Vec<RunSummary>> {
+    Algorithm::all_paper()
+        .iter()
+        .map(|&a| {
+            let mut cfg = base.clone();
+            cfg.algorithm = a;
+            run(&cfg, manifest)
+        })
+        .collect()
+}

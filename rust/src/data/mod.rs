@@ -1,0 +1,97 @@
+//! Synthetic datasets standing in for CIFAR-100/ImageNet, MiniPile/WikiText
+//! and IMDb (DESIGN.md substitution table).
+//!
+//! Requirements on the substitutes: (a) *learnable* — loss decreases and
+//! accuracy/perplexity improve materially with training, so convergence-speed
+//! comparisons between algorithms are meaningful; (b) non-trivial — classes
+//! overlap / the LM has medium entropy, so models do not saturate instantly;
+//! (c) deterministic given a seed, with disjoint train/test streams and
+//! per-worker shards (the paper uses sample `S_k` exclusively on device `i`).
+
+pub mod vision;
+pub mod lm;
+pub mod sentiment;
+
+use crate::manifest::{DType, ModelManifest};
+use crate::util::rng::Pcg32;
+
+/// One training batch in the exact layout the first layer's artifact expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// f32 features (vision) — empty if the model takes tokens.
+    pub x_f32: Vec<f32>,
+    /// i32 tokens (lm/sentiment) — empty if the model takes features.
+    pub x_i32: Vec<i32>,
+    /// i32 targets, flattened to the loss layer's targets_shape.
+    pub targets: Vec<i32>,
+}
+
+/// A seeded, shardable batch stream.
+pub trait Dataset: Send {
+    /// Next training batch for this worker's shard.
+    fn next_batch(&mut self) -> Batch;
+    /// A deterministic held-out batch (index `i` always yields the same data).
+    fn eval_batch(&self, i: usize) -> Batch;
+    /// Number of eval batches available.
+    fn eval_len(&self) -> usize;
+    /// Batches per "epoch" per worker (drives epoch-boundary bookkeeping).
+    fn batches_per_epoch(&self) -> usize;
+}
+
+/// Build the dataset matching a model manifest for worker `worker` of `m`.
+pub fn build(model: &ModelManifest, worker: usize, m: usize, seed: u64) -> Box<dyn Dataset> {
+    let first = &model.layers[0];
+    let loss = model.layers.last().unwrap();
+    let tgt_len: usize = loss.targets_shape.as_ref().map(|s| s.iter().product()).unwrap_or(0);
+    match model.data.kind.as_str() {
+        "vision" => Box::new(vision::VisionDataset::new(
+            model.batch,
+            model.data.get("n_in").expect("vision n_in"),
+            model.data.get("n_classes").expect("vision n_classes"),
+            worker,
+            m,
+            seed,
+        )),
+        "lm" => Box::new(lm::LmDataset::new(
+            model.batch,
+            model.data.get("seq").expect("lm seq"),
+            model.data.get("vocab").expect("lm vocab"),
+            worker,
+            m,
+            seed,
+            lm::CorpusStyle::Pretrain,
+        )),
+        "sentiment" => Box::new(sentiment::SentimentDataset::new(
+            model.batch,
+            model.data.get("seq").expect("sentiment seq"),
+            model.data.get("vocab").expect("sentiment vocab"),
+            worker,
+            m,
+            seed,
+        )),
+        k => panic!("unknown dataset kind {k:?} (first layer dtype {:?}, targets {tgt_len})",
+            matches!(first.x_dtype, DType::F32)),
+    }
+}
+
+/// Shared helper: deterministic per-(worker, purpose) RNG stream.
+pub(crate) fn stream_rng(seed: u64, worker: usize, tag: u64) -> Pcg32 {
+    let mut root = Pcg32::new(seed);
+    let mut r = root.split(tag);
+    r.split(worker as u64 + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_rngs_are_decorrelated() {
+        let mut a = stream_rng(1, 0, 7);
+        let mut b = stream_rng(1, 1, 7);
+        let mut c = stream_rng(1, 0, 8);
+        let same_ab = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        let same_ac = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+        assert!(same_ab < 4 && same_ac < 4);
+    }
+}

@@ -1,0 +1,142 @@
+//! Synthetic sentiment sequences (IMDb analog, Table A3).
+//!
+//! A vocabulary is split into positive-leaning, negative-leaning and neutral
+//! tokens. A sample draws a latent polarity, then emits a token sequence in
+//! which polarity-consistent tokens are more likely, with occasional negation
+//! markers that *flip* the contribution of the following tokens — so a model
+//! has to track at least a little sequential state (which is why the paper
+//! used an LSTM and we use a 2-layer RNN).
+
+use super::{stream_rng, Batch, Dataset};
+use crate::util::rng::Pcg32;
+
+pub struct SentimentDataset {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    n_polar: usize,
+    negation_token: i32,
+    rng: Pcg32,
+    eval_seed: u64,
+    batches_per_epoch: usize,
+}
+
+impl SentimentDataset {
+    pub fn new(batch: usize, seq: usize, vocab: usize, worker: usize, m: usize, seed: u64) -> Self {
+        SentimentDataset {
+            batch,
+            seq,
+            vocab,
+            n_polar: vocab / 4,
+            negation_token: 0,
+            rng: stream_rng(seed, worker, 0x73656e74), // "sent"
+            eval_seed: seed ^ 0x7365_6e74,
+            batches_per_epoch: (2048 / m.max(1) / batch).max(8),
+        }
+    }
+
+    /// tokens [1, n_polar] lean positive; (n_polar, 2*n_polar] lean negative;
+    /// the rest are neutral; token 0 is the negation marker.
+    fn make_batch(&self, rng: &mut Pcg32) -> Batch {
+        let mut x = vec![0i32; self.batch * self.seq];
+        let mut t = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let polarity = rng.below(2) as i32; // 1 = positive
+            t[b] = polarity;
+            let mut negated = false;
+            for s in 0..self.seq {
+                let u = rng.next_f32();
+                let tok = if u < 0.08 {
+                    negated = !negated;
+                    self.negation_token
+                } else if u < 0.50 {
+                    // polarity-consistent token (after accounting for negation)
+                    let effective_pos = (polarity == 1) ^ negated;
+                    let base = if effective_pos { 1 } else { 1 + self.n_polar };
+                    (base + rng.below_usize(self.n_polar)) as i32
+                } else {
+                    // neutral filler
+                    (1 + 2 * self.n_polar
+                        + rng.below_usize(self.vocab - 1 - 2 * self.n_polar))
+                        as i32
+                };
+                x[b * self.seq + s] = tok;
+            }
+        }
+        Batch { x_f32: Vec::new(), x_i32: x, targets: t }
+    }
+}
+
+impl Dataset for SentimentDataset {
+    fn next_batch(&mut self) -> Batch {
+        let mut rng = self.rng.split(0);
+        self.make_batch(&mut rng)
+    }
+
+    fn eval_batch(&self, i: usize) -> Batch {
+        let mut rng = Pcg32::new(self.eval_seed.wrapping_add(i as u64 * 3571));
+        self.make_batch(&mut rng)
+    }
+
+    fn eval_len(&self) -> usize {
+        8
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        self.batches_per_epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SentimentDataset {
+        SentimentDataset::new(16, 24, 64, 0, 2, 11)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut d = ds();
+        let b = d.next_batch();
+        assert_eq!(b.x_i32.len(), 16 * 24);
+        assert_eq!(b.targets.len(), 16);
+        assert!(b.x_i32.iter().all(|&t| (0..64).contains(&t)));
+        assert!(b.targets.iter().all(|&t| t == 0 || t == 1));
+    }
+
+    #[test]
+    fn polar_token_counting_beats_chance() {
+        // simple bag-of-words heuristic (ignoring negation) must beat chance
+        // but stay below perfect — that gap is what the RNN learns.
+        let d = ds();
+        let mut rng = Pcg32::new(3);
+        let (mut correct, mut total) = (0, 0);
+        for _ in 0..50 {
+            let b = d.make_batch(&mut rng);
+            for s in 0..16 {
+                let toks = &b.x_i32[s * 24..(s + 1) * 24];
+                let pos = toks.iter().filter(|&&t| (1..=16).contains(&t)).count() as i32;
+                let neg = toks
+                    .iter()
+                    .filter(|&&t| (17..=32).contains(&t))
+                    .count() as i32;
+                let pred = if pos >= neg { 1 } else { 0 };
+                if pred == b.targets[s] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.6, "bag-of-words acc {acc} too low");
+        assert!(acc < 0.999, "task trivial, acc {acc}");
+    }
+
+    #[test]
+    fn deterministic_eval() {
+        let d = ds();
+        assert_eq!(d.eval_batch(2).x_i32, d.eval_batch(2).x_i32);
+        assert_ne!(d.eval_batch(2).x_i32, d.eval_batch(3).x_i32);
+    }
+}

@@ -1,0 +1,54 @@
+//! # layup — asynchronous decentralized SGD with layer-wise updates
+//!
+//! A production-shaped reproduction of *"LAYUP: Asynchronous decentralized
+//! gradient descent with LAYer-wise UPdates"* as a three-layer Rust+JAX+Pallas
+//! stack:
+//!
+//! * **L1/L2 (build time)**: Pallas kernels + layered JAX models are AOT-lowered
+//!   to per-layer HLO-text artifacts by `python/compile/aot.py`.
+//! * **L3 (this crate)**: the distributed training coordinator. Worker threads
+//!   execute the per-layer artifacts through PJRT ([`runtime`]); *updater*
+//!   threads apply lock-free, layer-wise, randomized-gossip push-sum updates
+//!   ([`algorithms`]) concurrently with the training loop, exactly as
+//!   in the paper's Algorithm 1. DDP / GoSGD / AD-PSGD / SlowMo / CO2 /
+//!   Local-SGD baselines run in the same harness for the paper's tables.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index mapping
+//! each paper table/figure to a bench target, and `EXPERIMENTS.md` for the
+//! measured reproduction.
+
+pub mod algorithms;
+pub mod bias;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod manifest;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod topology;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$LAYUP_ARTIFACTS` or ./artifacts,
+/// walking up from the current dir so tests/benches work from target/.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("LAYUP_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

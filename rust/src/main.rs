@@ -1,0 +1,269 @@
+//! `layup` CLI — the launcher for the L3 coordinator.
+//!
+//! Subcommands (hand-rolled parsing; the offline crate set has no clap):
+//!
+//! ```text
+//! layup train  [--config cfg.toml] [--model M] [--algorithm A] [--workers N]
+//!              [--steps S] [--lr F] [--seed K] [--straggler W:D]
+//!              [--drift-every K] [--out results.json] [--curve out.csv]
+//! layup sim    [--cluster c1|c2|c3] [--workload W] [--algorithm A|all]
+//!              [--straggler W:D]
+//! layup inspect            # print the artifact manifest summary
+//! layup bench-peak [--model M] [--steps S]   # calibrate single-worker peak
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use layup::config::{Algorithm, Toml, TrainConfig};
+use layup::coordinator;
+use layup::manifest::Manifest;
+use layup::optim::Schedule;
+use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .with_context(|| format!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    #[allow(dead_code)] // symmetry with usize_or; used by downstream tooling
+    fn f64_or(&self, k: &str, d: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sim" => cmd_sim(&args),
+        "inspect" => cmd_inspect(),
+        "bench-peak" => cmd_bench_peak(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `layup help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "layup — asynchronous decentralized SGD with layer-wise updates\n\n\
+         usage:\n\
+         \x20 layup train   [--config f.toml] [--model M] [--algorithm A] [--workers N]\n\
+         \x20               [--steps S] [--lr F] [--seed K] [--straggler W:D]\n\
+         \x20               [--drift-every K] [--out results.json] [--curve curve.csv]\n\
+         \x20 layup sim     [--cluster c1|c2|c3] [--workload resnet18_cifar|resnet50_cifar|\n\
+         \x20               resnet50_imagenet|gpt2_medium|gpt2_xl] [--algorithm A|all]\n\
+         \x20               [--straggler W:D]\n\
+         \x20 layup inspect\n\
+         \x20 layup bench-peak [--model M] [--steps S]\n\n\
+         algorithms: ddp layup gosgd adpsgd slowmo co2 localsgd layup-model"
+    );
+}
+
+fn build_train_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        TrainConfig::from_toml(&Toml::parse(&text)?)?
+    } else {
+        TrainConfig::new("mlpnet18", Algorithm::LayUp, 4, 200)
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.eval_every = args.usize_or("eval-every", (cfg.steps / 20).max(1));
+    cfg.seed = args.usize_or("seed", cfg.seed as usize) as u64;
+    cfg.track_drift_every = args.usize_or("drift-every", cfg.track_drift_every);
+    if let Some(lr) = args.get("lr") {
+        let lr: f32 = lr.parse().context("--lr")?;
+        cfg.schedule = Schedule::Cosine { lr, t_max: cfg.steps, warmup_steps: 0, warmup_lr: 0.0 };
+    }
+    if let Some(s) = args.get("straggler") {
+        let (w, d) = s.split_once(':').context("--straggler wants WORKER:DELAY")?;
+        cfg.straggler = Some((w.parse()?, d.parse()?));
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_train_config(args)?;
+    let manifest = Manifest::load(&layup::artifacts_dir())?;
+    println!(
+        "training {} with {} on {} workers for {} steps (seed {})",
+        cfg.model,
+        cfg.algorithm.name(),
+        cfg.workers,
+        cfg.steps,
+        cfg.seed
+    );
+    let t0 = std::time::Instant::now();
+    let summary = coordinator::run(&cfg, &manifest)?;
+    println!(
+        "done in {:.1}s: best_acc={:.4} best_loss={:.4} (ppl {:.2}) occupancy={:.1}% gossip applied/skipped={}/{}",
+        t0.elapsed().as_secs_f64(),
+        summary.curve.best_accuracy(),
+        summary.curve.best_loss(),
+        summary.curve.best_loss().exp(),
+        100.0 * summary.compute_occupancy,
+        summary.gossip_applied,
+        summary.gossip_skipped,
+    );
+    if let Some(path) = args.get("curve") {
+        std::fs::write(path, summary.curve.to_csv())?;
+        println!("learning curve -> {path}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, summary.to_json().dump())?;
+        println!("summary -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cluster_name = args.get("cluster").unwrap_or("c1");
+    let mut cluster = match cluster_name {
+        "c1" => Cluster::c1(),
+        "c2" => Cluster::c2(),
+        "c3" => Cluster::c3(),
+        other => bail!("unknown cluster {other:?}"),
+    };
+    if let Some(s) = args.get("straggler") {
+        let (w, d) = s.split_once(':').context("--straggler wants WORKER:DELAY")?;
+        cluster = cluster.with_straggler(w.parse()?, d.parse()?);
+    }
+    let workload_name = args.get("workload").unwrap_or("resnet50_cifar");
+    let w = match workload_name {
+        "resnet18_cifar" => Workload::resnet18_cifar(cluster.m),
+        "resnet50_cifar" => Workload::resnet50_cifar(cluster.m),
+        "resnet50_imagenet" => Workload::resnet50_imagenet(cluster.m),
+        "gpt2_medium" => Workload::gpt2_medium(cluster.m),
+        "gpt2_xl" => Workload::gpt2_xl(cluster.m),
+        other => bail!("unknown workload {other:?}"),
+    };
+    let period = args.usize_or("sync-period", 12);
+    let algos: Vec<SimAlgo> = match args.get("algorithm").unwrap_or("all") {
+        "all" => SimAlgo::paper_set(period),
+        name => vec![match name {
+            "ddp" => SimAlgo::Ddp,
+            "layup" => SimAlgo::LayUp,
+            "gosgd" => SimAlgo::GoSgd,
+            "adpsgd" => SimAlgo::AdPsgd,
+            "localsgd" => SimAlgo::LocalSgd { period },
+            "slowmo" => SimAlgo::SlowMo { period },
+            "co2" => SimAlgo::Co2 { period },
+            other => bail!("unknown algorithm {other:?}"),
+        }],
+    };
+    println!(
+        "simulating {} on {} ({} devices)",
+        w.name, cluster.name, cluster.m
+    );
+    println!(
+        "{:<10} {:>12} {:>10} {:>8} {:>12}",
+        "algorithm", "wall (s)", "occup.", "MFU", "comm (GB)"
+    );
+    for a in algos {
+        let r = simulate(&cluster, &w, a, args.usize_or("seed", 1) as u64);
+        println!(
+            "{:<10} {:>12.1} {:>9.1}% {:>7.1}% {:>12.1}",
+            r.algo,
+            r.wall_s,
+            100.0 * r.occupancy,
+            100.0 * r.mfu,
+            r.comm_gbytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = layup::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {} (scale: {})", dir.display(), manifest.scale);
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: task={} batch={} params={} step_flops={:.2e}",
+            m.task,
+            m.batch,
+            m.param_count,
+            m.step_flops() as f64
+        );
+        for l in &m.layers {
+            println!(
+                "  {:<12} {:?}  params={:<9} fwd={} bwd={}",
+                l.name,
+                l.kind,
+                l.param_numel(),
+                l.fwd_file,
+                l.bwd_file
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Calibrate the single-worker compute-only peak (the "theoretical peak" the
+/// MFU of Table 4 is measured against on this substrate).
+fn cmd_bench_peak(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("mlpnet18");
+    let steps = args.usize_or("steps", 20);
+    let manifest = Manifest::load(&layup::artifacts_dir())?;
+    let cfg = TrainConfig::new(model, Algorithm::GoSgd, 1, steps);
+    let mut single = cfg.clone();
+    single.workers = 1;
+    single.eval_every = steps + 1; // no eval in the timing window
+    let summary = coordinator::run(&single, &manifest)?;
+    let peak = summary.extras.get("achieved_flops_per_s").copied().unwrap_or(0.0);
+    println!(
+        "single-worker peak on {model}: {:.3e} FLOP/s (occupancy {:.1}%)",
+        peak,
+        100.0 * summary.compute_occupancy
+    );
+    Ok(())
+}

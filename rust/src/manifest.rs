@@ -1,0 +1,289 @@
+//! Typed view of `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//!
+//! The manifest is the contract between the Python compile path and the Rust
+//! runtime: per model, an ordered list of layers, each pointing at a fwd/bwd
+//! HLO-text artifact plus parameter shapes, init specs and FLOP counts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Consumes raw data (tokens or features); backward emits no `gx`.
+    First,
+    /// Activation in, activation out.
+    Mid,
+    /// Consumes activations + targets; forward returns (loss, metric).
+    Loss,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInit {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "zeros" | "ones" | "uniform"
+    pub init: String,
+    pub scale: f32,
+}
+
+impl ParamInit {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerManifest {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Layers with equal share_key execute the same compiled artifact.
+    pub share_key: String,
+    pub fwd_file: String,
+    pub bwd_file: String,
+    /// Indices of the flat fwd inputs jax kept after DCE (see aot.py).
+    pub fwd_kept: Vec<usize>,
+    /// Indices of the flat bwd inputs jax kept after DCE.
+    pub bwd_kept: Vec<usize>,
+    pub params: Vec<ParamInit>,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: DType,
+    pub y_shape: Option<Vec<usize>>,
+    pub targets_shape: Option<Vec<usize>>,
+    pub fwd_flops: u64,
+    pub bwd_flops: u64,
+}
+
+impl LayerManifest {
+    pub fn param_numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DataSpec {
+    pub kind: String, // "vision" | "lm" | "sentiment"
+    pub fields: BTreeMap<String, f64>,
+}
+
+impl DataSpec {
+    pub fn get(&self, k: &str) -> Option<usize> {
+        self.fields.get(k).map(|v| *v as usize)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub batch: usize,
+    /// "classification" | "lm"
+    pub task: String,
+    pub n_valid_classes: usize,
+    pub metric: String,
+    pub data: DataSpec,
+    pub param_count: usize,
+    pub layers: Vec<LayerManifest>,
+}
+
+impl ModelManifest {
+    pub fn total_fwd_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops).sum()
+    }
+
+    pub fn total_bwd_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.bwd_flops).sum()
+    }
+
+    pub fn step_flops(&self) -> u64 {
+        self.total_fwd_flops() + self.total_bwd_flops()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub scale: String,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        if j.get("format")?.as_usize()? != 1 {
+            bail!("unsupported manifest format");
+        }
+        let scale = j
+            .opt("scale")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("default")
+            .to_string();
+        let mut models = BTreeMap::new();
+        for (mname, mj) in j.get("models")?.as_obj()? {
+            models.insert(mname.clone(), parse_model(mname, mj)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), scale, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest ({:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, j: &Json) -> Result<ModelManifest> {
+    let data_j = j.get("data")?;
+    let mut fields = BTreeMap::new();
+    for (k, v) in data_j.as_obj()? {
+        if let Ok(n) = v.as_f64() {
+            fields.insert(k.clone(), n);
+        }
+    }
+    let data = DataSpec {
+        kind: data_j.get("kind")?.as_str()?.to_string(),
+        fields,
+    };
+    let mut layers = Vec::new();
+    for lj in j.get("layers")?.as_arr()? {
+        layers.push(parse_layer(lj)?);
+    }
+    if layers.is_empty() {
+        bail!("model {name} has no layers");
+    }
+    if layers[0].kind != LayerKind::First || layers.last().unwrap().kind != LayerKind::Loss {
+        bail!("model {name}: layer chain must be first .. mid .. loss");
+    }
+    Ok(ModelManifest {
+        name: name.to_string(),
+        batch: j.get("batch")?.as_usize()?,
+        task: j.get("task")?.as_str()?.to_string(),
+        n_valid_classes: j.get("n_valid_classes")?.as_usize()?,
+        metric: j.get("metric")?.as_str()?.to_string(),
+        data,
+        param_count: j.get("param_count")?.as_usize()?,
+        layers,
+    })
+}
+
+fn parse_layer(j: &Json) -> Result<LayerManifest> {
+    let kind = match j.get("kind")?.as_str()? {
+        "first" => LayerKind::First,
+        "mid" => LayerKind::Mid,
+        "loss" => LayerKind::Loss,
+        k => bail!("unknown layer kind {k:?}"),
+    };
+    let x_dtype = match j.get("x_dtype")?.as_str()? {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        d => bail!("unknown dtype {d:?}"),
+    };
+    let mut params = Vec::new();
+    for pj in j.get("params")?.as_arr()? {
+        params.push(ParamInit {
+            name: pj.get("name")?.as_str()?.to_string(),
+            shape: pj.get("shape")?.shape_vec()?,
+            init: pj.get("init")?.as_str()?.to_string(),
+            scale: pj.get("scale")?.as_f64()? as f32,
+        });
+    }
+    // number of flat inputs: params + x (+ targets or gy)
+    let n_inputs = params.len() + 2;
+    let kept_or_all = |key: &str| -> Result<Vec<usize>> {
+        match j.opt(key) {
+            Some(v) => Ok(v.shape_vec()?),
+            None => Ok((0..n_inputs).collect()),
+        }
+    };
+    let fwd_kept = match j.opt("fwd_kept") {
+        Some(v) => v.shape_vec()?,
+        // fwd of first/mid layers has params+x inputs; loss has +targets
+        None => (0..n_inputs - usize::from(kind != LayerKind::Loss)).collect(),
+    };
+    let bwd_kept = kept_or_all("bwd_kept")?;
+    Ok(LayerManifest {
+        name: j.get("name")?.as_str()?.to_string(),
+        kind,
+        share_key: j.get("share_key")?.as_str()?.to_string(),
+        fwd_file: j.get("fwd")?.as_str()?.to_string(),
+        bwd_file: j.get("bwd")?.as_str()?.to_string(),
+        fwd_kept,
+        bwd_kept,
+        params,
+        x_shape: j.get("x_shape")?.shape_vec()?,
+        x_dtype,
+        y_shape: j.opt("y_shape").map(|v| v.shape_vec()).transpose()?,
+        targets_shape: j.opt("targets_shape").map(|v| v.shape_vec()).transpose()?,
+        fwd_flops: j.get("fwd_flops")?.as_f64()? as u64,
+        bwd_flops: j.get("bwd_flops")?.as_f64()? as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "scale": "smoke",
+      "models": {
+        "m": {
+          "batch": 4, "task": "classification", "n_valid_classes": 10,
+          "metric": "acc_count", "param_count": 100,
+          "data": {"kind": "vision", "n_in": 8, "n_classes": 10},
+          "layers": [
+            {"name": "stem", "kind": "first", "share_key": "s",
+             "fwd": "s.fwd.hlo.txt", "bwd": "s.bwd.hlo.txt",
+             "params": [{"name": "w", "shape": [8, 4], "init": "normal", "scale": 0.1}],
+             "x_shape": [4, 8], "x_dtype": "f32", "y_shape": [4, 4],
+             "targets_shape": null, "fwd_flops": 256, "bwd_flops": 512},
+            {"name": "cls", "kind": "loss", "share_key": "c",
+             "fwd": "c.fwd.hlo.txt", "bwd": "c.bwd.hlo.txt",
+             "params": [{"name": "w", "shape": [4, 10], "init": "zeros", "scale": 0.0}],
+             "x_shape": [4, 4], "x_dtype": "f32", "y_shape": null,
+             "targets_shape": [4], "fwd_flops": 320, "bwd_flops": 640}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/art"), SAMPLE).unwrap();
+        let model = m.model("m").unwrap();
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!(model.layers[0].kind, LayerKind::First);
+        assert_eq!(model.layers[1].kind, LayerKind::Loss);
+        assert_eq!(model.layers[1].targets_shape, Some(vec![4]));
+        assert_eq!(model.step_flops(), 256 + 512 + 320 + 640);
+        assert_eq!(model.data.get("n_classes"), Some(10));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_chain() {
+        let bad = SAMPLE.replace("\"kind\": \"first\"", "\"kind\": \"mid\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! Metrics: learning curves, time-to-convergence / time-to-accuracy, model
+//! FLOPs utilization, and the drift / gradient-bias trackers that validate
+//! the paper's theory (Fig A1, Lemma 6.1).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One evaluation point on a learning curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// global step at which this evaluation ran
+    pub step: usize,
+    /// wall-clock (or virtual, for DES) seconds since training start
+    pub time_s: f64,
+    /// mean eval loss (NLL for LM -> perplexity = exp(loss))
+    pub loss: f64,
+    /// eval accuracy in [0, 1] (token accuracy for LM)
+    pub accuracy: f64,
+}
+
+impl CurvePoint {
+    pub fn perplexity(&self) -> f64 {
+        self.loss.exp()
+    }
+}
+
+/// Learning curve + convergence detection for one (algorithm, worker) run.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.points.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Time to reach `target` accuracy (TTA, Table 2). `None` if never reached.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.time_s)
+    }
+
+    pub fn step_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.step)
+    }
+
+    /// Time to convergence (TTC, Table 1): the first point whose accuracy is
+    /// within `tol` of the run's best — i.e. when the curve flattens.
+    pub fn time_to_convergence(&self, tol: f64) -> Option<f64> {
+        let best = self.best_accuracy();
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= best - tol)
+            .map(|p| p.time_s)
+    }
+
+    /// Loss-based TTC for LM tasks.
+    pub fn time_to_loss_convergence(&self, tol: f64) -> Option<f64> {
+        let best = self.best_loss();
+        self.points
+            .iter()
+            .find(|p| p.loss <= best + tol)
+            .map(|p| p.time_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        arr(self
+            .points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("step", num(p.step as f64)),
+                    ("time_s", num(p.time_s)),
+                    ("loss", num(p.loss)),
+                    ("accuracy", num(p.accuracy)),
+                ])
+            })
+            .collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,time_s,loss,accuracy,perplexity\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{:.3},{:.5},{:.5},{:.3}\n",
+                p.step,
+                p.time_s,
+                p.loss,
+                p.accuracy,
+                p.perplexity()
+            ));
+        }
+        out
+    }
+}
+
+/// Model FLOPs Utilization (Table 4). `peak_flops_per_s` is the calibrated
+/// single-worker compute-only throughput (the "theoretical peak" of our
+/// substrate); `achieved` counts FLOPs actually retired over wall time, so
+/// synchronization stalls and communication pauses lower MFU exactly as they
+/// do on the paper's GPUs.
+#[derive(Clone, Debug)]
+pub struct MfuTracker {
+    pub flops_retired: u64,
+    pub wall_start: Option<Instant>,
+    pub wall_s: f64,
+    /// time actually spent inside compute (fwd+bwd execution)
+    pub compute_s: f64,
+}
+
+impl Default for MfuTracker {
+    fn default() -> Self {
+        MfuTracker { flops_retired: 0, wall_start: None, wall_s: 0.0, compute_s: 0.0 }
+    }
+}
+
+impl MfuTracker {
+    pub fn start(&mut self) {
+        self.wall_start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.wall_start.take() {
+            self.wall_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn record_compute(&mut self, flops: u64, seconds: f64) {
+        self.flops_retired += flops;
+        self.compute_s += seconds;
+    }
+
+    /// Achieved FLOPs/s over wall time.
+    pub fn achieved_flops_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.flops_retired as f64 / self.wall_s
+    }
+
+    /// MFU relative to a given peak.
+    pub fn mfu(&self, peak_flops_per_s: f64) -> f64 {
+        if peak_flops_per_s <= 0.0 {
+            return 0.0;
+        }
+        self.achieved_flops_per_s() / peak_flops_per_s
+    }
+
+    /// Fraction of wall time spent computing (the occupancy view of MFU).
+    pub fn compute_occupancy(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        (self.compute_s / self.wall_s).min(1.0)
+    }
+}
+
+/// Model disagreement across workers (Fig A1): mean over workers of
+/// ‖x_i − x̄‖ / √d, sampled during training.
+#[derive(Clone, Debug, Default)]
+pub struct DriftTracker {
+    /// (step, disagreement)
+    pub samples: Vec<(usize, f64)>,
+}
+
+impl DriftTracker {
+    /// `flat_params[i]` is worker i's full parameter vector (flattened).
+    pub fn record(&mut self, step: usize, flat_params: &[Vec<f32>]) {
+        let m = flat_params.len();
+        if m == 0 {
+            return;
+        }
+        let d = flat_params[0].len();
+        let mut mean = vec![0.0f64; d];
+        for w in flat_params {
+            for (mu, &x) in mean.iter_mut().zip(w.iter()) {
+                *mu += x as f64;
+            }
+        }
+        for mu in &mut mean {
+            *mu /= m as f64;
+        }
+        let mut total = 0.0;
+        for w in flat_params {
+            let mut sq = 0.0;
+            for (&x, &mu) in w.iter().zip(mean.iter()) {
+                let dd = x as f64 - mu;
+                sq += dd * dd;
+            }
+            total += (sq / d as f64).sqrt();
+        }
+        self.samples.push((step, total / m as f64));
+    }
+
+    pub fn max_disagreement(&self) -> f64 {
+        self.samples.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    pub fn final_disagreement(&self) -> f64 {
+        self.samples.last().map(|&(_, v)| v).unwrap_or(0.0)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,disagreement\n");
+        for (s, v) in &self.samples {
+            out.push_str(&format!("{s},{v:.6}\n"));
+        }
+        out
+    }
+}
+
+/// Summary for one algorithm run — what the paper's tables report.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub algorithm: String,
+    pub curve: Curve,
+    pub mfu: f64,
+    pub compute_occupancy: f64,
+    pub total_time_s: f64,
+    pub total_steps: usize,
+    pub epochs: usize,
+    pub gossip_skipped: u64,
+    pub gossip_applied: u64,
+    pub extras: BTreeMap<String, f64>,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("algorithm", s(&self.algorithm)),
+            ("curve", self.curve.to_json()),
+            ("mfu", num(self.mfu)),
+            ("compute_occupancy", num(self.compute_occupancy)),
+            ("total_time_s", num(self.total_time_s)),
+            ("total_steps", num(self.total_steps as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("gossip_skipped", num(self.gossip_skipped as f64)),
+            ("gossip_applied", num(self.gossip_applied as f64)),
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), num(*v)));
+        }
+        obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(usize, f64, f64, f64)]) -> Curve {
+        Curve {
+            points: points
+                .iter()
+                .map(|&(step, time_s, loss, accuracy)| CurvePoint { step, time_s, loss, accuracy })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn tta_finds_first_crossing() {
+        let c = curve(&[(0, 0.0, 2.0, 0.1), (10, 1.0, 1.0, 0.5), (20, 2.0, 0.5, 0.7)]);
+        assert_eq!(c.time_to_accuracy(0.5), Some(1.0));
+        assert_eq!(c.step_to_accuracy(0.65), Some(20));
+        assert_eq!(c.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn ttc_flattening() {
+        let c = curve(&[
+            (0, 0.0, 2.0, 0.10),
+            (10, 1.0, 1.0, 0.60),
+            (20, 2.0, 0.9, 0.69),
+            (30, 3.0, 0.8, 0.70),
+        ]);
+        // best = 0.70; within 0.02 first at t=2.0
+        assert_eq!(c.time_to_convergence(0.02), Some(2.0));
+    }
+
+    #[test]
+    fn mfu_accounting() {
+        let mut m = MfuTracker::default();
+        m.wall_s = 2.0;
+        m.record_compute(1_000_000, 1.0);
+        assert_eq!(m.achieved_flops_per_s(), 500_000.0);
+        assert!((m.mfu(1_000_000.0) - 0.5).abs() < 1e-9);
+        assert!((m.compute_occupancy() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_zero_when_identical_positive_when_not() {
+        let mut d = DriftTracker::default();
+        d.record(0, &[vec![1.0, 2.0], vec![1.0, 2.0]]);
+        assert!(d.samples[0].1 < 1e-12);
+        d.record(1, &[vec![0.0, 0.0], vec![2.0, 2.0]]);
+        assert!(d.samples[1].1 > 0.9); // each worker is distance 1 (per-dim rms) from mean
+    }
+
+    #[test]
+    fn csv_and_json_emit() {
+        let c = curve(&[(0, 0.0, 1.0, 0.5)]);
+        assert!(c.to_csv().contains("0,0.000,1.00000,0.50000"));
+        let j = c.to_json().dump();
+        assert!(j.contains("\"accuracy\":0.5"));
+    }
+}

@@ -1,0 +1,373 @@
+//! Layered model executor: drives the per-layer fwd/bwd HLO artifacts.
+//!
+//! The central LayUp hook is [`ModelExec::backward`]: it walks the layers in
+//! *reverse* order and invokes the gradient sink **immediately after each
+//! layer's backward artifact returns** — i.e. the moment that layer's
+//! gradient exists — so the caller (a worker's training loop) can hand the
+//! layer to its updater thread while the backward pass continues towards the
+//! input. This is the "incremental layer-wise updates during backpropagation"
+//! of the paper, with the activation cotangent `gx` threaded between
+//! artifacts as a device literal (no host round-trip).
+//!
+//! Parameters live in shared lock-free stores ([`LayerParams`]); because
+//! gossip can rewrite them *between* forward and backward (and even between
+//! two layers of one pass — the paper's `x̂` vs `x̃` distinction), the
+//! executor re-validates its upload cache against the layer's version
+//! counter on every use rather than assuming the forward's snapshot is still
+//! current.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Batch;
+use crate::manifest::{DType, LayerKind, Manifest, ModelManifest};
+use crate::runtime::{self, Executable, Runtime};
+use crate::tensor::{AtomicTensor, LayerParams, Tensor};
+use crate::util::rng::Pcg32;
+
+/// Shared (across threads) parameter state of one worker's model replica.
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+}
+
+impl ModelParams {
+    /// Initialize from the manifest's init specs with a per-worker seed.
+    pub fn init(manifest: &ModelManifest, seed: u64) -> Arc<ModelParams> {
+        let mut rng = Pcg32::new(seed);
+        let layers = manifest
+            .layers
+            .iter()
+            .map(|lm| LayerParams {
+                tensors: lm
+                    .params
+                    .iter()
+                    .map(|p| {
+                        let mut t = Tensor::zeros(&p.shape);
+                        match p.init.as_str() {
+                            "zeros" => {}
+                            "ones" => t.fill(1.0),
+                            "uniform" => {
+                                for v in &mut t.data {
+                                    *v = (rng.next_f32() * 2.0 - 1.0) * p.scale;
+                                }
+                            }
+                            _ => {
+                                for v in &mut t.data {
+                                    *v = rng.normal() * p.scale;
+                                }
+                            }
+                        }
+                        AtomicTensor::from_tensor(&t)
+                    })
+                    .collect(),
+            })
+            .collect();
+        Arc::new(ModelParams { layers })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.layers.iter().map(|l| l.numel()).sum()
+    }
+
+    /// Flatten every parameter into one vector (drift / bias diagnostics).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.numel());
+        for l in &self.layers {
+            for t in &l.tensors {
+                let snap = t.snapshot();
+                out.extend_from_slice(&snap.data);
+            }
+        }
+        out
+    }
+
+    /// Overwrite every parameter from a flat vector (inverse of `flatten`).
+    pub fn store_flat(&self, flat: &[f32]) {
+        let mut off = 0;
+        for l in &self.layers {
+            for t in &l.tensors {
+                let n = t.numel();
+                t.store_from(&flat[off..off + n]);
+                off += n;
+            }
+        }
+        debug_assert_eq!(off, flat.len());
+    }
+
+    /// Copy all values from another replica (checkpoint restore / broadcast).
+    pub fn copy_from(&self, other: &ModelParams) {
+        for (a, b) in self.layers.iter().zip(&other.layers) {
+            for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+                ta.store_from(&tb.snapshot().data);
+            }
+        }
+    }
+}
+
+/// Upload cache entry: literals for one layer's params, keyed by version.
+struct LayerLiteralCache {
+    version: u64,
+    literals: Vec<xla::Literal>,
+    scratch: Vec<f32>,
+}
+
+struct LayerExec {
+    fwd: Rc<Executable>,
+    bwd: Rc<Executable>,
+}
+
+/// The result of one forward pass (kept for the matching backward).
+pub struct ForwardPass {
+    pub loss: f32,
+    pub metric: f32,
+    /// input literal of every layer: activations[i] feeds layer i
+    activations: Vec<xla::Literal>,
+    targets: xla::Literal,
+}
+
+/// Thread-local executor for one model on one worker.
+pub struct ModelExec {
+    pub manifest: ModelManifest,
+    /// artifacts directory this executor was loaded from (diagnostics)
+    pub dir: std::path::PathBuf,
+    layers: Vec<LayerExec>,
+    cache: Vec<LayerLiteralCache>,
+    /// cumulative compute accounting (drained by the worker for MFU)
+    pub compute_s: f64,
+    pub flops_retired: u64,
+    /// uploads skipped thanks to version caching (perf counter)
+    pub upload_hits: u64,
+    pub upload_misses: u64,
+}
+
+impl ModelExec {
+    /// Compile all (distinct) layer artifacts of `model_name`.
+    pub fn load(rt: &mut Runtime, man: &Manifest, model_name: &str) -> Result<ModelExec> {
+        let manifest = man.model(model_name)?.clone();
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        let mut cache = Vec::with_capacity(manifest.layers.len());
+        for lm in &manifest.layers {
+            let fwd = rt.load(&man.artifact_path(&lm.fwd_file))?;
+            let bwd = rt.load(&man.artifact_path(&lm.bwd_file))?;
+            layers.push(LayerExec { fwd, bwd });
+            cache.push(LayerLiteralCache {
+                version: u64::MAX,
+                literals: Vec::new(),
+                scratch: Vec::new(),
+            });
+        }
+        Ok(ModelExec {
+            manifest,
+            dir: man.dir.clone(),
+            layers,
+            cache,
+            compute_s: 0.0,
+            flops_retired: 0,
+            upload_hits: 0,
+            upload_misses: 0,
+        })
+    }
+
+    /// Refresh (if stale) and return the literal uploads of layer `li`.
+    fn param_literals(&mut self, li: usize, params: &ModelParams) -> Result<()> {
+        let lp = &params.layers[li];
+        let ver = lp.version();
+        let entry = &mut self.cache[li];
+        if entry.version == ver && !entry.literals.is_empty() {
+            self.upload_hits += 1;
+            return Ok(());
+        }
+        self.upload_misses += 1;
+        entry.literals.clear();
+        for (t, spec) in lp.tensors.iter().zip(&self.manifest.layers[li].params) {
+            entry.scratch.resize(t.numel(), 0.0);
+            t.load_into(&mut entry.scratch);
+            entry
+                .literals
+                .push(runtime::literal_f32(&spec.shape, &entry.scratch)?);
+        }
+        entry.version = ver;
+        Ok(())
+    }
+
+    /// Drop the inputs jax DCE'd out of the artifact (manifest `*_kept`).
+    fn filter_args<'a>(args: Vec<&'a xla::Literal>, kept: &[usize]) -> Vec<&'a xla::Literal> {
+        if kept.len() == args.len() {
+            return args;
+        }
+        kept.iter().map(|&i| args[i]).collect()
+    }
+
+    fn input_literal(&self, batch: &Batch) -> Result<xla::Literal> {
+        let first = &self.manifest.layers[0];
+        match first.x_dtype {
+            DType::F32 => runtime::literal_f32(&first.x_shape, &batch.x_f32),
+            DType::I32 => runtime::literal_i32(&first.x_shape, &batch.x_i32),
+        }
+    }
+
+    fn targets_literal(&self, batch: &Batch) -> Result<xla::Literal> {
+        let loss = self.manifest.layers.last().unwrap();
+        let shape = loss
+            .targets_shape
+            .as_ref()
+            .context("loss layer missing targets_shape")?;
+        runtime::literal_i32(shape, &batch.targets)
+    }
+
+    /// Run the full forward pass; returns loss/metric plus the stashed
+    /// activations needed by `backward`.
+    pub fn forward(&mut self, params: &ModelParams, batch: &Batch) -> Result<ForwardPass> {
+        let n = self.layers.len();
+        let mut activations = Vec::with_capacity(n);
+        activations.push(self.input_literal(batch)?);
+        let targets = self.targets_literal(batch)?;
+
+        for li in 0..n - 1 {
+            self.param_literals(li, params)?;
+            let entry = &self.cache[li];
+            let mut args: Vec<&xla::Literal> = entry.literals.iter().collect();
+            args.push(&activations[li]);
+            let args = Self::filter_args(args, &self.manifest.layers[li].fwd_kept);
+            let mut outs = self.layers[li].fwd.run(&args)?;
+            if outs.len() != 1 {
+                bail!("layer {li} fwd returned {} outputs", outs.len());
+            }
+            self.flops_retired += self.manifest.layers[li].fwd_flops;
+            activations.push(outs.pop().unwrap());
+        }
+
+        // loss layer
+        let li = n - 1;
+        self.param_literals(li, params)?;
+        let entry = &self.cache[li];
+        let mut args: Vec<&xla::Literal> = entry.literals.iter().collect();
+        args.push(&activations[li]);
+        args.push(&targets);
+        let args = Self::filter_args(args, &self.manifest.layers[li].fwd_kept);
+        let outs = self.layers[li].fwd.run(&args)?;
+        if outs.len() != 2 {
+            bail!("loss layer returned {} outputs (want loss, metric)", outs.len());
+        }
+        self.flops_retired += self.manifest.layers[li].fwd_flops;
+        let loss = runtime::literal_scalar_f32(&outs[0])?;
+        let metric = runtime::literal_scalar_f32(&outs[1])?;
+        self.drain_compute_time();
+        Ok(ForwardPass { loss, metric, activations, targets })
+    }
+
+    /// Run the backward pass layer-by-layer in reverse, invoking
+    /// `sink(layer_idx, grads)` the moment each layer's gradient exists.
+    ///
+    /// `grads` are host tensors in manifest param order. Parameter literals
+    /// are re-validated per layer, so gossip writes landing mid-backward are
+    /// picked up exactly as in the paper (the gradient may then be slightly
+    /// biased — Lemma 6.1 bounds this).
+    pub fn backward(
+        &mut self,
+        params: &ModelParams,
+        pass: &ForwardPass,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> Result<()> {
+        let n = self.layers.len();
+
+        // loss layer: bwd(params, x, targets) -> (*gparams, gx)
+        let li = n - 1;
+        self.param_literals(li, params)?;
+        let entry = &self.cache[li];
+        let mut args: Vec<&xla::Literal> = entry.literals.iter().collect();
+        args.push(&pass.activations[li]);
+        args.push(&pass.targets);
+        let args = Self::filter_args(args, &self.manifest.layers[li].bwd_kept);
+        let mut outs = self.layers[li].bwd.run(&args)?;
+        self.flops_retired += self.manifest.layers[li].bwd_flops;
+        let mut gy = outs.pop().context("loss bwd missing gx")?;
+        sink(li, self.grads_from(li, outs)?);
+
+        // mid layers, then first
+        for li in (0..n - 1).rev() {
+            self.param_literals(li, params)?;
+            let entry = &self.cache[li];
+            let mut args: Vec<&xla::Literal> = entry.literals.iter().collect();
+            args.push(&pass.activations[li]);
+            args.push(&gy);
+            let args = Self::filter_args(args, &self.manifest.layers[li].bwd_kept);
+            let mut outs = self.layers[li].bwd.run(&args)?;
+            self.flops_retired += self.manifest.layers[li].bwd_flops;
+            if self.manifest.layers[li].kind != LayerKind::First {
+                gy = outs.pop().context("mid bwd missing gx")?;
+            }
+            sink(li, self.grads_from(li, outs)?);
+        }
+        self.drain_compute_time();
+        Ok(())
+    }
+
+    fn grads_from(&self, li: usize, outs: Vec<xla::Literal>) -> Result<Vec<Tensor>> {
+        let specs = &self.manifest.layers[li].params;
+        if outs.len() != specs.len() {
+            bail!(
+                "layer {li} bwd returned {} grads, manifest says {}",
+                outs.len(),
+                specs.len()
+            );
+        }
+        outs.iter()
+            .zip(specs)
+            .map(|(lit, spec)| {
+                Ok(Tensor::from_vec(&spec.shape, runtime::literal_to_vec_f32(lit)?))
+            })
+            .collect()
+    }
+
+    /// Pull per-executable timing into the cumulative counter.
+    fn drain_compute_time(&mut self) {
+        let mut total = 0.0;
+        for l in &self.layers {
+            total += *l.fwd.exec_seconds.borrow() + *l.bwd.exec_seconds.borrow();
+            *l.fwd.exec_seconds.borrow_mut() = 0.0;
+            *l.bwd.exec_seconds.borrow_mut() = 0.0;
+        }
+        self.compute_s += total;
+    }
+
+    /// Evaluate on `k` deterministic held-out batches; returns
+    /// (mean loss, accuracy in [0,1]).
+    pub fn evaluate(
+        &mut self,
+        params: &ModelParams,
+        data: &dyn crate::data::Dataset,
+        k: usize,
+    ) -> Result<(f64, f64)> {
+        let k = k.min(data.eval_len()).max(1);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        let denom = self.examples_per_batch() as f64;
+        for i in 0..k {
+            let b = data.eval_batch(i);
+            let pass = self.forward(params, &b)?;
+            loss_sum += pass.loss as f64;
+            correct += pass.metric as f64;
+            total += denom;
+        }
+        Ok((loss_sum / k as f64, correct / total))
+    }
+
+    /// How many prediction events one batch contains (rows for vision,
+    /// tokens for LM — matches the loss layer's `metric` semantics).
+    pub fn examples_per_batch(&self) -> usize {
+        let loss = self.manifest.layers.last().unwrap();
+        loss.targets_shape
+            .as_ref()
+            .map(|s| s.iter().product())
+            .unwrap_or(self.manifest.batch)
+    }
+
+    /// Per-step FLOPs (fwd+bwd over all layers).
+    pub fn step_flops(&self) -> u64 {
+        self.manifest.step_flops()
+    }
+}

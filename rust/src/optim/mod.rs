@@ -1,0 +1,230 @@
+//! Optimizers and learning-rate schedules (paper Tables A5–A9).
+//!
+//! Optimizers operate per *layer* on plain gradient slices and write into the
+//! shared [`AtomicTensor`] parameter stores — the same lock-free path the
+//! updater threads use, so an optimizer step can race with incoming gossip
+//! exactly as in the paper (`x^{i,l} ← x̃^{i,l} − η ∇L(S_k, x̂^{i,l})`).
+
+use crate::tensor::{AtomicTensor, Tensor};
+
+/// Learning-rate schedule. All schedules support a linear warmup prefix,
+/// mirroring the hyper-parameter tables in the paper's appendix.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Constant {
+        lr: f32,
+    },
+    /// Cosine decay from `lr` to 0 over `t_max` steps (CIFAR-100, GPT runs).
+    Cosine {
+        lr: f32,
+        t_max: usize,
+        warmup_steps: usize,
+        warmup_lr: f32,
+    },
+    /// Linear decay to zero after warmup (ImageNet-1k run).
+    Linear {
+        lr: f32,
+        t_max: usize,
+        warmup_steps: usize,
+        warmup_lr: f32,
+    },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Cosine { lr, t_max, warmup_steps, warmup_lr } => {
+                if step < warmup_steps {
+                    warmup(step, warmup_steps, warmup_lr, lr)
+                } else {
+                    let t = (step - warmup_steps).min(t_max) as f32 / t_max.max(1) as f32;
+                    lr * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+            Schedule::Linear { lr, t_max, warmup_steps, warmup_lr } => {
+                if step < warmup_steps {
+                    warmup(step, warmup_steps, warmup_lr, lr)
+                } else {
+                    let t = (step - warmup_steps).min(t_max) as f32 / t_max.max(1) as f32;
+                    lr * (1.0 - t)
+                }
+            }
+        }
+    }
+}
+
+fn warmup(step: usize, warmup_steps: usize, from: f32, to: f32) -> f32 {
+    let t = step as f32 / warmup_steps.max(1) as f32;
+    from + (to - from) * t
+}
+
+/// Optimizer configuration.
+#[derive(Clone, Debug)]
+pub enum OptimKind {
+    /// SGD with (optional) heavy-ball momentum and decoupled weight decay.
+    Sgd { momentum: f32, weight_decay: f32 },
+    /// AdamW (GPT pretraining/finetuning tables).
+    AdamW { beta1: f32, beta2: f32, eps: f32, weight_decay: f32 },
+}
+
+impl OptimKind {
+    pub fn sgd(momentum: f32, weight_decay: f32) -> Self {
+        OptimKind::Sgd { momentum, weight_decay }
+    }
+
+    pub fn adamw(weight_decay: f32) -> Self {
+        OptimKind::AdamW { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay }
+    }
+}
+
+/// Per-layer optimizer state. One `LayerOptimizer` exists per (worker, layer)
+/// pair; LayUp's layer-wise granularity means each one can step independently
+/// the moment its gradient arrives from the backward pass.
+pub struct LayerOptimizer {
+    kind: OptimKind,
+    /// momentum buffer (SGD) or first moment (AdamW), one slice per param
+    m: Vec<Vec<f32>>,
+    /// second moment (AdamW only)
+    v: Vec<Vec<f32>>,
+    /// AdamW bias-correction step count
+    t: u64,
+    /// reusable scratch (param snapshot / update vector) — §Perf: keeps the
+    /// per-layer step allocation-free after the first call
+    scratch: Vec<f32>,
+    scratch2: Vec<f32>,
+}
+
+impl LayerOptimizer {
+    pub fn new(kind: OptimKind, param_sizes: &[usize]) -> Self {
+        let m = param_sizes.iter().map(|&n| vec![0.0; n]).collect();
+        let v = match kind {
+            OptimKind::AdamW { .. } => param_sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            _ => Vec::new(),
+        };
+        LayerOptimizer { kind, m, v, t: 0, scratch: Vec::new(), scratch2: Vec::new() }
+    }
+
+    /// Apply one update to the shared parameter store for this layer.
+    /// `grads[i]` matches `params.tensors[i]` elementwise.
+    pub fn step(&mut self, params: &[AtomicTensor], grads: &[Tensor], lr: f32) {
+        debug_assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        match self.kind {
+            OptimKind::Sgd { momentum, weight_decay } => {
+                for (pi, (p, g)) in params.iter().zip(grads).enumerate() {
+                    let buf = &mut self.m[pi];
+                    if momentum > 0.0 {
+                        // v = mu*v + g ; p -= lr * (v + wd*p)
+                        self.scratch.resize(p.numel(), 0.0);
+                        p.load_into(&mut self.scratch);
+                        for k in 0..buf.len() {
+                            buf[k] = momentum * buf[k] + g.data[k];
+                            self.scratch[k] = buf[k] + weight_decay * self.scratch[k];
+                        }
+                        p.sub_scaled(lr, &self.scratch);
+                    } else if weight_decay > 0.0 {
+                        self.scratch.resize(p.numel(), 0.0);
+                        p.load_into(&mut self.scratch);
+                        for k in 0..g.data.len() {
+                            self.scratch[k] = g.data[k] + weight_decay * self.scratch[k];
+                        }
+                        p.sub_scaled(lr, &self.scratch);
+                    } else {
+                        p.sub_scaled(lr, &g.data);
+                    }
+                }
+            }
+            OptimKind::AdamW { beta1, beta2, eps, weight_decay } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for (pi, (p, g)) in params.iter().zip(grads).enumerate() {
+                    let m = &mut self.m[pi];
+                    let v = &mut self.v[pi];
+                    self.scratch.resize(p.numel(), 0.0);
+                    p.load_into(&mut self.scratch);
+                    self.scratch2.resize(m.len(), 0.0);
+                    for k in 0..m.len() {
+                        m[k] = beta1 * m[k] + (1.0 - beta1) * g.data[k];
+                        v[k] = beta2 * v[k] + (1.0 - beta2) * g.data[k] * g.data[k];
+                        let mhat = m[k] / bc1;
+                        let vhat = v[k] / bc2;
+                        self.scratch2[k] = mhat / (vhat.sqrt() + eps) + weight_decay * self.scratch[k];
+                    }
+                    p.sub_scaled(lr, &self.scratch2);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(vals: &[f32]) -> AtomicTensor {
+        AtomicTensor::from_tensor(&Tensor::from_vec(&[vals.len()], vals.to_vec()))
+    }
+
+    #[test]
+    fn sgd_plain_step() {
+        let p = store(&[1.0, 2.0]);
+        let mut opt = LayerOptimizer::new(OptimKind::sgd(0.0, 0.0), &[2]);
+        opt.step(
+            std::slice::from_ref(&p),
+            &[Tensor::from_vec(&[2], vec![1.0, -1.0])],
+            0.5,
+        );
+        assert_eq!(p.snapshot().data, vec![0.5, 2.5]);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let p = store(&[0.0]);
+        let mut opt = LayerOptimizer::new(OptimKind::sgd(0.9, 0.0), &[1]);
+        let g = [Tensor::from_vec(&[1], vec![1.0])];
+        opt.step(std::slice::from_ref(&p), &g, 1.0); // v=1, p=-1
+        opt.step(std::slice::from_ref(&p), &g, 1.0); // v=1.9, p=-2.9
+        assert!((p.snapshot().data[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let p = store(&[10.0]);
+        let mut opt = LayerOptimizer::new(OptimKind::sgd(0.0, 0.1), &[1]);
+        opt.step(std::slice::from_ref(&p), &[Tensor::from_vec(&[1], vec![0.0])], 0.5);
+        assert!((p.snapshot().data[0] - 9.5).abs() < 1e-6); // 10 - 0.5*0.1*10
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        // minimize (x-3)^2 — AdamW should get close in a few hundred steps
+        let p = store(&[0.0]);
+        let mut opt = LayerOptimizer::new(OptimKind::adamw(0.0), &[1]);
+        for _ in 0..500 {
+            let x = p.snapshot().data[0];
+            let g = [Tensor::from_vec(&[1], vec![2.0 * (x - 3.0)])];
+            opt.step(std::slice::from_ref(&p), &g, 0.05);
+        }
+        assert!((p.snapshot().data[0] - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = Schedule::Cosine { lr: 1.0, t_max: 100, warmup_steps: 10, warmup_lr: 0.1 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!(s.lr_at(5) > 0.1 && s.lr_at(5) < 1.0);
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-6);
+        assert!((s.lr_at(60) - 0.5).abs() < 0.01);
+        assert!(s.lr_at(110) < 1e-6);
+    }
+
+    #[test]
+    fn linear_schedule_shape() {
+        let s = Schedule::Linear { lr: 0.3, t_max: 90, warmup_steps: 2, warmup_lr: 0.1 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(2) - 0.3).abs() < 1e-6);
+        assert!((s.lr_at(47) - 0.15).abs() < 0.01);
+        assert!(s.lr_at(92) < 1e-6);
+    }
+}

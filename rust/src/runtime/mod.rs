@@ -1,0 +1,142 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client (adapting /opt/xla-example/load_hlo).
+//!
+//! Thread model: the `xla` crate's wrappers are `Rc`-based and thus
+//! `!Send`/`!Sync`, so **each worker thread owns its own [`Runtime`]** —
+//! its own `PjRtClient` and its own compiled executables. That matches the
+//! paper's deployment (one process context per device) and keeps the gossip
+//! path (which only touches [`crate::tensor::AtomicTensor`]s) free of any
+//! XLA state. Compilation cost stays bounded because layers with equal
+//! `share_key` share one artifact: a runtime compiles each *distinct* HLO
+//! file exactly once (per-path cache).
+//!
+//! Hot-path performance (DESIGN.md §Perf): parameter uploads are cached by
+//! the layer's version counter (see [`crate::model`]), so a parameter tensor
+//! is converted to a `Literal` again only after a gossip write or optimizer
+//! step actually changed it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// One compiled artifact (fwd or bwd of one layer shape).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// path it was loaded from (diagnostics)
+    pub path: PathBuf,
+    /// cumulative execution stats
+    pub calls: RefCell<u64>,
+    pub exec_seconds: RefCell<f64>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// (aot.py lowers everything with `return_tuple=True`.)
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.path.display()))?;
+        let outs = lit.to_tuple().context("decomposing output tuple")?;
+        *self.calls.borrow_mut() += 1;
+        *self.exec_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+}
+
+/// Thread-local runtime: PJRT CPU client + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Rc<Executable>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by absolute path).
+    pub fn load(&mut self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        log::debug!("compiled {} in {:?}", path.display(), t0.elapsed());
+        let e = Rc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+            calls: RefCell::new(0),
+            exec_seconds: RefCell::new(0.0),
+        });
+        self.cache.insert(path.to_path_buf(), Rc::clone(&e));
+        Ok(e)
+    }
+
+    /// Number of distinct compiled artifacts.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+///
+/// §Perf: `create_from_shape_and_untyped_data` performs ONE host copy;
+/// the original `vec1(..).reshape(..)` path copied twice (vec1 into a 1-D
+/// literal, reshape into a fresh literal) — see EXPERIMENTS.md §Perf.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 (e.g. loss) from a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,293 @@
+//! Tensors for the L3 coordinator.
+//!
+//! Two flavours:
+//!
+//! * [`Tensor`] — plain host tensor (`Vec<f32>` + shape). Used for gradients,
+//!   optimizer state, activations and anything thread-local.
+//! * [`AtomicTensor`] — the **lock-free shared parameter store** at the heart
+//!   of LayUp. Parameters are `[AtomicU32]` bit-cast f32, written with
+//!   `Ordering::Relaxed`. Updater threads from *other* devices write directly
+//!   into a worker's `AtomicTensor`s while that worker's compute thread reads
+//!   them mid-forward — exactly the Hogwild-style overwrite semantics of the
+//!   paper (Section 3.1: "multiple updater threads can update the same
+//!   parameters simultaneously (lock-free) leading to the updates being
+//!   overwritten"), but expressed in safe Rust: races lose *updates*, never
+//!   memory safety.
+//!
+//! Each `AtomicTensor` carries a monotonically increasing `version` counter
+//! bumped by every writer. The runtime uses it to cache the XLA `Literal`
+//! upload of a parameter until someone actually changed it (DESIGN.md §Perf).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Plain host tensor: row-major f32 data plus shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// L2 norm squared.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Squared L2 distance to another tensor.
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+}
+
+/// Lock-free shared parameter tensor (see module docs).
+pub struct AtomicTensor {
+    shape: Vec<usize>,
+    data: Box<[AtomicU32]>,
+    version: AtomicU64,
+}
+
+impl AtomicTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        let data: Box<[AtomicU32]> = (0..n).map(|_| AtomicU32::new(0f32.to_bits())).collect();
+        AtomicTensor { shape: shape.to_vec(), data, version: AtomicU64::new(0) }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        let data: Box<[AtomicU32]> = t.data.iter().map(|&x| AtomicU32::new(x.to_bits())).collect();
+        AtomicTensor { shape: t.shape.clone(), data, version: AtomicU64::new(0) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Monotone write counter; readers use it to invalidate upload caches.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    fn bump(&self) {
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Relaxed-read the whole tensor into `out`. A concurrent writer may be
+    /// interleaved — the result can mix old and new elements. That tearing is
+    /// the *intended* semantics (the forward pass "might use those updates
+    /// directly", Section 3).
+    pub fn load_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.data.len());
+        for (o, a) in out.iter_mut().zip(self.data.iter()) {
+            *o = f32::from_bits(a.load(Ordering::Relaxed));
+        }
+    }
+
+    pub fn snapshot(&self) -> Tensor {
+        let mut t = Tensor::zeros(&self.shape);
+        self.load_into(&mut t.data);
+        t
+    }
+
+    /// Relaxed-overwrite the whole tensor from `src`.
+    pub fn store_from(&self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.data.len());
+        for (a, &s) in self.data.iter().zip(src.iter()) {
+            a.store(s.to_bits(), Ordering::Relaxed);
+        }
+        self.bump();
+    }
+
+    /// Lock-free SGD-style update: `p -= lr * g` elementwise.
+    /// Load-modify-store without CAS — concurrent writers may overwrite each
+    /// other (the paper's explicit design choice).
+    pub fn sub_scaled(&self, lr: f32, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.data.len());
+        for (a, &g) in self.data.iter().zip(grad.iter()) {
+            let cur = f32::from_bits(a.load(Ordering::Relaxed));
+            a.store((cur - lr * g).to_bits(), Ordering::Relaxed);
+        }
+        self.bump();
+    }
+
+    /// Lock-free push-sum mix used by the gossip updater threads:
+    /// `p = self_frac * p + peer_frac * incoming` elementwise.
+    pub fn mix_from(&self, self_frac: f32, peer_frac: f32, incoming: &[f32]) {
+        debug_assert_eq!(incoming.len(), self.data.len());
+        for (a, &inc) in self.data.iter().zip(incoming.iter()) {
+            let cur = f32::from_bits(a.load(Ordering::Relaxed));
+            a.store((self_frac * cur + peer_frac * inc).to_bits(), Ordering::Relaxed);
+        }
+        self.bump();
+    }
+
+    /// Element-wise average with `k` other parameter stores (DDP all-reduce
+    /// endpoint; AD-PSGD pairwise averaging uses the 2-way case).
+    pub fn average_with(&self, others: &[&AtomicTensor]) {
+        let n = self.data.len();
+        let denom = (others.len() + 1) as f32;
+        for i in 0..n {
+            let mut acc = f32::from_bits(self.data[i].load(Ordering::Relaxed));
+            for o in others {
+                acc += f32::from_bits(o.data[i].load(Ordering::Relaxed));
+            }
+            self.data[i].store((acc / denom).to_bits(), Ordering::Relaxed);
+        }
+        self.bump();
+    }
+}
+
+/// One model layer's named parameter tensors (shared store).
+pub struct LayerParams {
+    pub tensors: Vec<AtomicTensor>,
+}
+
+impl LayerParams {
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Aggregate version over the layer (cheap cache key).
+    pub fn version(&self) -> u64 {
+        self.tensors.iter().map(|t| t.version()).sum()
+    }
+
+    pub fn snapshot(&self) -> Vec<Tensor> {
+        self.tensors.iter().map(|t| t.snapshot()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn tensor_axpy_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5]);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn tensor_sq_dist() {
+        let a = Tensor::from_vec(&[2], vec![0.0, 3.0]);
+        let b = Tensor::from_vec(&[2], vec![4.0, 0.0]);
+        assert_eq!(a.sq_dist(&b), 25.0);
+    }
+
+    #[test]
+    fn atomic_roundtrip_and_version() {
+        let at = AtomicTensor::zeros(&[4]);
+        assert_eq!(at.version(), 0);
+        at.store_from(&[1.0, -2.0, 3.5, 0.25]);
+        assert_eq!(at.version(), 1);
+        assert_eq!(at.snapshot().data, vec![1.0, -2.0, 3.5, 0.25]);
+    }
+
+    #[test]
+    fn atomic_sub_scaled() {
+        let at = AtomicTensor::from_tensor(&Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]));
+        at.sub_scaled(0.1, &[1.0, 2.0, 3.0]);
+        let s = at.snapshot().data;
+        assert!((s[0] - 0.9).abs() < 1e-6);
+        assert!((s[1] - 0.8).abs() < 1e-6);
+        assert!((s[2] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn atomic_mix_is_convex_combination() {
+        let at = AtomicTensor::from_tensor(&Tensor::from_vec(&[2], vec![0.0, 10.0]));
+        at.mix_from(0.25, 0.75, &[4.0, 2.0]);
+        let s = at.snapshot().data;
+        assert!((s[0] - 3.0).abs() < 1e-6);
+        assert!((s[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn atomic_average_with() {
+        let a = AtomicTensor::from_tensor(&Tensor::from_vec(&[2], vec![0.0, 3.0]));
+        let b = AtomicTensor::from_tensor(&Tensor::from_vec(&[2], vec![6.0, 3.0]));
+        let c = AtomicTensor::from_tensor(&Tensor::from_vec(&[2], vec![3.0, 3.0]));
+        a.average_with(&[&b, &c]);
+        assert_eq!(a.snapshot().data, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn concurrent_lockfree_writes_stay_safe() {
+        // Hammer one tensor from several threads; we assert only memory
+        // safety and that the final value is one of the written values
+        // per element (updates may be lost — by design).
+        let at = Arc::new(AtomicTensor::zeros(&[64]));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let at = Arc::clone(&at);
+                std::thread::spawn(move || {
+                    let vals = vec![t as f32 + 1.0; 64];
+                    for _ in 0..1000 {
+                        at.store_from(&vals);
+                        at.sub_scaled(0.0, &vals); // no-op math, real traffic
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        for v in at.snapshot().data {
+            assert!((1.0..=4.0).contains(&v), "v={v}");
+        }
+        assert!(at.version() >= 8000);
+    }
+}

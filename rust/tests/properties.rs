@@ -1,0 +1,181 @@
+//! Property-based tests on coordinator invariants (routing, push-sum,
+//! mixing, scheduling). The offline crate set has no proptest, so this file
+//! carries a minimal property harness: seeded random-case generation with
+//! failing-seed reporting — rerun a failure with `PROP_SEED=<seed>`.
+
+use layup::metrics::{Curve, CurvePoint};
+use layup::optim::Schedule;
+use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+use layup::tensor::{AtomicTensor, Tensor};
+use layup::topology::{PushSumWeight, Topology};
+use layup::util::rng::Pcg32;
+
+/// Run `f` over `cases` random seeds; panic with the failing seed.
+fn prop(name: &str, cases: usize, f: impl Fn(&mut Pcg32)) {
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().unwrap();
+        f(&mut Pcg32::new(seed));
+        return;
+    }
+    for case in 0..cases {
+        let seed = prop_seed_base() ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut Pcg32::new(seed));
+        }));
+        if result.is_err() {
+            panic!("property {name} failed for PROP_SEED={seed}");
+        }
+    }
+}
+
+fn prop_seed_base() -> u64 {
+    0xBADC_0FFE
+}
+
+#[test]
+fn prop_push_sum_weight_conservation() {
+    // any interleaving of halve/accept/skip/reclaim conserves total weight
+    prop("push_sum_conservation", 50, |rng| {
+        let m = 2 + rng.below_usize(6);
+        let weights: Vec<PushSumWeight> =
+            (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect();
+        for _ in 0..200 {
+            let i = rng.below_usize(m);
+            let j = rng.peer(i, m);
+            let shipped = weights[i].halve();
+            match weights[j].try_accept(shipped) {
+                Some(_) => {
+                    // sometimes "forget" to release immediately to provoke skips
+                    if rng.next_f32() < 0.8 {
+                        weights[j].release();
+                    }
+                }
+                None => weights[i].reclaim(shipped),
+            }
+        }
+        for w in &weights {
+            w.release(); // drain any held slots
+        }
+        let total: f32 = weights.iter().map(|w| w.get()).sum();
+        assert!((total - 1.0).abs() < 1e-4, "weight mass drifted: {total}");
+    });
+}
+
+#[test]
+fn prop_mix_from_is_convex_and_bounded() {
+    prop("mix_convex", 50, |rng| {
+        let n = 1 + rng.below_usize(64);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+        let at = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], a.clone()));
+        let frac = rng.next_f32();
+        at.mix_from(1.0 - frac, frac, &b);
+        for (k, v) in at.snapshot().data.iter().enumerate() {
+            let (lo, hi) = (a[k].min(b[k]), a[k].max(b[k]));
+            assert!(
+                *v >= lo - 1e-4 && *v <= hi + 1e-4,
+                "mix left the [min,max] interval: {v} not in [{lo},{hi}]"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_topology_peer_valid_for_all_shapes() {
+    prop("topology_valid", 50, |rng| {
+        let m = 2 + rng.below_usize(15);
+        for topo in [Topology::Random, Topology::Ring, Topology::Groups(1 + rng.below_usize(4))] {
+            for me in 0..m {
+                for it in 0..20u64 {
+                    let j = topo.peer(me, m, it, rng);
+                    assert!(j < m && j != me, "{topo:?} produced {j} for me={me}, m={m}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedules_are_nonnegative_and_bounded() {
+    prop("schedule_bounds", 50, |rng| {
+        let lr = rng.next_f32() * 0.5 + 1e-4;
+        let t_max = 10 + rng.below_usize(500);
+        let warmup = rng.below_usize(t_max / 2);
+        for sched in [
+            Schedule::Constant { lr },
+            Schedule::Cosine { lr, t_max, warmup_steps: warmup, warmup_lr: lr / 10.0 },
+            Schedule::Linear { lr, t_max, warmup_steps: warmup, warmup_lr: lr / 10.0 },
+        ] {
+            for step in 0..t_max + 50 {
+                let v = sched.lr_at(step);
+                assert!(v >= -1e-7, "negative lr {v} at {step} for {sched:?}");
+                assert!(v <= lr * 1.0001, "lr {v} exceeds peak {lr} at {step} for {sched:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_curve_tta_monotone_in_target() {
+    // a harder target can never be reached *earlier*
+    prop("tta_monotone", 50, |rng| {
+        let mut pts = Vec::new();
+        let mut acc: f64 = 0.0;
+        for step in 0..30usize {
+            acc = (acc + rng.next_f64() * 0.08).min(1.0);
+            pts.push(CurvePoint {
+                step,
+                time_s: step as f64,
+                loss: 1.0 - acc,
+                accuracy: acc,
+            });
+        }
+        let curve = Curve { points: pts };
+        let (t1, t2) = (0.3, 0.6);
+        if let (Some(a), Some(b)) = (curve.time_to_accuracy(t1), curve.time_to_accuracy(t2)) {
+            assert!(a <= b, "harder target reached earlier: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_sim_occupancy_in_unit_interval_and_layup_never_slower_than_ddp() {
+    prop("sim_sane", 30, |rng| {
+        let m = 2 + rng.below_usize(7);
+        let mut c = Cluster::new("t", m, 1e9 + rng.next_f64() * 4e11, 1e-5, 0.7);
+        c.jitter = rng.next_f64() * 0.1;
+        if rng.next_f32() < 0.5 {
+            c = c.with_straggler(rng.below_usize(m), rng.next_f64() * 16.0);
+        }
+        let w = Workload::resnet18_cifar(m);
+        for algo in SimAlgo::paper_set(1 + rng.below_usize(40)) {
+            let r = simulate(&c, &w, algo, rng.next_u64());
+            assert!(r.wall_s.is_finite() && r.wall_s > 0.0, "{algo:?} wall {}", r.wall_s);
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&r.occupancy),
+                "{algo:?} occupancy {}",
+                r.occupancy
+            );
+        }
+        let ddp = simulate(&c, &w, SimAlgo::Ddp, 7).wall_s;
+        let layup = simulate(&c, &w, SimAlgo::LayUp, 7).wall_s;
+        assert!(layup <= ddp * 1.05, "LayUp slower than DDP: {layup} vs {ddp}");
+    });
+}
+
+#[test]
+fn prop_atomic_store_load_roundtrip_any_pattern() {
+    prop("atomic_roundtrip", 50, |rng| {
+        let n = 1 + rng.below_usize(256);
+        let vals: Vec<f32> = (0..n)
+            .map(|_| {
+                // exercise odd bit patterns too (subnormals, negatives)
+                f32::from_bits(rng.next_u32() & 0x7fff_ffff)
+            })
+            .map(|v| if v.is_nan() { 0.0 } else { v })
+            .collect();
+        let at = AtomicTensor::zeros(&[n]);
+        at.store_from(&vals);
+        assert_eq!(at.snapshot().data, vals);
+    });
+}
