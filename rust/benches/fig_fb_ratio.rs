@@ -1,0 +1,103 @@
+//! **Fig FB-ratio** — decoupled forward/backward pools vs the serial loop:
+//! sweep fwd:bwd thread ratios {1:1, 2:1, 3:1} and report steps/s, achieved
+//! FLOP/s (the MFU numerator — divide by the serial run's peak for MFU) and
+//! the per-pool occupancy split. Backs EXPERIMENTS.md §Perf.
+//!
+//! Knobs: LAYUP_WORKERS (default 3), LAYUP_STEPS (default 40).
+
+#[path = "common.rs"]
+mod common;
+
+use layup::config::Algorithm;
+use layup::coordinator;
+
+fn main() {
+    let man = common::manifest();
+    let model = "mlpnet18";
+    let steps = common::env_usize("LAYUP_STEPS", 40);
+    let workers = common::workers();
+
+    println!(
+        "fwd:bwd thread-ratio sweep — LayUp, {workers} workers, {steps} steps/worker"
+    );
+    println!(
+        "{:<14} {:>9} {:>12} {:>9} {:>9} {:>8} {:>8}",
+        "mode", "steps/s", "FLOP/s", "fwd occ", "bwd occ", "q-depth", "blocked"
+    );
+    common::hr();
+    let mut csv = String::from(
+        "mode,fwd_threads,bwd_threads,steps_per_s,achieved_flops_per_s,\
+         fwd_occupancy,bwd_occupancy,queue_depth_mean,queue_blocked_frac\n",
+    );
+
+    let mut base = common::vision_cfg(model, Algorithm::LayUp, steps);
+    base.eval_every = usize::MAX / 2; // measurement window excludes eval
+
+    // serial baseline: the original interlocked fwd->bwd loop
+    let serial = coordinator::run(&base, &man).expect("serial baseline");
+    let serial_sps = serial.total_steps as f64 / serial.total_time_s;
+    println!(
+        "{:<14} {:>9.2} {:>12.3e} {:>8.1}% {:>8.1}% {:>8} {:>8}",
+        "serial",
+        serial_sps,
+        serial.extras["achieved_flops_per_s"],
+        100.0 * serial.extras["fwd_occupancy"],
+        100.0 * serial.extras["bwd_occupancy"],
+        "-",
+        "-"
+    );
+    csv.push_str(&format!(
+        "serial,1,1,{:.4},{:.6e},{:.4},{:.4},,\n",
+        serial_sps,
+        serial.extras["achieved_flops_per_s"],
+        serial.extras["fwd_occupancy"],
+        serial.extras["bwd_occupancy"],
+    ));
+
+    let mut best = (0.0f64, (1usize, 1usize));
+    for (f, b) in [(1usize, 1usize), (2, 1), (3, 1)] {
+        let mut cfg = base.clone();
+        cfg.decoupled = true;
+        cfg.fwd_threads = f;
+        cfg.bwd_threads = b;
+        cfg.queue_depth = 2 * f;
+        let r = coordinator::run(&cfg, &man).expect("decoupled run");
+        let sps = r.total_steps as f64 / r.total_time_s;
+        if sps > best.0 {
+            best = (sps, (f, b));
+        }
+        let label = format!("decoupled {f}:{b}");
+        println!(
+            "{:<14} {:>9.2} {:>12.3e} {:>8.1}% {:>8.1}% {:>8.2} {:>7.1}%",
+            label,
+            sps,
+            r.extras["achieved_flops_per_s"],
+            100.0 * r.extras["fwd_occupancy"],
+            100.0 * r.extras["bwd_occupancy"],
+            r.extras["queue_depth_mean"],
+            100.0 * r.extras["queue_blocked_frac"],
+        );
+        csv.push_str(&format!(
+            "decoupled,{f},{b},{:.4},{:.6e},{:.4},{:.4},{:.4},{:.4}\n",
+            sps,
+            r.extras["achieved_flops_per_s"],
+            r.extras["fwd_occupancy"],
+            r.extras["bwd_occupancy"],
+            r.extras["queue_depth_mean"],
+            r.extras["queue_blocked_frac"],
+        ));
+    }
+
+    common::hr();
+    let (sps, (f, b)) = best;
+    println!(
+        "best decoupled ratio {f}:{b} — {:.2}x the serial baseline ({:.2} vs {:.2} steps/s)",
+        sps / serial_sps,
+        sps,
+        serial_sps
+    );
+
+    let out = common::results_dir().join("fig_fb_ratio.csv");
+    std::fs::write(&out, csv).expect("writing csv");
+    println!("wrote {}", out.display());
+}

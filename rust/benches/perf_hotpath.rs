@@ -94,6 +94,32 @@ fn main() {
         (n * 8) as f64 / sub / 1e9
     );
 
+    // --- 3b. fused updater hot path (§Perf) ---------------------------------
+    // LayUp's updater inner loop used to be three passes per layer:
+    // sub_scaled (local update) + load_into (snapshot) + mix_from (peer
+    // push). The fused sub_scaled_then_mix_into does all of it in one
+    // traversal. Same logical work, so both sides report GB/s over the
+    // 16 B/elem the update+mix semantically moves.
+    let peer = AtomicTensor::from_tensor(&Tensor::full(&[n], 1.0));
+    let mut scratch = vec![0.0f32; n];
+    let logical_bytes = (n * 16) as f64;
+    let three_pass = time(20, || {
+        at.sub_scaled(0.001, &src);
+        at.load_into(&mut scratch);
+        peer.mix_from(0.5, 0.5, &scratch);
+    });
+    let fused = time(20, || {
+        at.sub_scaled_then_mix_into(0.001, &src, &peer, 0.5, 0.5);
+    });
+    println!(
+        "updater three-pass (step+load+mix): {:.2} ms = {:.2} GB/s   fused: {:.2} ms = {:.2} GB/s  ({:.2}x)",
+        1e3 * three_pass,
+        logical_bytes / three_pass / 1e9,
+        1e3 * fused,
+        logical_bytes / fused / 1e9,
+        three_pass / fused
+    );
+
     // --- 4. end-to-end step latency per algorithm ---------------------------
     let steps = common::env_usize("LAYUP_STEPS", 20);
     println!("\nend-to-end avg step wall time ({} workers, {} steps):", common::workers(), steps);

@@ -161,20 +161,33 @@ impl UpdaterThread {
                     }
                     let p = push.as_ref().unwrap();
 
-                    // Local Update: x^{i,l} <- x̃^{i,l} - η ∇L(S_k, x̂^{i,l})
+                    // Local Update + Communication + Peer Update.
                     let my = &self.shared.params[self.wid];
-                    self.opt.step_layer(my, layer, &grads, step);
-
-                    // Communication + Peer Update (layer-wise, lock-free)
-                    if let Some(frac) = p.frac {
-                        comm_delay(self.comm_latency_s);
-                        let peer_params = &self.shared.params[p.peer];
-                        for (ti, t) in my.layers[layer].tensors.iter().enumerate() {
-                            self.scratch.resize(t.numel(), 0.0);
-                            t.load_into(&mut self.scratch);
-                            peer_params.layers[layer].tensors[ti]
-                                .mix_from(1.0 - frac, frac, &self.scratch);
+                    match p.frac {
+                        // §Perf fused hot path: local update and peer push in
+                        // ONE traversal of the layer's data (the step + load
+                        // + mix sequence walked it three times).
+                        Some(frac) if self.comm_latency_s <= 0.0 => {
+                            let peer_params = &self.shared.params[p.peer];
+                            self.opt
+                                .step_layer_mix(my, peer_params, layer, &grads, step, 1.0 - frac, frac);
                         }
+                        // Simulated link latency: the local update must land
+                        // *before* the transit sleep (the device does not wait
+                        // on the network), so the push stays a separate pass.
+                        Some(frac) => {
+                            self.opt.step_layer(my, layer, &grads, step);
+                            comm_delay(self.comm_latency_s);
+                            let peer_params = &self.shared.params[p.peer];
+                            for (ti, t) in my.layers[layer].tensors.iter().enumerate() {
+                                self.scratch.resize(t.numel(), 0.0);
+                                t.load_into(&mut self.scratch);
+                                peer_params.layers[layer].tensors[ti]
+                                    .mix_from(1.0 - frac, frac, &self.scratch);
+                            }
+                        }
+                        // Skipped push (contention): local update only.
+                        None => self.opt.step_layer(my, layer, &grads, step),
                     }
 
                     // layer 0 is the last gradient of the backward pass

@@ -34,7 +34,27 @@ use crate::model::ModelParams;
 use crate::optim::{LayerOptimizer, OptimKind, Schedule};
 use crate::tensor::Tensor;
 
-/// Per-worker hook object; lives on the worker thread.
+/// Per-worker hook object.
+///
+/// # Threading contract
+///
+/// In the serial loop the hooks run on the worker's single compute thread.
+/// In **decoupled** mode (`TrainConfig::decoupled`) they run on the worker's
+/// *backward-pool* threads instead, serialized by a per-worker mutex held
+/// across each individual call:
+///
+/// * `on_layer_grads` calls for one `step` still arrive in reverse layer
+///   order, but when `bwd_threads > 1` calls belonging to *different* steps
+///   may interleave, and steps may complete out of order. Algorithms must
+///   key any per-iteration state by `step` to opt into that
+///   (`Algorithm::supports_interleaved_steps` — LayUp's updater qualifies;
+///   the `GradStash`-based algorithms are limited to `bwd_threads = 1` by
+///   `TrainConfig::validate`).
+/// * `on_step_end(step)` is invoked by whichever backward thread finished
+///   that pass — not necessarily in step order.
+/// * Barrier-synchronized algorithms (DDP / LocalSGD / SlowMo) require
+///   lock-step in-order steps and are rejected for decoupled runs by
+///   `TrainConfig::validate`.
 pub trait WorkerAlgo: Send {
     /// Called during backward, in reverse layer order, as each layer's
     /// gradient becomes available.
@@ -93,6 +113,32 @@ impl PerLayerOpt {
     pub fn step_layer(&mut self, params: &ModelParams, li: usize, grads: &[Tensor], step: usize) {
         let lr = self.schedule.lr_at(step);
         self.opts[li].step(&params.layers[li].tensors, grads, lr);
+    }
+
+    /// Fused updater hot path (§Perf): apply one layer's gradient *and* push
+    /// the freshly updated layer into `peer`'s store with the push-sum mixing
+    /// fractions, in one traversal per parameter instead of the three passes
+    /// of step + load + mix. Numerically identical to `step_layer` followed
+    /// by mixing (absent concurrent writers).
+    pub fn step_layer_mix(
+        &mut self,
+        params: &ModelParams,
+        peer: &ModelParams,
+        li: usize,
+        grads: &[Tensor],
+        step: usize,
+        keep_frac: f32,
+        push_frac: f32,
+    ) {
+        let lr = self.schedule.lr_at(step);
+        self.opts[li].step_mix(
+            &params.layers[li].tensors,
+            grads,
+            lr,
+            &peer.layers[li].tensors,
+            keep_frac,
+            push_frac,
+        );
     }
 }
 

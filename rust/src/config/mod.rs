@@ -193,6 +193,22 @@ impl Algorithm {
         }
     }
 
+    /// Algorithms that synchronize workers step-for-step at a barrier.
+    /// They require lock-step in-order steps and cannot run on the decoupled
+    /// forward/backward pools (passes complete out of order there).
+    pub fn uses_barrier(&self) -> bool {
+        matches!(self, Algorithm::Ddp | Algorithm::LocalSgd | Algorithm::SlowMo)
+    }
+
+    /// Algorithms whose `WorkerAlgo` hooks key per-iteration state by `step`
+    /// and therefore tolerate layer-gradient streams of *different* steps
+    /// interleaving — the situation `bwd_threads > 1` creates. The stash-based
+    /// algorithms accumulate one step's layers in a single `GradStash` and do
+    /// not; `TrainConfig::validate` enforces this.
+    pub fn supports_interleaved_steps(&self) -> bool {
+        matches!(self, Algorithm::LayUp)
+    }
+
     pub fn all_paper() -> &'static [Algorithm] {
         &[
             Algorithm::Ddp,
@@ -228,6 +244,18 @@ pub struct TrainConfig {
     pub comm_latency_s: f64,
     /// track drift/bias every k steps (0 = off; it is expensive)
     pub track_drift_every: usize,
+    /// run each worker as decoupled forward/backward thread pools connected
+    /// by a bounded pass queue (PD-ASGD style). `false` keeps the serial
+    /// fwd->bwd loop, step-for-step identical to the original — every
+    /// existing bench stays comparable.
+    pub decoupled: bool,
+    /// forward-pool threads per worker (decoupled mode; ratio sweepable)
+    pub fwd_threads: usize,
+    /// backward-pool threads per worker (decoupled mode)
+    pub bwd_threads: usize,
+    /// bounded pass-queue capacity per worker: the forward pool blocks
+    /// (backpressure) once this many passes await backward
+    pub queue_depth: usize,
 }
 
 impl TrainConfig {
@@ -248,7 +276,52 @@ impl TrainConfig {
             straggler: None,
             comm_latency_s: 0.0,
             track_drift_every: 0,
+            decoupled: false,
+            fwd_threads: 1,
+            bwd_threads: 1,
+            queue_depth: 2,
         }
+    }
+
+    /// Check cross-field invariants before a run. Called by
+    /// `coordinator::run`; surfaced here so configs can be rejected at parse
+    /// time too.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("steps must be >= 1");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be >= 1 (use a huge value to disable eval)");
+        }
+        if self.fwd_threads == 0 || self.bwd_threads == 0 {
+            bail!(
+                "fwd_threads/bwd_threads must be >= 1 (got {}:{})",
+                self.fwd_threads,
+                self.bwd_threads
+            );
+        }
+        if self.queue_depth == 0 {
+            bail!("queue_depth must be >= 1 (the pass queue is bounded but not empty)");
+        }
+        if self.decoupled && self.algorithm.uses_barrier() {
+            bail!(
+                "{} synchronizes workers step-for-step at a barrier and cannot run \
+                 decoupled (backward passes complete out of order); set decoupled = false",
+                self.algorithm.name()
+            );
+        }
+        if self.decoupled && self.bwd_threads > 1 && !self.algorithm.supports_interleaved_steps() {
+            bail!(
+                "{} stashes one step's layer gradients at a time and cannot take \
+                 interleaved steps from {} backward threads; use bwd_threads = 1",
+                self.algorithm.name(),
+                self.bwd_threads
+            );
+        }
+        Ok(())
     }
 
     /// Load from a TOML-subset file (see configs/ for examples).
@@ -265,6 +338,10 @@ impl TrainConfig {
         cfg.outer_lr = doc.f64_or("run", "outer_lr", 1.0) as f32;
         cfg.comm_latency_s = doc.f64_or("run", "comm_latency_s", 0.0);
         cfg.track_drift_every = doc.usize_or("run", "track_drift_every", 0);
+        cfg.decoupled = doc.bool_or("run", "decoupled", false);
+        cfg.fwd_threads = doc.usize_or("run", "fwd_threads", 1);
+        cfg.bwd_threads = doc.usize_or("run", "bwd_threads", 1);
+        cfg.queue_depth = doc.usize_or("run", "queue_depth", 2);
 
         let lr = doc.f64_or("optim", "lr", 0.05) as f32;
         let wd = doc.f64_or("optim", "weight_decay", 0.0) as f32;
@@ -284,6 +361,7 @@ impl TrainConfig {
             let delay = doc.f64_or("straggler", "delay_iterations", 1.0);
             cfg.straggler = Some((w, delay));
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -350,6 +428,64 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.sync_period, 48);
         assert_eq!(cfg.straggler, Some((1, 4.0)));
+    }
+
+    #[test]
+    fn decoupled_knobs_parse_with_safe_defaults() {
+        let doc = Toml::parse(
+            r#"
+            [run]
+            algorithm = "layup"
+            decoupled = true
+            fwd_threads = 3
+            bwd_threads = 1
+            queue_depth = 6
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert!(cfg.decoupled);
+        assert_eq!((cfg.fwd_threads, cfg.bwd_threads, cfg.queue_depth), (3, 1, 6));
+        // defaults preserve serial semantics
+        let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        assert!(!d.decoupled);
+        assert_eq!((d.fwd_threads, d.bwd_threads), (1, 1));
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_pool_configs() {
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.eval_every = 0;
+        assert!(cfg.validate().is_err(), "eval_every = 0 would panic at step % 0");
+        cfg.eval_every = 1;
+        cfg.fwd_threads = 0;
+        assert!(cfg.validate().is_err());
+        cfg.fwd_threads = 2;
+        cfg.queue_depth = 0;
+        assert!(cfg.validate().is_err());
+        cfg.queue_depth = 2;
+        cfg.validate().unwrap();
+        // barrier algorithms cannot run decoupled
+        for algo in [Algorithm::Ddp, Algorithm::LocalSgd, Algorithm::SlowMo] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.decoupled = true;
+            assert!(cfg.validate().is_err(), "{algo:?} must be rejected");
+            assert!(algo.uses_barrier());
+        }
+        for algo in [Algorithm::LayUp, Algorithm::GoSgd, Algorithm::AdPsgd, Algorithm::Co2] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.decoupled = true;
+            cfg.validate().unwrap_or_else(|e| panic!("{algo:?} should be allowed: {e}"));
+            assert!(!algo.uses_barrier());
+        }
+        // multiple backward threads need step-keyed hooks (LayUp only)
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::GoSgd, 2, 10);
+        cfg.decoupled = true;
+        cfg.bwd_threads = 2;
+        assert!(cfg.validate().is_err());
+        cfg.algorithm = Algorithm::LayUp;
+        cfg.validate().unwrap();
     }
 
     #[test]

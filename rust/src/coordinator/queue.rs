@@ -1,0 +1,301 @@
+//! The bounded, backpressured, stop-aware pass queue connecting a worker's
+//! decoupled forward and backward pools, plus the recycling pool that keeps
+//! `HostPass` buffers alive across steps.
+//!
+//! Semantics:
+//!
+//! * `push` blocks while the queue holds `cap` items (backpressure: the
+//!   forward pool cannot run more than `queue_depth` passes ahead of the
+//!   backward pool, which bounds activation memory AND gradient staleness);
+//! * `pop` blocks while the queue is empty, returning `None` once the queue
+//!   is closed and drained;
+//! * raising `stop` unblocks every waiter promptly (20 ms poll, like
+//!   [`super::StopBarrier`]): blocked pushers get their item back, blocked
+//!   poppers get `None` — so a run winds down without deadlock even with the
+//!   forward pool pinned at capacity.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::metrics::QueueStats;
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// Multi-producer multi-consumer bounded queue (see module docs).
+pub struct BoundedQueue<T> {
+    cap: usize,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                q: VecDeque::with_capacity(cap.max(1)),
+                closed: false,
+                stats: QueueStats::default(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue `item`, blocking while the queue is full. Returns the item
+    /// back as `Err` if the queue was closed or `stop` was raised while
+    /// waiting (caller should wind down).
+    pub fn push(&self, item: T, stop: &AtomicBool) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut blocked = false;
+        while inner.q.len() >= self.cap && !inner.closed {
+            if stop.load(Ordering::Relaxed) {
+                return Err(item);
+            }
+            blocked = true;
+            let (guard, _timeout) = self.cv.wait_timeout(inner, Duration::from_millis(20)).unwrap();
+            inner = guard;
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        inner.q.push_back(item);
+        let depth = inner.q.len();
+        inner.stats.pushes += 1;
+        inner.stats.depth_sum += depth as u64;
+        inner.stats.max_depth = inner.stats.max_depth.max(depth);
+        if blocked {
+            inner.stats.blocked_pushes += 1;
+        }
+        drop(inner);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Dequeue one item, blocking while the queue is empty. Returns `None`
+    /// once the queue is closed and drained, or when `stop` is raised.
+    pub fn pop(&self, stop: &AtomicBool) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.q.pop_front() {
+                inner.stats.pops += 1;
+                drop(inner);
+                self.cv.notify_all();
+                return Some(item);
+            }
+            if inner.closed || stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(inner, Duration::from_millis(20)).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Producer side is done: wake consumers so they can drain and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Snapshot of the depth/backpressure counters.
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+}
+
+/// Free-list recycling pool: backward threads return drained passes, forward
+/// threads pick them up for the next step — steady-state training allocates
+/// no pass buffers (§Perf).
+pub struct PassPool<T> {
+    free: Mutex<Vec<T>>,
+}
+
+impl<T: Default> PassPool<T> {
+    pub fn new() -> Self {
+        PassPool { free: Mutex::new(Vec::new()) }
+    }
+
+    /// A recycled buffer if one is free, else a fresh default.
+    pub fn take(&self) -> T {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn put(&self, item: T) {
+        self.free.lock().unwrap().push(item);
+    }
+}
+
+impl<T: Default> Default for PassPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn fifo_roundtrip_and_stats() {
+        let q = BoundedQueue::new(4);
+        let stop = AtomicBool::new(false);
+        for i in 0..3 {
+            q.push(i, &stop).unwrap();
+        }
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(&stop), Some(0));
+        assert_eq!(q.pop(&stop), Some(1));
+        let st = q.stats();
+        assert_eq!(st.pushes, 3);
+        assert_eq!(st.pops, 2);
+        assert_eq!(st.max_depth, 3);
+        assert_eq!(st.blocked_pushes, 0);
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let stop = Arc::new(AtomicBool::new(false));
+        q.push(0, &stop).unwrap();
+        q.push(1, &stop).unwrap();
+
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let producer = {
+            let (q, stop, pushed) = (Arc::clone(&q), Arc::clone(&stop), Arc::clone(&pushed));
+            std::thread::spawn(move || {
+                q.push(2, &stop).unwrap();
+                pushed.store(1, Ordering::SeqCst);
+            })
+        };
+        // producer must be backpressured: the item does not land while full
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push must block at queue_depth");
+        assert_eq!(q.len(), 2);
+
+        assert_eq!(q.pop(&stop), Some(0));
+        producer.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert!(q.stats().blocked_pushes >= 1);
+    }
+
+    #[test]
+    fn stop_unblocks_full_queue_without_deadlock() {
+        let q = Arc::new(BoundedQueue::new(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        q.push(7usize, &stop).unwrap();
+
+        let producer = {
+            let (q, stop) = (Arc::clone(&q), Arc::clone(&stop));
+            std::thread::spawn(move || q.push(8, &stop))
+        };
+        let consumer = {
+            let (q, stop) = (Arc::clone(&q), Arc::clone(&stop));
+            // consumer that never pops fast enough: waits on an empty queue
+            std::thread::spawn(move || {
+                let first = q.pop(&stop);
+                let second = q.pop(&stop); // queue now empty -> blocks until stop
+                (first, second)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        stop.store(true, Ordering::SeqCst);
+
+        let t0 = Instant::now();
+        let push_result = producer.join().unwrap();
+        let (first, second) = consumer.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(2), "stop must unblock promptly");
+        // the producer either squeezed its item in before stop or got it back
+        if push_result.is_err() {
+            assert_eq!(push_result, Err(8));
+        }
+        assert_eq!(first, Some(7));
+        if let Some(x) = second {
+            assert_eq!(x, 8);
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(8);
+        let stop = AtomicBool::new(false);
+        q.push('a', &stop).unwrap();
+        q.push('b', &stop).unwrap();
+        q.close();
+        assert_eq!(q.push('c', &stop), Err('c'), "closed queue rejects pushes");
+        assert_eq!(q.pop(&stop), Some('a'));
+        assert_eq!(q.pop(&stop), Some('b'));
+        assert_eq!(q.pop(&stop), None);
+    }
+
+    #[test]
+    fn producers_consumers_move_everything_once() {
+        let q = Arc::new(BoundedQueue::new(3));
+        let stop = Arc::new(AtomicBool::new(false));
+        let n_per = 200usize;
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let (q, stop) = (Arc::clone(&q), Arc::clone(&stop));
+                std::thread::spawn(move || {
+                    for i in 0..n_per {
+                        q.push(p * n_per + i, &stop).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let (q, stop) = (Arc::clone(&q), Arc::clone(&stop));
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop(&stop) {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..3 * n_per).collect::<Vec<_>>());
+        let st = q.stats();
+        assert_eq!(st.pushes, 3 * n_per as u64);
+        assert_eq!(st.pops, 3 * n_per as u64);
+        assert!(st.max_depth <= 3);
+    }
+
+    #[test]
+    fn pass_pool_recycles() {
+        let pool: PassPool<Vec<f32>> = PassPool::new();
+        let mut a = pool.take();
+        assert!(a.is_empty());
+        a.resize(64, 1.0);
+        let cap = a.capacity();
+        pool.put(a);
+        let b = pool.take();
+        assert_eq!(b.capacity(), cap, "pooled buffer keeps its allocation");
+    }
+}

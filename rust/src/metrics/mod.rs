@@ -37,6 +37,13 @@ impl Curve {
         self.points.push(p);
     }
 
+    /// Restore step order. Decoupled-mode passes complete out of order, so
+    /// eval points can be pushed non-monotonically; TTA/TTC scans and the
+    /// CSV/JSON emitters assume step-sorted points.
+    pub fn sort_by_step(&mut self) {
+        self.points.sort_by_key(|p| p.step);
+    }
+
     pub fn best_accuracy(&self) -> f64 {
         self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
     }
@@ -165,6 +172,47 @@ impl MfuTracker {
     }
 }
 
+/// Depth/backpressure statistics of one decoupled pass queue (§Perf):
+/// surfaces whether the forward pool outruns the backward pool (depth pinned
+/// at capacity, pushes blocking) or starves it (depth near zero).
+#[derive(Clone, Debug, Default)]
+pub struct QueueStats {
+    pub pushes: u64,
+    pub pops: u64,
+    /// pushes that had to wait at least once for space (backpressure events)
+    pub blocked_pushes: u64,
+    /// sum over pushes of the queue depth right after insertion
+    pub depth_sum: u64,
+    pub max_depth: usize,
+}
+
+impl QueueStats {
+    /// Mean queue depth observed at push time.
+    pub fn mean_depth(&self) -> f64 {
+        if self.pushes == 0 {
+            return 0.0;
+        }
+        self.depth_sum as f64 / self.pushes as f64
+    }
+
+    /// Fraction of pushes that hit backpressure.
+    pub fn blocked_frac(&self) -> f64 {
+        if self.pushes == 0 {
+            return 0.0;
+        }
+        self.blocked_pushes as f64 / self.pushes as f64
+    }
+
+    /// Fold another queue's counters in (per-worker queues -> run totals).
+    pub fn merge(&mut self, other: &QueueStats) {
+        self.pushes += other.pushes;
+        self.pops += other.pops;
+        self.blocked_pushes += other.blocked_pushes;
+        self.depth_sum += other.depth_sum;
+        self.max_depth = self.max_depth.max(other.max_depth);
+    }
+}
+
 /// Model disagreement across workers (Fig A1): mean over workers of
 /// ‖x_i − x̄‖ / √d, sampled during training.
 #[derive(Clone, Debug, Default)]
@@ -200,6 +248,20 @@ impl DriftTracker {
             total += (sq / d as f64).sqrt();
         }
         self.samples.push((step, total / m as f64));
+    }
+
+    /// Record a pre-computed disagreement sample. The §Perf streamed path
+    /// (`coordinator`'s per-layer sweep over reusable buffers) computes the
+    /// same ‖x_i − x̄‖ decomposed tensor-by-tensor instead of materializing
+    /// every replica's full flattened parameter vector.
+    pub fn push_sample(&mut self, step: usize, disagreement: f64) {
+        self.samples.push((step, disagreement));
+    }
+
+    /// Restore step order (decoupled-mode samples can land out of order;
+    /// `final_disagreement` and the CSV assume step-sorted samples).
+    pub fn sort_by_step(&mut self) {
+        self.samples.sort_by_key(|&(step, _)| step);
     }
 
     pub fn max_disagreement(&self) -> f64 {
@@ -304,6 +366,36 @@ mod tests {
         assert!(d.samples[0].1 < 1e-12);
         d.record(1, &[vec![0.0, 0.0], vec![2.0, 2.0]]);
         assert!(d.samples[1].1 > 0.9); // each worker is distance 1 (per-dim rms) from mean
+    }
+
+    #[test]
+    fn queue_stats_mean_blocked_and_merge() {
+        let mut a = QueueStats {
+            pushes: 4,
+            pops: 4,
+            blocked_pushes: 1,
+            depth_sum: 8,
+            max_depth: 3,
+        };
+        assert!((a.mean_depth() - 2.0).abs() < 1e-12);
+        assert!((a.blocked_frac() - 0.25).abs() < 1e-12);
+        let b = QueueStats { pushes: 4, pops: 2, blocked_pushes: 3, depth_sum: 4, max_depth: 5 };
+        a.merge(&b);
+        assert_eq!(a.pushes, 8);
+        assert_eq!(a.max_depth, 5);
+        assert!((a.mean_depth() - 1.5).abs() < 1e-12);
+        assert_eq!(QueueStats::default().mean_depth(), 0.0);
+        assert_eq!(QueueStats::default().blocked_frac(), 0.0);
+    }
+
+    #[test]
+    fn drift_push_sample_matches_record_semantics() {
+        let mut a = DriftTracker::default();
+        a.record(3, &[vec![0.0, 0.0], vec![2.0, 2.0]]);
+        let mut b = DriftTracker::default();
+        b.push_sample(3, a.samples[0].1);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(b.max_disagreement(), a.max_disagreement());
     }
 
     #[test]

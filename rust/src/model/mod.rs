@@ -104,6 +104,20 @@ impl ModelParams {
             }
         }
     }
+
+    /// A fresh replica holding identical values. Cheaper than `init` +
+    /// `copy_from` (no RNG draws, one pass per tensor) — `Shared::new` builds
+    /// every worker's replica from one prototype this way.
+    pub fn replica(&self) -> Arc<ModelParams> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| LayerParams {
+                tensors: l.tensors.iter().map(|t| AtomicTensor::from_tensor(&t.snapshot())).collect(),
+            })
+            .collect();
+        Arc::new(ModelParams { layers })
+    }
 }
 
 /// Upload cache entry: literals for one layer's params, keyed by version.
@@ -125,6 +139,31 @@ pub struct ForwardPass {
     /// input literal of every layer: activations[i] feeds layer i
     activations: Vec<xla::Literal>,
     targets: xla::Literal,
+}
+
+/// A forward pass downloaded to host memory so it can cross threads.
+///
+/// `xla::Literal` is `!Send`, so the decoupled forward/backward pools cannot
+/// ship a [`ForwardPass`] through the pass queue. A `HostPass` instead holds
+/// every activation in plain reusable buffers: [`ModelExec::forward_host`]
+/// fills one on a forward-pool thread, the bounded queue carries it, and
+/// [`ModelExec::backward_host`] re-uploads the activations on a
+/// backward-pool thread. Buffers are recycled across steps via the
+/// coordinator's pass pool, so the steady-state round-trip costs host
+/// memcpys but **no per-step allocation** on our side (§Perf).
+#[derive(Default)]
+pub struct HostPass {
+    /// the training step this pass belongs to
+    pub step: usize,
+    pub loss: f32,
+    pub metric: f32,
+    /// model input (layer 0's x) in the dtype the first artifact expects
+    x_f32: Vec<f32>,
+    x_i32: Vec<i32>,
+    /// downloaded activations: `acts[i]` feeds layer i. Index 0 is unused —
+    /// the input lives in `x_f32`/`x_i32` because its dtype varies by model.
+    acts: Vec<Tensor>,
+    targets: Vec<i32>,
 }
 
 /// Thread-local executor for one model on one worker.
@@ -303,6 +342,83 @@ impl ModelExec {
         }
         self.drain_compute_time();
         Ok(())
+    }
+
+    /// Run the full forward pass and download every activation into `out`'s
+    /// reusable host buffers, so the pass can cross to a backward-pool
+    /// thread. `out.step`/`out.loss`/`out.metric` are filled in; previously
+    /// pooled buffer contents are overwritten in place.
+    pub fn forward_host(
+        &mut self,
+        params: &ModelParams,
+        batch: &Batch,
+        out: &mut HostPass,
+    ) -> Result<()> {
+        let pass = self.forward(params, batch)?;
+        out.loss = pass.loss;
+        out.metric = pass.metric;
+        let n = self.layers.len();
+        if out.acts.len() != n {
+            // First use of this pooled pass: shape the activation buffers.
+            // Index 0 stays empty — the input lives in x_f32/x_i32 (dtype
+            // varies by model), so no input-sized buffer is wasted on it.
+            out.acts = self
+                .manifest
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, lm)| if li == 0 { Tensor::zeros(&[0]) } else { Tensor::zeros(&lm.x_shape) })
+                .collect();
+        }
+        for li in 1..n {
+            runtime::literal_read_f32_into(&pass.activations[li], &mut out.acts[li].data)
+                .with_context(|| format!("downloading activation of layer {li}"))?;
+        }
+        out.x_f32.clear();
+        out.x_f32.extend_from_slice(&batch.x_f32);
+        out.x_i32.clear();
+        out.x_i32.extend_from_slice(&batch.x_i32);
+        out.targets.clear();
+        out.targets.extend_from_slice(&batch.targets);
+        Ok(())
+    }
+
+    /// Backward counterpart of [`forward_host`]: re-upload the host-side
+    /// activations as literals and run the usual reverse layer walk, invoking
+    /// `sink` per layer exactly like [`backward`]. Parameter literals are
+    /// still re-validated per layer, so gossip writes landing between the
+    /// (possibly remote-thread) forward and this backward are picked up —
+    /// the paper's `x̂` vs `x̃` staleness, bounded by Lemma 6.1.
+    pub fn backward_host(
+        &mut self,
+        params: &ModelParams,
+        pass: &HostPass,
+        sink: &mut dyn FnMut(usize, Vec<Tensor>),
+    ) -> Result<()> {
+        let n = self.layers.len();
+        if pass.acts.len() != n {
+            bail!("HostPass has {} activations, model has {n} layers", pass.acts.len());
+        }
+        let first = &self.manifest.layers[0];
+        let mut activations = Vec::with_capacity(n);
+        activations.push(match first.x_dtype {
+            DType::F32 => runtime::literal_f32(&first.x_shape, &pass.x_f32)?,
+            DType::I32 => runtime::literal_i32(&first.x_shape, &pass.x_i32)?,
+        });
+        for li in 1..n {
+            activations.push(runtime::literal_f32(
+                &self.manifest.layers[li].x_shape,
+                &pass.acts[li].data,
+            )?);
+        }
+        let loss = self.manifest.layers.last().unwrap();
+        let shape = loss
+            .targets_shape
+            .as_ref()
+            .context("loss layer missing targets_shape")?;
+        let targets = runtime::literal_i32(shape, &pass.targets)?;
+        let fp = ForwardPass { loss: pass.loss, metric: pass.metric, activations, targets };
+        self.backward(params, &fp, sink)
     }
 
     fn grads_from(&self, li: usize, outs: Vec<xla::Literal>) -> Result<Vec<Tensor>> {

@@ -108,6 +108,42 @@ impl LayerOptimizer {
     /// Apply one update to the shared parameter store for this layer.
     /// `grads[i]` matches `params.tensors[i]` elementwise.
     pub fn step(&mut self, params: &[AtomicTensor], grads: &[Tensor], lr: f32) {
+        self.step_with(params, grads, lr, |_, p, lr, u| p.sub_scaled(lr, u));
+    }
+
+    /// Fused updater hot path (§Perf): like [`step`], but the final parameter
+    /// write also pushes the freshly updated values into `peer` with the
+    /// push-sum mixing fractions, in a single traversal per parameter
+    /// (`AtomicTensor::sub_scaled_then_mix_into`) instead of the three the
+    /// step + load + mix sequence needs. Numerically identical to
+    /// `step(params, grads, lr)` followed by mixing the updated values into
+    /// `peer`, absent concurrent writers. `peer[i]` matches `params[i]`.
+    pub fn step_mix(
+        &mut self,
+        params: &[AtomicTensor],
+        grads: &[Tensor],
+        lr: f32,
+        peer: &[AtomicTensor],
+        keep_frac: f32,
+        push_frac: f32,
+    ) {
+        debug_assert_eq!(params.len(), peer.len());
+        self.step_with(params, grads, lr, |pi, p, lr, u| {
+            p.sub_scaled_then_mix_into(lr, u, &peer[pi], keep_frac, push_frac);
+        });
+    }
+
+    /// Compute each parameter's update vector (momentum / weight decay /
+    /// AdamW preconditioning) and hand it to `write(param_idx, param, lr, u)`
+    /// for the actual store — the writer decides whether the write is a plain
+    /// `sub_scaled` or the fused update+mix traversal.
+    fn step_with<W: FnMut(usize, &AtomicTensor, f32, &[f32])>(
+        &mut self,
+        params: &[AtomicTensor],
+        grads: &[Tensor],
+        lr: f32,
+        mut write: W,
+    ) {
         debug_assert_eq!(params.len(), grads.len());
         self.t += 1;
         match self.kind {
@@ -122,16 +158,16 @@ impl LayerOptimizer {
                             buf[k] = momentum * buf[k] + g.data[k];
                             self.scratch[k] = buf[k] + weight_decay * self.scratch[k];
                         }
-                        p.sub_scaled(lr, &self.scratch);
+                        write(pi, p, lr, &self.scratch);
                     } else if weight_decay > 0.0 {
                         self.scratch.resize(p.numel(), 0.0);
                         p.load_into(&mut self.scratch);
                         for k in 0..g.data.len() {
                             self.scratch[k] = g.data[k] + weight_decay * self.scratch[k];
                         }
-                        p.sub_scaled(lr, &self.scratch);
+                        write(pi, p, lr, &self.scratch);
                     } else {
-                        p.sub_scaled(lr, &g.data);
+                        write(pi, p, lr, &g.data);
                     }
                 }
             }
@@ -151,7 +187,7 @@ impl LayerOptimizer {
                         let vhat = v[k] / bc2;
                         self.scratch2[k] = mhat / (vhat.sqrt() + eps) + weight_decay * self.scratch[k];
                     }
-                    p.sub_scaled(lr, &self.scratch2);
+                    write(pi, p, lr, &self.scratch2);
                 }
             }
         }
@@ -207,6 +243,50 @@ mod tests {
             opt.step(std::slice::from_ref(&p), &g, 0.05);
         }
         assert!((p.snapshot().data[0] - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn step_mix_matches_step_then_mix_for_every_optimizer() {
+        for kind in [
+            OptimKind::sgd(0.0, 0.0),
+            OptimKind::sgd(0.9, 0.0),
+            OptimKind::sgd(0.9, 5e-4),
+            OptimKind::sgd(0.0, 1e-2),
+            OptimKind::adamw(0.01),
+        ] {
+            let init = vec![1.0, -0.5, 2.0, 0.25];
+            let peer_init = vec![0.0, 3.0, -1.0, 1.0];
+            let g = [Tensor::from_vec(&[4], vec![0.3, -0.7, 0.0, 1.2])];
+            let (keep, push) = (0.6f32, 0.4f32);
+
+            // reference: step, then the separate load + mix passes
+            let p = store(&init);
+            let peer = store(&peer_init);
+            let mut opt = LayerOptimizer::new(kind.clone(), &[4]);
+            for _ in 0..3 {
+                opt.step(std::slice::from_ref(&p), &g, 0.1);
+                let snap = p.snapshot();
+                peer.mix_from(keep, push, &snap.data);
+            }
+
+            // fused path
+            let pf = store(&init);
+            let peerf = store(&peer_init);
+            let mut optf = LayerOptimizer::new(kind.clone(), &[4]);
+            for _ in 0..3 {
+                optf.step_mix(
+                    std::slice::from_ref(&pf),
+                    &g,
+                    0.1,
+                    std::slice::from_ref(&peerf),
+                    keep,
+                    push,
+                );
+            }
+
+            assert_eq!(pf.snapshot().data, p.snapshot().data, "{kind:?} params");
+            assert_eq!(peerf.snapshot().data, peer.snapshot().data, "{kind:?} peer");
+        }
     }
 
     #[test]

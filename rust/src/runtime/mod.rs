@@ -2,8 +2,11 @@
 //! client (adapting /opt/xla-example/load_hlo).
 //!
 //! Thread model: the `xla` crate's wrappers are `Rc`-based and thus
-//! `!Send`/`!Sync`, so **each worker thread owns its own [`Runtime`]** —
-//! its own `PjRtClient` and its own compiled executables. That matches the
+//! `!Send`/`!Sync`, so **each compute thread owns its own [`Runtime`]** —
+//! its own `PjRtClient` and its own compiled executables. In the serial loop
+//! that is one runtime per worker; in decoupled mode every forward-pool and
+//! backward-pool thread gets its own, and passes cross threads only as
+//! host-side buffers (`model::HostPass`). That matches the
 //! paper's deployment (one process context per device) and keeps the gossip
 //! path (which only touches [`crate::tensor::AtomicTensor`]s) free of any
 //! XLA state. Compilation cost stays bounded because layers with equal
@@ -134,6 +137,18 @@ pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
 /// Read an f32 literal back into a Vec.
 pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read an f32 literal into a reusable host buffer (§Perf: the decoupled
+/// pass queue downloads every activation once per step — steady-state this
+/// costs one memcpy and zero allocations, because `resize` is a no-op once
+/// the pooled buffer reached the activation's size).
+pub fn literal_read_f32_into(lit: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+    let n = lit.element_count();
+    out.resize(n, 0.0);
+    lit.copy_raw_to::<f32>(out.as_mut_slice())
+        .context("copying literal into host buffer")?;
+    Ok(())
 }
 
 /// Read a scalar f32 (e.g. loss) from a literal.

@@ -169,6 +169,34 @@ impl AtomicTensor {
         self.bump();
     }
 
+    /// Fused updater hot path (§Perf): apply the local update `p -= lr * u`
+    /// **and** push the freshly updated value into `peer`
+    /// (`peer = keep_frac * peer + push_frac * p_new`) in one traversal.
+    ///
+    /// Numerically identical to `sub_scaled(lr, update)` followed by
+    /// `load_into(scratch)` + `peer.mix_from(keep_frac, push_frac, scratch)`
+    /// — which walks the layer's data three times — absent concurrent
+    /// writers; under races the usual lock-free overwrite semantics apply.
+    pub fn sub_scaled_then_mix_into(
+        &self,
+        lr: f32,
+        update: &[f32],
+        peer: &AtomicTensor,
+        keep_frac: f32,
+        push_frac: f32,
+    ) {
+        debug_assert_eq!(update.len(), self.data.len());
+        debug_assert_eq!(peer.data.len(), self.data.len());
+        for ((a, &u), pa) in self.data.iter().zip(update.iter()).zip(peer.data.iter()) {
+            let new = f32::from_bits(a.load(Ordering::Relaxed)) - lr * u;
+            a.store(new.to_bits(), Ordering::Relaxed);
+            let pcur = f32::from_bits(pa.load(Ordering::Relaxed));
+            pa.store((keep_frac * pcur + push_frac * new).to_bits(), Ordering::Relaxed);
+        }
+        self.bump();
+        peer.bump();
+    }
+
     /// Element-wise average with `k` other parameter stores (DDP all-reduce
     /// endpoint; AD-PSGD pairwise averaging uses the 2-way case).
     pub fn average_with(&self, others: &[&AtomicTensor]) {
@@ -253,6 +281,31 @@ mod tests {
         let s = at.snapshot().data;
         assert!((s[0] - 3.0).abs() < 1e-6);
         assert!((s[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_update_mix_matches_three_pass_path() {
+        let init = vec![1.0, -2.0, 0.5, 3.0];
+        let grad = vec![0.4, -1.0, 2.0, 0.0];
+        let peer_init = vec![10.0, 0.0, -4.0, 1.0];
+        let (lr, keep, push) = (0.1f32, 0.75f32, 0.25f32);
+
+        // reference: the original three-pass sequence
+        let a = AtomicTensor::from_tensor(&Tensor::from_vec(&[4], init.clone()));
+        let p = AtomicTensor::from_tensor(&Tensor::from_vec(&[4], peer_init.clone()));
+        a.sub_scaled(lr, &grad);
+        let mut scratch = vec![0.0; 4];
+        a.load_into(&mut scratch);
+        p.mix_from(keep, push, &scratch);
+
+        // fused single traversal
+        let af = AtomicTensor::from_tensor(&Tensor::from_vec(&[4], init));
+        let pf = AtomicTensor::from_tensor(&Tensor::from_vec(&[4], peer_init));
+        af.sub_scaled_then_mix_into(lr, &grad, &pf, keep, push);
+
+        assert_eq!(af.snapshot().data, a.snapshot().data);
+        assert_eq!(pf.snapshot().data, p.snapshot().data);
+        assert!(af.version() >= 1 && pf.version() >= 1, "both stores must bump versions");
     }
 
     #[test]

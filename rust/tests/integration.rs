@@ -116,6 +116,59 @@ fn every_algorithm_trains_without_divergence() {
 }
 
 #[test]
+fn decoupled_single_worker_tracks_serial_loss_curve() {
+    // Loss-parity smoke test: 1 worker, 1:1 ratio, queue_depth 1. The
+    // decoupled pipeline overlaps forward(k+1) with backward(k), so curves
+    // are not bit-identical (one step of staleness — exactly the regime
+    // Lemma 6.1 bounds); both runs must still converge comparably.
+    // CO2 is barrier-free and safe at m = 1 (gossip peer selection needs
+    // m >= 2), so the same algorithm runs on both sides of the comparison.
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let serial_cfg = quick_cfg(&model_name, Algorithm::Co2, 1, 25);
+    let serial = coordinator::run(&serial_cfg, &man).unwrap();
+
+    let mut dec_cfg = quick_cfg(&model_name, Algorithm::Co2, 1, 25);
+    dec_cfg.decoupled = true;
+    dec_cfg.fwd_threads = 1;
+    dec_cfg.bwd_threads = 1;
+    dec_cfg.queue_depth = 1;
+    let dec = coordinator::run(&dec_cfg, &man).unwrap();
+
+    let (s_first, s_best) = (serial.curve.points.first().unwrap().loss, serial.curve.best_loss());
+    let (d_first, d_best) = (dec.curve.points.first().unwrap().loss, dec.curve.best_loss());
+    assert!(s_best < s_first * 0.9, "serial did not learn: {s_first} -> {s_best}");
+    assert!(d_best < d_first * 0.9, "decoupled did not learn: {d_first} -> {d_best}");
+    assert!(
+        d_best < s_best * 1.5 + 0.1,
+        "decoupled lost too much vs serial: {d_best} vs {s_best}"
+    );
+    assert_eq!(dec.total_steps, 25, "every queued pass must complete");
+}
+
+#[test]
+fn decoupled_pools_train_all_async_algorithms() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    for algo in [Algorithm::LayUp, Algorithm::GoSgd, Algorithm::AdPsgd, Algorithm::Co2] {
+        let mut cfg = quick_cfg(&model_name, algo, 2, 12);
+        cfg.decoupled = true;
+        cfg.fwd_threads = 2;
+        cfg.bwd_threads = 1;
+        cfg.queue_depth = 3;
+        let summary = coordinator::run(&cfg, &man)
+            .unwrap_or_else(|e| panic!("decoupled {algo:?} failed: {e:#}"));
+        assert!(summary.curve.best_loss().is_finite(), "{algo:?} diverged");
+        assert_eq!(summary.total_steps, 24);
+        assert!(summary.extras["queue_depth_max"] <= 3.0, "queue bound violated");
+    }
+    // barrier algorithms must be rejected up front, not deadlock
+    let mut cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, 6);
+    cfg.decoupled = true;
+    assert!(coordinator::run(&cfg, &man).is_err());
+}
+
+#[test]
 fn ddp_replicas_stay_bit_identical() {
     let Some(man) = manifest() else { return };
     let model_name = pick_model(&man);

@@ -81,6 +81,34 @@ fn prop_mix_from_is_convex_and_bounded() {
 }
 
 #[test]
+fn prop_fused_update_mix_equals_three_pass() {
+    // the §Perf fused updater write must be bit-identical to the original
+    // sub_scaled + load_into + mix_from sequence for any shape/lr/fraction
+    prop("fused_update_mix", 50, |rng| {
+        let n = 1 + rng.below_usize(128);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal() * 2.0).collect();
+        let grad: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let peer_init: Vec<f32> = (0..n).map(|_| rng.normal() * 2.0).collect();
+        let lr = rng.next_f32() * 0.2;
+        let frac = rng.next_f32();
+
+        let a = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], init.clone()));
+        let p = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], peer_init.clone()));
+        a.sub_scaled(lr, &grad);
+        let mut scratch = vec![0.0f32; n];
+        a.load_into(&mut scratch);
+        p.mix_from(1.0 - frac, frac, &scratch);
+
+        let af = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], init));
+        let pf = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], peer_init));
+        af.sub_scaled_then_mix_into(lr, &grad, &pf, 1.0 - frac, frac);
+
+        assert_eq!(af.snapshot().data, a.snapshot().data, "local update differs");
+        assert_eq!(pf.snapshot().data, p.snapshot().data, "peer mix differs");
+    });
+}
+
+#[test]
 fn prop_topology_peer_valid_for_all_shapes() {
     prop("topology_valid", 50, |rng| {
         let m = 2 + rng.below_usize(15);
