@@ -2,7 +2,9 @@
 //! transformer with LayUp on the synthetic Markov corpus for a few hundred
 //! steps, logging the loss curve — proof that all three layers compose:
 //! Pallas kernels (L1) inside the JAX per-layer artifacts (L2), executed and
-//! coordinated lock-free by the Rust cluster (L3).
+//! coordinated lock-free by the Rust cluster (L3). The run also streams its
+//! typed event log to results/e2e_lm_pretrain_events.jsonl (EXPERIMENTS.md
+//! §Events).
 //!
 //!     cargo run --release --example lm_pretrain
 //!
@@ -10,9 +12,8 @@
 
 use anyhow::Result;
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator;
 use layup::manifest::Manifest;
-use layup::optim::{OptimKind, Schedule};
+use layup::session::SessionBuilder;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(&layup::artifacts_dir())?;
@@ -29,8 +30,8 @@ fn main() -> Result<()> {
     );
 
     let mut cfg = TrainConfig::new("gpt_mini", Algorithm::LayUp, workers, steps);
-    cfg.optim = OptimKind::adamw(0.01);
-    cfg.schedule = Schedule::Cosine {
+    cfg.optim = layup::optim::OptimKind::adamw(0.01);
+    cfg.schedule = layup::optim::Schedule::Cosine {
         lr: 3e-3,
         t_max: steps,
         warmup_steps: steps / 10,
@@ -39,7 +40,12 @@ fn main() -> Result<()> {
     cfg.eval_every = (steps / 20).max(1);
     cfg.track_drift_every = (steps / 10).max(1);
 
-    let summary = coordinator::run(&cfg, &manifest)?;
+    let out = layup::artifacts_dir().parent().unwrap().join("results");
+    std::fs::create_dir_all(&out)?;
+    let summary = SessionBuilder::new(cfg)
+        .jsonl_sink(out.join("e2e_lm_pretrain_events.jsonl"))?
+        .build(&manifest)?
+        .run()?;
 
     println!("\n{:<8} {:>9} {:>10} {:>12} {:>10}", "step", "time(s)", "loss", "perplexity", "tok acc");
     for p in &summary.curve.points {
@@ -55,13 +61,12 @@ fn main() -> Result<()> {
     println!(
         "\nfinal perplexity {:.2} (corpus floor ≈ e^H of the Markov chain)  drift max {:.4} final {:.4}",
         summary.curve.best_loss().exp(),
-        summary.extras["max_disagreement"],
-        summary.extras["final_disagreement"],
+        summary.stats.max_disagreement,
+        summary.stats.final_disagreement,
     );
     // persist the loss curve for EXPERIMENTS.md
-    let out = layup::artifacts_dir().parent().unwrap().join("results");
-    std::fs::create_dir_all(&out)?;
     std::fs::write(out.join("e2e_lm_pretrain.csv"), summary.curve.to_csv())?;
     println!("loss curve -> results/e2e_lm_pretrain.csv");
+    println!("typed event log -> results/e2e_lm_pretrain_events.jsonl");
     Ok(())
 }

@@ -1,12 +1,15 @@
 //! Quickstart: train one model with LayUp on a 2-worker thread cluster and
-//! print the learning curve — the 30-second tour of the public API.
+//! print the learning curve — the 30-second tour of the public Session API.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator;
 use layup::manifest::Manifest;
+use layup::session::events::TrainEvent;
+use layup::session::SessionBuilder;
 
 fn main() -> Result<()> {
     // 1. load the AOT artifact manifest produced by `make artifacts`
@@ -16,9 +19,18 @@ fn main() -> Result<()> {
     let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
     cfg.eval_every = 10;
 
-    // 3. run — worker threads execute the per-layer XLA artifacts; LayUp's
-    //    updater threads gossip layer-wise updates concurrently
-    let summary = coordinator::run(&cfg, &manifest)?;
+    // 3. build a session and run — worker threads execute the per-layer XLA
+    //    artifacts; LayUp's updater threads gossip layer-wise updates
+    //    concurrently. Observers receive the typed event stream live; any
+    //    `Fn(&TrainEvent)` closure works.
+    let summary = SessionBuilder::new(cfg)
+        .observer(Arc::new(|ev: &TrainEvent| {
+            if let TrainEvent::EvalPoint { step, loss, .. } = ev {
+                eprintln!("  [live] step {step}: loss {loss:.4}");
+            }
+        }))
+        .build(&manifest)?
+        .run()?;
 
     // 4. inspect the results
     println!("algorithm: {}", summary.algorithm);

@@ -3,28 +3,46 @@
 //!
 //!     cargo run --release --example straggler_demo
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use anyhow::Result;
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator;
 use layup::manifest::Manifest;
+use layup::session::events::TrainEvent;
+use layup::session::SessionBuilder;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(&layup::artifacts_dir())?;
     let steps = 60;
     println!("mlpnet18, 3 workers, {steps} steps; worker 1 delayed by k iterations of idle\n");
-    println!("{:<10} {:>8} {:>12} {:>12}", "method", "delay", "accuracy", "time (s)");
+    println!("{:<10} {:>8} {:>12} {:>12} {:>8}", "method", "delay", "accuracy", "time (s)", "idles");
     for algo in [Algorithm::Ddp, Algorithm::LayUp] {
         for delay in [0.0, 4.0] {
             let mut cfg = TrainConfig::new("mlpnet18", algo, 3, steps);
             cfg.eval_every = steps / 6;
             cfg.straggler = if delay > 0.0 { Some((1, delay)) } else { None };
-            let r = coordinator::run(&cfg, &manifest)?;
+            // count the injected idle periods through the typed event stream
+            let idles = Arc::new(AtomicUsize::new(0));
+            let counter = {
+                let idles = Arc::clone(&idles);
+                move |ev: &TrainEvent| {
+                    if matches!(ev, TrainEvent::StragglerInjected { .. }) {
+                        idles.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            };
+            let r = SessionBuilder::new(cfg)
+                .observer(Arc::new(counter))
+                .build(&manifest)?
+                .run()?;
             println!(
-                "{:<10} {:>8.0} {:>11.1}% {:>12.1}",
+                "{:<10} {:>8.0} {:>11.1}% {:>12.1} {:>8}",
                 r.algorithm,
                 delay,
                 100.0 * r.curve.best_accuracy(),
-                r.total_time_s
+                r.total_time_s,
+                idles.load(Ordering::Relaxed)
             );
         }
     }

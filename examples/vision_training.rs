@@ -1,15 +1,14 @@
 //! Vision workload (CIFAR-analog): train the MLPNet-18 residual network with
 //! every algorithm of the paper on the same data and compare convergence —
-//! a miniature Table 1/2.
+//! a miniature Table 1/2, driven through the Session API.
 //!
 //!     cargo run --release --example vision_training
 
 use anyhow::Result;
-use layup::config::Algorithm;
-use layup::config::TrainConfig;
-use layup::coordinator;
+use layup::config::{Algorithm, TrainConfig};
 use layup::manifest::Manifest;
 use layup::optim::{OptimKind, Schedule};
+use layup::session::SessionBuilder;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(&layup::artifacts_dir())?;
@@ -26,7 +25,7 @@ fn main() -> Result<()> {
         cfg.optim = OptimKind::sgd(0.9, 5e-4);
         cfg.schedule = Schedule::Cosine { lr: 0.04, t_max: steps, warmup_steps: 0, warmup_lr: 0.0 };
         cfg.eval_every = (steps / 12).max(1);
-        let r = coordinator::run(&cfg, &manifest)?;
+        let r = SessionBuilder::new(cfg).build(&manifest)?.run()?;
         println!(
             "{:<14} {:>9.1}% {:>10.1} {:>11.1}%",
             r.algorithm,

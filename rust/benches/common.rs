@@ -6,16 +6,18 @@
 //!   LAYUP_STEPS    steps per run (default per-bench)
 //!   LAYUP_WORKERS  simulated devices (default 3 — the paper's C1)
 //!   LAYUP_SEEDS    number of seeds to average over (default 1; paper uses 3)
+//!   LAYUP_ALGOS    comma-separated algorithm names (registry spellings,
+//!                  e.g. "layup,gosgd"); default: the paper's six-algorithm set
 
 #![allow(dead_code)]
 
 use std::path::PathBuf;
 
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator;
 use layup::manifest::Manifest;
 use layup::metrics::RunSummary;
 use layup::optim::{OptimKind, Schedule};
+use layup::session::SessionBuilder;
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -38,6 +40,15 @@ pub fn results_dir() -> PathBuf {
 
 pub fn manifest() -> Manifest {
     Manifest::load(&layup::artifacts_dir()).expect("run `make artifacts` first")
+}
+
+/// Run one config through the session facade.
+pub fn run_one(cfg: &TrainConfig, man: &Manifest) -> RunSummary {
+    SessionBuilder::new(cfg.clone())
+        .build(man)
+        .expect("invalid bench config")
+        .run()
+        .expect("run failed")
 }
 
 /// Baseline config for a vision-table run (paper Table A6 style: SGD with
@@ -80,7 +91,7 @@ pub fn run_seeds(base: &TrainConfig, man: &Manifest) -> Vec<RunSummary> {
         .map(|s| {
             let mut cfg = base.clone();
             cfg.seed = 42 + 1000 * s as u64;
-            coordinator::run(&cfg, man).expect("run failed")
+            run_one(&cfg, man)
         })
         .collect()
 }
@@ -92,9 +103,20 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     (mean, var.sqrt())
 }
 
-/// The six-algorithm set of the paper's tables.
-pub fn paper_algorithms() -> &'static [Algorithm] {
-    Algorithm::all_paper()
+/// The algorithm set under test: `LAYUP_ALGOS` (names resolved through the
+/// algorithm registry) or the paper's six-algorithm table order.
+pub fn paper_algorithms() -> Vec<Algorithm> {
+    match std::env::var("LAYUP_ALGOS") {
+        Ok(names) => names
+            .split(',')
+            .filter(|n| !n.trim().is_empty())
+            .map(|n| {
+                Algorithm::parse(n.trim())
+                    .unwrap_or_else(|e| panic!("LAYUP_ALGOS: {e:#}"))
+            })
+            .collect(),
+        Err(_) => Algorithm::all_paper().to_vec(),
+    }
 }
 
 pub fn hr() {

@@ -16,7 +16,7 @@ fn main() {
         ("B_pretrain", "gpt_mini", common::env_usize("LAYUP_STEPS", 50), true),
     ] {
         println!("Fig 2{panel}: {model}");
-        for &algo in common::paper_algorithms() {
+        for algo in common::paper_algorithms() {
             let cfg = if lm {
                 common::lm_cfg(model, algo, steps)
             } else {

@@ -28,12 +28,12 @@ fn main() {
         println!(
             "{:<14} {:>14.6} {:>14.6}",
             r.algorithm,
-            r.extras["max_disagreement"],
-            r.extras["final_disagreement"],
+            r.stats.max_disagreement,
+            r.stats.final_disagreement,
         );
         csv.push_str(&format!(
             "{},max,{:.6}\n{},final,{:.6}\n",
-            r.algorithm, r.extras["max_disagreement"], r.algorithm, r.extras["final_disagreement"]
+            r.algorithm, r.stats.max_disagreement, r.algorithm, r.stats.final_disagreement
         ));
     }
     println!("\nexpected shape: DDP drift ~0 (lock-step); LayUp bounded and below the");

@@ -9,7 +9,6 @@
 mod common;
 
 use layup::config::Algorithm;
-use layup::coordinator;
 
 fn main() {
     let man = common::manifest();
@@ -34,24 +33,24 @@ fn main() {
     base.eval_every = usize::MAX / 2; // measurement window excludes eval
 
     // serial baseline: the original interlocked fwd->bwd loop
-    let serial = coordinator::run(&base, &man).expect("serial baseline");
+    let serial = common::run_one(&base, &man);
     let serial_sps = serial.total_steps as f64 / serial.total_time_s;
     println!(
         "{:<14} {:>9.2} {:>12.3e} {:>8.1}% {:>8.1}% {:>8} {:>8}",
         "serial",
         serial_sps,
-        serial.extras["achieved_flops_per_s"],
-        100.0 * serial.extras["fwd_occupancy"],
-        100.0 * serial.extras["bwd_occupancy"],
+        serial.stats.achieved_flops_per_s,
+        100.0 * serial.stats.fwd_occupancy,
+        100.0 * serial.stats.bwd_occupancy,
         "-",
         "-"
     );
     csv.push_str(&format!(
         "serial,1,1,{:.4},{:.6e},{:.4},{:.4},,\n",
         serial_sps,
-        serial.extras["achieved_flops_per_s"],
-        serial.extras["fwd_occupancy"],
-        serial.extras["bwd_occupancy"],
+        serial.stats.achieved_flops_per_s,
+        serial.stats.fwd_occupancy,
+        serial.stats.bwd_occupancy,
     ));
 
     let mut best = (0.0f64, (1usize, 1usize));
@@ -61,7 +60,7 @@ fn main() {
         cfg.fwd_threads = f;
         cfg.bwd_threads = b;
         cfg.queue_depth = 2 * f;
-        let r = coordinator::run(&cfg, &man).expect("decoupled run");
+        let r = common::run_one(&cfg, &man);
         let sps = r.total_steps as f64 / r.total_time_s;
         if sps > best.0 {
             best = (sps, (f, b));
@@ -71,20 +70,20 @@ fn main() {
             "{:<14} {:>9.2} {:>12.3e} {:>8.1}% {:>8.1}% {:>8.2} {:>7.1}%",
             label,
             sps,
-            r.extras["achieved_flops_per_s"],
-            100.0 * r.extras["fwd_occupancy"],
-            100.0 * r.extras["bwd_occupancy"],
-            r.extras["queue_depth_mean"],
-            100.0 * r.extras["queue_blocked_frac"],
+            r.stats.achieved_flops_per_s,
+            100.0 * r.stats.fwd_occupancy,
+            100.0 * r.stats.bwd_occupancy,
+            r.stats.queue.mean_depth(),
+            100.0 * r.stats.queue.blocked_frac(),
         );
         csv.push_str(&format!(
             "decoupled,{f},{b},{:.4},{:.6e},{:.4},{:.4},{:.4},{:.4}\n",
             sps,
-            r.extras["achieved_flops_per_s"],
-            r.extras["fwd_occupancy"],
-            r.extras["bwd_occupancy"],
-            r.extras["queue_depth_mean"],
-            r.extras["queue_blocked_frac"],
+            r.stats.achieved_flops_per_s,
+            r.stats.fwd_occupancy,
+            r.stats.bwd_occupancy,
+            r.stats.queue.mean_depth(),
+            r.stats.queue.blocked_frac(),
         ));
     }
 

@@ -10,7 +10,7 @@ mod common;
 use std::time::Instant;
 
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator::{self, Shared};
+use layup::coordinator::Shared;
 use layup::data;
 use layup::model::ModelExec;
 use layup::runtime::Runtime;
@@ -126,7 +126,7 @@ fn main() {
     for algo in [Algorithm::LayUp, Algorithm::Ddp, Algorithm::GoSgd] {
         let mut cfg = common::vision_cfg(model_name, algo, steps);
         cfg.eval_every = usize::MAX / 2;
-        let r = coordinator::run(&cfg, &man).unwrap();
+        let r = common::run_one(&cfg, &man);
         println!(
             "  {:<12} {:.1} ms/step  occupancy {:.1}%",
             r.algorithm,

@@ -21,7 +21,7 @@ fn main() {
              common::workers(), steps);
     println!("{:<14} {:>12} {:>12} {:>8}", "method", "conv acc", "TTC (s)", "epochs");
     common::hr();
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let cfg = common::vision_cfg("mlpnet50", algo, steps);
         let runs = common::run_seeds(&cfg, &man);
         let accs: Vec<f64> = runs.iter().map(|r| r.curve.best_accuracy()).collect();

@@ -11,7 +11,7 @@ fn main() {
 
     // run all algorithms once to find the target, reusing the runs for TTA
     let mut runs = Vec::new();
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let cfg = common::vision_cfg("mlpnet50", algo, steps);
         runs.push(common::run_seeds(&cfg, &man));
     }

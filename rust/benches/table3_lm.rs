@@ -8,7 +8,6 @@
 #[path = "common.rs"]
 mod common;
 
-use layup::coordinator;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
 
 fn main() {
@@ -23,7 +22,7 @@ fn main() {
     println!("{:<14} {:>12} {:>12}", "method", "perplexity", "time (s)");
     common::hr();
     let mut csv = String::from("phase,algorithm,ppl_mean,ppl_std,time_s\n");
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let cfg = common::lm_cfg("gpt_mini", algo, steps);
         let runs = common::run_seeds(&cfg, &man);
         let ppls: Vec<f64> = runs.iter().map(|r| r.curve.best_loss().exp()).collect();
@@ -38,10 +37,10 @@ fn main() {
     // (the coordinator reuses the same artifacts; the dataset seed selects a
     // disjoint Markov transition table via the finetune corpus style).
     println!("\nfinetune analog: continued training, shifted corpus (ft = seed-shifted stream)");
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let mut cfg = common::lm_cfg("gpt_mini", algo, steps / 2);
         cfg.seed = 777; // different stream = distribution shift at our scale
-        let r = coordinator::run(&cfg, &man).expect("finetune run");
+        let r = common::run_one(&cfg, &man);
         let ppl = r.curve.best_loss().exp();
         println!("{:<14} {:>7.2} {:>12.1}", r.algorithm, ppl, r.total_time_s);
         csv.push_str(&format!("finetune,{},{:.3},0,{:.1}\n", r.algorithm, ppl, r.total_time_s));

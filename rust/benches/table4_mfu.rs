@@ -10,7 +10,6 @@
 mod common;
 
 use layup::config::Algorithm;
-use layup::coordinator;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
 
 fn main() {
@@ -22,10 +21,7 @@ fn main() {
     calib.workers = 1;
     calib.sync_period = usize::MAX / 2; // never syncs with itself anyway
     calib.eval_every = usize::MAX / 2;
-    let peak = {
-        let r = coordinator::run(&calib, &man).expect("calibration");
-        r.extras["achieved_flops_per_s"]
-    };
+    let peak = common::run_one(&calib, &man).stats.achieved_flops_per_s;
     println!("calibrated single-worker peak: {peak:.3e} FLOP/s\n");
 
     println!(
@@ -36,13 +32,12 @@ fn main() {
     println!("{:<14} {:>10} {:>12}", "method", "MFU", "occupancy");
     common::hr();
     let mut csv = String::from("algorithm,mfu,occupancy\n");
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let mut cfg = common::lm_cfg("gpt_mini", algo, steps);
         cfg.eval_every = usize::MAX / 2; // measurement window excludes eval
-        let r = coordinator::run(&cfg, &man).expect("run");
-        let mfu = r.extras["achieved_flops_per_s"] / peak / common::workers() as f64
-            * 1.0_f64.max(1.0);
+        let r = common::run_one(&cfg, &man);
         // achieved flops are summed across workers; peak is per worker
+        let mfu = r.stats.achieved_flops_per_s / peak / common::workers() as f64;
         println!(
             "{:<14} {:>9.1}% {:>11.1}%",
             r.algorithm,

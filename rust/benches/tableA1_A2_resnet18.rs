@@ -9,7 +9,7 @@ fn main() {
     let steps = common::env_usize("LAYUP_STEPS", 140);
 
     let mut runs = Vec::new();
-    for &algo in common::paper_algorithms() {
+    for algo in common::paper_algorithms() {
         let cfg = common::vision_cfg("mlpnet18", algo, steps);
         runs.push(common::run_seeds(&cfg, &man));
     }

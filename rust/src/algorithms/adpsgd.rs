@@ -8,15 +8,19 @@
 //! paper's atomics: the average is computed from a snapshot and written to
 //! both replicas; concurrent writers may interleave (races lose updates,
 //! never safety).
+//!
+//! Gradients accumulate in the engine-owned [`StepState`], so interleaved
+//! steps (`bwd_threads > 1`) are safe: each in-flight pass has its own stash.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
 use crate::util::rng::Pcg32;
@@ -24,7 +28,6 @@ use crate::util::rng::Pcg32;
 pub struct AdPsgd {
     wid: usize,
     shared: Arc<Shared>,
-    stash: GradStash,
     opt: PerLayerOpt,
     topology: Topology,
     rng: Pcg32,
@@ -32,11 +35,15 @@ pub struct AdPsgd {
 }
 
 impl AdPsgd {
-    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> AdPsgd {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+    ) -> AdPsgd {
         AdPsgd {
             wid,
             shared,
-            stash: GradStash::new(manifest.layers.len()),
             opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0xadb5d ^ ((wid as u64) << 24)),
@@ -46,14 +53,20 @@ impl AdPsgd {
 }
 
 impl WorkerAlgo for AdPsgd {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
-        self.stash.put(layer, grads);
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
         let my = &self.shared.params[self.wid];
-        let grads = self.stash.take();
+        let grads = ctx.take_grads();
         for (li, g) in grads.iter().enumerate() {
             self.opt.step_layer(my, li, g, step);
         }
@@ -75,6 +88,9 @@ impl WorkerAlgo for AdPsgd {
                 t.store_from(&avg.data);
             }
         }
+        self.shared
+            .events
+            .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
         Ok(())
     }
 }

@@ -11,6 +11,9 @@
 //! ever waits, so a straggler cannot stall the others — but the staleness
 //! adds drift, which is why CO2 trails LayUp on task metrics in the paper.
 //!
+//! Being barrier-free and stash-free (gradients live in the engine-owned
+//! [`StepState`]), CO2 runs on the decoupled pools at any `bwd_threads`.
+//!
 //! Following the paper (footnote 3), the penalty-gap correction of the CO2
 //! paper is not implemented — the published CO2 code omits it too.
 
@@ -18,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, localsgd::LocalSgd, slowmo::SlowMo, WorkerAlgo};
+use crate::algorithms::{comm_delay, localsgd::LocalSgd, slowmo::SlowMo, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -74,13 +77,20 @@ impl Co2 {
 }
 
 impl WorkerAlgo for Co2 {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
-        self.inner.stash_put(layer, grads);
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
-        self.inner.local_step(step);
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
+        let grads = ctx.take_grads();
+        self.inner.local_step(step, grads);
         if (step + 1) % self.inner.sync_period == 0 {
             let shared = Arc::clone(&self.inner.shared);
             // publish fresh snapshot (starts the overlapped "all-reduce")

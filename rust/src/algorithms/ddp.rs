@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::algorithms::{average_grad_sets, comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::algorithms::{average_grad_sets, comm_delay, PerLayerOpt, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -24,7 +24,6 @@ use crate::tensor::Tensor;
 pub struct Ddp {
     wid: usize,
     shared: Arc<Shared>,
-    stash: GradStash,
     opt: PerLayerOpt,
     comm_latency_s: f64,
 }
@@ -34,7 +33,6 @@ impl Ddp {
         Ddp {
             wid,
             shared,
-            stash: GradStash::new(manifest.layers.len()),
             opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
             comm_latency_s: cfg.comm_latency_s,
         }
@@ -42,15 +40,21 @@ impl Ddp {
 }
 
 impl WorkerAlgo for Ddp {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
         // synchronous DDP can only buffer: updates wait for the barrier
-        self.stash.put(layer, grads);
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
         // publish my gradients
-        *self.shared.grad_slots[self.wid].lock().unwrap() = Some(self.stash.take());
+        *self.shared.grad_slots[self.wid].lock().unwrap() = Some(ctx.take_grads());
 
         // all-reduce: barrier, average everyone's grads, barrier
         comm_delay(self.comm_latency_s);

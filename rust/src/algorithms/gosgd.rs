@@ -8,15 +8,21 @@
 //! backward pass, from the worker thread itself — no per-layer overlap —
 //! so information mixes less frequently and the communication sits on the
 //! critical path of the step.
+//!
+//! Gradients accumulate in the engine-owned [`StepState`], so this algorithm
+//! is safe under interleaved steps (`bwd_threads > 1`): each in-flight pass
+//! carries its own stash, and the whole-model push at `on_step_end` runs
+//! under the engine's per-worker hook mutex.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
 use crate::util::rng::Pcg32;
@@ -24,7 +30,6 @@ use crate::util::rng::Pcg32;
 pub struct GoSgd {
     wid: usize,
     shared: Arc<Shared>,
-    stash: GradStash,
     opt: PerLayerOpt,
     topology: Topology,
     rng: Pcg32,
@@ -32,11 +37,15 @@ pub struct GoSgd {
 }
 
 impl GoSgd {
-    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> GoSgd {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+    ) -> GoSgd {
         GoSgd {
             wid,
             shared,
-            stash: GradStash::new(manifest.layers.len()),
             opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0x60560d ^ ((wid as u64) << 32)),
@@ -46,15 +55,21 @@ impl GoSgd {
 }
 
 impl WorkerAlgo for GoSgd {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
-        self.stash.put(layer, grads);
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
         // local SGD step over all layers at once
         let my = &self.shared.params[self.wid];
-        let grads = self.stash.take();
+        let grads = ctx.take_grads();
         for (li, g) in grads.iter().enumerate() {
             self.opt.step_layer(my, li, g, step);
         }
@@ -67,6 +82,9 @@ impl WorkerAlgo for GoSgd {
         match self.shared.weights[peer].try_accept(shipped) {
             None => {
                 self.shared.weights[self.wid].reclaim(shipped);
+                self.shared
+                    .events
+                    .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
             }
             Some(frac) => {
                 comm_delay(self.comm_latency_s);
@@ -78,6 +96,9 @@ impl WorkerAlgo for GoSgd {
                     }
                 }
                 self.shared.weights[peer].release();
+                self.shared
+                    .events
+                    .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
             }
         }
         Ok(())

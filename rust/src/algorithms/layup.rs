@@ -3,7 +3,7 @@
 //!
 //! Per worker there are two threads:
 //!
-//! * the **computation thread** (the coordinator's training loop) runs
+//! * the **computation thread** (the engine's training loop) runs
 //!   forward + backward and, as each layer's gradient pops out of the
 //!   backward pass, notifies the updater (`on_layer_grads` -> mpsc send —
 //!   the "Notify: updater thread i" line of Algorithm 1);
@@ -21,21 +21,28 @@
 //! the last layer (layer 0 — backward runs output->input) the slot is
 //! released and `w_j += w_i` has already been folded in by `try_accept`.
 //!
+//! The updater keys its per-iteration push state by the step carried in each
+//! message, so interleaved steps from several backward threads are safe by
+//! construction — LayUp was the existence proof for the [`StepState`]
+//! contract the other algorithms now share.
+//!
 //! The `model_granularity` flag turns off the paper's core idea (updates are
-//! buffered and applied/pushed only after the full backward pass) — this is
-//! the GoSGD-like ablation used to isolate the contribution of layer-wise
-//! updates.
+//! buffered in the engine-owned [`StepState`] and applied/pushed only after
+//! the full backward pass) — this is the GoSGD-like ablation used to isolate
+//! the contribution of layer-wise updates.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::algorithms::{comm_delay, PerLayerOpt, WorkerAlgo};
+use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
 use crate::util::rng::Pcg32;
@@ -48,8 +55,6 @@ enum Msg {
 pub struct LayUp {
     tx: Sender<Msg>,
     updater: Option<JoinHandle<Result<()>>>,
-    /// buffer for the model-granularity ablation
-    stash: Vec<(usize, Vec<Tensor>)>,
     model_granularity: bool,
 }
 
@@ -77,30 +82,34 @@ impl LayUp {
             .name(format!("updater-{wid}"))
             .spawn(move || updater.run(rx))
             .expect("spawning updater thread");
-        LayUp {
-            tx,
-            updater: Some(handle),
-            stash: Vec::new(),
-            model_granularity,
-        }
+        LayUp { tx, updater: Some(handle), model_granularity }
     }
 }
 
 impl WorkerAlgo for LayUp {
-    fn on_layer_grads(&mut self, step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
         if self.model_granularity {
             // ablation: buffer until the backward pass completes
-            self.stash.push((layer, grads));
+            ctx.stash(layer, grads);
             return Ok(());
         }
         self.tx
-            .send(Msg::Layer { step, layer, grads })
+            .send(Msg::Layer { step: ctx.step(), layer, grads })
             .context("updater thread gone")
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         if self.model_granularity {
-            for (layer, grads) in self.stash.drain(..) {
+            let step = ctx.step();
+            // replay in arrival (reverse layer) order so the updater's
+            // iteration bookkeeping — open at the deepest layer, close at
+            // layer 0 — matches the streaming path
+            for (layer, grads) in ctx.take_grads().into_iter().enumerate().rev() {
                 self.tx
                     .send(Msg::Layer { step, layer, grads })
                     .context("updater thread gone")?;
@@ -131,9 +140,8 @@ struct UpdaterThread {
     scratch: Vec<f32>,
 }
 
-/// Per-iteration push state.
+/// Per-iteration push state (keyed by step in the updater's in-flight map).
 struct PushState {
-    step: usize,
     peer: usize,
     /// mixing fraction w_i/(w_i+w_j); None => skipped on contention
     frac: Option<f32>,
@@ -142,7 +150,13 @@ struct PushState {
 
 impl UpdaterThread {
     fn run(mut self, rx: Receiver<Msg>) -> Result<()> {
-        let mut push: Option<PushState> = None;
+        // Push state keyed by step: with `bwd_threads > 1` the backward pool
+        // interleaves layer messages of different steps, so several
+        // iterations are in flight at once. Each keeps its own peer/fraction
+        // from first layer to layer 0 (one halve + one peer per iteration,
+        // exactly as in the serial stream); the map holds at most
+        // `bwd_threads` entries.
+        let mut pushes: HashMap<usize, PushState> = HashMap::new();
         loop {
             let msg = match rx.recv() {
                 Ok(m) => m,
@@ -151,24 +165,23 @@ impl UpdaterThread {
             match msg {
                 Msg::Done => break,
                 Msg::Layer { step, layer, grads } => {
-                    if push.as_ref().map(|p| p.step) != Some(step) {
-                        // a previous iteration that never reached layer 0
-                        // (shouldn't happen, but don't leak the busy slot)
-                        if let Some(p) = push.take() {
-                            self.close_iteration(p);
-                        }
-                        push = Some(self.open_iteration(step));
+                    if !pushes.contains_key(&step) {
+                        let p = self.open_iteration(step);
+                        pushes.insert(step, p);
                     }
-                    let p = push.as_ref().unwrap();
+                    let (frac, peer) = {
+                        let p = &pushes[&step];
+                        (p.frac, p.peer)
+                    };
 
                     // Local Update + Communication + Peer Update.
                     let my = &self.shared.params[self.wid];
-                    match p.frac {
+                    match frac {
                         // §Perf fused hot path: local update and peer push in
                         // ONE traversal of the layer's data (the step + load
                         // + mix sequence walked it three times).
                         Some(frac) if self.comm_latency_s <= 0.0 => {
-                            let peer_params = &self.shared.params[p.peer];
+                            let peer_params = &self.shared.params[peer];
                             self.opt
                                 .step_layer_mix(my, peer_params, layer, &grads, step, 1.0 - frac, frac);
                         }
@@ -178,7 +191,7 @@ impl UpdaterThread {
                         Some(frac) => {
                             self.opt.step_layer(my, layer, &grads, step);
                             comm_delay(self.comm_latency_s);
-                            let peer_params = &self.shared.params[p.peer];
+                            let peer_params = &self.shared.params[peer];
                             for (ti, t) in my.layers[layer].tensors.iter().enumerate() {
                                 self.scratch.resize(t.numel(), 0.0);
                                 t.load_into(&mut self.scratch);
@@ -192,14 +205,16 @@ impl UpdaterThread {
 
                     // layer 0 is the last gradient of the backward pass
                     if layer == 0 {
-                        if let Some(p) = push.take() {
+                        if let Some(p) = pushes.remove(&step) {
                             self.close_iteration(p);
                         }
                     }
                 }
             }
         }
-        if let Some(p) = push.take() {
+        // don't leak busy slots of iterations that never reached layer 0
+        // (only possible when the run is winding down on an error)
+        for (_, p) in pushes.drain() {
             self.close_iteration(p);
         }
         Ok(())
@@ -218,8 +233,15 @@ impl UpdaterThread {
             // contention: reclaim the weight — the paper's "no information
             // is really lost", the push is simply retried next iteration.
             self.shared.weights[self.wid].reclaim(shipped_w);
+            self.shared
+                .events
+                .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+        } else {
+            self.shared
+                .events
+                .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
         }
-        PushState { step, peer, frac, shipped_w }
+        PushState { peer, frac, shipped_w }
     }
 
     fn close_iteration(&mut self, p: PushState) {

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, GradStash, PerLayerOpt, WorkerAlgo};
+use crate::algorithms::{comm_delay, GradSet, PerLayerOpt, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -17,34 +17,33 @@ use crate::tensor::Tensor;
 pub struct LocalSgd {
     pub(crate) wid: usize,
     pub(crate) shared: Arc<Shared>,
-    stash: GradStash,
     opt: PerLayerOpt,
     pub(crate) sync_period: usize,
     pub(crate) comm_latency_s: f64,
 }
 
 impl LocalSgd {
-    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> LocalSgd {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+    ) -> LocalSgd {
         LocalSgd {
             wid,
             shared,
-            stash: GradStash::new(manifest.layers.len()),
             opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
             sync_period: cfg.sync_period.max(1),
             comm_latency_s: cfg.comm_latency_s,
         }
     }
 
-    pub(crate) fn local_step(&mut self, step: usize) {
+    /// Apply one step's full gradient set locally (inner loop).
+    pub(crate) fn local_step(&mut self, step: usize, grads: GradSet) {
         let my = &self.shared.params[self.wid];
-        let grads = self.stash.take();
         for (li, g) in grads.iter().enumerate() {
             self.opt.step_layer(my, li, g, step);
         }
-    }
-
-    pub(crate) fn stash_put(&mut self, layer: usize, grads: Vec<Tensor>) {
-        self.stash.put(layer, grads);
     }
 
     /// Barrier-synchronized global parameter average (the "outer" sync).
@@ -85,13 +84,20 @@ impl LocalSgd {
 }
 
 impl WorkerAlgo for LocalSgd {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
-        self.stash_put(layer, grads);
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
-        self.local_step(step);
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
+        let grads = ctx.take_grads();
+        self.local_step(step, grads);
         if (step + 1) % self.sync_period == 0 {
             if let Some(avg) = self.global_average()? {
                 self.shared.params[self.wid].store_flat(&avg);

@@ -1,19 +1,47 @@
 //! Distributed training algorithms (the paper's Section 4 "Baseline" set).
 //!
 //! Every algorithm implements [`WorkerAlgo`], driven by the per-worker
-//! training loop in [`crate::coordinator`]:
+//! training engine in [`crate::coordinator`]:
 //!
 //! ```text
 //! for step {
 //!     forward();
-//!     backward(|layer, grads| algo.on_layer_grads(step, layer, grads));  // reverse layer order
-//!     algo.on_step_end(step);
+//!     let mut ctx = StepState::new(step, n_layers);       // engine-owned
+//!     backward(|layer, grads| algo.on_layer_grads(&mut ctx, layer, grads));
+//!     algo.on_step_end(ctx);                              // ctx consumed
 //! }
 //! ```
 //!
 //! `on_layer_grads` fires the moment a layer's gradient exists — LayUp hands
 //! it straight to its updater thread (overlapping the rest of the backward
-//! pass); synchronous baselines merely stash it until `on_step_end`.
+//! pass); synchronous baselines merely stash it in the [`StepState`] until
+//! `on_step_end`.
+//!
+//! # Threading contract
+//!
+//! In the serial loop the hooks run on the worker's single compute thread
+//! and steps arrive strictly in order. In **decoupled** mode
+//! (`TrainConfig::decoupled`) they run on the worker's *backward-pool*
+//! threads instead, serialized by a per-worker mutex held across each
+//! individual call:
+//!
+//! * One step's backward pass runs entirely on one backward thread, so its
+//!   `on_layer_grads` calls still arrive in reverse layer order — but when
+//!   `bwd_threads > 1` calls belonging to *different* steps interleave, and
+//!   `on_step_end` is invoked by whichever thread finished that pass, not
+//!   necessarily in step order.
+//! * All per-iteration gradient state lives in the engine-owned
+//!   [`StepState`]: the engine opens one per forward pass and threads it
+//!   through that pass's hook calls, so interleaved steps can never
+//!   cross-contaminate (each pass has its own stash). Algorithm structs may
+//!   only hold *cross-step* state (optimizer moments, RNG, topology), which
+//!   the per-worker mutex serializes.
+//! * Because steps can complete out of order, anything step-dependent inside
+//!   a hook (e.g. the LR schedule) must use the context's step, never an
+//!   assumed-monotonic counter.
+//! * Barrier-synchronized algorithms (DDP / LocalSGD / SlowMo) require
+//!   lock-step in-order steps and are rejected for decoupled runs by
+//!   `TrainConfig::validate`.
 
 pub mod adpsgd;
 pub mod co2;
@@ -25,43 +53,64 @@ pub mod slowmo;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{Algorithm, TrainConfig};
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
 use crate::model::ModelParams;
 use crate::optim::{LayerOptimizer, OptimKind, Schedule};
+use crate::sim::SimAlgo;
 use crate::tensor::Tensor;
 
-/// Per-worker hook object.
+/// Per-pass step context, owned by the training engine.
 ///
-/// # Threading contract
-///
-/// In the serial loop the hooks run on the worker's single compute thread.
-/// In **decoupled** mode (`TrainConfig::decoupled`) they run on the worker's
-/// *backward-pool* threads instead, serialized by a per-worker mutex held
-/// across each individual call:
-///
-/// * `on_layer_grads` calls for one `step` still arrive in reverse layer
-///   order, but when `bwd_threads > 1` calls belonging to *different* steps
-///   may interleave, and steps may complete out of order. Algorithms must
-///   key any per-iteration state by `step` to opt into that
-///   (`Algorithm::supports_interleaved_steps` — LayUp's updater qualifies;
-///   the `GradStash`-based algorithms are limited to `bwd_threads = 1` by
-///   `TrainConfig::validate`).
-/// * `on_step_end(step)` is invoked by whichever backward thread finished
-///   that pass — not necessarily in step order.
-/// * Barrier-synchronized algorithms (DDP / LocalSGD / SlowMo) require
-///   lock-step in-order steps and are rejected for decoupled runs by
-///   `TrainConfig::validate`.
+/// The engine opens one `StepState` per forward pass and hands it (by
+/// mutable reference during backward, by value at step end) to the
+/// [`WorkerAlgo`] hooks of that pass. Keeping the per-iteration gradient
+/// stash *here* — instead of inside the algorithm struct — is what makes
+/// stash-based algorithms (GoSGD, AD-PSGD, CO2) safe when several backward
+/// threads interleave steps: two in-flight steps each carry their own state,
+/// so out-of-order `on_step_end` delivery cannot mix their gradients.
+pub struct StepState {
+    step: usize,
+    stash: GradStash,
+}
+
+impl StepState {
+    /// Open the context for `step` on a model with `n_layers` layers.
+    pub fn new(step: usize, n_layers: usize) -> StepState {
+        StepState { step, stash: GradStash::new(n_layers) }
+    }
+
+    /// The training step this context belongs to.
+    pub fn step(&self) -> usize {
+        self.step
+    }
+
+    /// Stash one layer's gradients until `on_step_end`.
+    pub fn stash(&mut self, layer: usize, grads: Vec<Tensor>) {
+        self.stash.put(layer, grads);
+    }
+
+    /// Take the complete gradient set (panics if a layer is missing — the
+    /// engine guarantees a full backward pass before `on_step_end`).
+    pub fn take_grads(&mut self) -> GradSet {
+        self.stash.take()
+    }
+}
+
+/// Per-worker hook object. See the module docs for the threading contract.
 pub trait WorkerAlgo: Send {
     /// Called during backward, in reverse layer order, as each layer's
-    /// gradient becomes available.
-    fn on_layer_grads(&mut self, step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()>;
+    /// gradient becomes available. `ctx` is the engine-owned context of the
+    /// pass this gradient belongs to.
+    fn on_layer_grads(&mut self, ctx: &mut StepState, layer: usize, grads: Vec<Tensor>)
+        -> Result<()>;
 
-    /// Called after the backward pass of `step` completed.
-    fn on_step_end(&mut self, step: usize) -> Result<()>;
+    /// Called after the backward pass of `ctx.step()` completed; consumes
+    /// the step's context (and with it any stashed gradients).
+    fn on_step_end(&mut self, ctx: StepState) -> Result<()>;
 
     /// Called once after the last step (join helper threads, flush state).
     fn finish(&mut self) -> Result<()> {
@@ -69,25 +118,118 @@ pub trait WorkerAlgo: Send {
     }
 }
 
-/// Instantiate the algorithm for worker `wid`.
+/// Constructor signature of a thread-cluster algorithm.
+pub type BuildFn = fn(&TrainConfig, usize, Arc<Shared>, &ModelManifest) -> Box<dyn WorkerAlgo>;
+
+/// One entry of the algorithm registry: the single source of truth tying an
+/// [`Algorithm`] to its display name, CLI spellings, thread-cluster
+/// constructor and discrete-event-simulator counterpart. `main`, the bench
+/// harness and the config parser all resolve algorithms through this table
+/// instead of keeping divergent match arms.
+pub struct AlgoSpec {
+    pub algo: Algorithm,
+    /// canonical display name (as the paper's tables print it)
+    pub name: &'static str,
+    /// accepted CLI / config spellings (lowercase)
+    pub aliases: &'static [&'static str],
+    /// thread-cluster constructor
+    pub build: BuildFn,
+    /// DES counterpart given the outer sync period (`None`: no DES model)
+    pub sim: Option<fn(usize) -> SimAlgo>,
+}
+
+static REGISTRY: [AlgoSpec; 8] = [
+    AlgoSpec {
+        algo: Algorithm::Ddp,
+        name: "DDP",
+        aliases: &["ddp"],
+        build: |c, w, s, m| Box::new(ddp::Ddp::new(c, w, s, m)),
+        sim: Some(|_| SimAlgo::Ddp),
+    },
+    AlgoSpec {
+        algo: Algorithm::LayUp,
+        name: "LayUp",
+        aliases: &["layup"],
+        build: |c, w, s, m| Box::new(layup::LayUp::new(c, w, s, m, false)),
+        sim: Some(|_| SimAlgo::LayUp),
+    },
+    AlgoSpec {
+        algo: Algorithm::GoSgd,
+        name: "GoSGD",
+        aliases: &["gosgd"],
+        build: |c, w, s, m| Box::new(gosgd::GoSgd::new(c, w, s, m)),
+        sim: Some(|_| SimAlgo::GoSgd),
+    },
+    AlgoSpec {
+        algo: Algorithm::AdPsgd,
+        name: "AD-PSGD",
+        aliases: &["adpsgd", "ad-psgd"],
+        build: |c, w, s, m| Box::new(adpsgd::AdPsgd::new(c, w, s, m)),
+        sim: Some(|_| SimAlgo::AdPsgd),
+    },
+    AlgoSpec {
+        algo: Algorithm::SlowMo,
+        name: "SlowMo",
+        aliases: &["slowmo"],
+        build: |c, w, s, m| Box::new(slowmo::SlowMo::new(c, w, s, m)),
+        sim: Some(|period| SimAlgo::SlowMo { period }),
+    },
+    AlgoSpec {
+        algo: Algorithm::Co2,
+        name: "CO2",
+        aliases: &["co2"],
+        build: |c, w, s, m| Box::new(co2::Co2::new(c, w, s, m)),
+        sim: Some(|period| SimAlgo::Co2 { period }),
+    },
+    AlgoSpec {
+        algo: Algorithm::LocalSgd,
+        name: "LocalSGD",
+        aliases: &["localsgd", "local-sgd"],
+        build: |c, w, s, m| Box::new(localsgd::LocalSgd::new(c, w, s, m)),
+        sim: Some(|period| SimAlgo::LocalSgd { period }),
+    },
+    AlgoSpec {
+        algo: Algorithm::LayUpModelGranularity,
+        name: "LayUp(model)",
+        aliases: &["layup-model", "layup_model"],
+        build: |c, w, s, m| Box::new(layup::LayUp::new(c, w, s, m, true)),
+        sim: None,
+    },
+];
+
+/// The full algorithm registry (paper set + ablations).
+pub fn registry() -> &'static [AlgoSpec] {
+    &REGISTRY
+}
+
+/// The registry entry for `algo` (every variant is registered).
+pub fn spec(algo: Algorithm) -> &'static AlgoSpec {
+    registry()
+        .iter()
+        .find(|s| s.algo == algo)
+        .expect("every Algorithm variant is registered")
+}
+
+/// Resolve a CLI / config spelling to its algorithm.
+pub fn parse_name(name: &str) -> Result<Algorithm> {
+    let lower = name.to_ascii_lowercase();
+    for s in registry() {
+        if s.aliases.contains(&lower.as_str()) {
+            return Ok(s.algo);
+        }
+    }
+    let known: Vec<&str> = registry().iter().map(|s| s.aliases[0]).collect();
+    bail!("unknown algorithm {name:?} (expected one of: {})", known.join(" "))
+}
+
+/// Instantiate the configured algorithm for worker `wid`.
 pub fn build(
     cfg: &TrainConfig,
     wid: usize,
     shared: Arc<Shared>,
     manifest: &ModelManifest,
 ) -> Result<Box<dyn WorkerAlgo>> {
-    Ok(match cfg.algorithm {
-        Algorithm::Ddp => Box::new(ddp::Ddp::new(cfg, wid, shared, manifest)),
-        Algorithm::LayUp => Box::new(layup::LayUp::new(cfg, wid, shared, manifest, false)),
-        Algorithm::LayUpModelGranularity => {
-            Box::new(layup::LayUp::new(cfg, wid, shared, manifest, true))
-        }
-        Algorithm::GoSgd => Box::new(gosgd::GoSgd::new(cfg, wid, shared, manifest)),
-        Algorithm::AdPsgd => Box::new(adpsgd::AdPsgd::new(cfg, wid, shared, manifest)),
-        Algorithm::LocalSgd => Box::new(localsgd::LocalSgd::new(cfg, wid, shared, manifest)),
-        Algorithm::SlowMo => Box::new(slowmo::SlowMo::new(cfg, wid, shared, manifest)),
-        Algorithm::Co2 => Box::new(co2::Co2::new(cfg, wid, shared, manifest)),
-    })
+    Ok((spec(cfg.algorithm).build)(cfg, wid, shared, manifest))
 }
 
 /// One optimizer per layer — the granularity LayUp steps at.
@@ -146,7 +288,8 @@ impl PerLayerOpt {
 pub type GradSet = Vec<Vec<Tensor>>;
 
 /// Stash used by step-granularity algorithms: collects layer grads during
-/// backward, hands the complete set to `on_step_end`.
+/// backward, hands the complete set to `on_step_end`. Lives inside the
+/// engine-owned [`StepState`], one per in-flight pass.
 #[derive(Default)]
 pub struct GradStash {
     slots: Vec<Option<Vec<Tensor>>>,
@@ -231,5 +374,102 @@ mod tests {
         let b: GradSet = vec![vec![Tensor::from_vec(&[2], vec![4.0, 0.0])]];
         let avg = average_grad_sets(&[&a, &b]);
         assert_eq!(avg[0][0].data, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn registry_covers_every_algorithm_and_alias_roundtrips() {
+        for algo in [
+            Algorithm::Ddp,
+            Algorithm::LayUp,
+            Algorithm::GoSgd,
+            Algorithm::AdPsgd,
+            Algorithm::SlowMo,
+            Algorithm::Co2,
+            Algorithm::LocalSgd,
+            Algorithm::LayUpModelGranularity,
+        ] {
+            let s = spec(algo);
+            assert_eq!(s.algo, algo);
+            for alias in s.aliases {
+                assert_eq!(parse_name(alias).unwrap(), algo, "alias {alias}");
+            }
+        }
+        assert!(parse_name("sgd??").is_err());
+        // every paper algorithm has a DES counterpart
+        for algo in Algorithm::all_paper() {
+            assert!(spec(*algo).sim.is_some(), "{algo:?} needs a DES model");
+        }
+    }
+
+    /// The tentpole invariant: two interleaved in-flight steps each keep
+    /// their own engine-owned state, so layer gradients delivered while the
+    /// other step is mid-backward — and step ends arriving out of order —
+    /// can never cross-contaminate.
+    #[test]
+    fn step_states_isolate_interleaved_steps() {
+        let mut a = StepState::new(7, 2);
+        let mut b = StepState::new(8, 2);
+        assert_eq!(a.step(), 7);
+        assert_eq!(b.step(), 8);
+        // interleaved reverse-layer-order delivery, as two backward threads
+        // would produce it: b's layer 1, a's layer 1, a's layer 0, b's layer 0
+        b.stash(1, vec![Tensor::from_vec(&[1], vec![81.0])]);
+        a.stash(1, vec![Tensor::from_vec(&[1], vec![71.0])]);
+        a.stash(0, vec![Tensor::from_vec(&[1], vec![70.0])]);
+        b.stash(0, vec![Tensor::from_vec(&[1], vec![80.0])]);
+        // out-of-order completion: step 8 ends before step 7
+        let gb = b.take_grads();
+        let ga = a.take_grads();
+        assert_eq!(gb[0][0].data, vec![80.0]);
+        assert_eq!(gb[1][0].data, vec![81.0]);
+        assert_eq!(ga[0][0].data, vec![70.0]);
+        assert_eq!(ga[1][0].data, vec![71.0]);
+    }
+
+    /// Same invariant through the trait: a stash-consuming algorithm sees
+    /// exactly its own step's gradient set at `on_step_end`, whatever the
+    /// delivery interleaving.
+    #[test]
+    fn out_of_order_step_end_delivers_uncontaminated_grad_sets() {
+        struct Recorder {
+            seen: Vec<(usize, Vec<f32>)>,
+        }
+        impl WorkerAlgo for Recorder {
+            fn on_layer_grads(
+                &mut self,
+                ctx: &mut StepState,
+                layer: usize,
+                grads: Vec<Tensor>,
+            ) -> Result<()> {
+                ctx.stash(layer, grads);
+                Ok(())
+            }
+
+            fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+                let step = ctx.step();
+                let flat: Vec<f32> = ctx
+                    .take_grads()
+                    .into_iter()
+                    .flatten()
+                    .flat_map(|t| t.data)
+                    .collect();
+                self.seen.push((step, flat));
+                Ok(())
+            }
+        }
+
+        let mut algo = Recorder { seen: Vec::new() };
+        let mut s3 = StepState::new(3, 2);
+        let mut s4 = StepState::new(4, 2);
+        // two "backward threads" interleaving their reverse-order layers
+        algo.on_layer_grads(&mut s3, 1, vec![Tensor::from_vec(&[1], vec![31.0])]).unwrap();
+        algo.on_layer_grads(&mut s4, 1, vec![Tensor::from_vec(&[1], vec![41.0])]).unwrap();
+        algo.on_layer_grads(&mut s4, 0, vec![Tensor::from_vec(&[1], vec![40.0])]).unwrap();
+        algo.on_layer_grads(&mut s3, 0, vec![Tensor::from_vec(&[1], vec![30.0])]).unwrap();
+        // step 4 completes before step 3
+        algo.on_step_end(s4).unwrap();
+        algo.on_step_end(s3).unwrap();
+        assert_eq!(algo.seen[0], (4, vec![40.0, 41.0]));
+        assert_eq!(algo.seen[1], (3, vec![30.0, 31.0]));
     }
 }

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{localsgd::LocalSgd, WorkerAlgo};
+use crate::algorithms::{localsgd::LocalSgd, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -34,7 +34,12 @@ pub struct SlowMo {
 }
 
 impl SlowMo {
-    pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> SlowMo {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+    ) -> SlowMo {
         let x_prev = shared.params[wid].flatten();
         SlowMo {
             inner: LocalSgd::new(cfg, wid, shared, manifest),
@@ -64,13 +69,20 @@ impl SlowMo {
 }
 
 impl WorkerAlgo for SlowMo {
-    fn on_layer_grads(&mut self, _step: usize, layer: usize, grads: Vec<Tensor>) -> Result<()> {
-        self.inner.stash_put(layer, grads);
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
         Ok(())
     }
 
-    fn on_step_end(&mut self, step: usize) -> Result<()> {
-        self.inner.local_step(step);
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
+        let grads = ctx.take_grads();
+        self.inner.local_step(step, grads);
         if (step + 1) % self.inner.sync_period == 0 {
             if let Some(avg) = self.inner.global_average()? {
                 let x_new = Self::outer_step(

@@ -166,47 +166,27 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Resolve a CLI / config spelling via the algorithm registry
+    /// ([`crate::algorithms::registry`] — the single source of truth).
     pub fn parse(s: &str) -> Result<Algorithm> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "ddp" => Algorithm::Ddp,
-            "layup" => Algorithm::LayUp,
-            "gosgd" => Algorithm::GoSgd,
-            "adpsgd" | "ad-psgd" => Algorithm::AdPsgd,
-            "slowmo" => Algorithm::SlowMo,
-            "co2" => Algorithm::Co2,
-            "localsgd" | "local-sgd" => Algorithm::LocalSgd,
-            "layup-model" | "layup_model" => Algorithm::LayUpModelGranularity,
-            other => bail!("unknown algorithm {other:?}"),
-        })
+        crate::algorithms::parse_name(s)
     }
 
+    /// Canonical display name (as the paper's tables print it), from the
+    /// algorithm registry.
     pub fn name(&self) -> &'static str {
-        match self {
-            Algorithm::Ddp => "DDP",
-            Algorithm::LayUp => "LayUp",
-            Algorithm::GoSgd => "GoSGD",
-            Algorithm::AdPsgd => "AD-PSGD",
-            Algorithm::SlowMo => "SlowMo",
-            Algorithm::Co2 => "CO2",
-            Algorithm::LocalSgd => "LocalSGD",
-            Algorithm::LayUpModelGranularity => "LayUp(model)",
-        }
+        crate::algorithms::spec(*self).name
     }
 
     /// Algorithms that synchronize workers step-for-step at a barrier.
     /// They require lock-step in-order steps and cannot run on the decoupled
     /// forward/backward pools (passes complete out of order there).
+    ///
+    /// Every non-barrier algorithm runs decoupled at ANY `bwd_threads`: the
+    /// engine-owned per-pass `StepState` keys gradient state by step, so
+    /// interleaved steps cannot cross-contaminate.
     pub fn uses_barrier(&self) -> bool {
         matches!(self, Algorithm::Ddp | Algorithm::LocalSgd | Algorithm::SlowMo)
-    }
-
-    /// Algorithms whose `WorkerAlgo` hooks key per-iteration state by `step`
-    /// and therefore tolerate layer-gradient streams of *different* steps
-    /// interleaving — the situation `bwd_threads > 1` creates. The stash-based
-    /// algorithms accumulate one step's layers in a single `GradStash` and do
-    /// not; `TrainConfig::validate` enforces this.
-    pub fn supports_interleaved_steps(&self) -> bool {
-        matches!(self, Algorithm::LayUp)
     }
 
     pub fn all_paper() -> &'static [Algorithm] {
@@ -284,8 +264,8 @@ impl TrainConfig {
     }
 
     /// Check cross-field invariants before a run. Called by
-    /// `coordinator::run`; surfaced here so configs can be rejected at parse
-    /// time too.
+    /// `session::SessionBuilder::build`; surfaced here so configs can be
+    /// rejected at parse time too.
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
             bail!("workers must be >= 1");
@@ -311,14 +291,6 @@ impl TrainConfig {
                 "{} synchronizes workers step-for-step at a barrier and cannot run \
                  decoupled (backward passes complete out of order); set decoupled = false",
                 self.algorithm.name()
-            );
-        }
-        if self.decoupled && self.bwd_threads > 1 && !self.algorithm.supports_interleaved_steps() {
-            bail!(
-                "{} stashes one step's layer gradients at a time and cannot take \
-                 interleaved steps from {} backward threads; use bwd_threads = 1",
-                self.algorithm.name(),
-                self.bwd_threads
             );
         }
         Ok(())
@@ -473,19 +445,19 @@ mod tests {
             assert!(cfg.validate().is_err(), "{algo:?} must be rejected");
             assert!(algo.uses_barrier());
         }
+        // every non-barrier algorithm runs decoupled at ANY bwd_threads:
+        // the engine-owned per-pass StepState makes interleaved steps safe
         for algo in [Algorithm::LayUp, Algorithm::GoSgd, Algorithm::AdPsgd, Algorithm::Co2] {
-            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
-            cfg.decoupled = true;
-            cfg.validate().unwrap_or_else(|e| panic!("{algo:?} should be allowed: {e}"));
-            assert!(!algo.uses_barrier());
+            for bwd_threads in [1, 2, 4] {
+                let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+                cfg.decoupled = true;
+                cfg.bwd_threads = bwd_threads;
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("{algo:?} with bwd_threads={bwd_threads} should be allowed: {e}")
+                });
+                assert!(!algo.uses_barrier());
+            }
         }
-        // multiple backward threads need step-keyed hooks (LayUp only)
-        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::GoSgd, 2, 10);
-        cfg.decoupled = true;
-        cfg.bwd_threads = 2;
-        assert!(cfg.validate().is_err());
-        cfg.algorithm = Algorithm::LayUp;
-        cfg.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,43 @@
+//! The run engine: spawns one driver per simulated device (serial loop or
+//! decoupled forward/backward pools — see [`super::worker`]), propagates the
+//! cooperative stop flag on error, and joins everything back into per-worker
+//! [`WorkerStats`]. Summary assembly lives in [`crate::session`].
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::{worker, Shared, WorkerStats};
+use crate::manifest::Manifest;
+
+/// Drive the configured run to completion on the thread cluster.
+pub(crate) fn execute(
+    cfg: &TrainConfig,
+    manifest: &Manifest,
+    shared: &Arc<Shared>,
+) -> Result<Vec<WorkerStats>> {
+    std::thread::scope(|scope| -> Result<Vec<WorkerStats>> {
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers {
+            let shared = Arc::clone(shared);
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || {
+                let r = if cfg.decoupled {
+                    worker::worker_decoupled(&cfg, wid, &shared, manifest)
+                } else {
+                    worker::worker_main(&cfg, wid, &shared, manifest)
+                };
+                if r.is_err() {
+                    shared.stop.store(true, Ordering::Relaxed);
+                }
+                r
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    })
+}

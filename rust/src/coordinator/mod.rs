@@ -1,42 +1,49 @@
-//! Cluster coordinator: spawns the compute threads of every simulated device
-//! (plus whatever helper threads the algorithm needs, e.g. LayUp's updaters),
-//! wires them to the shared lock-free parameter stores, injects stragglers,
-//! and collects metrics.
+//! Cluster coordinator: the shared state and thread plumbing of every
+//! simulated device (plus whatever helper threads the algorithm needs, e.g.
+//! LayUp's updaters), wired to the shared lock-free parameter stores.
 //!
-//! This is the L3 runtime of the paper. Two execution modes per worker:
+//! This is the L3 runtime of the paper, split in three layers:
 //!
-//! * **serial** (`decoupled = false`, default): one thread runs
+//! * [`crate::session`] — the public facade: build a session from a
+//!   `TrainConfig` + `Manifest`, attach typed-event observers, run, get a
+//!   `RunSummary`;
+//! * [`engine`] — spawns the per-device drivers and aggregates their stats;
+//! * [`worker`] — the per-device drivers themselves. Two execution modes:
+//!   **serial** (`decoupled = false`, default): one thread runs
 //!   forward -> backward -> hooks per step — the "computation thread" of
 //!   Figure 1, unchanged, so all historical benches stay comparable;
-//! * **decoupled** (`decoupled = true`): a *forward pool* of
-//!   `fwd_threads` threads produces host-side passes ([`crate::model::HostPass`])
-//!   into a bounded, backpressured [`queue::BoundedQueue`]; a *backward pool*
-//!   of `bwd_threads` threads consumes them, runs backward and feeds the
+//!   **decoupled** (`decoupled = true`): a *forward pool* of `fwd_threads`
+//!   threads produces host-side passes ([`crate::model::HostPass`]) into a
+//!   bounded, backpressured [`queue::BoundedQueue`]; a *backward pool* of
+//!   `bwd_threads` threads consumes them, runs backward and feeds the
 //!   algorithm hooks. This is the PD-ASGD regime (forward:backward thread
 //!   ratios above 1:1) whose extra gradient staleness Lemma 6.1's bias bound
 //!   covers; the queue depth bounds both activation memory and staleness.
 //!
 //! Algorithms hook both modes via [`crate::algorithms::WorkerAlgo`] — see
-//! that trait's threading contract for decoupled-mode caveats.
+//! that module's threading contract for decoupled-mode semantics.
+//!
+//! This module keeps the shared state ([`Shared`], [`StopBarrier`],
+//! [`WorkerStats`]) plus thin deprecated shims for the seed-era
+//! `coordinator::run`/`run_all` free functions.
 
+pub(crate) mod engine;
 pub mod queue;
+pub(crate) mod worker;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::algorithms::{self, GradSet, WorkerAlgo};
-use crate::config::{Algorithm, TrainConfig};
-use crate::data;
+use crate::algorithms::GradSet;
+use crate::config::TrainConfig;
 use crate::manifest::Manifest;
-use crate::metrics::{Curve, CurvePoint, DriftTracker, QueueStats, RunSummary};
-use crate::model::{HostPass, ModelExec, ModelParams};
-use crate::runtime::Runtime;
+use crate::metrics::{Curve, DriftTracker, QueueStats, RunSummary};
+use crate::model::ModelParams;
+use crate::session::events::EventBus;
 use crate::topology::PushSumWeight;
-use queue::{BoundedQueue, PassPool};
 
 /// A barrier that can be abandoned when the run is stopping (a plain
 /// `std::sync::Barrier` would deadlock the surviving workers if one worker
@@ -103,11 +110,24 @@ pub struct Shared {
     pub drift: Mutex<DriftTracker>,
     /// per-worker completed step counters (straggler visibility)
     pub steps_done: Vec<AtomicU64>,
+    /// typed-event fan-out (observers attached by the session builder)
+    pub events: EventBus,
     pub start: Instant,
 }
 
 impl Shared {
+    /// Shared state with no observers attached (tests and benches that poke
+    /// the internals directly).
     pub fn new(cfg: &TrainConfig, manifest: &Manifest) -> Result<Arc<Shared>> {
+        Shared::with_events(cfg, manifest, EventBus::new())
+    }
+
+    /// Shared state carrying the session's event bus.
+    pub fn with_events(
+        cfg: &TrainConfig,
+        manifest: &Manifest,
+        events: EventBus,
+    ) -> Result<Arc<Shared>> {
         let model = manifest.model(&cfg.model)?;
         let m = cfg.workers;
         // All replicas start identical (same init seed): the paper's methods
@@ -128,6 +148,7 @@ impl Shared {
             curve: Mutex::new(Curve::default()),
             drift: Mutex::new(DriftTracker::default()),
             steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
+            events,
             start: Instant::now(),
         }))
     }
@@ -167,7 +188,7 @@ pub struct WorkerStats {
 
 impl WorkerStats {
     /// Fold a pool thread's stats into the worker total.
-    fn absorb(&mut self, other: &WorkerStats) {
+    pub(crate) fn absorb(&mut self, other: &WorkerStats) {
         self.compute_s += other.compute_s;
         self.fwd_compute_s += other.fwd_compute_s;
         self.bwd_compute_s += other.bwd_compute_s;
@@ -179,563 +200,22 @@ impl WorkerStats {
     }
 }
 
-/// Run one full training job on the thread cluster. Returns the learning
-/// curve, MFU/occupancy, drift samples and gossip counters.
+/// Run one full training job on the thread cluster.
+#[deprecated(
+    since = "0.2.0",
+    note = "use layup::session::SessionBuilder (this is a thin compat shim)"
+)]
 pub fn run(cfg: &TrainConfig, manifest: &Manifest) -> Result<RunSummary> {
-    cfg.validate()?;
-    let shared = Shared::new(cfg, manifest)?;
-    let t0 = Instant::now();
-
-    let stats: Vec<WorkerStats> = std::thread::scope(|scope| -> Result<Vec<WorkerStats>> {
-        let mut handles = Vec::new();
-        for wid in 0..cfg.workers {
-            let shared = Arc::clone(&shared);
-            let cfg = cfg.clone();
-            handles.push(scope.spawn(move || {
-                let r = if cfg.decoupled {
-                    worker_decoupled(&cfg, wid, &shared, manifest)
-                } else {
-                    worker_main(&cfg, wid, &shared, manifest)
-                };
-                if r.is_err() {
-                    shared.stop.store(true, Ordering::Relaxed);
-                }
-                r
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker thread panicked"))
-            .collect()
-    })?;
-
-    let wall = t0.elapsed().as_secs_f64();
-    let total_compute: f64 = stats.iter().map(|s| s.compute_s).sum();
-    let total_flops: u64 = stats.iter().map(|s| s.flops).sum();
-    let total_steps: usize = stats.iter().map(|s| s.steps).sum();
-    // Occupancy denominators count the threads that could have computed:
-    // one per worker serially, fwd_threads + bwd_threads per worker decoupled.
-    let (fwd_pool, bwd_pool) = if cfg.decoupled {
-        (cfg.fwd_threads, cfg.bwd_threads)
-    } else {
-        (1, 1)
-    };
-    let threads = if cfg.decoupled { fwd_pool + bwd_pool } else { 1 };
-    let occupancy = (total_compute / (wall * (cfg.workers * threads) as f64)).min(1.0);
-    let (applied, skipped) = shared.gossip_counts();
-
-    let model = manifest.model(&cfg.model)?;
-    let mut data0 = data::build(model, 0, cfg.workers, cfg.seed);
-    let batches_per_epoch = data0.batches_per_epoch();
-    let _ = data0.next_batch();
-
-    let mut curve = shared.curve.lock().unwrap().clone();
-    curve.sort_by_step(); // decoupled passes complete out of step order
-    let mut drift = shared.drift.lock().unwrap().clone();
-    drift.sort_by_step();
-    let mut queue_stats = QueueStats::default();
-    for s in &stats {
-        queue_stats.merge(&s.queue);
-    }
-    let mut extras = std::collections::BTreeMap::new();
-    extras.insert("achieved_flops_per_s".into(), total_flops as f64 / wall);
-    extras.insert("max_disagreement".into(), drift.max_disagreement());
-    extras.insert("final_disagreement".into(), drift.final_disagreement());
-    extras.insert(
-        "upload_hit_rate".into(),
-        stats.iter().map(|s| s.upload_hits).sum::<u64>() as f64
-            / (stats.iter().map(|s| s.upload_hits + s.upload_misses).sum::<u64>() as f64).max(1.0),
-    );
-    // Per-pool occupancy split (§Perf): is the pipeline fwd- or bwd-bound?
-    extras.insert(
-        "fwd_occupancy".into(),
-        (stats.iter().map(|s| s.fwd_compute_s).sum::<f64>()
-            / (wall * (cfg.workers * fwd_pool) as f64))
-            .min(1.0),
-    );
-    extras.insert(
-        "bwd_occupancy".into(),
-        (stats.iter().map(|s| s.bwd_compute_s).sum::<f64>()
-            / (wall * (cfg.workers * bwd_pool) as f64))
-            .min(1.0),
-    );
-    extras.insert("queue_depth_mean".into(), queue_stats.mean_depth());
-    extras.insert("queue_depth_max".into(), queue_stats.max_depth as f64);
-    extras.insert("queue_blocked_frac".into(), queue_stats.blocked_frac());
-
-    Ok(RunSummary {
-        algorithm: cfg.algorithm.name().to_string(),
-        curve,
-        mfu: occupancy, // benches calibrate against single-worker peak
-        compute_occupancy: occupancy,
-        total_time_s: wall,
-        total_steps,
-        epochs: stats.first().map(|s| s.steps).unwrap_or(0) / batches_per_epoch.max(1),
-        gossip_skipped: skipped,
-        gossip_applied: applied,
-        extras,
-    })
+    crate::session::SessionBuilder::new(cfg.clone())
+        .build(manifest)?
+        .run()
 }
 
-/// The paper's "computation thread" for one device.
-fn worker_main(
-    cfg: &TrainConfig,
-    wid: usize,
-    shared: &Arc<Shared>,
-    manifest: &Manifest,
-) -> Result<WorkerStats> {
-    let mut rt = Runtime::new().context("worker runtime")?;
-    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
-        .with_context(|| format!("worker {wid}: loading model"))?;
-    let model = manifest.model(&cfg.model)?;
-    let mut dataset = data::build(model, wid, cfg.workers, cfg.seed);
-    let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), &exec.manifest)?;
-
-    let my_params = Arc::clone(&shared.params[wid]);
-    let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
-    let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
-    let mut baseline_step_s = 0.0f64;
-    let mut drift_scratch = DriftScratch::new(shared.m);
-    let mut completed = 0usize;
-    let mut fwd_s = 0.0f64;
-    let mut bwd_s = 0.0f64;
-
-    for step in 0..cfg.steps {
-        if shared.should_stop() {
-            break;
-        }
-        // Straggler injection (Section 5.4): idle for a multiple of the
-        // measured fwd+bwd time.
-        if is_straggler && delay_iters > 0.0 && baseline_step_s > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                baseline_step_s * delay_iters,
-            ));
-        }
-        let step_t0 = Instant::now();
-
-        let compute_before_fwd = exec.compute_s;
-        let batch = dataset.next_batch();
-        let pass = exec.forward(&my_params, &batch)?;
-        if !pass.loss.is_finite() {
-            anyhow::bail!("worker {wid}: loss diverged (step {step})");
-        }
-        let compute_after_fwd = exec.compute_s;
-        fwd_s += compute_after_fwd - compute_before_fwd;
-        {
-            let mut err: Option<anyhow::Error> = None;
-            let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
-                if err.is_none() {
-                    if let Err(e) = algo.on_layer_grads(step, li, grads) {
-                        err = Some(e);
-                    }
-                }
-            };
-            exec.backward(&my_params, &pass, &mut sink)?;
-            if let Some(e) = err {
-                return Err(e);
-            }
-        }
-        bwd_s += exec.compute_s - compute_after_fwd;
-        algo.on_step_end(step)?;
-        completed += 1;
-        shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
-
-        if step < 3 {
-            // calibrate the straggler delay unit on undelayed steps
-            let dt = step_t0.elapsed().as_secs_f64();
-            baseline_step_s = if step == 0 { dt } else { 0.5 * (baseline_step_s + dt) };
-        }
-
-        // Evaluation + drift tracking (worker 0 evaluates its replica;
-        // compute/flop counters are excluded from training accounting).
-        if wid == 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
-            let flops_before = exec.flops_retired;
-            let compute_before = exec.compute_s;
-            let (loss, acc) = exec.evaluate(&my_params, dataset.as_ref(), 4)?;
-            exec.flops_retired = flops_before;
-            exec.compute_s = compute_before;
-            shared.curve.lock().unwrap().push(CurvePoint {
-                step,
-                time_s: shared.start.elapsed().as_secs_f64(),
-                loss,
-                accuracy: acc,
-            });
-        }
-        if wid == 0
-            && cfg.track_drift_every > 0
-            && step % cfg.track_drift_every == 0
-        {
-            let v = sample_drift(&shared.params, &mut drift_scratch);
-            shared.drift.lock().unwrap().push_sample(step, v);
-        }
-    }
-
-    algo.finish()?;
-    Ok(WorkerStats {
-        compute_s: exec.compute_s,
-        fwd_compute_s: fwd_s,
-        bwd_compute_s: bwd_s,
-        flops: exec.flops_retired,
-        steps: completed,
-        upload_hits: exec.upload_hits,
-        upload_misses: exec.upload_misses,
-        queue: QueueStats::default(),
-    })
-}
-
-/// Decoupled worker (the tentpole): forward pool -> bounded pass queue ->
-/// backward pool, all for ONE simulated device.
-///
-/// * Every pool thread owns its own `Runtime`/`ModelExec` (`xla` wrappers are
-///   `!Send`); passes cross threads as host-side [`HostPass`] buffers that
-///   are recycled through a [`PassPool`] — no per-step allocation.
-/// * Forward threads claim step indices from a shared counter and block on
-///   the queue once `queue_depth` passes await backward (backpressure bounds
-///   activation memory and staleness).
-/// * Backward threads pop passes (possibly out of step order), run backward,
-///   and drive the algorithm hooks under a per-worker mutex — see
-///   [`WorkerAlgo`]'s threading contract.
-/// * The last forward thread out closes the queue, so the backward pool
-///   drains the tail and exits; any pool error raises the run-wide `stop`
-///   flag, which unblocks every queue waiter (no deadlock on wind-down).
-fn worker_decoupled(
-    cfg: &TrainConfig,
-    wid: usize,
-    shared: &Arc<Shared>,
-    manifest: &Manifest,
-) -> Result<WorkerStats> {
-    let model = manifest.model(&cfg.model)?;
-    let pass_queue: BoundedQueue<HostPass> = BoundedQueue::new(cfg.queue_depth);
-    let pool: PassPool<HostPass> = PassPool::new();
-    let next_step = AtomicUsize::new(0);
-    let live_producers = AtomicUsize::new(cfg.fwd_threads);
-    let algo: Mutex<Box<dyn WorkerAlgo>> =
-        Mutex::new(algorithms::build(cfg, wid, Arc::clone(shared), model)?);
-
-    let results: Vec<Result<WorkerStats>> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for ft in 0..cfg.fwd_threads {
-            let (pass_queue, pool, next_step, live_producers) =
-                (&pass_queue, &pool, &next_step, &live_producers);
-            handles.push(scope.spawn(move || {
-                let r = forward_pool_main(cfg, wid, ft, shared, manifest, pass_queue, pool, next_step);
-                if r.is_err() {
-                    shared.stop.store(true, Ordering::Relaxed);
-                }
-                // last producer out closes the queue -> backward pool drains
-                if live_producers.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    pass_queue.close();
-                }
-                r
-            }));
-        }
-        for bt in 0..cfg.bwd_threads {
-            let (pass_queue, pool, algo) = (&pass_queue, &pool, &algo);
-            handles.push(scope.spawn(move || {
-                let r = backward_pool_main(cfg, wid, bt, shared, manifest, pass_queue, pool, algo);
-                if r.is_err() {
-                    shared.stop.store(true, Ordering::Relaxed);
-                }
-                r
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("pool thread panicked"))
-            .collect()
-    });
-
-    let mut ws = WorkerStats::default();
-    for r in results {
-        ws.absorb(&r?);
-    }
-    ws.queue = pass_queue.stats();
-    algo.into_inner().unwrap().finish()?;
-    Ok(ws)
-}
-
-/// One forward-pool thread: claim a step, produce a [`HostPass`], push it
-/// into the bounded queue (blocking at `queue_depth` — the backpressure the
-/// tests pin down).
-#[allow(clippy::too_many_arguments)]
-fn forward_pool_main(
-    cfg: &TrainConfig,
-    wid: usize,
-    ft: usize,
-    shared: &Arc<Shared>,
-    manifest: &Manifest,
-    pass_queue: &BoundedQueue<HostPass>,
-    pool: &PassPool<HostPass>,
-    next_step: &AtomicUsize,
-) -> Result<WorkerStats> {
-    let mut rt = Runtime::new().context("forward-pool runtime")?;
-    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
-        .with_context(|| format!("worker {wid} fwd {ft}: loading model"))?;
-    let model = manifest.model(&cfg.model)?;
-    // Thread 0 keeps the worker's serial batch stream (a 1:1 ratio consumes
-    // exactly the data the serial loop would); extra forward threads get
-    // decorrelated shards of the same worker slice.
-    let seed = cfg.seed ^ ((ft as u64) << 32);
-    let mut dataset = data::build(model, wid, cfg.workers, seed);
-    let my_params = Arc::clone(&shared.params[wid]);
-
-    let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
-    let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
-    let mut baseline_fwd_s = 0.0f64;
-    let mut produced = 0usize;
-
-    loop {
-        if shared.should_stop() {
-            break;
-        }
-        let step = next_step.fetch_add(1, Ordering::Relaxed);
-        if step >= cfg.steps {
-            break;
-        }
-        // Straggler injection (Section 5.4) lives in the FORWARD pool: pass
-        // production gates the whole pipeline, so idling here slows the
-        // device end-to-end. The delay unit is the measured forward latency
-        // (the backward pool's time is not observable from this side).
-        if is_straggler && delay_iters > 0.0 && baseline_fwd_s > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(baseline_fwd_s * delay_iters));
-        }
-        let t0 = Instant::now();
-        let batch = dataset.next_batch();
-        let mut pass = pool.take();
-        pass.step = step;
-        exec.forward_host(&my_params, &batch, &mut pass)?;
-        if !pass.loss.is_finite() {
-            anyhow::bail!("worker {wid}: loss diverged (step {step})");
-        }
-        if produced < 3 {
-            // calibrate the straggler delay unit on undelayed passes
-            let dt = t0.elapsed().as_secs_f64();
-            baseline_fwd_s = if produced == 0 { dt } else { 0.5 * (baseline_fwd_s + dt) };
-        }
-        produced += 1;
-        if pass_queue.push(pass, &shared.stop).is_err() {
-            break; // run is stopping (or queue closed early)
-        }
-    }
-    Ok(WorkerStats {
-        compute_s: exec.compute_s,
-        fwd_compute_s: exec.compute_s,
-        // steps are counted where passes COMPLETE (the backward pool)
-        steps: 0,
-        flops: exec.flops_retired,
-        upload_hits: exec.upload_hits,
-        upload_misses: exec.upload_misses,
-        ..Default::default()
-    })
-}
-
-/// One backward-pool thread: drain the pass queue, run backward, feed the
-/// algorithm hooks (serialized per worker), recycle the pass buffer. The
-/// designated thread (worker 0, backward thread 0) also owns evaluation and
-/// drift sampling, mirroring the serial loop's worker-0 duties.
-#[allow(clippy::too_many_arguments)]
-fn backward_pool_main(
-    cfg: &TrainConfig,
-    wid: usize,
-    bt: usize,
-    shared: &Arc<Shared>,
-    manifest: &Manifest,
-    pass_queue: &BoundedQueue<HostPass>,
-    pool: &PassPool<HostPass>,
-    algo: &Mutex<Box<dyn WorkerAlgo>>,
-) -> Result<WorkerStats> {
-    let mut rt = Runtime::new().context("backward-pool runtime")?;
-    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
-        .with_context(|| format!("worker {wid} bwd {bt}: loading model"))?;
-    let model = manifest.model(&cfg.model)?;
-    let my_params = Arc::clone(&shared.params[wid]);
-    // Worker 0 owns evaluation + drift duty (as in the serial loop). EVERY
-    // backward thread of worker 0 carries an eval stream: an eval-eligible
-    // step is evaluated by whichever thread pops its pass, so no eval point
-    // is dropped when bwd_threads > 1. Eval batches are deterministic, so
-    // the streams are identical across threads.
-    let eval_ds = if wid == 0 {
-        Some(data::build(model, wid, cfg.workers, cfg.seed))
-    } else {
-        None
-    };
-    let mut drift_scratch = DriftScratch::new(shared.m);
-    let mut completed = 0usize;
-
-    while let Some(pass) = pass_queue.pop(&shared.stop) {
-        let step = pass.step;
-        {
-            let mut err: Option<anyhow::Error> = None;
-            let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
-                if err.is_none() {
-                    if let Err(e) = algo.lock().unwrap().on_layer_grads(step, li, grads) {
-                        err = Some(e);
-                    }
-                }
-            };
-            exec.backward_host(&my_params, &pass, &mut sink)?;
-            if let Some(e) = err {
-                return Err(e);
-            }
-        }
-        algo.lock().unwrap().on_step_end(step)?;
-        completed += 1;
-        shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
-        pool.put(pass);
-
-        if let Some(ds) = eval_ds.as_deref() {
-            // compute/flop counters are excluded, exactly as in the serial loop
-            if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
-                let flops_before = exec.flops_retired;
-                let compute_before = exec.compute_s;
-                let (loss, acc) = exec.evaluate(&my_params, ds, 4)?;
-                exec.flops_retired = flops_before;
-                exec.compute_s = compute_before;
-                shared.curve.lock().unwrap().push(CurvePoint {
-                    step,
-                    time_s: shared.start.elapsed().as_secs_f64(),
-                    loss,
-                    accuracy: acc,
-                });
-            }
-            if cfg.track_drift_every > 0 && step % cfg.track_drift_every == 0 {
-                let v = sample_drift(&shared.params, &mut drift_scratch);
-                shared.drift.lock().unwrap().push_sample(step, v);
-            }
-        }
-    }
-    Ok(WorkerStats {
-        compute_s: exec.compute_s,
-        bwd_compute_s: exec.compute_s,
-        steps: completed,
-        flops: exec.flops_retired,
-        upload_hits: exec.upload_hits,
-        upload_misses: exec.upload_misses,
-        ..Default::default()
-    })
-}
-
-/// Reusable buffers for streamed drift sampling (§Perf: `flatten()`
-/// materialized every replica's full parameter vector per sample; these
-/// buffers are sized to the largest single tensor instead).
-struct DriftScratch {
-    /// per-worker snapshot of the tensor currently being swept
-    snaps: Vec<Vec<f32>>,
-    /// per-element mean of that tensor (f64 accumulation)
-    mean: Vec<f64>,
-    /// per-worker running Σ‖x_w − x̄‖² across tensors
-    sq: Vec<f64>,
-}
-
-impl DriftScratch {
-    fn new(m: usize) -> DriftScratch {
-        DriftScratch { snaps: vec![Vec::new(); m], mean: Vec::new(), sq: vec![0.0; m] }
-    }
-}
-
-/// Disagreement sample (Fig A1) computed tensor-by-tensor into reusable
-/// buffers: mean over workers of ‖x_w − x̄‖/√d, with
-/// ‖x_w − x̄‖² = Σ_tensors ‖chunk_w − chunk_mean‖² — numerically identical to
-/// `DriftTracker::record` on full flattened vectors, without the per-sample
-/// full-model allocations.
-fn sample_drift(params: &[Arc<ModelParams>], scratch: &mut DriftScratch) -> f64 {
-    let m = params.len();
-    if m == 0 {
-        return 0.0;
-    }
-    let d = params[0].numel();
-    scratch.sq.iter_mut().for_each(|v| *v = 0.0);
-    for li in 0..params[0].layers.len() {
-        for ti in 0..params[0].layers[li].tensors.len() {
-            let n = params[0].layers[li].tensors[ti].numel();
-            scratch.mean.clear();
-            scratch.mean.resize(n, 0.0);
-            for (w, p) in params.iter().enumerate() {
-                let snap = &mut scratch.snaps[w];
-                snap.resize(n, 0.0);
-                p.layers[li].tensors[ti].load_into(snap);
-                for (mu, &x) in scratch.mean.iter_mut().zip(snap.iter()) {
-                    *mu += x as f64;
-                }
-            }
-            for mu in &mut scratch.mean {
-                *mu /= m as f64;
-            }
-            for (w, sq) in scratch.sq.iter_mut().enumerate() {
-                for (&x, &mu) in scratch.snaps[w].iter().zip(scratch.mean.iter()) {
-                    let dd = x as f64 - mu;
-                    *sq += dd * dd;
-                }
-            }
-        }
-    }
-    scratch.sq.iter().map(|&s| (s / d as f64).sqrt()).sum::<f64>() / m as f64
-}
-
-/// Convenience: run every paper algorithm on the same config, returning
-/// summaries in paper-table order (used by the bench harness).
+/// Run every paper algorithm on the same config, in paper-table order.
+#[deprecated(
+    since = "0.2.0",
+    note = "use layup::session::run_paper_set (this is a thin compat shim)"
+)]
 pub fn run_all(base: &TrainConfig, manifest: &Manifest) -> Result<Vec<RunSummary>> {
-    Algorithm::all_paper()
-        .iter()
-        .map(|&a| {
-            let mut cfg = base.clone();
-            cfg.algorithm = a;
-            run(&cfg, manifest)
-        })
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::tensor::{AtomicTensor, LayerParams, Tensor};
-    use crate::util::rng::Pcg32;
-
-    fn random_store(rng: &mut Pcg32, shape: &[usize]) -> AtomicTensor {
-        let mut t = Tensor::zeros(shape);
-        for v in &mut t.data {
-            *v = rng.normal();
-        }
-        AtomicTensor::from_tensor(&t)
-    }
-
-    /// Pins the invariant the §Perf streamed drift path relies on: the
-    /// tensor-by-tensor sweep must produce the SAME number as
-    /// `DriftTracker::record` on fully flattened parameter vectors.
-    #[test]
-    fn streamed_drift_matches_record_on_flattened_vectors() {
-        let mut rng = Pcg32::new(7);
-        let m = 3;
-        let params: Vec<Arc<ModelParams>> = (0..m)
-            .map(|_| {
-                Arc::new(ModelParams {
-                    layers: vec![
-                        LayerParams {
-                            tensors: vec![
-                                random_store(&mut rng, &[4, 3]),
-                                random_store(&mut rng, &[3]),
-                            ],
-                        },
-                        LayerParams { tensors: vec![random_store(&mut rng, &[5])] },
-                    ],
-                })
-            })
-            .collect();
-
-        let flats: Vec<Vec<f32>> = params.iter().map(|p| p.flatten()).collect();
-        let mut tracker = DriftTracker::default();
-        tracker.record(0, &flats);
-        let reference = tracker.samples[0].1;
-        assert!(reference > 0.0, "random replicas must disagree");
-
-        let mut scratch = DriftScratch::new(m);
-        let streamed = sample_drift(&params, &mut scratch);
-        assert!(
-            (streamed - reference).abs() < 1e-12,
-            "streamed {streamed} != record {reference}"
-        );
-        // scratch buffers are reusable across samples
-        let again = sample_drift(&params, &mut scratch);
-        assert!((again - reference).abs() < 1e-12);
-    }
+    crate::session::run_paper_set(base, manifest)
 }

@@ -1,0 +1,508 @@
+//! Per-device drivers: the serial "computation thread" of Figure 1 and the
+//! decoupled forward/backward pools of the PD-ASGD regime. Both open one
+//! engine-owned [`StepState`] per forward pass and thread it through the
+//! algorithm hooks — the contract that makes interleaved steps
+//! (`bwd_threads > 1`) safe for every stash-based algorithm.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{self, StepState, WorkerAlgo};
+use crate::config::TrainConfig;
+use crate::coordinator::queue::{BoundedQueue, PassPool};
+use crate::coordinator::{Shared, WorkerStats};
+use crate::data;
+use crate::manifest::Manifest;
+use crate::metrics::{CurvePoint, QueueStats};
+use crate::model::{HostPass, ModelExec, ModelParams};
+use crate::runtime::Runtime;
+use crate::session::events::TrainEvent;
+
+/// The paper's "computation thread" for one device.
+pub(crate) fn worker_main(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: &Arc<Shared>,
+    manifest: &Manifest,
+) -> Result<WorkerStats> {
+    let mut rt = Runtime::new().context("worker runtime")?;
+    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
+        .with_context(|| format!("worker {wid}: loading model"))?;
+    let model = manifest.model(&cfg.model)?;
+    let n_layers = model.layers.len();
+    let mut dataset = data::build(model, wid, cfg.workers, cfg.seed);
+    let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), &exec.manifest)?;
+
+    let my_params = Arc::clone(&shared.params[wid]);
+    let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
+    let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
+    let mut baseline_step_s = 0.0f64;
+    let mut drift_scratch = DriftScratch::new(shared.m);
+    let mut completed = 0usize;
+    let mut fwd_s = 0.0f64;
+    let mut bwd_s = 0.0f64;
+
+    for step in 0..cfg.steps {
+        if shared.should_stop() {
+            break;
+        }
+        // Straggler injection (Section 5.4): idle for a multiple of the
+        // measured fwd+bwd time.
+        if is_straggler && delay_iters > 0.0 && baseline_step_s > 0.0 {
+            let delay_s = baseline_step_s * delay_iters;
+            shared
+                .events
+                .emit(TrainEvent::StragglerInjected { worker: wid, step, delay_s });
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay_s));
+        }
+        let step_t0 = Instant::now();
+
+        let compute_before_fwd = exec.compute_s;
+        let batch = dataset.next_batch();
+        let pass = exec.forward(&my_params, &batch)?;
+        if !pass.loss.is_finite() {
+            anyhow::bail!("worker {wid}: loss diverged (step {step})");
+        }
+        let compute_after_fwd = exec.compute_s;
+        fwd_s += compute_after_fwd - compute_before_fwd;
+        let mut ctx = StepState::new(step, n_layers);
+        {
+            let mut err: Option<anyhow::Error> = None;
+            let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
+                if err.is_none() {
+                    if let Err(e) = algo.on_layer_grads(&mut ctx, li, grads) {
+                        err = Some(e);
+                    }
+                }
+            };
+            exec.backward(&my_params, &pass, &mut sink)?;
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+        bwd_s += exec.compute_s - compute_after_fwd;
+        algo.on_step_end(ctx)?;
+        completed += 1;
+        shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        shared
+            .events
+            .emit(TrainEvent::StepCompleted { worker: wid, step, loss: pass.loss as f64 });
+
+        if step < 3 {
+            // calibrate the straggler delay unit on undelayed steps
+            let dt = step_t0.elapsed().as_secs_f64();
+            baseline_step_s = if step == 0 { dt } else { 0.5 * (baseline_step_s + dt) };
+        }
+
+        // Evaluation + drift tracking (worker 0 evaluates its replica;
+        // compute/flop counters are excluded from training accounting).
+        if wid == 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+            let flops_before = exec.flops_retired;
+            let compute_before = exec.compute_s;
+            let (loss, acc) = exec.evaluate(&my_params, dataset.as_ref(), 4)?;
+            exec.flops_retired = flops_before;
+            exec.compute_s = compute_before;
+            let time_s = shared.start.elapsed().as_secs_f64();
+            shared.curve.lock().unwrap().push(CurvePoint {
+                step,
+                time_s,
+                loss,
+                accuracy: acc,
+            });
+            shared
+                .events
+                .emit(TrainEvent::EvalPoint { step, time_s, loss, accuracy: acc });
+        }
+        if wid == 0
+            && cfg.track_drift_every > 0
+            && step % cfg.track_drift_every == 0
+        {
+            let v = sample_drift(&shared.params, &mut drift_scratch);
+            shared.drift.lock().unwrap().push_sample(step, v);
+        }
+    }
+
+    algo.finish()?;
+    Ok(WorkerStats {
+        compute_s: exec.compute_s,
+        fwd_compute_s: fwd_s,
+        bwd_compute_s: bwd_s,
+        flops: exec.flops_retired,
+        steps: completed,
+        upload_hits: exec.upload_hits,
+        upload_misses: exec.upload_misses,
+        queue: QueueStats::default(),
+    })
+}
+
+/// Decoupled worker: forward pool -> bounded pass queue -> backward pool,
+/// all for ONE simulated device.
+///
+/// * Every pool thread owns its own `Runtime`/`ModelExec` (`xla` wrappers are
+///   `!Send`); passes cross threads as host-side [`HostPass`] buffers that
+///   are recycled through a [`PassPool`] — no per-step allocation.
+/// * Forward threads claim step indices from a shared counter and block on
+///   the queue once `queue_depth` passes await backward (backpressure bounds
+///   activation memory and staleness).
+/// * Backward threads pop passes (possibly out of step order), run backward,
+///   and drive the algorithm hooks under a per-worker mutex, each pass
+///   carrying its own engine-owned [`StepState`] — see the
+///   [`crate::algorithms`] threading contract.
+/// * The last forward thread out closes the queue, so the backward pool
+///   drains the tail and exits; any pool error raises the run-wide `stop`
+///   flag, which unblocks every queue waiter (no deadlock on wind-down).
+pub(crate) fn worker_decoupled(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: &Arc<Shared>,
+    manifest: &Manifest,
+) -> Result<WorkerStats> {
+    let model = manifest.model(&cfg.model)?;
+    let pass_queue: BoundedQueue<HostPass> = BoundedQueue::new(cfg.queue_depth);
+    let pool: PassPool<HostPass> = PassPool::new();
+    let next_step = AtomicUsize::new(0);
+    let live_producers = AtomicUsize::new(cfg.fwd_threads);
+    let algo: Mutex<Box<dyn WorkerAlgo>> =
+        Mutex::new(algorithms::build(cfg, wid, Arc::clone(shared), model)?);
+
+    let results: Vec<Result<WorkerStats>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for ft in 0..cfg.fwd_threads {
+            let (pass_queue, pool, next_step, live_producers) =
+                (&pass_queue, &pool, &next_step, &live_producers);
+            handles.push(scope.spawn(move || {
+                let r = forward_pool_main(cfg, wid, ft, shared, manifest, pass_queue, pool, next_step);
+                if r.is_err() {
+                    shared.stop.store(true, Ordering::Relaxed);
+                }
+                // last producer out closes the queue -> backward pool drains
+                if live_producers.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    pass_queue.close();
+                }
+                r
+            }));
+        }
+        for bt in 0..cfg.bwd_threads {
+            let (pass_queue, pool, algo) = (&pass_queue, &pool, &algo);
+            handles.push(scope.spawn(move || {
+                let r = backward_pool_main(cfg, wid, bt, shared, manifest, pass_queue, pool, algo);
+                if r.is_err() {
+                    shared.stop.store(true, Ordering::Relaxed);
+                }
+                r
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool thread panicked"))
+            .collect()
+    });
+
+    let mut ws = WorkerStats::default();
+    for r in results {
+        ws.absorb(&r?);
+    }
+    ws.queue = pass_queue.stats();
+    algo.into_inner().unwrap().finish()?;
+    Ok(ws)
+}
+
+/// One forward-pool thread: claim a step, produce a [`HostPass`], push it
+/// into the bounded queue (blocking at `queue_depth` — the backpressure the
+/// tests pin down).
+#[allow(clippy::too_many_arguments)]
+fn forward_pool_main(
+    cfg: &TrainConfig,
+    wid: usize,
+    ft: usize,
+    shared: &Arc<Shared>,
+    manifest: &Manifest,
+    pass_queue: &BoundedQueue<HostPass>,
+    pool: &PassPool<HostPass>,
+    next_step: &AtomicUsize,
+) -> Result<WorkerStats> {
+    let mut rt = Runtime::new().context("forward-pool runtime")?;
+    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
+        .with_context(|| format!("worker {wid} fwd {ft}: loading model"))?;
+    let model = manifest.model(&cfg.model)?;
+    // Thread 0 keeps the worker's serial batch stream (a 1:1 ratio consumes
+    // exactly the data the serial loop would); extra forward threads get
+    // decorrelated shards of the same worker slice.
+    let seed = cfg.seed ^ ((ft as u64) << 32);
+    let mut dataset = data::build(model, wid, cfg.workers, seed);
+    let my_params = Arc::clone(&shared.params[wid]);
+
+    let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
+    let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
+    let mut baseline_fwd_s = 0.0f64;
+    let mut produced = 0usize;
+
+    loop {
+        if shared.should_stop() {
+            break;
+        }
+        let step = next_step.fetch_add(1, Ordering::Relaxed);
+        if step >= cfg.steps {
+            break;
+        }
+        // Straggler injection (Section 5.4) lives in the FORWARD pool: pass
+        // production gates the whole pipeline, so idling here slows the
+        // device end-to-end. The delay unit is the measured forward latency
+        // (the backward pool's time is not observable from this side).
+        if is_straggler && delay_iters > 0.0 && baseline_fwd_s > 0.0 {
+            let delay_s = baseline_fwd_s * delay_iters;
+            shared
+                .events
+                .emit(TrainEvent::StragglerInjected { worker: wid, step, delay_s });
+            std::thread::sleep(Duration::from_secs_f64(delay_s));
+        }
+        let t0 = Instant::now();
+        let batch = dataset.next_batch();
+        let mut pass = pool.take();
+        pass.step = step;
+        exec.forward_host(&my_params, &batch, &mut pass)?;
+        if !pass.loss.is_finite() {
+            anyhow::bail!("worker {wid}: loss diverged (step {step})");
+        }
+        if produced < 3 {
+            // calibrate the straggler delay unit on undelayed passes
+            let dt = t0.elapsed().as_secs_f64();
+            baseline_fwd_s = if produced == 0 { dt } else { 0.5 * (baseline_fwd_s + dt) };
+        }
+        produced += 1;
+        if pass_queue.push(pass, &shared.stop).is_err() {
+            break; // run is stopping (or queue closed early)
+        }
+        if shared.events.has_observers() {
+            // depth right after insertion (len() takes the queue lock, so
+            // only pay for it when someone is listening)
+            shared
+                .events
+                .emit(TrainEvent::QueueDepth { worker: wid, step, depth: pass_queue.len() });
+        }
+    }
+    Ok(WorkerStats {
+        compute_s: exec.compute_s,
+        fwd_compute_s: exec.compute_s,
+        // steps are counted where passes COMPLETE (the backward pool)
+        steps: 0,
+        flops: exec.flops_retired,
+        upload_hits: exec.upload_hits,
+        upload_misses: exec.upload_misses,
+        ..Default::default()
+    })
+}
+
+/// One backward-pool thread: drain the pass queue, run backward, feed the
+/// algorithm hooks (serialized per worker, one engine-owned [`StepState`]
+/// per pass), recycle the pass buffer. Worker 0's backward threads also own
+/// evaluation and drift sampling (an eval-eligible step is evaluated by
+/// whichever of them pops its pass), mirroring the serial loop's worker-0
+/// duties.
+#[allow(clippy::too_many_arguments)]
+fn backward_pool_main(
+    cfg: &TrainConfig,
+    wid: usize,
+    bt: usize,
+    shared: &Arc<Shared>,
+    manifest: &Manifest,
+    pass_queue: &BoundedQueue<HostPass>,
+    pool: &PassPool<HostPass>,
+    algo: &Mutex<Box<dyn WorkerAlgo>>,
+) -> Result<WorkerStats> {
+    let mut rt = Runtime::new().context("backward-pool runtime")?;
+    let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
+        .with_context(|| format!("worker {wid} bwd {bt}: loading model"))?;
+    let model = manifest.model(&cfg.model)?;
+    let n_layers = model.layers.len();
+    let my_params = Arc::clone(&shared.params[wid]);
+    // Worker 0 owns evaluation + drift duty (as in the serial loop). EVERY
+    // backward thread of worker 0 carries an eval stream: an eval-eligible
+    // step is evaluated by whichever thread pops its pass, so no eval point
+    // is dropped when bwd_threads > 1. Eval batches are deterministic, so
+    // the streams are identical across threads.
+    let eval_ds = if wid == 0 {
+        Some(data::build(model, wid, cfg.workers, cfg.seed))
+    } else {
+        None
+    };
+    let mut drift_scratch = DriftScratch::new(shared.m);
+    let mut completed = 0usize;
+
+    while let Some(pass) = pass_queue.pop(&shared.stop) {
+        let step = pass.step;
+        let loss = pass.loss as f64;
+        let mut ctx = StepState::new(step, n_layers);
+        {
+            let mut err: Option<anyhow::Error> = None;
+            let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
+                if err.is_none() {
+                    if let Err(e) = algo.lock().unwrap().on_layer_grads(&mut ctx, li, grads) {
+                        err = Some(e);
+                    }
+                }
+            };
+            exec.backward_host(&my_params, &pass, &mut sink)?;
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+        algo.lock().unwrap().on_step_end(ctx)?;
+        completed += 1;
+        shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        pool.put(pass);
+        shared
+            .events
+            .emit(TrainEvent::StepCompleted { worker: wid, step, loss });
+
+        if let Some(ds) = eval_ds.as_deref() {
+            // compute/flop counters are excluded, exactly as in the serial loop
+            if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+                let flops_before = exec.flops_retired;
+                let compute_before = exec.compute_s;
+                let (loss, acc) = exec.evaluate(&my_params, ds, 4)?;
+                exec.flops_retired = flops_before;
+                exec.compute_s = compute_before;
+                let time_s = shared.start.elapsed().as_secs_f64();
+                shared.curve.lock().unwrap().push(CurvePoint {
+                    step,
+                    time_s,
+                    loss,
+                    accuracy: acc,
+                });
+                shared
+                    .events
+                    .emit(TrainEvent::EvalPoint { step, time_s, loss, accuracy: acc });
+            }
+            if cfg.track_drift_every > 0 && step % cfg.track_drift_every == 0 {
+                let v = sample_drift(&shared.params, &mut drift_scratch);
+                shared.drift.lock().unwrap().push_sample(step, v);
+            }
+        }
+    }
+    Ok(WorkerStats {
+        compute_s: exec.compute_s,
+        bwd_compute_s: exec.compute_s,
+        steps: completed,
+        flops: exec.flops_retired,
+        upload_hits: exec.upload_hits,
+        upload_misses: exec.upload_misses,
+        ..Default::default()
+    })
+}
+
+/// Reusable buffers for streamed drift sampling (§Perf: `flatten()`
+/// materialized every replica's full parameter vector per sample; these
+/// buffers are sized to the largest single tensor instead).
+struct DriftScratch {
+    /// per-worker snapshot of the tensor currently being swept
+    snaps: Vec<Vec<f32>>,
+    /// per-element mean of that tensor (f64 accumulation)
+    mean: Vec<f64>,
+    /// per-worker running Σ‖x_w − x̄‖² across tensors
+    sq: Vec<f64>,
+}
+
+impl DriftScratch {
+    fn new(m: usize) -> DriftScratch {
+        DriftScratch { snaps: vec![Vec::new(); m], mean: Vec::new(), sq: vec![0.0; m] }
+    }
+}
+
+/// Disagreement sample (Fig A1) computed tensor-by-tensor into reusable
+/// buffers: mean over workers of ‖x_w − x̄‖/√d, with
+/// ‖x_w − x̄‖² = Σ_tensors ‖chunk_w − chunk_mean‖² — numerically identical to
+/// `DriftTracker::record` on full flattened vectors, without the per-sample
+/// full-model allocations.
+fn sample_drift(params: &[Arc<ModelParams>], scratch: &mut DriftScratch) -> f64 {
+    let m = params.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let d = params[0].numel();
+    scratch.sq.iter_mut().for_each(|v| *v = 0.0);
+    for li in 0..params[0].layers.len() {
+        for ti in 0..params[0].layers[li].tensors.len() {
+            let n = params[0].layers[li].tensors[ti].numel();
+            scratch.mean.clear();
+            scratch.mean.resize(n, 0.0);
+            for (w, p) in params.iter().enumerate() {
+                let snap = &mut scratch.snaps[w];
+                snap.resize(n, 0.0);
+                p.layers[li].tensors[ti].load_into(snap);
+                for (mu, &x) in scratch.mean.iter_mut().zip(snap.iter()) {
+                    *mu += x as f64;
+                }
+            }
+            for mu in &mut scratch.mean {
+                *mu /= m as f64;
+            }
+            for (w, sq) in scratch.sq.iter_mut().enumerate() {
+                for (&x, &mu) in scratch.snaps[w].iter().zip(scratch.mean.iter()) {
+                    let dd = x as f64 - mu;
+                    *sq += dd * dd;
+                }
+            }
+        }
+    }
+    scratch.sq.iter().map(|&s| (s / d as f64).sqrt()).sum::<f64>() / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::DriftTracker;
+    use crate::tensor::{AtomicTensor, LayerParams, Tensor};
+    use crate::util::rng::Pcg32;
+
+    fn random_store(rng: &mut Pcg32, shape: &[usize]) -> AtomicTensor {
+        let mut t = Tensor::zeros(shape);
+        for v in &mut t.data {
+            *v = rng.normal();
+        }
+        AtomicTensor::from_tensor(&t)
+    }
+
+    /// Pins the invariant the §Perf streamed drift path relies on: the
+    /// tensor-by-tensor sweep must produce the SAME number as
+    /// `DriftTracker::record` on fully flattened parameter vectors.
+    #[test]
+    fn streamed_drift_matches_record_on_flattened_vectors() {
+        let mut rng = Pcg32::new(7);
+        let m = 3;
+        let params: Vec<Arc<ModelParams>> = (0..m)
+            .map(|_| {
+                Arc::new(ModelParams {
+                    layers: vec![
+                        LayerParams {
+                            tensors: vec![
+                                random_store(&mut rng, &[4, 3]),
+                                random_store(&mut rng, &[3]),
+                            ],
+                        },
+                        LayerParams { tensors: vec![random_store(&mut rng, &[5])] },
+                    ],
+                })
+            })
+            .collect();
+
+        let flats: Vec<Vec<f32>> = params.iter().map(|p| p.flatten()).collect();
+        let mut tracker = DriftTracker::default();
+        tracker.record(0, &flats);
+        let reference = tracker.samples[0].1;
+        assert!(reference > 0.0, "random replicas must disagree");
+
+        let mut scratch = DriftScratch::new(m);
+        let streamed = sample_drift(&params, &mut scratch);
+        assert!(
+            (streamed - reference).abs() < 1e-12,
+            "streamed {streamed} != record {reference}"
+        );
+        // scratch buffers are reusable across samples
+        let again = sample_drift(&params, &mut scratch);
+        assert!((again - reference).abs() < 1e-12);
+    }
+}

@@ -13,6 +13,10 @@
 //!   in the paper's Algorithm 1. DDP / GoSGD / AD-PSGD / SlowMo / CO2 /
 //!   Local-SGD baselines run in the same harness for the paper's tables.
 //!
+//! The public entry point is [`session`]: build a [`session::Session`] from
+//! a [`config::TrainConfig`] + [`manifest::Manifest`], attach typed-event
+//! observers, run, get a [`metrics::RunSummary`].
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index mapping
 //! each paper table/figure to a bench target, and `EXPERIMENTS.md` for the
 //! measured reproduction.
@@ -27,6 +31,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod tensor;
 pub mod topology;

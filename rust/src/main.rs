@@ -1,25 +1,33 @@
-//! `layup` CLI — the launcher for the L3 coordinator.
+//! `layup` CLI — the launcher for the L3 session facade.
 //!
 //! Subcommands (hand-rolled parsing; the offline crate set has no clap):
 //!
 //! ```text
 //! layup train  [--config cfg.toml] [--model M] [--algorithm A] [--workers N]
-//!              [--steps S] [--lr F] [--seed K] [--straggler W:D]
-//!              [--drift-every K] [--out results.json] [--curve out.csv]
+//!              [--steps S] [--eval-every K] [--lr F] [--seed K]
+//!              [--straggler W:D] [--drift-every K] [--decoupled true]
+//!              [--fwd-threads N] [--bwd-threads N] [--queue-depth N]
+//!              [--events events.jsonl] [--out results.json] [--curve out.csv]
 //! layup sim    [--cluster c1|c2|c3] [--workload W] [--algorithm A|all]
-//!              [--straggler W:D]
+//!              [--sync-period K] [--straggler W:D] [--seed K]
 //! layup inspect            # print the artifact manifest summary
 //! layup bench-peak [--model M] [--steps S]   # calibrate single-worker peak
 //! ```
+//!
+//! Each subcommand accepts exactly the flags it documents: an unknown flag
+//! (e.g. the `--step 100` typo for `--steps`) is an error, not silently
+//! ignored.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use layup::config::{Algorithm, Toml, TrainConfig};
-use layup::coordinator;
 use layup::manifest::Manifest;
 use layup::optim::Schedule;
+use layup::session::events::JsonlSink;
+use layup::session::SessionBuilder;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
 
 fn main() {
@@ -29,19 +37,57 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// Flags accepted by `layup train`.
+const TRAIN_FLAGS: &[&str] = &[
+    "config",
+    "model",
+    "algorithm",
+    "workers",
+    "steps",
+    "eval-every",
+    "lr",
+    "seed",
+    "straggler",
+    "drift-every",
+    "decoupled",
+    "fwd-threads",
+    "bwd-threads",
+    "queue-depth",
+    "events",
+    "out",
+    "curve",
+];
+
+/// Flags accepted by `layup sim`.
+const SIM_FLAGS: &[&str] = &["cluster", "workload", "algorithm", "sync-period", "straggler", "seed"];
+
+/// Flags accepted by `layup bench-peak`.
+const BENCH_PEAK_FLAGS: &[&str] = &["model", "steps"];
+
+/// Tiny flag parser: `--key value` pairs after the subcommand, checked
+/// against the subcommand's allowed set.
 struct Args {
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Args> {
+    fn parse(argv: &[String], allowed: &[&str]) -> Result<Args> {
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let k = argv[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            if !allowed.contains(&k) {
+                if allowed.is_empty() {
+                    bail!("unknown flag --{k}: this subcommand takes no flags");
+                }
+                let known: Vec<String> = allowed.iter().map(|a| format!("--{a}")).collect();
+                bail!(
+                    "unknown flag --{k} for this subcommand (accepted: {})",
+                    known.join(" ")
+                );
+            }
             let v = argv
                 .get(i + 1)
                 .with_context(|| format!("--{k} needs a value"))?;
@@ -55,13 +101,25 @@ impl Args {
         self.flags.get(k).map(|s| s.as_str())
     }
 
-    fn usize_or(&self, k: &str, d: usize) -> usize {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    /// `--k`'s value as usize, `d` when absent; a present-but-unparseable
+    /// value is an error (no silent defaulting over typos).
+    fn usize_or(&self, k: &str, d: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(d),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{k}: expected an integer, got {v:?}")),
+        }
     }
 
-    #[allow(dead_code)] // symmetry with usize_or; used by downstream tooling
-    fn f64_or(&self, k: &str, d: f64) -> f64 {
-        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    /// `--k`'s value as bool (`true`/`false`), `d` when absent.
+    fn bool_or(&self, k: &str, d: bool) -> Result<bool> {
+        match self.get(k) {
+            None => Ok(d),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("--{k}: expected true or false, got {v:?}"),
+        }
     }
 }
 
@@ -71,12 +129,14 @@ fn run() -> Result<()> {
         print_usage();
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        "train" => cmd_train(&args),
-        "sim" => cmd_sim(&args),
-        "inspect" => cmd_inspect(),
-        "bench-peak" => cmd_bench_peak(&args),
+        "train" => cmd_train(&Args::parse(&argv[1..], TRAIN_FLAGS)?),
+        "sim" => cmd_sim(&Args::parse(&argv[1..], SIM_FLAGS)?),
+        "inspect" => {
+            Args::parse(&argv[1..], &[])?;
+            cmd_inspect()
+        }
+        "bench-peak" => cmd_bench_peak(&Args::parse(&argv[1..], BENCH_PEAK_FLAGS)?),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -86,18 +146,22 @@ fn run() -> Result<()> {
 }
 
 fn print_usage() {
+    let algorithms: Vec<&str> = layup::algorithms::registry().iter().map(|s| s.aliases[0]).collect();
     println!(
         "layup — asynchronous decentralized SGD with layer-wise updates\n\n\
          usage:\n\
          \x20 layup train   [--config f.toml] [--model M] [--algorithm A] [--workers N]\n\
-         \x20               [--steps S] [--lr F] [--seed K] [--straggler W:D]\n\
-         \x20               [--drift-every K] [--out results.json] [--curve curve.csv]\n\
+         \x20               [--steps S] [--eval-every K] [--lr F] [--seed K]\n\
+         \x20               [--straggler W:D] [--drift-every K] [--decoupled true]\n\
+         \x20               [--fwd-threads N] [--bwd-threads N] [--queue-depth N]\n\
+         \x20               [--events events.jsonl] [--out results.json] [--curve curve.csv]\n\
          \x20 layup sim     [--cluster c1|c2|c3] [--workload resnet18_cifar|resnet50_cifar|\n\
          \x20               resnet50_imagenet|gpt2_medium|gpt2_xl] [--algorithm A|all]\n\
-         \x20               [--straggler W:D]\n\
+         \x20               [--sync-period K] [--straggler W:D] [--seed K]\n\
          \x20 layup inspect\n\
          \x20 layup bench-peak [--model M] [--steps S]\n\n\
-         algorithms: ddp layup gosgd adpsgd slowmo co2 localsgd layup-model"
+         algorithms: {}",
+        algorithms.join(" ")
     );
 }
 
@@ -115,13 +179,19 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(a) = args.get("algorithm") {
         cfg.algorithm = Algorithm::parse(a)?;
     }
-    cfg.workers = args.usize_or("workers", cfg.workers);
-    cfg.steps = args.usize_or("steps", cfg.steps);
-    cfg.eval_every = args.usize_or("eval-every", (cfg.steps / 20).max(1));
-    cfg.seed = args.usize_or("seed", cfg.seed as usize) as u64;
-    cfg.track_drift_every = args.usize_or("drift-every", cfg.track_drift_every);
-    if let Some(lr) = args.get("lr") {
-        let lr: f32 = lr.parse().context("--lr")?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.eval_every = args.usize_or("eval-every", (cfg.steps / 20).max(1))?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.track_drift_every = args.usize_or("drift-every", cfg.track_drift_every)?;
+    cfg.decoupled = args.bool_or("decoupled", cfg.decoupled)?;
+    cfg.fwd_threads = args.usize_or("fwd-threads", cfg.fwd_threads)?;
+    cfg.bwd_threads = args.usize_or("bwd-threads", cfg.bwd_threads)?;
+    cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
+    if let Some(v) = args.get("lr") {
+        let lr: f32 = v
+            .parse()
+            .with_context(|| format!("--lr: expected a number, got {v:?}"))?;
         cfg.schedule = Schedule::Cosine { lr, t_max: cfg.steps, warmup_steps: 0, warmup_lr: 0.0 };
     }
     if let Some(s) = args.get("straggler") {
@@ -134,6 +204,10 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_train_config(args)?;
     let manifest = Manifest::load(&layup::artifacts_dir())?;
+    // reject bad configs BEFORE touching the --events file: JsonlSink::create
+    // truncates, and an invalid run must not wipe a previous run's event log
+    cfg.validate()?;
+    manifest.model(&cfg.model)?;
     println!(
         "training {} with {} on {} workers for {} steps (seed {})",
         cfg.model,
@@ -143,7 +217,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.seed
     );
     let t0 = std::time::Instant::now();
-    let summary = coordinator::run(&cfg, &manifest)?;
+    let mut builder = SessionBuilder::new(cfg);
+    if let Some(path) = args.get("events") {
+        builder = builder.observer(Arc::new(JsonlSink::create(path)?));
+        println!("typed event stream -> {path}");
+    }
+    let summary = builder.build(&manifest)?.run()?;
     println!(
         "done in {:.1}s: best_acc={:.4} best_loss={:.4} (ppl {:.2}) occupancy={:.1}% gossip applied/skipped={}/{}",
         t0.elapsed().as_secs_f64(),
@@ -186,19 +265,17 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "gpt2_xl" => Workload::gpt2_xl(cluster.m),
         other => bail!("unknown workload {other:?}"),
     };
-    let period = args.usize_or("sync-period", 12);
+    let period = args.usize_or("sync-period", 12)?;
     let algos: Vec<SimAlgo> = match args.get("algorithm").unwrap_or("all") {
         "all" => SimAlgo::paper_set(period),
-        name => vec![match name {
-            "ddp" => SimAlgo::Ddp,
-            "layup" => SimAlgo::LayUp,
-            "gosgd" => SimAlgo::GoSgd,
-            "adpsgd" => SimAlgo::AdPsgd,
-            "localsgd" => SimAlgo::LocalSgd { period },
-            "slowmo" => SimAlgo::SlowMo { period },
-            "co2" => SimAlgo::Co2 { period },
-            other => bail!("unknown algorithm {other:?}"),
-        }],
+        name => {
+            // one registry lookup instead of a divergent name match
+            let spec = layup::algorithms::spec(Algorithm::parse(name)?);
+            let Some(sim) = spec.sim else {
+                bail!("{} has no discrete-event-simulator model", spec.name);
+            };
+            vec![sim(period)]
+        }
     };
     println!(
         "simulating {} on {} ({} devices)",
@@ -208,8 +285,9 @@ fn cmd_sim(args: &Args) -> Result<()> {
         "{:<10} {:>12} {:>10} {:>8} {:>12}",
         "algorithm", "wall (s)", "occup.", "MFU", "comm (GB)"
     );
+    let seed = args.usize_or("seed", 1)? as u64;
     for a in algos {
-        let r = simulate(&cluster, &w, a, args.usize_or("seed", 1) as u64);
+        let r = simulate(&cluster, &w, a, seed);
         println!(
             "{:<10} {:>12.1} {:>9.1}% {:>7.1}% {:>12.1}",
             r.algo,
@@ -252,14 +330,12 @@ fn cmd_inspect() -> Result<()> {
 /// MFU of Table 4 is measured against on this substrate).
 fn cmd_bench_peak(args: &Args) -> Result<()> {
     let model = args.get("model").unwrap_or("mlpnet18");
-    let steps = args.usize_or("steps", 20);
+    let steps = args.usize_or("steps", 20)?;
     let manifest = Manifest::load(&layup::artifacts_dir())?;
-    let cfg = TrainConfig::new(model, Algorithm::GoSgd, 1, steps);
-    let mut single = cfg.clone();
-    single.workers = 1;
-    single.eval_every = steps + 1; // no eval in the timing window
-    let summary = coordinator::run(&single, &manifest)?;
-    let peak = summary.extras.get("achieved_flops_per_s").copied().unwrap_or(0.0);
+    let mut cfg = TrainConfig::new(model, Algorithm::GoSgd, 1, steps);
+    cfg.eval_every = steps + 1; // no eval in the timing window
+    let summary = SessionBuilder::new(cfg).build(&manifest)?.run()?;
+    let peak = summary.stats.achieved_flops_per_s;
     println!(
         "single-worker peak on {model}: {:.3e} FLOP/s (occupancy {:.1}%)",
         peak,

@@ -2,7 +2,6 @@
 //! FLOPs utilization, and the drift / gradient-bias trackers that validate
 //! the paper's theory (Fig A1, Lemma 6.1).
 
-use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::json::{arr, num, obj, s, Json};
@@ -281,6 +280,44 @@ impl DriftTracker {
     }
 }
 
+/// Typed per-run statistics — the replacement for the seed-era stringly
+/// `extras: BTreeMap<String, f64>` map. Every field is still emitted under
+/// its old key in the summary JSON, so downstream result files keep parsing.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// FLOPs actually retired over wall time (the MFU numerator)
+    pub achieved_flops_per_s: f64,
+    /// peak model disagreement across workers (Fig A1)
+    pub max_disagreement: f64,
+    /// disagreement at the last drift sample
+    pub final_disagreement: f64,
+    /// fraction of parameter uploads served from the version cache
+    pub upload_hit_rate: f64,
+    /// forward-side compute occupancy (per-pool split, §Perf)
+    pub fwd_occupancy: f64,
+    /// backward-side compute occupancy
+    pub bwd_occupancy: f64,
+    /// merged pass-queue counters (decoupled mode; zeros for serial runs)
+    pub queue: QueueStats,
+}
+
+impl RunStats {
+    /// Flat (key, value) view under the legacy `extras` key names.
+    pub fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("achieved_flops_per_s", self.achieved_flops_per_s),
+            ("max_disagreement", self.max_disagreement),
+            ("final_disagreement", self.final_disagreement),
+            ("upload_hit_rate", self.upload_hit_rate),
+            ("fwd_occupancy", self.fwd_occupancy),
+            ("bwd_occupancy", self.bwd_occupancy),
+            ("queue_depth_mean", self.queue.mean_depth()),
+            ("queue_depth_max", self.queue.max_depth as f64),
+            ("queue_blocked_frac", self.queue.blocked_frac()),
+        ]
+    }
+}
+
 /// Summary for one algorithm run — what the paper's tables report.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
@@ -293,7 +330,7 @@ pub struct RunSummary {
     pub epochs: usize,
     pub gossip_skipped: u64,
     pub gossip_applied: u64,
-    pub extras: BTreeMap<String, f64>,
+    pub stats: RunStats,
 }
 
 impl RunSummary {
@@ -309,8 +346,8 @@ impl RunSummary {
             ("gossip_skipped", num(self.gossip_skipped as f64)),
             ("gossip_applied", num(self.gossip_applied as f64)),
         ];
-        for (k, v) in &self.extras {
-            fields.push((k.as_str(), num(*v)));
+        for (k, v) in self.stats.fields() {
+            fields.push((k, num(v)));
         }
         obj(fields)
     }
@@ -404,5 +441,42 @@ mod tests {
         assert!(c.to_csv().contains("0,0.000,1.00000,0.50000"));
         let j = c.to_json().dump();
         assert!(j.contains("\"accuracy\":0.5"));
+    }
+
+    #[test]
+    fn run_stats_fields_keep_legacy_extras_keys() {
+        let stats = RunStats {
+            achieved_flops_per_s: 1e9,
+            queue: QueueStats { pushes: 2, pops: 2, blocked_pushes: 1, depth_sum: 4, max_depth: 3 },
+            ..Default::default()
+        };
+        let summary = RunSummary {
+            algorithm: "LayUp".into(),
+            curve: Curve::default(),
+            mfu: 0.5,
+            compute_occupancy: 0.5,
+            total_time_s: 1.0,
+            total_steps: 10,
+            epochs: 1,
+            gossip_skipped: 0,
+            gossip_applied: 3,
+            stats,
+        };
+        let j = summary.to_json().dump();
+        // the typed stats still serialize under the seed-era extras keys
+        for key in [
+            "achieved_flops_per_s",
+            "max_disagreement",
+            "final_disagreement",
+            "upload_hit_rate",
+            "fwd_occupancy",
+            "bwd_occupancy",
+            "queue_depth_mean",
+            "queue_depth_max",
+            "queue_blocked_frac",
+        ] {
+            assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
+        }
+        assert!(j.contains("\"queue_depth_max\":3"));
     }
 }

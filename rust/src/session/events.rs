@@ -1,0 +1,314 @@
+//! Typed training-event stream and pluggable observers.
+//!
+//! The engine and the algorithms emit [`TrainEvent`]s through the
+//! [`EventBus`] a [`crate::session::SessionBuilder`] assembles. Observers are
+//! shared (`Arc<dyn Observer>`), may be called from any worker / pool /
+//! updater thread, and must therefore be `Send + Sync` and use interior
+//! mutability for any state. Emission is synchronous and in-line: keep
+//! observers cheap (the built-in ones buffer or lock briefly) — a run with
+//! no observers pays one empty-slice iteration per event.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{Curve, CurvePoint};
+use crate::util::json::{num, obj, s, Json};
+
+/// One typed event from a training run, in rough emission order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrainEvent {
+    /// The run is about to spawn its workers.
+    RunStarted { algorithm: &'static str, workers: usize, steps: usize, decoupled: bool },
+    /// One worker finished one training step (decoupled runs may report
+    /// steps out of order; `loss` is the step's training loss).
+    StepCompleted { worker: usize, step: usize, loss: f64 },
+    /// Worker 0 evaluated its replica on the held-out stream.
+    EvalPoint { step: usize, time_s: f64, loss: f64, accuracy: f64 },
+    /// A gossip exchange landed in a peer's parameter store.
+    GossipApplied { worker: usize, peer: usize, step: usize },
+    /// A gossip exchange was skipped on contention (push-sum busy slot).
+    GossipSkipped { worker: usize, peer: usize, step: usize },
+    /// Pass-queue depth right after a forward-pool push (decoupled mode).
+    QueueDepth { worker: usize, step: usize, depth: usize },
+    /// The configured straggler idled before this step.
+    StragglerInjected { worker: usize, step: usize, delay_s: f64 },
+    /// All workers joined; the summary is being assembled.
+    RunCompleted { total_steps: usize, wall_s: f64 },
+}
+
+impl TrainEvent {
+    /// Stable snake_case tag (the `"event"` field of the JSONL sink).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TrainEvent::RunStarted { .. } => "run_started",
+            TrainEvent::StepCompleted { .. } => "step_completed",
+            TrainEvent::EvalPoint { .. } => "eval_point",
+            TrainEvent::GossipApplied { .. } => "gossip_applied",
+            TrainEvent::GossipSkipped { .. } => "gossip_skipped",
+            TrainEvent::QueueDepth { .. } => "queue_depth",
+            TrainEvent::StragglerInjected { .. } => "straggler_injected",
+            TrainEvent::RunCompleted { .. } => "run_completed",
+        }
+    }
+
+    /// One flat JSON object per event (the JSONL record shape).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("event", s(self.kind()))];
+        match self {
+            TrainEvent::RunStarted { algorithm, workers, steps, decoupled } => {
+                fields.push(("algorithm", s(algorithm)));
+                fields.push(("workers", num(*workers as f64)));
+                fields.push(("steps", num(*steps as f64)));
+                fields.push(("decoupled", Json::Bool(*decoupled)));
+            }
+            TrainEvent::StepCompleted { worker, step, loss } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("loss", num(*loss)));
+            }
+            TrainEvent::EvalPoint { step, time_s, loss, accuracy } => {
+                fields.push(("step", num(*step as f64)));
+                fields.push(("time_s", num(*time_s)));
+                fields.push(("loss", num(*loss)));
+                fields.push(("accuracy", num(*accuracy)));
+            }
+            TrainEvent::GossipApplied { worker, peer, step }
+            | TrainEvent::GossipSkipped { worker, peer, step } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("peer", num(*peer as f64)));
+                fields.push(("step", num(*step as f64)));
+            }
+            TrainEvent::QueueDepth { worker, step, depth } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("depth", num(*depth as f64)));
+            }
+            TrainEvent::StragglerInjected { worker, step, delay_s } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("delay_s", num(*delay_s)));
+            }
+            TrainEvent::RunCompleted { total_steps, wall_s } => {
+                fields.push(("total_steps", num(*total_steps as f64)));
+                fields.push(("wall_s", num(*wall_s)));
+            }
+        }
+        obj(fields)
+    }
+}
+
+/// A training-run observer. Called synchronously from worker threads.
+pub trait Observer: Send + Sync {
+    fn on_event(&self, event: &TrainEvent);
+}
+
+/// Closures observe directly: `.observer(Arc::new(|ev: &TrainEvent| ...))`.
+impl<F> Observer for F
+where
+    F: Fn(&TrainEvent) + Send + Sync,
+{
+    fn on_event(&self, event: &TrainEvent) {
+        self(event)
+    }
+}
+
+/// The fan-out point: every emit is forwarded to each attached observer.
+#[derive(Clone, Default)]
+pub struct EventBus {
+    observers: Vec<Arc<dyn Observer>>,
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    pub fn attach(&mut self, observer: Arc<dyn Observer>) {
+        self.observers.push(observer);
+    }
+
+    pub fn has_observers(&self) -> bool {
+        !self.observers.is_empty()
+    }
+
+    pub fn emit(&self, event: TrainEvent) {
+        for o in &self.observers {
+            o.on_event(&event);
+        }
+    }
+}
+
+/// Prints run lifecycle and evaluation points to stdout — the typed
+/// replacement for the ad-hoc `println!` progress lines.
+#[derive(Clone, Copy, Default)]
+pub struct ProgressPrinter;
+
+impl ProgressPrinter {
+    pub fn new() -> ProgressPrinter {
+        ProgressPrinter
+    }
+}
+
+impl Observer for ProgressPrinter {
+    fn on_event(&self, event: &TrainEvent) {
+        match event {
+            TrainEvent::RunStarted { algorithm, workers, steps, decoupled } => {
+                let mode = if *decoupled { "decoupled" } else { "serial" };
+                println!("[{algorithm}] {workers} workers x {steps} steps ({mode})");
+            }
+            TrainEvent::EvalPoint { step, time_s, loss, accuracy } => {
+                println!(
+                    "[eval] step {step:>6}  t={time_s:>7.1}s  loss {loss:.4}  acc {:.1}%",
+                    100.0 * accuracy
+                );
+            }
+            TrainEvent::RunCompleted { total_steps, wall_s } => {
+                println!("[done] {total_steps} steps in {wall_s:.1}s");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Streams every event as one JSON object per line (JSONL), suitable for
+/// offline analysis; see EXPERIMENTS.md §Events.
+pub struct JsonlSink {
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) `path` and stream events into it, buffered.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<JsonlSink> {
+        let file = File::create(path.as_ref())
+            .with_context(|| format!("creating event sink {}", path.as_ref().display()))?;
+        Ok(JsonlSink::new(Box::new(BufWriter::new(file))))
+    }
+
+    /// Stream events into an arbitrary writer (tests use a shared buffer).
+    pub fn new(out: Box<dyn Write + Send>) -> JsonlSink {
+        JsonlSink { out: Mutex::new(out) }
+    }
+}
+
+impl Observer for JsonlSink {
+    fn on_event(&self, event: &TrainEvent) {
+        let mut out = self.out.lock().unwrap();
+        // an unwritable sink must not kill the training run
+        let _ = writeln!(out, "{}", event.to_json().dump());
+        if matches!(event, TrainEvent::RunCompleted { .. }) {
+            let _ = out.flush();
+        }
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Records [`TrainEvent::EvalPoint`]s into an in-memory [`Curve`] — handy
+/// when a caller wants live curve access without waiting for the summary.
+#[derive(Default)]
+pub struct CurveRecorder {
+    curve: Mutex<Curve>,
+}
+
+impl CurveRecorder {
+    pub fn new() -> CurveRecorder {
+        CurveRecorder::default()
+    }
+
+    /// The step-sorted curve recorded so far.
+    pub fn snapshot(&self) -> Curve {
+        let mut c = self.curve.lock().unwrap().clone();
+        c.sort_by_step();
+        c
+    }
+}
+
+impl Observer for CurveRecorder {
+    fn on_event(&self, event: &TrainEvent) {
+        if let TrainEvent::EvalPoint { step, time_s, loss, accuracy } = event {
+            self.curve.lock().unwrap().push(CurvePoint {
+                step: *step,
+                time_s: *time_s,
+                loss: *loss,
+                accuracy: *accuracy,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_kinds_and_json_tags_agree() {
+        let ev = TrainEvent::EvalPoint { step: 3, time_s: 1.5, loss: 0.7, accuracy: 0.25 };
+        assert_eq!(ev.kind(), "eval_point");
+        let j = ev.to_json().dump();
+        assert!(j.contains("\"event\":\"eval_point\""), "{j}");
+        assert!(j.contains("\"accuracy\":0.25"), "{j}");
+    }
+
+    #[test]
+    fn bus_fans_out_to_all_observers() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut bus = EventBus::new();
+        for _ in 0..2 {
+            let seen = Arc::clone(&seen);
+            bus.attach(Arc::new(move |ev: &TrainEvent| {
+                seen.lock().unwrap().push(ev.kind());
+            }));
+        }
+        assert!(bus.has_observers());
+        bus.emit(TrainEvent::RunCompleted { total_steps: 1, wall_s: 0.1 });
+        assert_eq!(*seen.lock().unwrap(), vec!["run_completed", "run_completed"]);
+    }
+
+    #[test]
+    fn curve_recorder_collects_sorted_eval_points() {
+        let rec = CurveRecorder::new();
+        rec.on_event(&TrainEvent::EvalPoint { step: 10, time_s: 2.0, loss: 0.5, accuracy: 0.6 });
+        rec.on_event(&TrainEvent::EvalPoint { step: 0, time_s: 1.0, loss: 1.0, accuracy: 0.1 });
+        rec.on_event(&TrainEvent::RunCompleted { total_steps: 2, wall_s: 2.0 });
+        let c = rec.snapshot();
+        assert_eq!(c.points.len(), 2);
+        assert_eq!(c.points[0].step, 0);
+        assert_eq!(c.points[1].step, 10);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = SharedBuf::default();
+        let sink = JsonlSink::new(Box::new(buf.clone()));
+        sink.on_event(&TrainEvent::GossipSkipped { worker: 1, peer: 2, step: 5 });
+        sink.on_event(&TrainEvent::RunCompleted { total_steps: 5, wall_s: 1.0 });
+        drop(sink);
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"event\":\"gossip_skipped\""));
+        assert!(lines[0].contains("\"peer\":2"));
+        assert!(lines[1].contains("\"event\":\"run_completed\""));
+    }
+}

@@ -1,0 +1,186 @@
+#![deny(clippy::all)]
+//! The crate's public training facade: build a [`Session`] from a
+//! [`TrainConfig`] + [`Manifest`], attach typed-event observers, run, get a
+//! [`RunSummary`].
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use layup::config::{Algorithm, TrainConfig};
+//! use layup::manifest::Manifest;
+//! use layup::session::{events::ProgressPrinter, SessionBuilder};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let manifest = Manifest::load(&layup::artifacts_dir())?;
+//! let cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
+//! let summary = SessionBuilder::new(cfg)
+//!     .observer(Arc::new(ProgressPrinter::new()))
+//!     .build(&manifest)?
+//!     .run()?;
+//! println!("best accuracy {:.3}", summary.curve.best_accuracy());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The facade replaces the seed-era `coordinator::run` free function (kept
+//! as a deprecated shim). Construction is two-phase on purpose: `build`
+//! validates the config and binds the manifest, so configuration errors
+//! surface before any thread spawns; `run` consumes the session — one run
+//! per session, matching the engine's single-use shared state.
+
+pub mod events;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{Algorithm, TrainConfig};
+use crate::coordinator::{engine, Shared};
+use crate::data;
+use crate::manifest::Manifest;
+use crate::metrics::{QueueStats, RunStats, RunSummary};
+use self::events::{EventBus, Observer, TrainEvent};
+
+/// Configures a training session: config + observers.
+pub struct SessionBuilder {
+    cfg: TrainConfig,
+    events: EventBus,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: TrainConfig) -> SessionBuilder {
+        SessionBuilder { cfg, events: EventBus::new() }
+    }
+
+    /// Attach a typed-event observer (may be called repeatedly).
+    pub fn observer(mut self, observer: Arc<dyn Observer>) -> SessionBuilder {
+        self.events.attach(observer);
+        self
+    }
+
+    /// Convenience: attach the stdout progress printer.
+    pub fn progress(self) -> SessionBuilder {
+        self.observer(Arc::new(events::ProgressPrinter::new()))
+    }
+
+    /// Convenience: stream every event to a JSONL file at `path`.
+    ///
+    /// The file is created (truncated) HERE, before `build` validates the
+    /// config — validate first (or call `build` before attaching) when the
+    /// path may hold a previous run's log you care about.
+    pub fn jsonl_sink<P: AsRef<std::path::Path>>(self, path: P) -> Result<SessionBuilder> {
+        let sink = events::JsonlSink::create(path)?;
+        Ok(self.observer(Arc::new(sink)))
+    }
+
+    /// Validate the config and bind the artifact manifest. Configuration
+    /// errors surface here, before any thread spawns.
+    pub fn build(self, manifest: &Manifest) -> Result<Session<'_>> {
+        self.cfg.validate()?;
+        manifest.model(&self.cfg.model)?; // unknown models fail at build too
+        Ok(Session { cfg: self.cfg, manifest, events: self.events })
+    }
+}
+
+/// A validated, ready-to-run training session.
+pub struct Session<'m> {
+    cfg: TrainConfig,
+    manifest: &'m Manifest,
+    events: EventBus,
+}
+
+impl Session<'_> {
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Run the full training job on the thread cluster. Returns the learning
+    /// curve, MFU/occupancy, drift samples, gossip counters and the typed
+    /// [`RunStats`].
+    pub fn run(self) -> Result<RunSummary> {
+        let Session { cfg, manifest, events } = self;
+        let shared = Shared::with_events(&cfg, manifest, events)?;
+        shared.events.emit(TrainEvent::RunStarted {
+            algorithm: cfg.algorithm.name(),
+            workers: cfg.workers,
+            steps: cfg.steps,
+            decoupled: cfg.decoupled,
+        });
+        let t0 = Instant::now();
+
+        let stats = engine::execute(&cfg, manifest, &shared)?;
+
+        let wall = t0.elapsed().as_secs_f64();
+        let total_compute: f64 = stats.iter().map(|s| s.compute_s).sum();
+        let total_flops: u64 = stats.iter().map(|s| s.flops).sum();
+        let total_steps: usize = stats.iter().map(|s| s.steps).sum();
+        // Occupancy denominators count the threads that could have computed:
+        // one per worker serially, fwd_threads + bwd_threads per worker
+        // decoupled.
+        let (fwd_pool, bwd_pool) = if cfg.decoupled {
+            (cfg.fwd_threads, cfg.bwd_threads)
+        } else {
+            (1, 1)
+        };
+        let threads = if cfg.decoupled { fwd_pool + bwd_pool } else { 1 };
+        let occupancy = (total_compute / (wall * (cfg.workers * threads) as f64)).min(1.0);
+        let (applied, skipped) = shared.gossip_counts();
+
+        let model = manifest.model(&cfg.model)?;
+        let data0 = data::build(model, 0, cfg.workers, cfg.seed);
+        let batches_per_epoch = data0.batches_per_epoch();
+
+        let mut curve = shared.curve.lock().unwrap().clone();
+        curve.sort_by_step(); // decoupled passes complete out of step order
+        let mut drift = shared.drift.lock().unwrap().clone();
+        drift.sort_by_step();
+        let mut queue = QueueStats::default();
+        for s in &stats {
+            queue.merge(&s.queue);
+        }
+        let upload_hits: u64 = stats.iter().map(|s| s.upload_hits).sum();
+        let upload_total: u64 = stats.iter().map(|s| s.upload_hits + s.upload_misses).sum();
+        let run_stats = RunStats {
+            achieved_flops_per_s: total_flops as f64 / wall,
+            max_disagreement: drift.max_disagreement(),
+            final_disagreement: drift.final_disagreement(),
+            upload_hit_rate: upload_hits as f64 / (upload_total as f64).max(1.0),
+            // Per-pool occupancy split (§Perf): fwd- or bwd-bound pipeline?
+            fwd_occupancy: (stats.iter().map(|s| s.fwd_compute_s).sum::<f64>()
+                / (wall * (cfg.workers * fwd_pool) as f64))
+                .min(1.0),
+            bwd_occupancy: (stats.iter().map(|s| s.bwd_compute_s).sum::<f64>()
+                / (wall * (cfg.workers * bwd_pool) as f64))
+                .min(1.0),
+            queue,
+        };
+
+        shared.events.emit(TrainEvent::RunCompleted { total_steps, wall_s: wall });
+
+        Ok(RunSummary {
+            algorithm: cfg.algorithm.name().to_string(),
+            curve,
+            mfu: occupancy, // benches calibrate against single-worker peak
+            compute_occupancy: occupancy,
+            total_time_s: wall,
+            total_steps,
+            epochs: stats.first().map(|s| s.steps).unwrap_or(0) / batches_per_epoch.max(1),
+            gossip_skipped: skipped,
+            gossip_applied: applied,
+            stats: run_stats,
+        })
+    }
+}
+
+/// Convenience: run every paper algorithm on the same base config, returning
+/// summaries in paper-table order (used by the bench harness).
+pub fn run_paper_set(base: &TrainConfig, manifest: &Manifest) -> Result<Vec<RunSummary>> {
+    Algorithm::all_paper()
+        .iter()
+        .map(|&a| {
+            let mut cfg = base.clone();
+            cfg.algorithm = a;
+            SessionBuilder::new(cfg).build(manifest)?.run()
+        })
+        .collect()
+}

@@ -1,15 +1,20 @@
 //! Integration tests over the full stack: manifest -> PJRT runtime ->
-//! layered model -> coordinator -> algorithms. These require `artifacts/`
+//! layered model -> session/engine -> algorithms. These require `artifacts/`
 //! (run `make artifacts` or `make smoke` first); they auto-skip politely if
 //! the manifest is missing so `cargo test` stays usable pre-AOT.
 
+use std::sync::{Arc, Mutex};
+
 use layup::config::{Algorithm, TrainConfig};
-use layup::coordinator::{self, Shared};
+use layup::coordinator::Shared;
 use layup::data::{self, Dataset};
 use layup::manifest::Manifest;
+use layup::metrics::RunSummary;
 use layup::model::ModelExec;
 use layup::optim::{OptimKind, Schedule};
 use layup::runtime::Runtime;
+use layup::session::events::{CurveRecorder, TrainEvent};
+use layup::session::SessionBuilder;
 
 fn manifest() -> Option<Manifest> {
     let dir = layup::artifacts_dir();
@@ -35,6 +40,11 @@ fn quick_cfg(model: &str, algo: Algorithm, workers: usize, steps: usize) -> Trai
     cfg.schedule = Schedule::Constant { lr: 0.03 };
     cfg.eval_every = (steps / 3).max(1);
     cfg
+}
+
+/// Run one config through the session facade (the tests' single entry).
+fn run(cfg: &TrainConfig, man: &Manifest) -> anyhow::Result<RunSummary> {
+    SessionBuilder::new(cfg.clone()).build(man)?.run()
 }
 
 #[test]
@@ -87,7 +97,7 @@ fn gradient_descent_reduces_loss_single_worker() {
     let Some(man) = manifest() else { return };
     let model_name = pick_model(&man);
     let cfg = quick_cfg(&model_name, Algorithm::LocalSgd, 1, 25);
-    let summary = coordinator::run(&cfg, &man).unwrap();
+    let summary = run(&cfg, &man).unwrap();
     let first = summary.curve.points.first().unwrap().loss;
     let best = summary.curve.best_loss();
     assert!(best < first * 0.9, "loss did not improve: {first} -> {best}");
@@ -108,8 +118,7 @@ fn every_algorithm_trains_without_divergence() {
         Algorithm::LocalSgd,
     ] {
         let cfg = quick_cfg(&model_name, algo, 2, 12);
-        let summary = coordinator::run(&cfg, &man)
-            .unwrap_or_else(|e| panic!("{algo:?} failed: {e:#}"));
+        let summary = run(&cfg, &man).unwrap_or_else(|e| panic!("{algo:?} failed: {e:#}"));
         assert!(summary.curve.best_loss().is_finite(), "{algo:?} diverged");
         assert_eq!(summary.total_steps, 24);
     }
@@ -126,14 +135,14 @@ fn decoupled_single_worker_tracks_serial_loss_curve() {
     let Some(man) = manifest() else { return };
     let model_name = pick_model(&man);
     let serial_cfg = quick_cfg(&model_name, Algorithm::Co2, 1, 25);
-    let serial = coordinator::run(&serial_cfg, &man).unwrap();
+    let serial = run(&serial_cfg, &man).unwrap();
 
     let mut dec_cfg = quick_cfg(&model_name, Algorithm::Co2, 1, 25);
     dec_cfg.decoupled = true;
     dec_cfg.fwd_threads = 1;
     dec_cfg.bwd_threads = 1;
     dec_cfg.queue_depth = 1;
-    let dec = coordinator::run(&dec_cfg, &man).unwrap();
+    let dec = run(&dec_cfg, &man).unwrap();
 
     let (s_first, s_best) = (serial.curve.points.first().unwrap().loss, serial.curve.best_loss());
     let (d_first, d_best) = (dec.curve.points.first().unwrap().loss, dec.curve.best_loss());
@@ -156,16 +165,95 @@ fn decoupled_pools_train_all_async_algorithms() {
         cfg.fwd_threads = 2;
         cfg.bwd_threads = 1;
         cfg.queue_depth = 3;
-        let summary = coordinator::run(&cfg, &man)
-            .unwrap_or_else(|e| panic!("decoupled {algo:?} failed: {e:#}"));
+        let summary =
+            run(&cfg, &man).unwrap_or_else(|e| panic!("decoupled {algo:?} failed: {e:#}"));
         assert!(summary.curve.best_loss().is_finite(), "{algo:?} diverged");
         assert_eq!(summary.total_steps, 24);
-        assert!(summary.extras["queue_depth_max"] <= 3.0, "queue bound violated");
+        assert!(summary.stats.queue.max_depth <= 3, "queue bound violated");
     }
     // barrier algorithms must be rejected up front, not deadlock
     let mut cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, 6);
     cfg.decoupled = true;
-    assert!(coordinator::run(&cfg, &man).is_err());
+    assert!(run(&cfg, &man).is_err());
+}
+
+/// The tentpole end-to-end: every stash-based algorithm now runs with
+/// `bwd_threads = 2` (interleaved steps) and must converge comparably to its
+/// serial run — the regime `TrainConfig::validate` rejected before the
+/// step-keyed `StepState` contract. LayUp rides along to pin its updater's
+/// step-keyed push map under the same interleaving.
+#[test]
+fn interleaved_bwd_threads_match_serial_loss_for_stash_algorithms() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    for algo in [Algorithm::GoSgd, Algorithm::AdPsgd, Algorithm::Co2, Algorithm::LayUp] {
+        let serial_cfg = quick_cfg(&model_name, algo, 2, 24);
+        let serial = run(&serial_cfg, &man).unwrap_or_else(|e| panic!("serial {algo:?}: {e:#}"));
+
+        let mut dec_cfg = quick_cfg(&model_name, algo, 2, 24);
+        dec_cfg.decoupled = true;
+        dec_cfg.fwd_threads = 2;
+        dec_cfg.bwd_threads = 2;
+        dec_cfg.queue_depth = 3;
+        let dec = run(&dec_cfg, &man)
+            .unwrap_or_else(|e| panic!("decoupled bwd_threads=2 {algo:?}: {e:#}"));
+
+        let (s_first, s_best) =
+            (serial.curve.points.first().unwrap().loss, serial.curve.best_loss());
+        let (d_first, d_best) = (dec.curve.points.first().unwrap().loss, dec.curve.best_loss());
+        assert!(s_best < s_first * 0.9, "{algo:?} serial did not learn: {s_first} -> {s_best}");
+        assert!(
+            d_best < d_first * 0.9,
+            "{algo:?} interleaved did not learn: {d_first} -> {d_best}"
+        );
+        assert!(
+            d_best < s_best * 1.5 + 0.1,
+            "{algo:?} interleaved lost too much vs serial: {d_best} vs {s_best}"
+        );
+        // both backward threads together complete every queued pass
+        assert_eq!(dec.total_steps, 48, "{algo:?}: every queued pass must complete");
+        assert!(dec.stats.queue.max_depth <= 3, "{algo:?}: queue bound violated");
+    }
+}
+
+/// The session's typed event stream is consistent with the summary: the
+/// curve recorder observes exactly the summary's eval points, and every
+/// step completion is reported.
+#[test]
+fn session_observers_see_steps_and_eval_points() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let cfg = quick_cfg(&model_name, Algorithm::LocalSgd, 2, 6);
+
+    let recorder = Arc::new(CurveRecorder::new());
+    let steps_seen = Arc::new(Mutex::new(Vec::<(usize, usize)>::new()));
+    let counter = {
+        let steps_seen = Arc::clone(&steps_seen);
+        move |ev: &TrainEvent| {
+            if let TrainEvent::StepCompleted { worker, step, .. } = ev {
+                steps_seen.lock().unwrap().push((*worker, *step));
+            }
+        }
+    };
+    let summary = SessionBuilder::new(cfg)
+        .observer(recorder.clone())
+        .observer(Arc::new(counter))
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let recorded = recorder.snapshot();
+    assert_eq!(recorded.points.len(), summary.curve.points.len());
+    for (a, b) in recorded.points.iter().zip(summary.curve.points.iter()) {
+        assert_eq!(a.step, b.step);
+        assert!((a.loss - b.loss).abs() < 1e-12);
+    }
+    let steps_seen = steps_seen.lock().unwrap();
+    assert_eq!(steps_seen.len(), summary.total_steps);
+    for wid in 0..2 {
+        assert_eq!(steps_seen.iter().filter(|(w, _)| *w == wid).count(), 6);
+    }
 }
 
 #[test]
@@ -174,11 +262,11 @@ fn ddp_replicas_stay_bit_identical() {
     let model_name = pick_model(&man);
     let mut cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, 6);
     cfg.track_drift_every = 2;
-    let summary = coordinator::run(&cfg, &man).unwrap();
+    let summary = run(&cfg, &man).unwrap();
     assert!(
-        summary.extras["max_disagreement"] < 1e-6,
+        summary.stats.max_disagreement < 1e-6,
         "DDP drifted: {}",
-        summary.extras["max_disagreement"]
+        summary.stats.max_disagreement
     );
 }
 
@@ -188,8 +276,8 @@ fn layup_drifts_but_stays_bounded() {
     let model_name = pick_model(&man);
     let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 3, 20);
     cfg.track_drift_every = 2;
-    let summary = coordinator::run(&cfg, &man).unwrap();
-    let max_d = summary.extras["max_disagreement"];
+    let summary = run(&cfg, &man).unwrap();
+    let max_d = summary.stats.max_disagreement;
     assert!(max_d > 0.0, "gossip replicas should differ mid-training");
     assert!(max_d < 1.0, "drift exploded: {max_d}");
     assert!(summary.gossip_applied > 0, "no gossip pushes happened");
@@ -200,14 +288,14 @@ fn layup_straggler_does_not_slow_training_much_but_ddp_does() {
     let Some(man) = manifest() else { return };
     let model_name = pick_model(&man);
     let steps = 10;
-    let run = |algo, delay: f64| {
+    let timed = |algo, delay: f64| {
         let mut cfg = quick_cfg(&model_name, algo, 2, steps);
         cfg.eval_every = steps + 1;
         cfg.straggler = if delay > 0.0 { Some((1, delay)) } else { None };
-        coordinator::run(&cfg, &man).unwrap().total_time_s
+        run(&cfg, &man).unwrap().total_time_s
     };
-    let ddp0 = run(Algorithm::Ddp, 0.0);
-    let ddp4 = run(Algorithm::Ddp, 4.0);
+    let ddp0 = timed(Algorithm::Ddp, 0.0);
+    let ddp4 = timed(Algorithm::Ddp, 4.0);
     assert!(
         ddp4 > ddp0 * 1.5,
         "DDP should slow with a straggler: {ddp0:.2}s -> {ddp4:.2}s"
@@ -218,7 +306,7 @@ fn layup_straggler_does_not_slow_training_much_but_ddp_does() {
     let lay4 = {
         let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, steps);
         cfg.straggler = Some((1, 4.0));
-        coordinator::run(&cfg, &man).unwrap()
+        run(&cfg, &man).unwrap()
     };
     assert!(lay4.curve.best_loss().is_finite());
 }
@@ -230,7 +318,7 @@ fn push_sum_weights_conserved_within_tolerance() {
     let cfg = quick_cfg(&model_name, Algorithm::GoSgd, 3, 15);
     let shared = Shared::new(&cfg, &man).unwrap();
     // run through the public entry to exercise real threads
-    let _ = coordinator::run(&cfg, &man).unwrap();
+    let _ = run(&cfg, &man).unwrap();
     // weights in a fresh Shared sum to 1 by construction
     let total: f32 = shared.weights.iter().map(|w| w.get()).sum();
     assert!((total - 1.0).abs() < 1e-5);
