@@ -36,7 +36,9 @@ fn main() {
 
     let mut rt = Runtime::new().expect("runtime");
     let mut exec = ModelExec::load(&mut rt, &man, "mlpnet18").expect("load");
-    let mut datasets: Vec<_> = (0..m).map(|w| data::build(model, w, m, cfg.seed)).collect();
+    let mut datasets: Vec<_> = (0..m)
+        .map(|w| data::build(model, w, m, cfg.seed).expect("dataset"))
+        .collect();
     let mut opts: Vec<PerLayerOpt> = (0..m)
         .map(|_| PerLayerOpt::new(&cfg.optim, &cfg.schedule, &exec.manifest))
         .collect();

@@ -35,7 +35,7 @@ fn main() {
     let cfg = TrainConfig::new(model_name, Algorithm::LocalSgd, 1, 1);
     let shared = Shared::new(&cfg, &man).unwrap();
     let params = &shared.params[0];
-    let mut ds = data::build(model, 0, 1, 7);
+    let mut ds = data::build(model, 0, 1, 7).expect("dataset");
     let batch = ds.next_batch();
     // warmup
     let pass = exec.forward(params, &batch).unwrap();

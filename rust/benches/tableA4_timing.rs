@@ -28,7 +28,7 @@ fn main() {
         let mut rt = Runtime::new().expect("runtime");
         let mut exec = ModelExec::load(&mut rt, &man, model_name).expect("load");
         let model = man.model(model_name).unwrap();
-        let mut ds = data::build(model, 0, 1, 7);
+        let mut ds = data::build(model, 0, 1, 7).expect("dataset");
         let cfg = layup::config::TrainConfig::new(
             model_name,
             layup::config::Algorithm::LocalSgd,

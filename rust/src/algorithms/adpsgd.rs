@@ -17,6 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{wire_bytes, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -76,21 +77,46 @@ impl WorkerAlgo for AdPsgd {
         let peer = self
             .topology
             .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
-        let peer_params = &self.shared.params[peer];
-        comm_delay(2.0 * self.comm_latency_s);
-        for (li, layer) in my.layers.iter().enumerate() {
-            for (ti, t) in layer.tensors.iter().enumerate() {
-                let mine = t.snapshot();
-                // peer = (peer + mine)/2
-                peer_params.layers[li].tensors[ti].mix_from(0.5, 0.5, &mine.data);
-                // mine = the freshly averaged peer value (symmetric result)
-                let avg = peer_params.layers[li].tensors[ti].snapshot();
-                t.store_from(&avg.data);
+        if self.shared.fabric.is_instant() {
+            // shared-memory fast path: the seed-era synchronous swap
+            let peer_params = &self.shared.params[peer];
+            comm_delay(2.0 * self.comm_latency_s);
+            for (li, layer) in my.layers.iter().enumerate() {
+                for (ti, t) in layer.tensors.iter().enumerate() {
+                    let mine = t.snapshot();
+                    // peer = (peer + mine)/2
+                    peer_params.layers[li].tensors[ti].mix_from(0.5, 0.5, &mine.data);
+                    // mine = the freshly averaged peer value (symmetric result)
+                    let avg = peer_params.layers[li].tensors[ti].snapshot();
+                    t.store_from(&avg.data);
+                }
             }
+            let bytes = wire_bytes(my.numel());
+            self.shared
+                .fabric
+                .core()
+                .record_instant(&self.shared, self.wid, peer, step, bytes);
+            self.shared
+                .fabric
+                .core()
+                .record_instant(&self.shared, peer, self.wid, step, bytes);
+            self.shared
+                .events
+                .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
+        } else {
+            // delayed symmetric averaging: the peer mixes the snapshot on
+            // delivery and ships its pre-mix snapshot back — both halves
+            // ride the links, and a straggling link shows up as staleness
+            // instead of a stall (the DaSGD-style relaxation)
+            let flat = Arc::new(my.flatten());
+            let _ = self.shared.fabric.push(
+                &self.shared,
+                self.wid,
+                peer,
+                step,
+                Payload::PairAverage { flat, reply: false },
+            );
         }
-        self.shared
-            .events
-            .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
         Ok(())
     }
 }

@@ -4,12 +4,14 @@
 //! CO2's point is that the global average need not stall the inner loop: the
 //! averaging runs concurrently with the next round of local steps, at the
 //! cost of using one-round-*stale* snapshots. We implement exactly that
-//! semantics without a barrier: at each sync point a worker (1) publishes its
-//! current parameters to its slot, (2) averages whatever snapshots the other
-//! workers last published (possibly from the previous round — that is the
-//! overlap), and (3) applies the SlowMo-style outer momentum step. No worker
-//! ever waits, so a straggler cannot stall the others — but the staleness
-//! adds drift, which is why CO2 trails LayUp on task metrics in the paper.
+//! semantics without a barrier: at each sync point a worker (1) ships its
+//! current parameters to every peer over the communication fabric, (2)
+//! averages whatever peer snapshots have *arrived* in its fabric mailboxes
+//! (possibly from the previous round — that is the overlap; on a delayed
+//! fabric they are older still), and (3) applies the SlowMo-style outer
+//! momentum step. No worker ever waits, so a straggler cannot stall the
+//! others — but the staleness adds drift, which is why CO2 trails LayUp on
+//! task metrics in the paper.
 //!
 //! Being barrier-free and stash-free (gradients live in the engine-owned
 //! [`StepState`]), CO2 runs on the decoupled pools at any `bwd_threads`.
@@ -22,6 +24,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::{comm_delay, localsgd::LocalSgd, slowmo::SlowMo, StepState, WorkerAlgo};
+use crate::comm::{Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -38,8 +41,21 @@ pub struct Co2 {
 impl Co2 {
     pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> Co2 {
         let x_prev = shared.params[wid].flatten();
-        // seed own slot so peers always have something to average
-        *shared.param_slots[wid].lock().unwrap() = Some(x_prev.clone());
+        // seed every peer's mailbox with the initial snapshot so the first
+        // stale averages see all replicas (the seed-era code pre-published
+        // its own slot the same way)
+        let init = Arc::new(x_prev.clone());
+        for peer in 0..shared.m {
+            if peer != wid {
+                let _ = shared.fabric.push(
+                    &shared,
+                    wid,
+                    peer,
+                    0,
+                    Payload::ParamShare { flat: Arc::clone(&init) },
+                );
+            }
+        }
         Co2 {
             inner: LocalSgd::new(cfg, wid, shared, manifest),
             outer_momentum: cfg.outer_momentum,
@@ -49,16 +65,27 @@ impl Co2 {
         }
     }
 
-    /// Barrier-free average over the latest published snapshots.
-    fn stale_average(&self) -> Vec<f32> {
+    /// Barrier-free average over the snapshots that have arrived: the own
+    /// fresh snapshot at its own index plus each peer's latest mailbox
+    /// entry, summed in sender order (bit-identical to the seed-era slot
+    /// sweep on the instant fabric).
+    fn stale_average(&self, mine: &Arc<Vec<f32>>) -> Vec<f32> {
         let shared = &self.inner.shared;
         let mut acc: Option<Vec<f32>> = None;
         let mut count = 0usize;
-        for slot in shared.param_slots.iter() {
-            let guard = slot.lock().unwrap();
-            if let Some(v) = guard.as_ref() {
+        for from in 0..shared.m {
+            let snap: Option<Arc<Vec<f32>>> = if from == self.inner.wid {
+                Some(Arc::clone(mine))
+            } else {
+                shared
+                    .fabric
+                    .core()
+                    .latest_params(self.inner.wid, from)
+                    .map(|(_, flat)| flat)
+            };
+            if let Some(v) = snap {
                 match &mut acc {
-                    None => acc = Some(v.clone()),
+                    None => acc = Some(v.as_ref().clone()),
                     Some(a) => {
                         for (x, &y) in a.iter_mut().zip(v.iter()) {
                             *x += y;
@@ -68,7 +95,7 @@ impl Co2 {
                 count += 1;
             }
         }
-        let mut a = acc.expect("own slot always published");
+        let mut a = acc.expect("own snapshot always present");
         for x in &mut a {
             *x /= count as f32;
         }
@@ -93,12 +120,27 @@ impl WorkerAlgo for Co2 {
         self.inner.local_step(step, grads);
         if (step + 1) % self.inner.sync_period == 0 {
             let shared = Arc::clone(&self.inner.shared);
-            // publish fresh snapshot (starts the overlapped "all-reduce")
-            let mine = shared.params[self.inner.wid].flatten();
-            *shared.param_slots[self.inner.wid].lock().unwrap() = Some(mine);
+            let wid = self.inner.wid;
+            // ship a fresh snapshot to every peer (starts the overlapped
+            // "all-reduce"; on a delayed fabric it arrives late — staler
+            // averages, never a stall)
+            let mine = Arc::new(shared.params[wid].flatten());
+            for peer in 0..shared.m {
+                if peer != wid {
+                    let _ = shared.fabric.push(
+                        &shared,
+                        wid,
+                        peer,
+                        step,
+                        Payload::ParamShare { flat: Arc::clone(&mine) },
+                    );
+                }
+            }
             comm_delay(self.inner.comm_latency_s);
-            // average whatever is available — NO barrier (the overlap)
-            let avg = self.stale_average();
+            // pump the own inbox, then average whatever has arrived — NO
+            // barrier (the overlap)
+            shared.fabric.deliver_due(&shared, wid, step);
+            let avg = self.stale_average(&mine);
             let x_new = SlowMo::outer_step(
                 &mut self.u,
                 &mut self.x_prev,
@@ -106,7 +148,7 @@ impl WorkerAlgo for Co2 {
                 self.outer_momentum,
                 self.outer_lr,
             );
-            shared.params[self.inner.wid].store_flat(&x_new);
+            shared.params[wid].store_flat(&x_new);
         }
         Ok(())
     }

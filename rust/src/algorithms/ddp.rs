@@ -8,14 +8,22 @@
 //! overwrite a slot that another worker has not read yet.
 //!
 //! The synchronization barrier is DDP's weakness the paper targets: a
-//! straggler (Section 5.4) stalls *everyone*, and the serial
-//! backward -> all-reduce -> step dependency caps MFU (Table 4).
+//! straggler (Section 5.4) stalls *everyone*, the serial
+//! backward -> all-reduce -> step dependency caps MFU (Table 4), and on a
+//! delayed fabric every round-trip pays the link latency — the comparison
+//! `benches/fig_delay_robustness.rs` sweeps.
+//!
+//! Gradient exchange rides the communication fabric: each worker pushes its
+//! `GradShare` to every peer, then collects the full step-tagged set (own
+//! set at its own index, so the averaging order — and the averaged floats —
+//! are bit-identical to the seed-era slot exchange).
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::algorithms::{average_grad_sets, comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{average_grad_sets, comm_delay, GradSet, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -53,29 +61,34 @@ impl WorkerAlgo for Ddp {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        // publish my gradients
-        *self.shared.grad_slots[self.wid].lock().unwrap() = Some(ctx.take_grads());
+        // ship my gradients to every peer (the fabric accounts the naive
+        // all-gather volume: grad bytes x (m-1) per worker per step)
+        let mine: Arc<GradSet> = Arc::new(ctx.take_grads());
+        for peer in 0..self.shared.m {
+            if peer != self.wid {
+                let _ = self.shared.fabric.push(
+                    &self.shared,
+                    self.wid,
+                    peer,
+                    step,
+                    Payload::GradShare { set: Arc::clone(&mine) },
+                );
+            }
+        }
 
-        // all-reduce: barrier, average everyone's grads, barrier
+        // all-reduce: barrier, average everyone's grads, barrier. On a
+        // delayed fabric the collect blocks until every share arrives — the
+        // latency lands on DDP's critical path, as it does on real links.
         comm_delay(self.comm_latency_s);
         if !self.shared.barrier.wait(&self.shared.stop) {
             return Ok(()); // run is stopping
         }
+        let Some(sets) = comm::collect_grads(&self.shared, self.wid, step, mine) else {
+            return Ok(()); // run is stopping
+        };
         let avg = {
-            let guards: Vec<_> = self
-                .shared
-                .grad_slots
-                .iter()
-                .map(|s| s.lock().unwrap())
-                .collect();
-            let sets: Vec<&crate::algorithms::GradSet> = guards
-                .iter()
-                .map(|g| g.as_ref().expect("worker missed grad publish"))
-                .collect();
-            if sets.len() != self.shared.m {
-                bail!("ddp: incomplete gradient exchange");
-            }
-            average_grad_sets(&sets)
+            let refs: Vec<&GradSet> = sets.iter().map(|s| s.as_ref()).collect();
+            average_grad_sets(&refs)
         };
         if !self.shared.barrier.wait(&self.shared.stop) {
             return Ok(());

@@ -19,6 +19,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -79,26 +80,67 @@ impl WorkerAlgo for GoSgd {
             .topology
             .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
         let shipped = self.shared.weights[self.wid].halve();
-        match self.shared.weights[peer].try_accept(shipped) {
-            None => {
+        if self.shared.fabric.is_instant() {
+            // shared-memory fast path: the seed-era in-place push-sum mix
+            match self.shared.weights[peer].try_accept(shipped) {
+                None => {
+                    self.shared.weights[self.wid].reclaim(shipped);
+                    self.shared
+                        .events
+                        .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+                }
+                Some(frac) => {
+                    comm_delay(self.comm_latency_s);
+                    let peer_params = &self.shared.params[peer];
+                    for (li, layer) in my.layers.iter().enumerate() {
+                        for (ti, t) in layer.tensors.iter().enumerate() {
+                            let snap = t.snapshot();
+                            peer_params.layers[li].tensors[ti]
+                                .mix_from(1.0 - frac, frac, &snap.data);
+                        }
+                    }
+                    self.shared.weights[peer].release();
+                    self.shared.fabric.core().record_instant(
+                        &self.shared,
+                        self.wid,
+                        peer,
+                        step,
+                        wire_bytes(my.numel()),
+                    );
+                    self.shared
+                        .events
+                        .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
+                }
+            }
+        } else {
+            // queued transport: ship the whole model; the receiver performs
+            // the weight handshake and mixes at its next step boundary
+            let mut values: Vec<Vec<Vec<f32>>> = Vec::with_capacity(my.layers.len());
+            for layer in &my.layers {
+                let mut lv: Vec<Vec<f32>> = Vec::with_capacity(layer.tensors.len());
+                for t in &layer.tensors {
+                    lv.push(t.snapshot().data);
+                }
+                values.push(lv);
+            }
+            let outcome = self.shared.fabric.push(
+                &self.shared,
+                self.wid,
+                peer,
+                step,
+                Payload::ModelPush { w_in: shipped, values: Arc::new(values) },
+            );
+            if matches!(outcome, PushOutcome::Dropped | PushOutcome::Busy) {
+                // the link lost it: reclaim — mass is never destroyed. Count
+                // the skip on the sender's weight so the summary's
+                // gossip_skipped agrees with the emitted events.
                 self.shared.weights[self.wid].reclaim(shipped);
+                self.shared.weights[self.wid]
+                    .skipped
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 self.shared
                     .events
                     .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
-            }
-            Some(frac) => {
-                comm_delay(self.comm_latency_s);
-                let peer_params = &self.shared.params[peer];
-                for (li, layer) in my.layers.iter().enumerate() {
-                    for (ti, t) in layer.tensors.iter().enumerate() {
-                        let snap = t.snapshot();
-                        peer_params.layers[li].tensors[ti].mix_from(1.0 - frac, frac, &snap.data);
-                    }
-                }
-                self.shared.weights[peer].release();
-                self.shared
-                    .events
-                    .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
             }
         }
         Ok(())

@@ -39,6 +39,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -148,8 +149,29 @@ struct PushState {
     shipped_w: f32,
 }
 
+/// Per-iteration push state on a queued (simulated) fabric.
+struct SimPush {
+    peer: usize,
+    /// weight to ride the step's opening message (taken on first send)
+    open: Option<f32>,
+    /// true once the opening message was dropped: remaining layers skip
+    skipped: bool,
+}
+
 impl UpdaterThread {
-    fn run(mut self, rx: Receiver<Msg>) -> Result<()> {
+    fn run(self, rx: Receiver<Msg>) -> Result<()> {
+        // The transport decides the push mechanics: the instant fabric keeps
+        // the seed-era in-place handshake + fused mix (bit-for-bit), a
+        // queued fabric ships each layer as a message the peer applies at
+        // its own step boundaries.
+        if self.shared.fabric.is_instant() {
+            self.run_instant(rx)
+        } else {
+            self.run_sim(rx)
+        }
+    }
+
+    fn run_instant(mut self, rx: Receiver<Msg>) -> Result<()> {
         // Push state keyed by step: with `bwd_threads > 1` the backward pool
         // interleaves layer messages of different steps, so several
         // iterations are in flight at once. Each keeps its own peer/fraction
@@ -182,8 +204,22 @@ impl UpdaterThread {
                         // + mix sequence walked it three times).
                         Some(frac) if self.comm_latency_s <= 0.0 => {
                             let peer_params = &self.shared.params[peer];
-                            self.opt
-                                .step_layer_mix(my, peer_params, layer, &grads, step, 1.0 - frac, frac);
+                            self.opt.step_layer_mix(
+                                my,
+                                peer_params,
+                                layer,
+                                &grads,
+                                step,
+                                1.0 - frac,
+                                frac,
+                            );
+                            self.shared.fabric.core().record_instant(
+                                &self.shared,
+                                self.wid,
+                                peer,
+                                step,
+                                wire_bytes(my.layers[layer].numel()),
+                            );
                         }
                         // Simulated link latency: the local update must land
                         // *before* the transit sleep (the device does not wait
@@ -198,6 +234,13 @@ impl UpdaterThread {
                                 peer_params.layers[layer].tensors[ti]
                                     .mix_from(1.0 - frac, frac, &self.scratch);
                             }
+                            self.shared.fabric.core().record_instant(
+                                &self.shared,
+                                self.wid,
+                                peer,
+                                step,
+                                wire_bytes(my.layers[layer].numel()),
+                            );
                         }
                         // Skipped push (contention): local update only.
                         None => self.opt.step_layer(my, layer, &grads, step),
@@ -216,6 +259,89 @@ impl UpdaterThread {
         // (only possible when the run is winding down on an error)
         for (_, p) in pushes.drain() {
             self.close_iteration(p);
+        }
+        Ok(())
+    }
+
+    /// Queued-fabric updater: the local update applies immediately (the
+    /// device never waits on the network); each layer then ships as its own
+    /// message, the step's first (deepest) layer carrying the halved
+    /// push-sum weight. The *receiver* performs the weight handshake when
+    /// that opening message arrives and mixes follower layers as they land —
+    /// layer-wise propagation over real (simulated) links. A dropped opening
+    /// message reclaims the weight and skips the step's remaining sends,
+    /// exactly the contention-skip semantics of the instant path.
+    fn run_sim(mut self, rx: Receiver<Msg>) -> Result<()> {
+        let mut pushes: HashMap<usize, SimPush> = HashMap::new();
+        loop {
+            let msg = match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // sender dropped (worker errored out)
+            };
+            match msg {
+                Msg::Done => break,
+                Msg::Layer { step, layer, grads } => {
+                    if !pushes.contains_key(&step) {
+                        let m = self.shared.m;
+                        let peer = self.topology.peer(self.wid, m, step as u64, &mut self.rng);
+                        let shipped = self.shared.weights[self.wid].halve();
+                        pushes.insert(step, SimPush { peer, open: Some(shipped), skipped: false });
+                    }
+                    // local update first — Algorithm 1's
+                    // `x^{i,l} <- x̃^{i,l} - η ∇L` never waits on a link
+                    self.opt
+                        .step_layer(&self.shared.params[self.wid], layer, &grads, step);
+
+                    let p = pushes.get_mut(&step).expect("push state opened above");
+                    if !p.skipped {
+                        let tensors = &self.shared.params[self.wid].layers[layer].tensors;
+                        let mut vals: Vec<Vec<f32>> = Vec::with_capacity(tensors.len());
+                        for t in tensors {
+                            let mut v = vec![0.0f32; t.numel()];
+                            t.load_into(&mut v);
+                            vals.push(v);
+                        }
+                        let open_w = p.open.take();
+                        let outcome = self.shared.fabric.push(
+                            &self.shared,
+                            self.wid,
+                            p.peer,
+                            step,
+                            Payload::LayerPush { layer, open: open_w, values: Arc::new(vals) },
+                        );
+                        if matches!(outcome, PushOutcome::Dropped | PushOutcome::Busy) {
+                            if let Some(w) = open_w {
+                                // the opening message never left: reclaim the
+                                // weight and skip this step's remaining
+                                // layers — information is delayed, not lost.
+                                // Counted as a skip so the summary's
+                                // gossip_skipped agrees with the event stream.
+                                self.shared.weights[self.wid].reclaim(w);
+                                self.shared.weights[self.wid]
+                                    .skipped
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                p.skipped = true;
+                                self.shared.events.emit(TrainEvent::GossipSkipped {
+                                    worker: self.wid,
+                                    peer: p.peer,
+                                    step,
+                                });
+                            }
+                            // a dropped follower only delays that layer's mix
+                        }
+                    }
+                    if layer == 0 {
+                        pushes.remove(&step);
+                    }
+                }
+            }
+        }
+        // reclaim opening weights of steps that never sent (wind-down on
+        // error before their first layer message went out)
+        for (_, p) in pushes.drain() {
+            if let Some(w) = p.open {
+                self.shared.weights[self.wid].reclaim(w);
+            }
         }
         Ok(())
     }

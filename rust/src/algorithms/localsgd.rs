@@ -9,6 +9,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::{comm_delay, GradSet, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
@@ -46,27 +47,38 @@ impl LocalSgd {
         }
     }
 
-    /// Barrier-synchronized global parameter average (the "outer" sync).
+    /// Barrier-synchronized global parameter average (the "outer" sync),
+    /// exchanged over the communication fabric: each worker ships its
+    /// snapshot to every peer, then collects the step-tagged set (own
+    /// snapshot at its own index, so the summation order — and the averaged
+    /// floats — are bit-identical to the seed-era slot exchange). On a
+    /// delayed fabric the collect blocks until every snapshot arrives.
     /// Returns `None` when the run is stopping, otherwise the averaged flat
     /// parameter vector (callers may post-process it, e.g. SlowMo momentum).
-    pub(crate) fn global_average(&mut self) -> Result<Option<Vec<f32>>> {
-        let my = &self.shared.params[self.wid];
-        *self.shared.param_slots[self.wid].lock().unwrap() = Some(my.flatten());
+    pub(crate) fn global_average(&mut self, step: usize) -> Result<Option<Vec<f32>>> {
+        let mine = Arc::new(self.shared.params[self.wid].flatten());
+        for peer in 0..self.shared.m {
+            if peer != self.wid {
+                let _ = self.shared.fabric.push(
+                    &self.shared,
+                    self.wid,
+                    peer,
+                    step,
+                    Payload::ParamShare { flat: Arc::clone(&mine) },
+                );
+            }
+        }
         comm_delay(self.comm_latency_s);
         if !self.shared.barrier.wait(&self.shared.stop) {
             return Ok(None);
         }
+        let Some(flats) = comm::collect_params(&self.shared, self.wid, step, mine) else {
+            return Ok(None);
+        };
         let avg = {
-            let guards: Vec<_> = self
-                .shared
-                .param_slots
-                .iter()
-                .map(|s| s.lock().unwrap())
-                .collect();
-            let mut acc = guards[0].as_ref().expect("missing param slot").clone();
-            for g in &guards[1..] {
-                let v = g.as_ref().expect("missing param slot");
-                for (a, &b) in acc.iter_mut().zip(v.iter()) {
+            let mut acc: Vec<f32> = flats[0].as_ref().clone();
+            for f in &flats[1..] {
+                for (a, &b) in acc.iter_mut().zip(f.iter()) {
                     *a += b;
                 }
             }
@@ -99,7 +111,7 @@ impl WorkerAlgo for LocalSgd {
         let grads = ctx.take_grads();
         self.local_step(step, grads);
         if (step + 1) % self.sync_period == 0 {
-            if let Some(avg) = self.global_average()? {
+            if let Some(avg) = self.global_average(step)? {
                 self.shared.params[self.wid].store_flat(&avg);
             }
         }

@@ -338,8 +338,10 @@ pub fn average_grad_sets(sets: &[&GradSet]) -> GradSet {
         .collect()
 }
 
-/// Simulated communication latency: sleep if configured (thread cluster has
-/// no real network; the DES models paper-scale links instead).
+/// Legacy sender-side communication sleep (`TrainConfig::comm_latency_s`).
+/// Link-level delay, bandwidth and loss now live in the communication
+/// fabric (`crate::comm`, `TrainConfig::fabric`); this knob survives as a
+/// crude stall-the-sender model the older benches sweep.
 pub fn comm_delay(seconds: f64) {
     if seconds > 0.0 {
         std::thread::sleep(std::time::Duration::from_secs_f64(seconds));

@@ -84,7 +84,7 @@ impl WorkerAlgo for SlowMo {
         let grads = ctx.take_grads();
         self.inner.local_step(step, grads);
         if (step + 1) % self.inner.sync_period == 0 {
-            if let Some(avg) = self.inner.global_average()? {
+            if let Some(avg) = self.inner.global_average(step)? {
                 let x_new = Self::outer_step(
                     &mut self.u,
                     &mut self.x_prev,

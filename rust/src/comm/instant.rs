@@ -1,0 +1,122 @@
+//! The shared-memory transport: `push` applies the payload to the receiver
+//! synchronously on the sender's thread — bit-for-bit the seed-era direct
+//! `Shared` mutation semantics, now with per-link accounting.
+//!
+//! Gossip algorithms additionally keep their fused in-place hot paths when
+//! `Fabric::is_instant` (LayUp's `step_layer_mix` single traversal, GoSGD's
+//! snapshot-and-mix, AD-PSGD's synchronous symmetric swap) and account that
+//! traffic through `FabricCore::record_instant`; only the collective shares
+//! (DDP gradients, LocalSGD/SlowMo/CO2 snapshots) route through `push`.
+
+use crate::comm::{apply, ApplyResult, Fabric, FabricCore, Payload, PushOutcome};
+use crate::coordinator::Shared;
+
+/// See the module docs: zero-delay, loss-free, in-process links.
+pub struct InstantFabric {
+    core: FabricCore,
+}
+
+impl InstantFabric {
+    /// An instant fabric connecting `m` workers.
+    pub fn new(m: usize) -> InstantFabric {
+        InstantFabric { core: FabricCore::new(m) }
+    }
+}
+
+impl Fabric for InstantFabric {
+    fn core(&self) -> &FabricCore {
+        &self.core
+    }
+
+    fn is_instant(&self) -> bool {
+        true
+    }
+
+    fn push(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> PushOutcome {
+        self.core.record_send(shared, from, to, step, payload.bytes());
+        match apply(&self.core, shared, to, from, step, &payload) {
+            ApplyResult::Busy => PushOutcome::Busy,
+            ApplyResult::Applied { reply } => {
+                // applied at send time: zero staleness by definition
+                self.core.record_delivered(shared, from, to, step, step);
+                if let Some((dest, p)) = reply {
+                    // e.g. AD-PSGD's return half on the generic payload path
+                    // (the fused instant path swaps in place instead)
+                    let _ = self.push(shared, to, dest, step, p);
+                }
+                PushOutcome::Delivered
+            }
+        }
+    }
+
+    fn deliver_due(&self, _shared: &Shared, _wid: usize, _recv_step: usize) -> usize {
+        0 // nothing is ever queued
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::algorithms::GradSet;
+    use crate::comm::wire_bytes;
+    use crate::coordinator::Shared;
+    use crate::model::ModelParams;
+    use crate::tensor::{AtomicTensor, LayerParams, Tensor};
+
+    fn two_worker_shared(fabric: Arc<dyn Fabric>) -> Arc<Shared> {
+        let params = (0..2)
+            .map(|w| {
+                Arc::new(ModelParams {
+                    layers: vec![LayerParams {
+                        tensors: vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                            &[2],
+                            vec![w as f32, w as f32],
+                        ))],
+                    }],
+                })
+            })
+            .collect();
+        Shared::for_tests(params, fabric)
+    }
+
+    #[test]
+    fn grad_share_lands_in_mailbox_step_tagged() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::new(2));
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        let set: GradSet = vec![vec![Tensor::from_vec(&[1], vec![2.0])]];
+        let out = fabric.push(&shared, 0, 1, 7, Payload::GradShare { set: Arc::new(set) });
+        assert_eq!(out, PushOutcome::Delivered);
+        let (step, got) = fabric.core().latest_grads(1, 0).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(got[0][0].data, vec![2.0]);
+        let stats = fabric.core().snapshot();
+        assert_eq!(stats.msgs_sent, 1);
+        assert_eq!(stats.msgs_delivered, 1);
+        assert_eq!(stats.bytes_sent, wire_bytes(1));
+        assert_eq!(stats.staleness_sum, 0, "instant delivery has zero staleness");
+    }
+
+    #[test]
+    fn pair_average_applies_both_halves_synchronously() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::new(2));
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        let flat = Arc::new(shared.params[0].flatten());
+        let out = fabric.push(&shared, 0, 1, 0, Payload::PairAverage { flat, reply: false });
+        assert_eq!(out, PushOutcome::Delivered);
+        // worker 1 mixed 0.5/0.5 with worker 0's [0,0]; the reply mixed
+        // worker 0 with worker 1's pre-mix [1,1] — both end at 0.5
+        assert_eq!(shared.params[1].flatten(), vec![0.5, 0.5]);
+        assert_eq!(shared.params[0].flatten(), vec![0.5, 0.5]);
+        // both directions accounted
+        assert_eq!(fabric.core().snapshot().msgs_sent, 2);
+    }
+}

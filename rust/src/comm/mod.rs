@@ -1,0 +1,810 @@
+//! Communication fabric: pluggable transports for **all** inter-worker
+//! parameter traffic.
+//!
+//! The paper's headline claim is robustness to *delays*, yet the seed-era
+//! algorithms communicated by instantaneously mutating the peer's
+//! [`crate::tensor::AtomicTensor`] store, so delayed or lossy links could not
+//! be modeled at all. This module is the API seam that fixes that: every
+//! algorithm ships its traffic as a [`Payload`] through the run's [`Fabric`],
+//! and the fabric decides what a "link" means:
+//!
+//! * [`InstantFabric`] — the shared-memory transport. `push` applies the
+//!   payload to the receiver synchronously on the sender's thread, exactly
+//!   the seed-era semantics (the gossip algorithms additionally keep their
+//!   fused in-place hot paths when [`Fabric::is_instant`] — numerics are
+//!   bit-for-bit unchanged, now with per-link accounting).
+//! * [`SimFabric`] — queued per-link channels with seeded latency
+//!   distributions ([`LatencyDist`]), bandwidth-derived serialization delay
+//!   and drop probability; queued messages are applied by the *receiving*
+//!   worker at its step boundaries ([`Fabric::deliver_due`]). This is what
+//!   the delay-robustness sweep (`benches/fig_delay_robustness.rs`) runs on.
+//!
+//! # Protocol invariants
+//!
+//! * **Push-sum mass is delayed, never destroyed.** A gossip message carries
+//!   its shipped weight ([`Payload::shipped_weight`]); a drop is decided at
+//!   *send* time so the sender can reclaim (exactly the seed-era
+//!   contention-skip semantics), a busy receiver slot re-queues the message
+//!   instead of discarding it, and weight in flight is accounted by
+//!   [`SimFabric::in_flight_push_sum_mass`]. The property test in
+//!   `tests/properties.rs` pins this.
+//! * **Per-link FIFO.** Deliveries on one link happen in send order, so a
+//!   layer-wise push's opening message (which establishes the mixing
+//!   fraction) always precedes its followers.
+//! * **Collective shares are reliable.** [`Payload::GradShare`] and
+//!   [`Payload::ParamShare`] are never dropped (TCP-like), only delayed —
+//!   barrier rounds slow down under latency but cannot deadlock.
+
+pub mod instant;
+pub mod sim;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::GradSet;
+use crate::coordinator::Shared;
+use crate::metrics::{CommStats, LinkTraffic};
+use crate::session::events::TrainEvent;
+use crate::util::rng::Pcg32;
+
+pub use instant::InstantFabric;
+pub use sim::SimFabric;
+
+/// Serialized wire size of a message carrying `floats` f32 values (4 bytes
+/// each plus a fixed header).
+pub fn wire_bytes(floats: usize) -> u64 {
+    32 + 4 * floats as u64
+}
+
+/// One unit of inter-worker traffic. Gossip payloads mutate the receiver's
+/// parameter store on delivery; share payloads land in per-link mailboxes
+/// read by the collective algorithms.
+#[derive(Clone)]
+pub enum Payload {
+    /// LayUp: one layer of a push-sum step push. `open` carries the shipped
+    /// push-sum weight on the step's first (deepest) layer; followers of the
+    /// same step reuse the mixing fraction established when the opening
+    /// message was delivered. `values[param]` are the layer's tensors.
+    LayerPush {
+        /// layer index in the receiver's store
+        layer: usize,
+        /// shipped push-sum weight (opening message of the step only)
+        open: Option<f32>,
+        /// the layer's parameter tensors, flattened per parameter
+        values: Arc<Vec<Vec<f32>>>,
+    },
+    /// GoSGD: whole-model push-sum push (`values[layer][param]`).
+    ModelPush {
+        /// shipped push-sum weight
+        w_in: f32,
+        /// every layer's parameter tensors
+        values: Arc<Vec<Vec<Vec<f32>>>>,
+    },
+    /// AD-PSGD: symmetric pairwise averaging. The receiver mixes the
+    /// incoming snapshot into its own store (0.5/0.5) and — unless this
+    /// already *is* the reply — ships its pre-mix snapshot back, so both
+    /// halves of the exchange ride the links (2x communication volume, as
+    /// the paper notes).
+    PairAverage {
+        /// the sender's flattened parameters
+        flat: Arc<Vec<f32>>,
+        /// true for the return half (stops the ping-pong)
+        reply: bool,
+    },
+    /// DDP: one worker's gradient contribution to the all-reduce round
+    /// (mailbox payload, consumed by [`collect_grads`]).
+    GradShare {
+        /// the sender's full gradient set for this step
+        set: Arc<GradSet>,
+    },
+    /// LocalSGD / SlowMo / CO2: a flat parameter snapshot (mailbox payload;
+    /// barrier algorithms collect it with [`collect_params`], CO2 reads the
+    /// latest arrival without waiting).
+    ParamShare {
+        /// the sender's flattened parameters
+        flat: Arc<Vec<f32>>,
+    },
+}
+
+impl Payload {
+    /// Serialized wire size of this message.
+    pub fn bytes(&self) -> u64 {
+        let floats: usize = match self {
+            Payload::LayerPush { values, .. } => values.iter().map(|v| v.len()).sum(),
+            Payload::ModelPush { values, .. } => values
+                .iter()
+                .map(|l| l.iter().map(|v| v.len()).sum::<usize>())
+                .sum(),
+            Payload::PairAverage { flat, .. } | Payload::ParamShare { flat } => flat.len(),
+            Payload::GradShare { set } => set
+                .iter()
+                .map(|l| l.iter().map(|t| t.data.len()).sum::<usize>())
+                .sum(),
+        };
+        wire_bytes(floats)
+    }
+
+    /// May the transport drop this message? Gossip traffic tolerates loss
+    /// (the information is delayed to a later exchange); collective shares
+    /// are modeled as reliable so barrier rounds cannot deadlock.
+    pub fn droppable(&self) -> bool {
+        matches!(
+            self,
+            Payload::LayerPush { .. } | Payload::ModelPush { .. } | Payload::PairAverage { .. }
+        )
+    }
+
+    /// Push-sum weight mass this message carries while in flight.
+    pub fn shipped_weight(&self) -> f32 {
+        match self {
+            Payload::LayerPush { open, .. } => open.unwrap_or(0.0),
+            Payload::ModelPush { w_in, .. } => *w_in,
+            _ => 0.0,
+        }
+    }
+}
+
+/// What [`Fabric::push`] did with the message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Applied synchronously to the receiver (instant transports).
+    Delivered,
+    /// Queued on the link for later delivery (simulated transports).
+    Queued,
+    /// Dropped by the link. The sender must reclaim any shipped weight —
+    /// mass is never destroyed in flight.
+    Dropped,
+    /// The receiver's push-sum accept slot was busy (instant transports
+    /// only; a simulated transport re-queues instead). Semantics match a
+    /// contention skip: reclaim and retry at a later exchange.
+    Busy,
+}
+
+/// Seeded one-way link latency distributions for the simulated fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LatencyDist {
+    /// Fixed delay in seconds.
+    Constant(f64),
+    /// Uniform in `[lo, hi]` seconds.
+    Uniform {
+        /// lower bound (seconds)
+        lo: f64,
+        /// upper bound (seconds)
+        hi: f64,
+    },
+    /// Pareto-tailed: `scale * u^(-1/alpha)` — heavy-tailed link stragglers.
+    Pareto {
+        /// minimum delay (seconds)
+        scale: f64,
+        /// tail index (mean is finite for `alpha > 1`)
+        alpha: f64,
+    },
+}
+
+impl LatencyDist {
+    /// Draw one delay in seconds.
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match self {
+            LatencyDist::Constant(s) => *s,
+            LatencyDist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+            LatencyDist::Pareto { scale, alpha } => {
+                let u = (1.0 - rng.next_f64()).max(1e-12);
+                scale * u.powf(-1.0 / alpha)
+            }
+        }
+    }
+
+    /// Expected delay (infinite for a Pareto tail with `alpha <= 1`).
+    pub fn mean(&self) -> f64 {
+        match self {
+            LatencyDist::Constant(s) => *s,
+            LatencyDist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            LatencyDist::Pareto { scale, alpha } => {
+                if *alpha > 1.0 {
+                    scale * alpha / (alpha - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+
+    /// Reject nonsensical parameterizations.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            LatencyDist::Constant(s) => {
+                if *s < 0.0 || !s.is_finite() {
+                    bail!("link latency must be a finite nonnegative number of seconds, got {s}");
+                }
+            }
+            LatencyDist::Uniform { lo, hi } => {
+                if *lo < 0.0 || hi < lo || !hi.is_finite() {
+                    bail!("uniform link latency wants 0 <= lo <= hi, got {lo}..{hi}");
+                }
+            }
+            LatencyDist::Pareto { scale, alpha } => {
+                if *scale <= 0.0 || *alpha <= 0.0 || !scale.is_finite() || !alpha.is_finite() {
+                    bail!("pareto link latency wants scale > 0 and alpha > 0, got {scale},{alpha}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI/TOML latency spec: a plain number of seconds,
+    /// `constant:S`, `uniform:LO..HI` or `pareto:SCALE,ALPHA`.
+    pub fn parse(spec: &str) -> Result<LatencyDist> {
+        let spec = spec.trim();
+        if let Ok(v) = spec.parse::<f64>() {
+            return Ok(LatencyDist::Constant(v));
+        }
+        if let Some(rest) = spec.strip_prefix("constant:") {
+            let s: f64 = rest.trim().parse().context("constant latency wants seconds")?;
+            return Ok(LatencyDist::Constant(s));
+        }
+        if let Some(rest) = spec.strip_prefix("uniform:") {
+            let (lo, hi) = rest
+                .split_once("..")
+                .context("uniform latency wants LO..HI seconds")?;
+            return Ok(LatencyDist::Uniform {
+                lo: lo.trim().parse().context("uniform latency lower bound")?,
+                hi: hi.trim().parse().context("uniform latency upper bound")?,
+            });
+        }
+        if let Some(rest) = spec.strip_prefix("pareto:") {
+            let (scale, alpha) = rest
+                .split_once(',')
+                .context("pareto latency wants SCALE,ALPHA")?;
+            return Ok(LatencyDist::Pareto {
+                scale: scale.trim().parse().context("pareto latency scale")?,
+                alpha: alpha.trim().parse().context("pareto latency alpha")?,
+            });
+        }
+        bail!(
+            "unrecognized latency spec {spec:?} (expected SECONDS, constant:S, \
+             uniform:LO..HI or pareto:SCALE,ALPHA)"
+        )
+    }
+}
+
+/// Which transport a run uses (`TrainConfig::fabric`, CLI `--fabric`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FabricSpec {
+    /// Shared-memory transport: pushes mutate the peer synchronously —
+    /// bit-for-bit the seed-era semantics. The default.
+    Instant,
+    /// Queued per-link transport with seeded latency, bandwidth-derived
+    /// serialization delay and drop probability.
+    Sim {
+        /// one-way link latency distribution
+        latency: LatencyDist,
+        /// link bandwidth in bytes/s (0 = infinite: no serialization delay)
+        bandwidth_bytes_per_s: f64,
+        /// per-message drop probability for droppable (gossip) payloads
+        drop_prob: f64,
+    },
+}
+
+impl FabricSpec {
+    /// A simulated fabric with ideal links (zero latency, no loss) — the
+    /// starting point the `--link-*` CLI flags refine.
+    pub fn sim_default() -> FabricSpec {
+        FabricSpec::Sim {
+            latency: LatencyDist::Constant(0.0),
+            bandwidth_bytes_per_s: 0.0,
+            drop_prob: 0.0,
+        }
+    }
+
+    /// Short name for logs and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricSpec::Instant => "instant",
+            FabricSpec::Sim { .. } => "sim",
+        }
+    }
+
+    /// Reject nonsensical link parameters (called by `TrainConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if let FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } = self {
+            latency.validate()?;
+            if *bandwidth_bytes_per_s < 0.0 || !bandwidth_bytes_per_s.is_finite() {
+                bail!("link bandwidth must be >= 0 bytes/s (0 = infinite)");
+            }
+            if !(0.0..1.0).contains(drop_prob) {
+                bail!("link drop probability must be in [0, 1), got {drop_prob}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct the configured transport for an `m`-worker run.
+pub fn build_fabric(spec: &FabricSpec, m: usize, seed: u64) -> Arc<dyn Fabric> {
+    match spec {
+        FabricSpec::Instant => Arc::new(InstantFabric::new(m)),
+        FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => Arc::new(SimFabric::new(
+            latency.clone(),
+            *bandwidth_bytes_per_s,
+            *drop_prob,
+            m,
+            seed,
+        )),
+    }
+}
+
+/// A pluggable transport for inter-worker traffic. One fabric per run;
+/// workers address each other by worker id (a worker's "endpoint" is the
+/// `(fabric, wid)` pair every engine thread already holds via `Shared`).
+pub trait Fabric: Send + Sync {
+    /// Shared accounting and mailboxes (per-link traffic, collective shares).
+    fn core(&self) -> &FabricCore;
+
+    /// True when `push` mutates the receiver synchronously in shared memory.
+    /// Gossip algorithms then keep their fused in-place hot paths and account
+    /// the traffic through [`FabricCore::record_instant`].
+    fn is_instant(&self) -> bool;
+
+    /// Ship one message from worker `from` to worker `to`. `step` is the
+    /// sender's current step (staleness accounting).
+    fn push(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> PushOutcome;
+
+    /// Apply every message currently due for `wid` (no-op on instant
+    /// transports); returns how many were applied. Called by the receiving
+    /// worker at its step boundaries — `recv_step` is its current step.
+    fn deliver_due(&self, shared: &Shared, wid: usize, recv_step: usize) -> usize;
+}
+
+/// Per-link traffic counters (lock-free; snapshot via [`FabricCore::snapshot`]).
+#[derive(Default)]
+struct LinkCounters {
+    msgs: AtomicU64,
+    bytes: AtomicU64,
+    drops: AtomicU64,
+    delivered: AtomicU64,
+    staleness_sum: AtomicI64,
+}
+
+/// Latest collective share received on one link (mailbox slot).
+#[derive(Default)]
+struct ShareSlot {
+    grads: Option<(usize, Arc<GradSet>)>,
+    params: Option<(usize, Arc<Vec<f32>>)>,
+}
+
+/// State shared by every fabric implementation: per-link traffic counters,
+/// collective-share mailboxes, and the per-receiver mixing-fraction table
+/// that multi-message (layer-wise) pushes key by `(sender, step)`.
+pub struct FabricCore {
+    m: usize,
+    /// indexed `from * m + to`
+    links: Vec<LinkCounters>,
+    /// indexed `to * m + from`
+    shares: Vec<Mutex<ShareSlot>>,
+    /// per receiver: `(from, step) -> mixing fraction` for in-flight
+    /// layer-wise pushes
+    pending_frac: Vec<Mutex<HashMap<(usize, usize), f32>>>,
+}
+
+impl FabricCore {
+    /// Fresh core for an `m`-worker fabric.
+    pub fn new(m: usize) -> FabricCore {
+        FabricCore {
+            m,
+            links: (0..m * m).map(|_| LinkCounters::default()).collect(),
+            shares: (0..m * m).map(|_| Mutex::new(ShareSlot::default())).collect(),
+            pending_frac: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Number of workers this fabric connects.
+    pub fn workers(&self) -> usize {
+        self.m
+    }
+
+    fn link(&self, from: usize, to: usize) -> &LinkCounters {
+        &self.links[from * self.m + to]
+    }
+
+    fn share(&self, to: usize, from: usize) -> &Mutex<ShareSlot> {
+        &self.shares[to * self.m + from]
+    }
+
+    /// Count one message leaving `from` toward `to`.
+    pub fn record_send(&self, shared: &Shared, from: usize, to: usize, step: usize, bytes: u64) {
+        let l = self.link(from, to);
+        l.msgs.fetch_add(1, Ordering::Relaxed);
+        l.bytes.fetch_add(bytes, Ordering::Relaxed);
+        if shared.events.has_observers() {
+            shared.events.emit(TrainEvent::CommSent { from, to, step, bytes });
+        }
+    }
+
+    /// Count one message the link dropped (also counts as sent).
+    pub fn record_drop(&self, shared: &Shared, from: usize, to: usize, step: usize, bytes: u64) {
+        let l = self.link(from, to);
+        l.msgs.fetch_add(1, Ordering::Relaxed);
+        l.bytes.fetch_add(bytes, Ordering::Relaxed);
+        l.drops.fetch_add(1, Ordering::Relaxed);
+        if shared.events.has_observers() {
+            shared.events.emit(TrainEvent::CommDropped { from, to, step });
+        }
+    }
+
+    /// Count one delivery into `to`; staleness is `recv_step - sent_step`.
+    pub fn record_delivered(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        sent_step: usize,
+        recv_step: usize,
+    ) {
+        let l = self.link(from, to);
+        l.delivered.fetch_add(1, Ordering::Relaxed);
+        let staleness = recv_step as i64 - sent_step as i64;
+        l.staleness_sum.fetch_add(staleness, Ordering::Relaxed);
+        if shared.events.has_observers() {
+            shared
+                .events
+                .emit(TrainEvent::CommDelivered { from, to, step: sent_step, staleness });
+        }
+    }
+
+    /// Instant-transport accounting for a push the sender applied in place
+    /// (the fused gossip hot paths): one send plus one zero-staleness
+    /// delivery.
+    pub fn record_instant(&self, shared: &Shared, from: usize, to: usize, step: usize, bytes: u64) {
+        self.record_send(shared, from, to, step, bytes);
+        self.record_delivered(shared, from, to, step, step);
+    }
+
+    /// Deposit a gradient share from `from` into `to`'s mailbox.
+    pub fn put_grads(&self, to: usize, from: usize, step: usize, set: Arc<GradSet>) {
+        self.share(to, from).lock().unwrap().grads = Some((step, set));
+    }
+
+    /// Latest step-tagged gradient share `wid` received from `from`.
+    pub fn latest_grads(&self, wid: usize, from: usize) -> Option<(usize, Arc<GradSet>)> {
+        self.share(wid, from).lock().unwrap().grads.clone()
+    }
+
+    /// Deposit a parameter share from `from` into `to`'s mailbox.
+    pub fn put_params(&self, to: usize, from: usize, step: usize, flat: Arc<Vec<f32>>) {
+        self.share(to, from).lock().unwrap().params = Some((step, flat));
+    }
+
+    /// Latest step-tagged parameter share `wid` received from `from`.
+    pub fn latest_params(&self, wid: usize, from: usize) -> Option<(usize, Arc<Vec<f32>>)> {
+        self.share(wid, from).lock().unwrap().params.clone()
+    }
+
+    fn set_frac(&self, wid: usize, from: usize, step: usize, frac: f32) {
+        let mut map = self.pending_frac[wid].lock().unwrap();
+        // prune stale entries from the same sender (a lost layer-0 close
+        // would otherwise leak the entry forever)
+        map.retain(|&(f, s), _| f != from || s + 64 > step);
+        map.insert((from, step), frac);
+    }
+
+    fn get_frac(&self, wid: usize, from: usize, step: usize) -> Option<f32> {
+        self.pending_frac[wid].lock().unwrap().get(&(from, step)).copied()
+    }
+
+    fn clear_frac(&self, wid: usize, from: usize, step: usize) {
+        self.pending_frac[wid].lock().unwrap().remove(&(from, step));
+    }
+
+    /// Aggregate the per-link counters into a [`CommStats`] snapshot.
+    pub fn snapshot(&self) -> CommStats {
+        let mut stats = CommStats::default();
+        for from in 0..self.m {
+            for to in 0..self.m {
+                let l = self.link(from, to);
+                let msgs = l.msgs.load(Ordering::Relaxed);
+                let bytes = l.bytes.load(Ordering::Relaxed);
+                let drops = l.drops.load(Ordering::Relaxed);
+                let delivered = l.delivered.load(Ordering::Relaxed);
+                if msgs == 0 && delivered == 0 {
+                    continue;
+                }
+                stats.msgs_sent += msgs;
+                stats.bytes_sent += bytes;
+                stats.msgs_dropped += drops;
+                stats.msgs_delivered += delivered;
+                stats.staleness_sum += l.staleness_sum.load(Ordering::Relaxed);
+                stats.links.push(LinkTraffic { from, to, msgs, bytes, drops, delivered });
+            }
+        }
+        stats
+    }
+}
+
+/// Result of applying one delivered message to the receiver's state.
+pub(crate) enum ApplyResult {
+    /// Applied. `reply` is traffic the delivery itself produced (AD-PSGD's
+    /// return half) for the fabric to ship.
+    Applied {
+        /// `(destination, payload)` to push on behalf of the receiver
+        reply: Option<(usize, Payload)>,
+    },
+    /// The receiver's push-sum accept slot was busy; redeliver later
+    /// (delayed, never destroyed).
+    Busy,
+}
+
+/// Apply `payload` (sent by `from` at `step`) to worker `wid`'s state:
+/// gossip payloads mix into the parameter store with push-sum bookkeeping,
+/// collective shares land in the mailboxes. Shared by both transports — the
+/// instant fabric calls it from `push`, the simulated one from
+/// `deliver_due`.
+pub(crate) fn apply(
+    core: &FabricCore,
+    shared: &Shared,
+    wid: usize,
+    from: usize,
+    step: usize,
+    payload: &Payload,
+) -> ApplyResult {
+    match payload {
+        Payload::LayerPush { layer, open, values } => {
+            let frac = match open {
+                Some(w_in) => match shared.weights[wid].try_accept(*w_in) {
+                    None => return ApplyResult::Busy,
+                    Some(frac) => {
+                        shared.weights[wid].release();
+                        core.set_frac(wid, from, step, frac);
+                        shared
+                            .events
+                            .emit(TrainEvent::GossipApplied { worker: from, peer: wid, step });
+                        frac
+                    }
+                },
+                None => match core.get_frac(wid, from, step) {
+                    Some(f) => f,
+                    // the opening message never arrived: this layer's mix is
+                    // delayed to a later push (parameters, not weight mass)
+                    None => return ApplyResult::Applied { reply: None },
+                },
+            };
+            for (ti, vals) in values.iter().enumerate() {
+                shared.params[wid].layers[*layer].tensors[ti].mix_from(1.0 - frac, frac, vals);
+            }
+            if *layer == 0 {
+                core.clear_frac(wid, from, step);
+            }
+            ApplyResult::Applied { reply: None }
+        }
+        Payload::ModelPush { w_in, values } => match shared.weights[wid].try_accept(*w_in) {
+            None => ApplyResult::Busy,
+            Some(frac) => {
+                for (li, layer) in values.iter().enumerate() {
+                    for (ti, vals) in layer.iter().enumerate() {
+                        shared.params[wid].layers[li].tensors[ti].mix_from(1.0 - frac, frac, vals);
+                    }
+                }
+                shared.weights[wid].release();
+                shared
+                    .events
+                    .emit(TrainEvent::GossipApplied { worker: from, peer: wid, step });
+                ApplyResult::Applied { reply: None }
+            }
+        },
+        Payload::PairAverage { flat, reply } => {
+            let back = if *reply {
+                None
+            } else {
+                Some((
+                    from,
+                    Payload::PairAverage {
+                        flat: Arc::new(shared.params[wid].flatten()),
+                        reply: true,
+                    },
+                ))
+            };
+            let mut off = 0usize;
+            for layer in &shared.params[wid].layers {
+                for t in &layer.tensors {
+                    let n = t.numel();
+                    t.mix_from(0.5, 0.5, &flat[off..off + n]);
+                    off += n;
+                }
+            }
+            shared
+                .events
+                .emit(TrainEvent::GossipApplied { worker: from, peer: wid, step });
+            ApplyResult::Applied { reply: back }
+        }
+        Payload::GradShare { set } => {
+            core.put_grads(wid, from, step, Arc::clone(set));
+            ApplyResult::Applied { reply: None }
+        }
+        Payload::ParamShare { flat } => {
+            core.put_params(wid, from, step, Arc::clone(flat));
+            ApplyResult::Applied { reply: None }
+        }
+    }
+}
+
+/// Block (pumping deliveries) until every peer's gradient share for `step`
+/// arrived at `wid`. `mine` fills the own-worker position so the result is
+/// ordered by sender id — the all-reduce averaging order the seed code used,
+/// kept for bit-identical averages. Returns `None` when the run is stopping.
+pub fn collect_grads(
+    shared: &Shared,
+    wid: usize,
+    step: usize,
+    mine: Arc<GradSet>,
+) -> Option<Vec<Arc<GradSet>>> {
+    loop {
+        shared.fabric.deliver_due(shared, wid, step);
+        let mut out: Vec<Arc<GradSet>> = Vec::with_capacity(shared.m);
+        let mut complete = true;
+        for from in 0..shared.m {
+            if from == wid {
+                out.push(Arc::clone(&mine));
+                continue;
+            }
+            match shared.fabric.core().latest_grads(wid, from) {
+                Some((s, set)) if s == step => out.push(set),
+                _ => {
+                    complete = false;
+                    break;
+                }
+            }
+        }
+        if complete {
+            return Some(out);
+        }
+        if shared.should_stop() {
+            return None;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// Block (pumping deliveries) until every peer's parameter share for `step`
+/// arrived at `wid`; ordering as in [`collect_grads`]. `None` when stopping.
+pub fn collect_params(
+    shared: &Shared,
+    wid: usize,
+    step: usize,
+    mine: Arc<Vec<f32>>,
+) -> Option<Vec<Arc<Vec<f32>>>> {
+    loop {
+        shared.fabric.deliver_due(shared, wid, step);
+        let mut out: Vec<Arc<Vec<f32>>> = Vec::with_capacity(shared.m);
+        let mut complete = true;
+        for from in 0..shared.m {
+            if from == wid {
+                out.push(Arc::clone(&mine));
+                continue;
+            }
+            match shared.fabric.core().latest_params(wid, from) {
+                Some((s, flat)) if s == step => out.push(flat),
+                _ => {
+                    complete = false;
+                    break;
+                }
+            }
+        }
+        if complete {
+            return Some(out);
+        }
+        if shared.should_stop() {
+            return None;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_specs_parse_and_validate() {
+        assert_eq!(LatencyDist::parse("0.01").unwrap(), LatencyDist::Constant(0.01));
+        assert_eq!(LatencyDist::parse("constant:0.5").unwrap(), LatencyDist::Constant(0.5));
+        assert_eq!(
+            LatencyDist::parse("uniform:0.001..0.02").unwrap(),
+            LatencyDist::Uniform { lo: 0.001, hi: 0.02 }
+        );
+        assert_eq!(
+            LatencyDist::parse("pareto:0.003,1.5").unwrap(),
+            LatencyDist::Pareto { scale: 0.003, alpha: 1.5 }
+        );
+        assert!(LatencyDist::parse("gamma:1").is_err());
+        assert!(LatencyDist::parse("uniform:5").is_err());
+        assert!(LatencyDist::Uniform { lo: 0.2, hi: 0.1 }.validate().is_err());
+        assert!(LatencyDist::Constant(-1.0).validate().is_err());
+        assert!(LatencyDist::Pareto { scale: 0.0, alpha: 1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn latency_samples_respect_bounds_and_mean() {
+        let mut rng = Pcg32::new(5);
+        let u = LatencyDist::Uniform { lo: 0.001, hi: 0.002 };
+        for _ in 0..1000 {
+            let v = u.sample(&mut rng);
+            assert!((0.001..=0.002).contains(&v), "{v}");
+        }
+        let p = LatencyDist::Pareto { scale: 1e-3, alpha: 2.0 };
+        for _ in 0..1000 {
+            assert!(p.sample(&mut rng) >= 1e-3);
+        }
+        assert!((p.mean() - 2e-3).abs() < 1e-12);
+        assert_eq!(LatencyDist::Constant(0.7).mean(), 0.7);
+        assert!(LatencyDist::Pareto { scale: 1.0, alpha: 0.5 }.mean().is_infinite());
+    }
+
+    #[test]
+    fn fabric_spec_validation_and_names() {
+        assert_eq!(FabricSpec::Instant.name(), "instant");
+        assert_eq!(FabricSpec::sim_default().name(), "sim");
+        FabricSpec::Instant.validate().unwrap();
+        FabricSpec::sim_default().validate().unwrap();
+        let bad = FabricSpec::Sim {
+            latency: LatencyDist::Constant(0.0),
+            bandwidth_bytes_per_s: 0.0,
+            drop_prob: 1.0,
+        };
+        assert!(bad.validate().is_err(), "drop probability 1.0 would drop everything");
+    }
+
+    #[test]
+    fn payload_bytes_and_droppability() {
+        let layer = Payload::LayerPush {
+            layer: 0,
+            open: Some(0.25),
+            values: Arc::new(vec![vec![0.0; 10], vec![0.0; 2]]),
+        };
+        assert_eq!(layer.bytes(), wire_bytes(12));
+        assert!(layer.droppable());
+        assert_eq!(layer.shipped_weight(), 0.25);
+
+        let share = Payload::ParamShare { flat: Arc::new(vec![0.0; 7]) };
+        assert_eq!(share.bytes(), wire_bytes(7));
+        assert!(!share.droppable(), "collective shares are reliable");
+        assert_eq!(share.shipped_weight(), 0.0);
+    }
+
+    #[test]
+    fn core_mailboxes_and_snapshot() {
+        use crate::tensor::Tensor;
+
+        let core = FabricCore::new(2);
+        let set: GradSet = vec![vec![Tensor::from_vec(&[1], vec![3.0])]];
+        core.put_grads(1, 0, 4, Arc::new(set));
+        let (s, got) = core.latest_grads(1, 0).unwrap();
+        assert_eq!(s, 4);
+        assert_eq!(got[0][0].data, vec![3.0]);
+        assert!(core.latest_grads(0, 1).is_none());
+
+        core.put_params(0, 1, 9, Arc::new(vec![1.0, 2.0]));
+        let (s, flat) = core.latest_params(0, 1).unwrap();
+        assert_eq!(s, 9);
+        assert_eq!(*flat, vec![1.0, 2.0]);
+
+        // fraction table prunes per sender
+        core.set_frac(0, 1, 10, 0.5);
+        assert_eq!(core.get_frac(0, 1, 10), Some(0.5));
+        core.set_frac(0, 1, 100, 0.25);
+        assert_eq!(core.get_frac(0, 1, 10), None, "stale entry pruned");
+        core.clear_frac(0, 1, 100);
+        assert_eq!(core.get_frac(0, 1, 100), None);
+
+        assert_eq!(core.snapshot().msgs_sent, 0);
+    }
+}

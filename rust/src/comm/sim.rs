@@ -1,0 +1,363 @@
+//! The simulated transport: per-link FIFO queues with seeded latency,
+//! bandwidth-derived serialization delay and drop probability. Queued
+//! messages are applied by the *receiving* worker at its step boundaries
+//! (`Fabric::deliver_due`), so a delayed link shows up exactly where it does
+//! on real hardware: synchronous algorithms stall on it, asynchronous ones
+//! absorb it as staleness.
+//!
+//! Link model, per message: the transmitter serializes at `bytes/bandwidth`
+//! (links are half-duplex per direction, so back-to-back messages queue
+//! behind each other), then the sampled propagation latency applies, and
+//! delivery order on a link is clamped to FIFO (in-order, TCP-like).
+//! Droppable payloads are lost at *send* time with probability `drop_prob`
+//! so the sender can reclaim shipped push-sum weight — mass is delayed or
+//! returned, never destroyed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::comm::{apply, ApplyResult, Fabric, FabricCore, LatencyDist, Payload, PushOutcome};
+use crate::coordinator::Shared;
+use crate::util::rng::Pcg32;
+
+/// One message queued on a link.
+struct Queued {
+    seq: u64,
+    ready_at: f64,
+    from: usize,
+    step: usize,
+    payload: Payload,
+}
+
+/// Sender-side state of one directed link.
+struct Link {
+    /// when the transmitter frees up (bandwidth serialization)
+    next_free: f64,
+    /// last scheduled arrival (enforces per-link FIFO delivery)
+    last_ready: f64,
+    /// seeded per-link randomness (latency samples, drop decisions)
+    rng: Pcg32,
+}
+
+/// See the module docs: queued per-link channels with delay, bandwidth and
+/// loss. Construct via `crate::comm::build_fabric` or directly in tests.
+pub struct SimFabric {
+    core: FabricCore,
+    latency: LatencyDist,
+    bandwidth_bytes_per_s: f64,
+    drop_prob: f64,
+    epoch: Instant,
+    seq: AtomicU64,
+    /// indexed `from * m + to`
+    links: Vec<Mutex<Link>>,
+    /// per receiver
+    inboxes: Vec<Mutex<Vec<Queued>>>,
+}
+
+impl SimFabric {
+    /// A simulated fabric connecting `m` workers; all link randomness is
+    /// derived from `seed`.
+    pub fn new(
+        latency: LatencyDist,
+        bandwidth_bytes_per_s: f64,
+        drop_prob: f64,
+        m: usize,
+        seed: u64,
+    ) -> SimFabric {
+        SimFabric {
+            core: FabricCore::new(m),
+            latency,
+            bandwidth_bytes_per_s,
+            drop_prob,
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            links: (0..m * m)
+                .map(|i| {
+                    Mutex::new(Link {
+                        next_free: 0.0,
+                        last_ready: 0.0,
+                        rng: Pcg32::new(
+                            seed ^ 0xfab2 ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        ),
+                    })
+                })
+                .collect(),
+            inboxes: (0..m).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Messages queued on the links (sent but not yet applied).
+    pub fn pending_count(&self) -> usize {
+        self.inboxes.iter().map(|b| b.lock().unwrap().len()).sum()
+    }
+
+    /// Push-sum mass currently riding the links, as `(weight, weighted
+    /// parameter vector)` — whole-model pushes contribute `w_in * x`
+    /// flattened. Diagnostic accessor for the conservation property: mass in
+    /// flight is delayed, never destroyed.
+    pub fn in_flight_push_sum_mass(&self) -> (f64, Vec<f64>) {
+        let mut w_total = 0.0f64;
+        let mut wx: Vec<f64> = Vec::new();
+        for inbox in &self.inboxes {
+            for q in inbox.lock().unwrap().iter() {
+                w_total += q.payload.shipped_weight() as f64;
+                if let Payload::ModelPush { w_in, values } = &q.payload {
+                    let mut k = 0usize;
+                    for layer in values.iter() {
+                        for vals in layer {
+                            for &v in vals {
+                                if wx.len() <= k {
+                                    wx.resize(k + 1, 0.0);
+                                }
+                                wx[k] += *w_in as f64 * v as f64;
+                                k += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (w_total, wx)
+    }
+}
+
+impl Fabric for SimFabric {
+    fn core(&self) -> &FabricCore {
+        &self.core
+    }
+
+    fn is_instant(&self) -> bool {
+        false
+    }
+
+    fn push(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> PushOutcome {
+        let bytes = payload.bytes();
+        let m = self.core.workers();
+        let ready_at = {
+            let mut link = self.links[from * m + to].lock().unwrap();
+            if payload.droppable() && self.drop_prob > 0.0 && link.rng.next_f64() < self.drop_prob
+            {
+                drop(link);
+                self.core.record_drop(shared, from, to, step, bytes);
+                return PushOutcome::Dropped;
+            }
+            let now = self.now();
+            let tx_start = now.max(link.next_free);
+            let ser = if self.bandwidth_bytes_per_s > 0.0 {
+                bytes as f64 / self.bandwidth_bytes_per_s
+            } else {
+                0.0
+            };
+            link.next_free = tx_start + ser;
+            let lat = self.latency.sample(&mut link.rng);
+            let ready = (link.next_free + lat).max(link.last_ready);
+            link.last_ready = ready;
+            ready
+        };
+        self.core.record_send(shared, from, to, step, bytes);
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.inboxes[to]
+            .lock()
+            .unwrap()
+            .push(Queued { seq, ready_at, from, step, payload });
+        PushOutcome::Queued
+    }
+
+    fn deliver_due(&self, shared: &Shared, wid: usize, recv_step: usize) -> usize {
+        let now = self.now();
+        let mut due: Vec<Queued> = Vec::new();
+        {
+            let mut inbox = self.inboxes[wid].lock().unwrap();
+            if inbox.is_empty() {
+                return 0;
+            }
+            let mut keep = Vec::with_capacity(inbox.len());
+            for q in inbox.drain(..) {
+                if q.ready_at <= now {
+                    due.push(q);
+                } else {
+                    keep.push(q);
+                }
+            }
+            *inbox = keep;
+        }
+        if due.is_empty() {
+            return 0;
+        }
+        due.sort_by(|a, b| {
+            a.ready_at
+                .partial_cmp(&b.ready_at)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.seq.cmp(&b.seq))
+        });
+        let mut applied = 0usize;
+        let mut replies: Vec<(usize, Payload)> = Vec::new();
+        let mut leftover: Vec<Queued> = Vec::new();
+        let mut it = due.into_iter();
+        while let Some(q) = it.next() {
+            match apply(&self.core, shared, wid, q.from, q.step, &q.payload) {
+                ApplyResult::Busy => {
+                    // busy accept slot: delay, never destroy — put this and
+                    // everything after it back (preserving order) and retry
+                    // at the next boundary
+                    leftover.push(q);
+                    leftover.extend(it);
+                    break;
+                }
+                ApplyResult::Applied { reply } => {
+                    self.core.record_delivered(shared, q.from, wid, q.step, recv_step);
+                    if let Some((dest, p)) = reply {
+                        replies.push((dest, p));
+                    }
+                    applied += 1;
+                }
+            }
+        }
+        if !leftover.is_empty() {
+            let mut inbox = self.inboxes[wid].lock().unwrap();
+            leftover.extend(inbox.drain(..));
+            *inbox = leftover;
+        }
+        for (dest, p) in replies {
+            // delivery-generated traffic (AD-PSGD's return half) ships from
+            // the receiver at its current step
+            let _ = self.push(shared, wid, dest, recv_step, p);
+        }
+        applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+
+    use crate::coordinator::Shared;
+    use crate::model::ModelParams;
+    use crate::tensor::{AtomicTensor, LayerParams, Tensor};
+
+    fn two_worker_shared(fabric: Arc<dyn Fabric>) -> Arc<Shared> {
+        let params = (0..2)
+            .map(|w| {
+                Arc::new(ModelParams {
+                    layers: vec![LayerParams {
+                        tensors: vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                            &[2],
+                            vec![w as f32, w as f32],
+                        ))],
+                    }],
+                })
+            })
+            .collect();
+        Shared::for_tests(params, fabric)
+    }
+
+    #[test]
+    fn model_push_queues_then_mixes_at_the_boundary() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, 2, 1));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        let shipped = shared.weights[0].halve(); // 0.5 -> ships 0.25
+        let values = Arc::new(vec![vec![vec![5.0f32, 5.0]]]);
+        let out = fabric.push(&shared, 0, 1, 3, Payload::ModelPush { w_in: shipped, values });
+        assert_eq!(out, PushOutcome::Queued);
+        assert_eq!(sim.pending_count(), 1);
+        // nothing mutated until the receiver's step boundary
+        assert_eq!(shared.params[1].flatten(), vec![1.0, 1.0]);
+
+        assert_eq!(fabric.deliver_due(&shared, 1, 5), 1);
+        assert_eq!(sim.pending_count(), 0);
+        let frac = 0.25 / 0.75; // w_in / (w_self + w_in)
+        let want = (1.0 - frac) * 1.0 + frac * 5.0;
+        for v in shared.params[1].flatten() {
+            assert!((v - want).abs() < 1e-6, "{v} vs {want}");
+        }
+        // weight mass folded into the receiver, total conserved
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-6);
+        let stats = fabric.core().snapshot();
+        assert_eq!((stats.msgs_sent, stats.msgs_delivered), (1, 1));
+        assert_eq!(stats.staleness_sum, 2, "sent at step 3, delivered at step 5");
+    }
+
+    #[test]
+    fn busy_slot_requeues_instead_of_destroying() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, 2, 2));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        // claim worker 1's accept slot so the delivery finds it busy
+        assert!(shared.weights[1].try_accept(0.0).is_some());
+        let shipped = shared.weights[0].halve();
+        let values = Arc::new(vec![vec![vec![2.0f32, 2.0]]]);
+        let _ = fabric.push(&shared, 0, 1, 0, Payload::ModelPush { w_in: shipped, values });
+        assert_eq!(fabric.deliver_due(&shared, 1, 0), 0);
+        assert_eq!(sim.pending_count(), 1, "busy delivery is re-queued, not lost");
+
+        shared.weights[1].release();
+        assert_eq!(fabric.deliver_due(&shared, 1, 1), 1);
+        assert_eq!(sim.pending_count(), 0);
+    }
+
+    #[test]
+    fn drops_are_counted_and_the_sender_reclaims() {
+        // probability > 1 (config validation forbids it, the raw constructor
+        // does not): every draw of next_f64() in [0,1) hits, deterministically
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 2.0, 2, 9));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        let before = shared.weights[0].get();
+        let shipped = shared.weights[0].halve();
+        let values = Arc::new(vec![vec![vec![1.0f32, 1.0]]]);
+        let out = fabric.push(&shared, 0, 1, 0, Payload::ModelPush { w_in: shipped, values });
+        assert_eq!(out, PushOutcome::Dropped);
+        shared.weights[0].reclaim(shipped);
+        assert!((shared.weights[0].get() - before).abs() < 1e-7);
+        assert_eq!(sim.pending_count(), 0);
+
+        let stats = fabric.core().snapshot();
+        assert_eq!(stats.msgs_dropped, 1);
+        assert_eq!(stats.msgs_delivered, 0);
+        // reliable payloads are never dropped
+        let out = fabric.push(
+            &shared,
+            0,
+            1,
+            0,
+            Payload::ParamShare { flat: Arc::new(vec![0.0; 4]) },
+        );
+        assert_eq!(out, PushOutcome::Queued);
+    }
+
+    #[test]
+    fn latency_holds_messages_until_due() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(30.0), 0.0, 0.0, 2, 3));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            0,
+            Payload::ParamShare { flat: Arc::new(vec![1.0, 1.0]) },
+        );
+        assert_eq!(fabric.deliver_due(&shared, 1, 0), 0, "30s latency: not due yet");
+        assert_eq!(sim.pending_count(), 1);
+        assert!(fabric.core().latest_params(1, 0).is_none());
+    }
+}

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::{FabricSpec, LatencyDist};
 use crate::optim::{OptimKind, Schedule};
 use crate::topology::Topology;
 
@@ -236,6 +237,10 @@ pub struct TrainConfig {
     /// bounded pass-queue capacity per worker: the forward pool blocks
     /// (backpressure) once this many passes await backward
     pub queue_depth: usize,
+    /// communication fabric: `Instant` (seed-era shared-memory semantics,
+    /// default) or `Sim` (per-link latency, bandwidth and loss — the
+    /// delay-robustness experiments)
+    pub fabric: FabricSpec,
 }
 
 impl TrainConfig {
@@ -260,6 +265,7 @@ impl TrainConfig {
             fwd_threads: 1,
             bwd_threads: 1,
             queue_depth: 2,
+            fabric: FabricSpec::Instant,
         }
     }
 
@@ -293,6 +299,7 @@ impl TrainConfig {
                 self.algorithm.name()
             );
         }
+        self.fabric.validate()?;
         Ok(())
     }
 
@@ -314,6 +321,28 @@ impl TrainConfig {
         cfg.fwd_threads = doc.usize_or("run", "fwd_threads", 1);
         cfg.bwd_threads = doc.usize_or("run", "bwd_threads", 1);
         cfg.queue_depth = doc.usize_or("run", "queue_depth", 2);
+
+        // [fabric] section: kind = "instant" | "sim", plus the sim link knobs
+        cfg.fabric = match doc.str_or("fabric", "kind", "instant") {
+            "instant" => FabricSpec::Instant,
+            "sim" => {
+                let latency = match doc.get("fabric", "latency") {
+                    None => LatencyDist::Constant(0.0),
+                    Some(TomlValue::Str(spec)) => LatencyDist::parse(spec)?,
+                    Some(v) => match v.as_f64() {
+                        Some(s) => LatencyDist::Constant(s),
+                        None => bail!("fabric.latency must be seconds or a latency spec string"),
+                    },
+                };
+                FabricSpec::Sim {
+                    latency,
+                    // Mbit/s in the file, bytes/s internally
+                    bandwidth_bytes_per_s: doc.f64_or("fabric", "bandwidth_mbps", 0.0) * 125_000.0,
+                    drop_prob: doc.f64_or("fabric", "drop_prob", 0.0),
+                }
+            }
+            other => bail!("fabric.kind: expected \"instant\" or \"sim\", got {other:?}"),
+        };
 
         let lr = doc.f64_or("optim", "lr", 0.05) as f32;
         let wd = doc.f64_or("optim", "weight_decay", 0.0) as f32;
@@ -458,6 +487,49 @@ mod tests {
                 assert!(!algo.uses_barrier());
             }
         }
+    }
+
+    #[test]
+    fn fabric_section_parses_and_validates() {
+        // default: the instant shared-memory transport
+        let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        assert_eq!(d.fabric, FabricSpec::Instant);
+
+        let doc = Toml::parse(
+            r#"
+            [run]
+            algorithm = "layup"
+            [fabric]
+            kind = "sim"
+            latency = "uniform:0.001..0.01"
+            bandwidth_mbps = 100
+            drop_prob = 0.05
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        match cfg.fabric {
+            FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => {
+                assert_eq!(latency, LatencyDist::Uniform { lo: 0.001, hi: 0.01 });
+                assert!((bandwidth_bytes_per_s - 12_500_000.0).abs() < 1e-6);
+                assert!((drop_prob - 0.05).abs() < 1e-12);
+            }
+            other => panic!("expected a sim fabric, got {other:?}"),
+        }
+
+        // bare number = constant seconds
+        let doc = Toml::parse("[fabric]\nkind = \"sim\"\nlatency = 0.002\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert!(matches!(
+            cfg.fabric,
+            FabricSpec::Sim { latency: LatencyDist::Constant(s), .. } if (s - 0.002).abs() < 1e-12
+        ));
+
+        // invalid knobs are rejected at parse time (validate runs in from_toml)
+        let doc = Toml::parse("[fabric]\nkind = \"sim\"\ndrop_prob = 1.5\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[fabric]\nkind = \"carrier-pigeon\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]

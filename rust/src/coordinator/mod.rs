@@ -7,8 +7,8 @@
 //! * [`crate::session`] — the public facade: build a session from a
 //!   `TrainConfig` + `Manifest`, attach typed-event observers, run, get a
 //!   `RunSummary`;
-//! * [`engine`] — spawns the per-device drivers and aggregates their stats;
-//! * [`worker`] — the per-device drivers themselves. Two execution modes:
+//! * `engine` — spawns the per-device drivers and aggregates their stats;
+//! * `worker` — the per-device drivers themselves. Two execution modes:
 //!   **serial** (`decoupled = false`, default): one thread runs
 //!   forward -> backward -> hooks per step — the "computation thread" of
 //!   Figure 1, unchanged, so all historical benches stay comparable;
@@ -23,9 +23,15 @@
 //! Algorithms hook both modes via [`crate::algorithms::WorkerAlgo`] — see
 //! that module's threading contract for decoupled-mode semantics.
 //!
+//! All inter-worker traffic flows through the run's communication fabric
+//! ([`crate::comm::Fabric`], held on [`Shared`]): collective shares land in
+//! the fabric's mailboxes and gossip payloads mix into the receiving store —
+//! instantly on the shared-memory transport, at the receiver's step
+//! boundaries on the simulated one (the per-step `deliver_due` call in
+//! `worker`).
+//!
 //! This module keeps the shared state ([`Shared`], [`StopBarrier`],
-//! [`WorkerStats`]) plus thin deprecated shims for the seed-era
-//! `coordinator::run`/`run_all` free functions.
+//! [`WorkerStats`]); the public run entry is `layup::session`.
 
 pub(crate) mod engine;
 pub mod queue;
@@ -37,10 +43,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::algorithms::GradSet;
+use crate::comm::Fabric;
 use crate::config::TrainConfig;
 use crate::manifest::Manifest;
-use crate::metrics::{Curve, DriftTracker, QueueStats, RunSummary};
+use crate::metrics::{Curve, DriftTracker, QueueStats};
 use crate::model::ModelParams;
 use crate::session::events::EventBus;
 use crate::topology::PushSumWeight;
@@ -98,10 +104,9 @@ pub struct Shared {
     pub weights: Vec<PushSumWeight>,
     /// synchronization barrier (DDP / LocalSGD family)
     pub barrier: StopBarrier,
-    /// gradient exchange slots (DDP all-reduce)
-    pub grad_slots: Vec<Mutex<Option<GradSet>>>,
-    /// flat parameter exchange slots (LocalSGD / SlowMo / CO2)
-    pub param_slots: Vec<Mutex<Option<Vec<f32>>>>,
+    /// the run's communication fabric: every inter-worker byte (gossip
+    /// pushes, all-reduce shares, snapshot exchanges) goes through it
+    pub fabric: Arc<dyn Fabric>,
     /// cooperative shutdown (set on worker error)
     pub stop: AtomicBool,
     /// eval learning curve (written by worker 0)
@@ -137,13 +142,13 @@ impl Shared {
         let params: Vec<Arc<ModelParams>> = std::iter::once(Arc::clone(&proto))
             .chain((1..m).map(|_| proto.replica()))
             .collect();
+        let fabric = crate::comm::build_fabric(&cfg.fabric, m, cfg.seed ^ 0xfab41c);
         Ok(Arc::new(Shared {
             m,
             params,
             weights: (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect(),
             barrier: StopBarrier::new(m),
-            grad_slots: (0..m).map(|_| Mutex::new(None)).collect(),
-            param_slots: (0..m).map(|_| Mutex::new(None)).collect(),
+            fabric,
             stop: AtomicBool::new(false),
             curve: Mutex::new(Curve::default()),
             drift: Mutex::new(DriftTracker::default()),
@@ -151,6 +156,26 @@ impl Shared {
             events,
             start: Instant::now(),
         }))
+    }
+
+    /// Minimal shared state for unit and property tests that drive a fabric
+    /// directly against hand-built parameter replicas (no manifest, no
+    /// runtime). Weights start at `1/m`, as in a real run.
+    pub fn for_tests(params: Vec<Arc<ModelParams>>, fabric: Arc<dyn Fabric>) -> Arc<Shared> {
+        let m = params.len();
+        Arc::new(Shared {
+            m,
+            params,
+            weights: (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect(),
+            barrier: StopBarrier::new(m),
+            fabric,
+            stop: AtomicBool::new(false),
+            curve: Mutex::new(Curve::default()),
+            drift: Mutex::new(DriftTracker::default()),
+            steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
+            events: EventBus::new(),
+            start: Instant::now(),
+        })
     }
 
     pub fn should_stop(&self) -> bool {
@@ -198,24 +223,4 @@ impl WorkerStats {
         self.upload_misses += other.upload_misses;
         self.queue.merge(&other.queue);
     }
-}
-
-/// Run one full training job on the thread cluster.
-#[deprecated(
-    since = "0.2.0",
-    note = "use layup::session::SessionBuilder (this is a thin compat shim)"
-)]
-pub fn run(cfg: &TrainConfig, manifest: &Manifest) -> Result<RunSummary> {
-    crate::session::SessionBuilder::new(cfg.clone())
-        .build(manifest)?
-        .run()
-}
-
-/// Run every paper algorithm on the same config, in paper-table order.
-#[deprecated(
-    since = "0.2.0",
-    note = "use layup::session::run_paper_set (this is a thin compat shim)"
-)]
-pub fn run_all(base: &TrainConfig, manifest: &Manifest) -> Result<Vec<RunSummary>> {
-    crate::session::run_paper_set(base, manifest)
 }

@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::algorithms::{self, StepState, WorkerAlgo};
+use crate::comm::Fabric;
 use crate::config::TrainConfig;
 use crate::coordinator::queue::{BoundedQueue, PassPool};
 use crate::coordinator::{Shared, WorkerStats};
@@ -33,7 +34,7 @@ pub(crate) fn worker_main(
         .with_context(|| format!("worker {wid}: loading model"))?;
     let model = manifest.model(&cfg.model)?;
     let n_layers = model.layers.len();
-    let mut dataset = data::build(model, wid, cfg.workers, cfg.seed);
+    let mut dataset = data::build(model, wid, cfg.workers, cfg.seed)?;
     let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), &exec.manifest)?;
 
     let my_params = Arc::clone(&shared.params[wid]);
@@ -87,6 +88,9 @@ pub(crate) fn worker_main(
         algo.on_step_end(ctx)?;
         completed += 1;
         shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        // step boundary: apply queued fabric traffic addressed to this
+        // worker (no-op on the instant shared-memory transport)
+        shared.fabric.deliver_due(shared, wid, step);
         shared
             .events
             .emit(TrainEvent::StepCompleted { worker: wid, step, loss: pass.loss as f64 });
@@ -232,7 +236,7 @@ fn forward_pool_main(
     // exactly the data the serial loop would); extra forward threads get
     // decorrelated shards of the same worker slice.
     let seed = cfg.seed ^ ((ft as u64) << 32);
-    let mut dataset = data::build(model, wid, cfg.workers, seed);
+    let mut dataset = data::build(model, wid, cfg.workers, seed)?;
     let my_params = Arc::clone(&shared.params[wid]);
 
     let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
@@ -325,7 +329,7 @@ fn backward_pool_main(
     // is dropped when bwd_threads > 1. Eval batches are deterministic, so
     // the streams are identical across threads.
     let eval_ds = if wid == 0 {
-        Some(data::build(model, wid, cfg.workers, cfg.seed))
+        Some(data::build(model, wid, cfg.workers, cfg.seed)?)
     } else {
         None
     };
@@ -353,6 +357,9 @@ fn backward_pool_main(
         algo.lock().unwrap().on_step_end(ctx)?;
         completed += 1;
         shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        // step boundary: apply queued fabric traffic (outside the hook
+        // mutex — deliveries use the same lock-free stores the updaters do)
+        shared.fabric.deliver_due(shared, wid, step);
         pool.put(pass);
         shared
             .events

@@ -12,7 +12,9 @@ pub mod vision;
 pub mod lm;
 pub mod sentiment;
 
-use crate::manifest::{DType, ModelManifest};
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelManifest;
 use crate::util::rng::Pcg32;
 
 /// One training batch in the exact layout the first layer's artifact expects.
@@ -39,11 +41,15 @@ pub trait Dataset: Send {
 }
 
 /// Build the dataset matching a model manifest for worker `worker` of `m`.
-pub fn build(model: &ModelManifest, worker: usize, m: usize, seed: u64) -> Box<dyn Dataset> {
-    let first = &model.layers[0];
-    let loss = model.layers.last().unwrap();
-    let tgt_len: usize = loss.targets_shape.as_ref().map(|s| s.iter().product()).unwrap_or(0);
-    match model.data.kind.as_str() {
+/// An unknown `data.kind` in the manifest is a configuration error, not a
+/// crash: it propagates as a proper `Err` through the session build.
+pub fn build(
+    model: &ModelManifest,
+    worker: usize,
+    m: usize,
+    seed: u64,
+) -> Result<Box<dyn Dataset>> {
+    Ok(match model.data.kind.as_str() {
         "vision" => Box::new(vision::VisionDataset::new(
             model.batch,
             model.data.get("n_in").expect("vision n_in"),
@@ -69,9 +75,8 @@ pub fn build(model: &ModelManifest, worker: usize, m: usize, seed: u64) -> Box<d
             m,
             seed,
         )),
-        k => panic!("unknown dataset kind {k:?} (first layer dtype {:?}, targets {tgt_len})",
-            matches!(first.x_dtype, DType::F32)),
-    }
+        k => bail!("unknown dataset kind {k:?} (expected \"vision\", \"lm\" or \"sentiment\")"),
+    })
 }
 
 /// Shared helper: deterministic per-(worker, purpose) RNG stream.

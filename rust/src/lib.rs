@@ -23,6 +23,7 @@
 
 pub mod algorithms;
 pub mod bias;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

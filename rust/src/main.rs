@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use layup::comm::{FabricSpec, LatencyDist};
 use layup::config::{Algorithm, Toml, TrainConfig};
 use layup::manifest::Manifest;
 use layup::optim::Schedule;
@@ -53,6 +54,10 @@ const TRAIN_FLAGS: &[&str] = &[
     "fwd-threads",
     "bwd-threads",
     "queue-depth",
+    "fabric",
+    "link-latency",
+    "link-drop",
+    "link-bandwidth",
     "events",
     "out",
     "curve",
@@ -154,7 +159,11 @@ fn print_usage() {
          \x20               [--steps S] [--eval-every K] [--lr F] [--seed K]\n\
          \x20               [--straggler W:D] [--drift-every K] [--decoupled true]\n\
          \x20               [--fwd-threads N] [--bwd-threads N] [--queue-depth N]\n\
+         \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
+         \x20               [--link-bandwidth MBPS]\n\
          \x20               [--events events.jsonl] [--out results.json] [--curve curve.csv]\n\
+         \x20               (latency SPEC: seconds | constant:S | uniform:LO..HI |\n\
+         \x20               pareto:SCALE,ALPHA; --link-* flags imply --fabric sim)\n\
          \x20 layup sim     [--cluster c1|c2|c3] [--workload resnet18_cifar|resnet50_cifar|\n\
          \x20               resnet50_imagenet|gpt2_medium|gpt2_xl] [--algorithm A|all]\n\
          \x20               [--sync-period K] [--straggler W:D] [--seed K]\n\
@@ -198,6 +207,53 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
         let (w, d) = s.split_once(':').context("--straggler wants WORKER:DELAY")?;
         cfg.straggler = Some((w.parse()?, d.parse()?));
     }
+
+    // Communication fabric. The --link-* knobs describe simulated links, so
+    // they imply --fabric sim; naming --fabric instant alongside them is a
+    // contradiction, not a silent override.
+    let fabric_flag = args.get("fabric");
+    if let Some(v) = fabric_flag {
+        cfg.fabric = match v {
+            "instant" => FabricSpec::Instant,
+            "sim" => match cfg.fabric.clone() {
+                sim @ FabricSpec::Sim { .. } => sim, // keep config-file link knobs
+                FabricSpec::Instant => FabricSpec::sim_default(),
+            },
+            other => bail!("--fabric: expected instant or sim, got {other:?}"),
+        };
+    }
+    let have_link_flags = ["link-latency", "link-drop", "link-bandwidth"]
+        .into_iter()
+        .any(|k| args.get(k).is_some());
+    if have_link_flags {
+        if fabric_flag == Some("instant") {
+            bail!(
+                "--link-latency/--link-drop/--link-bandwidth describe simulated \
+                 links; drop them or use --fabric sim"
+            );
+        }
+        let (mut latency, mut bandwidth_bytes_per_s, mut drop_prob) = match cfg.fabric.clone() {
+            FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => {
+                (latency, bandwidth_bytes_per_s, drop_prob)
+            }
+            FabricSpec::Instant => (LatencyDist::Constant(0.0), 0.0, 0.0),
+        };
+        if let Some(v) = args.get("link-latency") {
+            latency = LatencyDist::parse(v).with_context(|| format!("--link-latency {v:?}"))?;
+        }
+        if let Some(v) = args.get("link-bandwidth") {
+            let mbps: f64 = v
+                .parse()
+                .with_context(|| format!("--link-bandwidth: expected Mbit/s, got {v:?}"))?;
+            bandwidth_bytes_per_s = mbps * 125_000.0;
+        }
+        if let Some(v) = args.get("link-drop") {
+            drop_prob = v
+                .parse()
+                .with_context(|| format!("--link-drop: expected a probability, got {v:?}"))?;
+        }
+        cfg.fabric = FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob };
+    }
     Ok(cfg)
 }
 
@@ -209,12 +265,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate()?;
     manifest.model(&cfg.model)?;
     println!(
-        "training {} with {} on {} workers for {} steps (seed {})",
+        "training {} with {} on {} workers for {} steps (seed {}, {} fabric)",
         cfg.model,
         cfg.algorithm.name(),
         cfg.workers,
         cfg.steps,
-        cfg.seed
+        cfg.seed,
+        cfg.fabric.name()
     );
     let t0 = std::time::Instant::now();
     let mut builder = SessionBuilder::new(cfg);
@@ -233,6 +290,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         summary.gossip_applied,
         summary.gossip_skipped,
     );
+    let comm = &summary.stats.comm;
+    if comm.msgs_sent > 0 {
+        println!(
+            "comm: {} msgs / {} bytes sent, {} delivered, {} dropped, mean staleness {:.2} steps",
+            comm.msgs_sent,
+            comm.bytes_sent,
+            comm.msgs_delivered,
+            comm.msgs_dropped,
+            comm.mean_delivered_staleness(),
+        );
+    }
     if let Some(path) = args.get("curve") {
         std::fs::write(path, summary.curve.to_csv())?;
         println!("learning curve -> {path}");

@@ -212,6 +212,61 @@ impl QueueStats {
     }
 }
 
+/// Traffic counters of one directed fabric link (sender -> receiver).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkTraffic {
+    /// sending worker
+    pub from: usize,
+    /// receiving worker
+    pub to: usize,
+    /// messages sent (including dropped ones)
+    pub msgs: u64,
+    /// bytes sent
+    pub bytes: u64,
+    /// messages the link dropped
+    pub drops: u64,
+    /// messages applied at the receiver
+    pub delivered: u64,
+}
+
+/// Aggregated communication-fabric statistics of one run (per-link traffic
+/// plus delivered-staleness), snapshotted from the fabric's counters.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// messages pushed onto the fabric (including dropped ones)
+    pub msgs_sent: u64,
+    /// bytes pushed onto the fabric
+    pub bytes_sent: u64,
+    /// messages the links dropped
+    pub msgs_dropped: u64,
+    /// messages applied at their receiver
+    pub msgs_delivered: u64,
+    /// sum over delivered messages of (receiver step - sender step)
+    pub staleness_sum: i64,
+    /// per-link breakdown (links with traffic only, ordered by sender then
+    /// receiver)
+    pub links: Vec<LinkTraffic>,
+}
+
+impl CommStats {
+    /// Mean steps a delivered message spent in flight (0 when nothing was
+    /// delivered; 0 on the instant transport by definition).
+    pub fn mean_delivered_staleness(&self) -> f64 {
+        if self.msgs_delivered == 0 {
+            return 0.0;
+        }
+        self.staleness_sum as f64 / self.msgs_delivered as f64
+    }
+
+    /// Fraction of sent messages the links dropped.
+    pub fn drop_frac(&self) -> f64 {
+        if self.msgs_sent == 0 {
+            return 0.0;
+        }
+        self.msgs_dropped as f64 / self.msgs_sent as f64
+    }
+}
+
 /// Model disagreement across workers (Fig A1): mean over workers of
 /// ‖x_i − x̄‖ / √d, sampled during training.
 #[derive(Clone, Debug, Default)]
@@ -299,6 +354,8 @@ pub struct RunStats {
     pub bwd_occupancy: f64,
     /// merged pass-queue counters (decoupled mode; zeros for serial runs)
     pub queue: QueueStats,
+    /// communication-fabric traffic and delivered-staleness counters
+    pub comm: CommStats,
 }
 
 impl RunStats {
@@ -314,6 +371,11 @@ impl RunStats {
             ("queue_depth_mean", self.queue.mean_depth()),
             ("queue_depth_max", self.queue.max_depth as f64),
             ("queue_blocked_frac", self.queue.blocked_frac()),
+            ("comm_msgs_sent", self.comm.msgs_sent as f64),
+            ("comm_bytes_sent", self.comm.bytes_sent as f64),
+            ("comm_dropped", self.comm.msgs_dropped as f64),
+            ("comm_delivered", self.comm.msgs_delivered as f64),
+            ("comm_mean_staleness", self.comm.mean_delivered_staleness()),
         ]
     }
 }
@@ -349,6 +411,26 @@ impl RunSummary {
         for (k, v) in self.stats.fields() {
             fields.push((k, num(v)));
         }
+        // per-link traffic breakdown (nonzero links only)
+        fields.push((
+            "links",
+            arr(self
+                .stats
+                .comm
+                .links
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("from", num(l.from as f64)),
+                        ("to", num(l.to as f64)),
+                        ("msgs", num(l.msgs as f64)),
+                        ("bytes", num(l.bytes as f64)),
+                        ("drops", num(l.drops as f64)),
+                        ("delivered", num(l.delivered as f64)),
+                    ])
+                })
+                .collect()),
+        ));
         obj(fields)
     }
 }
@@ -444,10 +526,38 @@ mod tests {
     }
 
     #[test]
+    fn comm_stats_staleness_and_drop_fractions() {
+        let mut c = CommStats::default();
+        assert_eq!(c.mean_delivered_staleness(), 0.0);
+        assert_eq!(c.drop_frac(), 0.0);
+        c.msgs_sent = 10;
+        c.msgs_dropped = 2;
+        c.msgs_delivered = 4;
+        c.staleness_sum = 6;
+        assert!((c.mean_delivered_staleness() - 1.5).abs() < 1e-12);
+        assert!((c.drop_frac() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
     fn run_stats_fields_keep_legacy_extras_keys() {
         let stats = RunStats {
             achieved_flops_per_s: 1e9,
             queue: QueueStats { pushes: 2, pops: 2, blocked_pushes: 1, depth_sum: 4, max_depth: 3 },
+            comm: CommStats {
+                msgs_sent: 5,
+                bytes_sent: 100,
+                msgs_dropped: 1,
+                msgs_delivered: 4,
+                staleness_sum: 8,
+                links: vec![LinkTraffic {
+                    from: 0,
+                    to: 1,
+                    msgs: 5,
+                    bytes: 100,
+                    drops: 1,
+                    delivered: 4,
+                }],
+            },
             ..Default::default()
         };
         let summary = RunSummary {
@@ -474,9 +584,17 @@ mod tests {
             "queue_depth_mean",
             "queue_depth_max",
             "queue_blocked_frac",
+            "comm_msgs_sent",
+            "comm_bytes_sent",
+            "comm_dropped",
+            "comm_delivered",
+            "comm_mean_staleness",
+            "links",
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");
         }
         assert!(j.contains("\"queue_depth_max\":3"));
+        assert!(j.contains("\"comm_mean_staleness\":2"), "8 staleness / 4 delivered: {j}");
+        assert!(j.contains("\"drops\":1"), "per-link breakdown: {j}");
     }
 }

@@ -450,13 +450,18 @@ impl ModelExec {
     }
 
     /// Evaluate on `k` deterministic held-out batches; returns
-    /// (mean loss, accuracy in [0,1]).
+    /// (mean loss, accuracy in [0,1]). A dataset with no eval batches is an
+    /// error — the old `.min(eval_len()).max(1)` clamp would have requested
+    /// batch 0 of an empty eval set.
     pub fn evaluate(
         &mut self,
         params: &ModelParams,
         data: &dyn crate::data::Dataset,
         k: usize,
     ) -> Result<(f64, f64)> {
+        if data.eval_len() == 0 {
+            anyhow::bail!("evaluate: dataset exposes no eval batches");
+        }
         let k = k.min(data.eval_len()).max(1);
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;

@@ -34,6 +34,15 @@ pub enum TrainEvent {
     GossipSkipped { worker: usize, peer: usize, step: usize },
     /// Pass-queue depth right after a forward-pool push (decoupled mode).
     QueueDepth { worker: usize, step: usize, depth: usize },
+    /// A message left `from` toward `to` on the communication fabric
+    /// (emitted only when observers are attached — this is per-message).
+    CommSent { from: usize, to: usize, step: usize, bytes: u64 },
+    /// The link dropped a message (simulated fabric; the sender reclaims
+    /// any shipped push-sum weight).
+    CommDropped { from: usize, to: usize, step: usize },
+    /// A message was applied at its receiver; `staleness` is the receiver's
+    /// step minus the sender's step at send time.
+    CommDelivered { from: usize, to: usize, step: usize, staleness: i64 },
     /// The configured straggler idled before this step.
     StragglerInjected { worker: usize, step: usize, delay_s: f64 },
     /// All workers joined; the summary is being assembled.
@@ -50,6 +59,9 @@ impl TrainEvent {
             TrainEvent::GossipApplied { .. } => "gossip_applied",
             TrainEvent::GossipSkipped { .. } => "gossip_skipped",
             TrainEvent::QueueDepth { .. } => "queue_depth",
+            TrainEvent::CommSent { .. } => "comm_sent",
+            TrainEvent::CommDropped { .. } => "comm_dropped",
+            TrainEvent::CommDelivered { .. } => "comm_delivered",
             TrainEvent::StragglerInjected { .. } => "straggler_injected",
             TrainEvent::RunCompleted { .. } => "run_completed",
         }
@@ -86,6 +98,23 @@ impl TrainEvent {
                 fields.push(("worker", num(*worker as f64)));
                 fields.push(("step", num(*step as f64)));
                 fields.push(("depth", num(*depth as f64)));
+            }
+            TrainEvent::CommSent { from, to, step, bytes } => {
+                fields.push(("from", num(*from as f64)));
+                fields.push(("to", num(*to as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("bytes", num(*bytes as f64)));
+            }
+            TrainEvent::CommDropped { from, to, step } => {
+                fields.push(("from", num(*from as f64)));
+                fields.push(("to", num(*to as f64)));
+                fields.push(("step", num(*step as f64)));
+            }
+            TrainEvent::CommDelivered { from, to, step, staleness } => {
+                fields.push(("from", num(*from as f64)));
+                fields.push(("to", num(*to as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("staleness", num(*staleness as f64)));
             }
             TrainEvent::StragglerInjected { worker, step, delay_s } => {
                 fields.push(("worker", num(*worker as f64)));
@@ -257,6 +286,24 @@ mod tests {
         let j = ev.to_json().dump();
         assert!(j.contains("\"event\":\"eval_point\""), "{j}");
         assert!(j.contains("\"accuracy\":0.25"), "{j}");
+    }
+
+    #[test]
+    fn comm_events_serialize_with_link_and_staleness_fields() {
+        let sent = TrainEvent::CommSent { from: 0, to: 2, step: 5, bytes: 128 };
+        assert_eq!(sent.kind(), "comm_sent");
+        let j = sent.to_json().dump();
+        assert!(j.contains("\"from\":0"), "{j}");
+        assert!(j.contains("\"to\":2"), "{j}");
+        assert!(j.contains("\"bytes\":128"), "{j}");
+
+        let dropped = TrainEvent::CommDropped { from: 1, to: 0, step: 7 };
+        assert_eq!(dropped.kind(), "comm_dropped");
+        assert!(dropped.to_json().dump().contains("\"step\":7"));
+
+        let delivered = TrainEvent::CommDelivered { from: 1, to: 0, step: 7, staleness: -2 };
+        assert_eq!(delivered.kind(), "comm_delivered");
+        assert!(delivered.to_json().dump().contains("\"staleness\":-2"));
     }
 
     #[test]

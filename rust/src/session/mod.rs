@@ -21,11 +21,37 @@
 //! # }
 //! ```
 //!
-//! The facade replaces the seed-era `coordinator::run` free function (kept
-//! as a deprecated shim). Construction is two-phase on purpose: `build`
+//! The facade replaces the seed-era `coordinator::run` free function.
+//! Construction is two-phase on purpose: `build`
 //! validates the config and binds the manifest, so configuration errors
 //! surface before any thread spawns; `run` consumes the session — one run
 //! per session, matching the engine's single-use shared state.
+//!
+//! The communication fabric is selected the same way as every other knob:
+//! through the config, or the [`SessionBuilder::fabric`] override:
+//!
+//! ```no_run
+//! use layup::comm::{FabricSpec, LatencyDist};
+//! use layup::config::{Algorithm, TrainConfig};
+//! use layup::manifest::Manifest;
+//! use layup::session::SessionBuilder;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let manifest = Manifest::load(&layup::artifacts_dir())?;
+//! let cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 4, 200);
+//! let summary = SessionBuilder::new(cfg)
+//!     .fabric(FabricSpec::Sim {
+//!         latency: LatencyDist::Constant(0.005), // 5 ms links
+//!         bandwidth_bytes_per_s: 12.5e6,         // 100 Mbit/s
+//!         drop_prob: 0.01,
+//!     })
+//!     .build(&manifest)?
+//!     .run()?;
+//! println!("mean delivered staleness: {:.2} steps",
+//!          summary.stats.comm.mean_delivered_staleness());
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod events;
 
@@ -34,6 +60,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::comm::{Fabric, FabricSpec};
 use crate::config::{Algorithm, TrainConfig};
 use crate::coordinator::{engine, Shared};
 use crate::data;
@@ -61,6 +88,14 @@ impl SessionBuilder {
     /// Convenience: attach the stdout progress printer.
     pub fn progress(self) -> SessionBuilder {
         self.observer(Arc::new(events::ProgressPrinter::new()))
+    }
+
+    /// Select the communication fabric (overrides the config's choice):
+    /// `FabricSpec::Instant` for seed-era shared-memory semantics,
+    /// `FabricSpec::Sim { .. }` for links with latency, bandwidth and loss.
+    pub fn fabric(mut self, spec: FabricSpec) -> SessionBuilder {
+        self.cfg.fabric = spec;
+        self
     }
 
     /// Convenience: stream every event to a JSONL file at `path`.
@@ -127,7 +162,7 @@ impl Session<'_> {
         let (applied, skipped) = shared.gossip_counts();
 
         let model = manifest.model(&cfg.model)?;
-        let data0 = data::build(model, 0, cfg.workers, cfg.seed);
+        let data0 = data::build(model, 0, cfg.workers, cfg.seed)?;
         let batches_per_epoch = data0.batches_per_epoch();
 
         let mut curve = shared.curve.lock().unwrap().clone();
@@ -153,6 +188,7 @@ impl Session<'_> {
                 / (wall * (cfg.workers * bwd_pool) as f64))
                 .min(1.0),
             queue,
+            comm: shared.fabric.core().snapshot(),
         };
 
         shared.events.emit(TrainEvent::RunCompleted { total_steps, wall_s: wall });

@@ -15,6 +15,13 @@
 //! *skipped* (the weight transfer is dropped), which the paper argues — and
 //! our property tests check — only delays information, never loses parameter
 //! mass catastrophically. The skip counter is surfaced in metrics.
+//!
+//! How a push physically travels is the communication fabric's business
+//! (`crate::comm`): on the instant transport the sender performs the
+//! `halve`/`try_accept` handshake synchronously, on a simulated transport
+//! the halved weight rides the message and the *receiver* folds it in at
+//! delivery (a dropped message reclaims at the sender; a busy slot
+//! re-queues) — the same conservation invariant either way.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 

@@ -5,6 +5,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use layup::comm::{FabricSpec, LatencyDist};
 use layup::config::{Algorithm, TrainConfig};
 use layup::coordinator::Shared;
 use layup::data::{self, Dataset};
@@ -54,7 +55,7 @@ fn artifacts_load_and_execute_forward() {
     let mut rt = Runtime::new().unwrap();
     let mut exec = ModelExec::load(&mut rt, &man, &model_name).unwrap();
     let model = man.model(&model_name).unwrap();
-    let mut ds = data::build(model, 0, 1, 1);
+    let mut ds = data::build(model, 0, 1, 1).unwrap();
     let cfg = quick_cfg(&model_name, Algorithm::LocalSgd, 1, 1);
     let shared = Shared::new(&cfg, &man).unwrap();
     let pass = exec.forward(&shared.params[0], &ds.next_batch()).unwrap();
@@ -73,7 +74,7 @@ fn backward_emits_every_layer_in_reverse_order() {
     let mut rt = Runtime::new().unwrap();
     let mut exec = ModelExec::load(&mut rt, &man, &model_name).unwrap();
     let model = man.model(&model_name).unwrap();
-    let mut ds = data::build(model, 0, 1, 2);
+    let mut ds = data::build(model, 0, 1, 2).unwrap();
     let cfg = quick_cfg(&model_name, Algorithm::LocalSgd, 1, 1);
     let shared = Shared::new(&cfg, &man).unwrap();
     let pass = exec.forward(&shared.params[0], &ds.next_batch()).unwrap();
@@ -329,13 +330,146 @@ fn eval_batches_are_deterministic_across_workers() {
     let Some(man) = manifest() else { return };
     let model_name = pick_model(&man);
     let model = man.model(&model_name).unwrap();
-    let a = data::build(model, 0, 2, 42);
-    let b = data::build(model, 1, 2, 42);
+    let a = data::build(model, 0, 2, 42).unwrap();
+    let b = data::build(model, 1, 2, 42).unwrap();
     let ea = a.eval_batch(0);
     let eb = b.eval_batch(0);
     assert_eq!(ea.targets, eb.targets, "eval stream must be shared");
     assert_eq!(ea.x_f32, eb.x_f32);
     assert_eq!(ea.x_i32, eb.x_i32);
+}
+
+/// InstantFabric parity (acceptance): the default fabric is Instant, and on
+/// it the lockstep algorithms — whose loss curves are fully determined by
+/// the seed — reproduce identical curves run-to-run, with fabric traffic
+/// accounted at zero staleness. (Gossip algorithms are timing-dependent by
+/// design even on the seed-era path, so determinism is asserted where
+/// determinism exists.)
+#[test]
+fn instant_fabric_is_default_and_lockstep_curves_are_identical() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    for algo in [Algorithm::Ddp, Algorithm::LocalSgd, Algorithm::SlowMo] {
+        let mut cfg = quick_cfg(&model_name, algo, 2, 10);
+        cfg.sync_period = 5; // two outer syncs inside 10 steps
+        assert_eq!(cfg.fabric, FabricSpec::Instant);
+        let a = run(&cfg, &man).unwrap_or_else(|e| panic!("{algo:?} run a: {e:#}"));
+        let b = run(&cfg, &man).unwrap_or_else(|e| panic!("{algo:?} run b: {e:#}"));
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (pa, pb) in a.curve.points.iter().zip(b.curve.points.iter()) {
+            assert_eq!(pa.step, pb.step);
+            assert_eq!(
+                pa.loss, pb.loss,
+                "{algo:?}: lockstep runs on the instant fabric must be bit-identical"
+            );
+        }
+        let comm = &a.stats.comm;
+        assert!(comm.msgs_sent > 0, "{algo:?} must account its fabric traffic");
+        assert_eq!(comm.msgs_dropped, 0);
+        assert!(
+            comm.mean_delivered_staleness().abs() < 1e-9,
+            "{algo:?}: instant delivery has zero staleness"
+        );
+    }
+}
+
+/// The SessionBuilder fabric override is just the config knob: explicitly
+/// selecting Instant matches the default run bit-for-bit on a lockstep
+/// algorithm.
+#[test]
+fn session_builder_fabric_override_matches_default() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, 8);
+    let a = run(&cfg, &man).unwrap();
+    let b = SessionBuilder::new(cfg.clone())
+        .fabric(FabricSpec::Instant)
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (pa, pb) in a.curve.points.iter().zip(b.curve.points.iter()) {
+        assert_eq!(pa.loss, pb.loss);
+    }
+}
+
+/// The SimFabric end-to-end: every algorithm (barrier and gossip alike)
+/// trains through queued links with latency — gossip additionally under
+/// drops — and the summary carries per-link traffic, delivery and staleness
+/// accounting all the way into the metrics JSON.
+#[test]
+fn sim_fabric_trains_every_algorithm_and_reports_traffic() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    for algo in [
+        Algorithm::Ddp,
+        Algorithm::LayUp,
+        Algorithm::LayUpModelGranularity,
+        Algorithm::GoSgd,
+        Algorithm::AdPsgd,
+        Algorithm::SlowMo,
+        Algorithm::Co2,
+        Algorithm::LocalSgd,
+    ] {
+        let mut cfg = quick_cfg(&model_name, algo, 2, 12);
+        cfg.sync_period = 4;
+        cfg.fabric = FabricSpec::Sim {
+            latency: LatencyDist::Constant(0.002),
+            bandwidth_bytes_per_s: 0.0,
+            drop_prob: if algo.uses_barrier() { 0.0 } else { 0.2 },
+        };
+        let summary = run(&cfg, &man).unwrap_or_else(|e| panic!("sim fabric {algo:?}: {e:#}"));
+        assert!(summary.curve.best_loss().is_finite(), "{algo:?} diverged on the sim fabric");
+        assert_eq!(summary.total_steps, 24, "{algo:?}: delayed links must not lose steps");
+        let comm = &summary.stats.comm;
+        assert!(comm.msgs_sent > 0 && comm.bytes_sent > 0, "{algo:?}: no traffic accounted");
+        assert!(comm.msgs_delivered > 0, "{algo:?}: nothing was delivered");
+        assert!(!comm.links.is_empty(), "{algo:?}: per-link breakdown missing");
+        let j = summary.to_json().dump();
+        for key in [
+            "comm_msgs_sent",
+            "comm_bytes_sent",
+            "comm_dropped",
+            "comm_delivered",
+            "comm_mean_staleness",
+            "links",
+        ] {
+            assert!(j.contains(&format!("\"{key}\":")), "{algo:?}: metrics JSON missing {key}");
+        }
+    }
+}
+
+/// Push-sum weight mass survives a full gossip training run on lossy,
+/// delayed links: whatever is not at the workers is still in flight.
+#[test]
+fn sim_fabric_push_sum_run_conserves_weight_mass() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    for algo in [Algorithm::GoSgd, Algorithm::LayUp] {
+        let mut cfg = quick_cfg(&model_name, algo, 3, 15);
+        cfg.fabric = FabricSpec::Sim {
+            latency: LatencyDist::Uniform { lo: 0.0, hi: 0.003 },
+            bandwidth_bytes_per_s: 0.0,
+            drop_prob: 0.3,
+        };
+        // weights live inside the run's own Shared; assert via gossip
+        // accounting instead: drops must be visible, and the run must not
+        // lose training steps to them
+        let summary = run(&cfg, &man).unwrap_or_else(|e| panic!("{algo:?}: {e:#}"));
+        assert_eq!(summary.total_steps, 45, "{algo:?}");
+        assert!(summary.curve.best_loss().is_finite(), "{algo:?}");
+        let comm = &summary.stats.comm;
+        assert!(
+            comm.msgs_dropped + comm.msgs_delivered <= comm.msgs_sent,
+            "{algo:?}: every message is dropped, delivered, or still in flight \
+             ({} dropped + {} delivered vs {} sent)",
+            comm.msgs_dropped,
+            comm.msgs_delivered,
+            comm.msgs_sent
+        );
+        assert!(comm.msgs_dropped > 0, "{algo:?}: 30% drop over 45 steps must drop something");
+    }
 }
 
 #[test]
@@ -345,7 +479,7 @@ fn upload_cache_hits_when_params_unchanged() {
     let mut rt = Runtime::new().unwrap();
     let mut exec = ModelExec::load(&mut rt, &man, &model_name).unwrap();
     let model = man.model(&model_name).unwrap();
-    let mut ds = data::build(model, 0, 1, 3);
+    let mut ds = data::build(model, 0, 1, 3).unwrap();
     let cfg = quick_cfg(&model_name, Algorithm::LocalSgd, 1, 1);
     let shared = Shared::new(&cfg, &man).unwrap();
     let b = ds.next_batch();
