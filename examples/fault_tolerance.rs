@@ -1,0 +1,90 @@
+//! Fault tolerance tour: crash a worker mid-run (chaos injection) and watch
+//! it rejoin, then write periodic checkpoints and resume a fresh session
+//! from the snapshot — the resilience subsystem end-to-end.
+//!
+//! (Restart faults and periodic checkpoints are deliberately separate runs:
+//! a rejoined worker trails the survivors, so combining them is rejected by
+//! `TrainConfig::validate` — see the resilience module docs.)
+//!
+//!     make artifacts && cargo run --release --example fault_tolerance
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use layup::config::{Algorithm, TrainConfig};
+use layup::manifest::Manifest;
+use layup::resilience::{checkpoint, FaultPlan};
+use layup::session::events::TrainEvent;
+use layup::session::SessionBuilder;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&layup::artifacts_dir())?;
+
+    // 1. chaos injection: worker 1 dies at step 20 and is respawned 0.5s
+    //    later — it re-enters gossip from a live peer's parameters, with
+    //    push-sum weight mass conserved throughout.
+    let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
+    cfg.eval_every = 10;
+    cfg.faults = FaultPlan::default().crash_restart(1, 20, 0.5);
+    let summary = SessionBuilder::new(cfg)
+        .observer(Arc::new(|ev: &TrainEvent| match ev {
+            TrainEvent::WorkerCrashed { worker, step } => {
+                eprintln!("  [chaos] worker {worker} crashed at step {step}");
+            }
+            TrainEvent::WorkerJoined { worker, step, epoch } => {
+                eprintln!("  [chaos] worker {worker} rejoined at step {step} (epoch {epoch})");
+            }
+            _ => {}
+        }))
+        .build(&manifest)?
+        .run()?;
+    let rec = &summary.stats.recovery;
+    println!(
+        "chaos run: {} steps, best loss {:.4}, {} crash(es), {} rejoin(s)",
+        summary.total_steps,
+        summary.curve.best_loss(),
+        rec.crashes,
+        rec.joins
+    );
+
+    // 2. periodic checkpoints: quiesce at every 15-step boundary and
+    //    snapshot the full training state into step-XXXXXX directories.
+    let ckpt_dir = std::env::temp_dir().join("layup-fault-tolerance-demo");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
+    cfg.eval_every = 10;
+    let summary = SessionBuilder::new(cfg)
+        .checkpoint_every(15)
+        .checkpoint_dir(ckpt_dir.clone())
+        .observer(Arc::new(|ev: &TrainEvent| {
+            if let TrainEvent::CheckpointSaved { step, path } = ev {
+                eprintln!("  [ckpt] step {step} -> {path}");
+            }
+        }))
+        .build(&manifest)?
+        .run()?;
+    println!(
+        "checkpointed run: {} steps, best loss {:.4}, {} checkpoint(s)",
+        summary.total_steps,
+        summary.curve.best_loss(),
+        summary.stats.recovery.checkpoints_saved
+    );
+
+    // 3. resume a fresh session from the latest snapshot and train on — the
+    //    curve continues where the checkpoint left it.
+    let latest = checkpoint::resolve(&ckpt_dir)?;
+    println!("resuming from {}", latest.display());
+    let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 60);
+    cfg.eval_every = 10;
+    let resumed = SessionBuilder::new(cfg)
+        .build(&manifest)?
+        .resume_from(&latest)?
+        .run()?;
+    println!(
+        "resumed run: {} total curve points, best loss {:.4}",
+        resumed.curve.points.len(),
+        resumed.curve.best_loss()
+    );
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! **Fault tolerance** — the resilience subsystem's headline figure:
+//! loss-vs-wallclock for LayUp vs AD-PSGD vs DDP under a chaos schedule.
+//!
+//! Three scenarios per algorithm on the same workload and seed:
+//!
+//! * `baseline`  — no faults;
+//! * `restart`   — worker 1 crashes at `LAYUP_CRASH_STEP` and is respawned
+//!   after `LAYUP_RESTART_S` seconds of downtime. Gossip algorithms re-enter
+//!   from a live peer and barely notice; DDP's barrier holds the whole
+//!   collective for the downtime (the Stall policy), which shows up as a
+//!   wall-clock plateau in its curve;
+//! * `crash`     — the same worker dies permanently. LayUp and AD-PSGD keep
+//!   training on the survivors and reach their target loss; DDP waits until
+//!   the supervisor reports the stall and stops the run.
+//!
+//! Output: `results/fig_fault_tolerance.csv` (one row per eval point —
+//! the loss-vs-wallclock curves) and `results/fig_fault_tolerance.json`
+//! (per-run summaries: wall, best loss, time to the target loss, crash /
+//! join / stall accounting).
+//!
+//! Environment knobs: LAYUP_STEPS (default 60), LAYUP_WORKERS (default 3),
+//! LAYUP_CRASH_STEP (default steps/4), LAYUP_RESTART_S (default 2),
+//! LAYUP_STALL_TIMEOUT (default 8), LAYUP_TARGET_LOSS (default: 1.05x the
+//! algorithm's baseline best).
+
+#[path = "common.rs"]
+mod common;
+
+use layup::config::Algorithm;
+use layup::metrics::RunSummary;
+use layup::resilience::FaultPlan;
+use layup::session::SessionBuilder;
+use layup::util::json::{arr, num, obj, s, Json};
+
+/// First wall-clock time the curve reaches `target` loss.
+fn time_to_loss(summary: &RunSummary, target: f64) -> Option<f64> {
+    summary.curve.points.iter().find(|p| p.loss <= target).map(|p| p.time_s)
+}
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 60);
+    let crash_step = common::env_usize("LAYUP_CRASH_STEP", (steps / 4).max(1));
+    let restart_s: f64 = std::env::var("LAYUP_RESTART_S")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    let stall_timeout: f64 = std::env::var("LAYUP_STALL_TIMEOUT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8.0);
+    let target_override: Option<f64> =
+        std::env::var("LAYUP_TARGET_LOSS").ok().and_then(|v| v.parse().ok());
+
+    println!(
+        "fig: fault tolerance — mlpnet18, {} workers, {} steps; worker 1 dies at step \
+         {crash_step} (restart after {restart_s}s / never)",
+        common::workers(),
+        steps
+    );
+    common::hr();
+    println!(
+        "{:<10} {:<9} {:>9} {:>10} {:>11} {:>7} {:>6} {:>8}",
+        "algorithm", "scenario", "wall (s)", "best loss", "t@target", "crashes", "joins", "stalled"
+    );
+
+    let scenarios: [(&str, Option<FaultPlan>); 3] = [
+        ("baseline", None),
+        ("restart", Some(FaultPlan::default().crash_restart(1, crash_step, restart_s))),
+        ("crash", Some(FaultPlan::default().crash(1, crash_step))),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut csv = String::from("algorithm,scenario,step,time_s,loss,accuracy\n");
+    for algo in [Algorithm::LayUp, Algorithm::AdPsgd, Algorithm::Ddp] {
+        let mut target = target_override;
+        for (scenario, faults) in &scenarios {
+            let mut cfg = common::vision_cfg("mlpnet18", algo, steps);
+            cfg.eval_every = (steps / 12).max(1);
+            cfg.stall_timeout_s = stall_timeout;
+            if let Some(plan) = faults {
+                cfg.faults = plan.clone();
+            }
+            let sum = SessionBuilder::new(cfg)
+                .build(&man)
+                .expect("invalid bench config")
+                .run()
+                .expect("run failed");
+            if target.is_none() {
+                // the algorithm's own fault-free best, with 5% slack
+                target = Some(sum.curve.best_loss() * 1.05);
+            }
+            let tgt = target.unwrap();
+            let t_at = time_to_loss(&sum, tgt);
+            let rec = &sum.stats.recovery;
+            println!(
+                "{:<10} {:<9} {:>9.2} {:>10.4} {:>11} {:>7} {:>6} {:>8}",
+                sum.algorithm,
+                scenario,
+                sum.total_time_s,
+                sum.curve.best_loss(),
+                t_at.map(|t| format!("{t:.2}s")).unwrap_or_else(|| "never".into()),
+                rec.crashes,
+                rec.joins,
+                if rec.stalled { "YES" } else { "no" }
+            );
+            for p in &sum.curve.points {
+                csv.push_str(&format!(
+                    "{},{},{},{:.3},{:.5},{:.5}\n",
+                    sum.algorithm, scenario, p.step, p.time_s, p.loss, p.accuracy
+                ));
+            }
+            rows.push(obj(vec![
+                ("algorithm", s(&sum.algorithm)),
+                ("scenario", s(scenario)),
+                ("wall_s", num(sum.total_time_s)),
+                ("best_loss", num(sum.curve.best_loss())),
+                ("target_loss", num(tgt)),
+                (
+                    "time_to_target_s",
+                    t_at.map(num).unwrap_or(Json::Null),
+                ),
+                ("total_steps", num(sum.total_steps as f64)),
+                ("crashes", num(rec.crashes as f64)),
+                ("joins", num(rec.joins as f64)),
+                ("stalled", Json::Bool(rec.stalled)),
+                ("membership_epoch", num(rec.membership_epoch as f64)),
+            ]));
+        }
+        common::hr();
+    }
+    let dir = common::results_dir();
+    std::fs::write(dir.join("fig_fault_tolerance.csv"), csv).expect("write csv");
+    std::fs::write(dir.join("fig_fault_tolerance.json"), arr(rows).dump()).expect("write json");
+    println!("wrote results/fig_fault_tolerance.csv and .json");
+}

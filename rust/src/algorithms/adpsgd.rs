@@ -21,6 +21,7 @@ use crate::comm::{wire_bytes, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
@@ -77,6 +78,14 @@ impl WorkerAlgo for AdPsgd {
         let peer = self
             .topology
             .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
+        if !self.shared.membership.alive(peer) {
+            // dead peer (chaos injection): skip the exchange this step —
+            // AD-PSGD ships no weight, so nothing needs reclaiming
+            self.shared
+                .events
+                .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+            return Ok(());
+        }
         if self.shared.fabric.is_instant() {
             // shared-memory fast path: the seed-era synchronous swap
             let peer_params = &self.shared.params[peer];
@@ -116,6 +125,24 @@ impl WorkerAlgo for AdPsgd {
                 step,
                 Payload::PairAverage { flat, reply: false },
             );
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState {
+            opt: Some(self.opt.state_dict()),
+            rng: Some(self.rng.state()),
+            outer: None,
+        })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.opt.load_state_dict(opt)?;
+        }
+        if let Some(rng) = state.rng {
+            self.rng = Pcg32::from_state(rng);
         }
         Ok(())
     }

@@ -27,6 +27,7 @@ use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
 use crate::tensor::Tensor;
 
 pub struct Ddp {
@@ -98,6 +99,17 @@ impl WorkerAlgo for Ddp {
         let my = &self.shared.params[self.wid];
         for (li, grads) in avg.iter().enumerate() {
             self.opt.step_layer(my, li, grads, step);
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState { opt: Some(self.opt.state_dict()), ..AlgoState::default() })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.opt.load_state_dict(opt)?;
         }
         Ok(())
     }

@@ -23,6 +23,7 @@ use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
@@ -79,6 +80,18 @@ impl WorkerAlgo for GoSgd {
         let peer = self
             .topology
             .peer(self.wid, self.shared.m, step as u64, &mut self.rng);
+        if !self.shared.membership.alive(peer) {
+            // the chosen peer's device is down (chaos injection): a push to
+            // it would vanish, so treat it exactly like a contention skip —
+            // the weight stays home and propagation is retried next step
+            self.shared.weights[self.wid]
+                .skipped
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.shared
+                .events
+                .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+            return Ok(());
+        }
         let shipped = self.shared.weights[self.wid].halve();
         if self.shared.fabric.is_instant() {
             // shared-memory fast path: the seed-era in-place push-sum mix
@@ -142,6 +155,24 @@ impl WorkerAlgo for GoSgd {
                     .events
                     .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
             }
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState {
+            opt: Some(self.opt.state_dict()),
+            rng: Some(self.rng.state()),
+            outer: None,
+        })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.opt.load_state_dict(opt)?;
+        }
+        if let Some(rng) = state.rng {
+            self.rng = Pcg32::from_state(rng);
         }
         Ok(())
     }

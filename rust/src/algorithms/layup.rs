@@ -43,6 +43,8 @@ use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::optim::OptState;
+use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
@@ -51,6 +53,13 @@ use crate::util::rng::Pcg32;
 enum Msg {
     Layer { step: usize, layer: usize, grads: Vec<Tensor> },
     Done,
+    /// Checkpoint/lockstep sync point: every message sent before this one
+    /// has been applied when the ack fires (the channel is FIFO).
+    Quiesce(Sender<()>),
+    /// Snapshot the updater-owned optimizer moments + gossip RNG.
+    StateDict(Sender<(OptState, (u64, u64))>),
+    /// Restore a snapshot (checkpoint resume); acks the load result.
+    Load(OptState, (u64, u64), Sender<Result<()>>),
 }
 
 pub struct LayUp {
@@ -126,6 +135,31 @@ impl WorkerAlgo for LayUp {
         }
         Ok(())
     }
+
+    /// Block until the updater thread applied everything sent so far. The
+    /// channel is FIFO, so an acked ping proves all prior layer messages
+    /// (local updates AND peer pushes) landed in the shared stores.
+    fn quiesce(&mut self) -> Result<()> {
+        let (ack, done) = channel();
+        self.tx.send(Msg::Quiesce(ack)).context("updater thread gone")?;
+        done.recv().context("updater thread gone (quiesce)")
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        let (ack, reply) = channel();
+        self.tx.send(Msg::StateDict(ack)).context("updater thread gone")?;
+        let (opt, rng) = reply.recv().context("updater thread gone (state_dict)")?;
+        Ok(AlgoState { opt: Some(opt), rng: Some(rng), outer: None })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        let (Some(opt), Some(rng)) = (state.opt, state.rng) else {
+            return Ok(());
+        };
+        let (ack, reply) = channel();
+        self.tx.send(Msg::Load(opt, rng, ack)).context("updater thread gone")?;
+        reply.recv().context("updater thread gone (load_state_dict)")?
+    }
 }
 
 /// The paper's "Updater Thread i".
@@ -186,6 +220,19 @@ impl UpdaterThread {
             };
             match msg {
                 Msg::Done => break,
+                Msg::Quiesce(ack) => {
+                    let _ = ack.send(()); // FIFO: everything before us applied
+                }
+                Msg::StateDict(ack) => {
+                    let _ = ack.send((self.opt.state_dict(), self.rng.state()));
+                }
+                Msg::Load(opt, rng, ack) => {
+                    let r = self.opt.load_state_dict(&opt);
+                    if r.is_ok() {
+                        self.rng = Pcg32::from_state(rng);
+                    }
+                    let _ = ack.send(r);
+                }
                 Msg::Layer { step, layer, grads } => {
                     if !pushes.contains_key(&step) {
                         let p = self.open_iteration(step);
@@ -280,12 +327,40 @@ impl UpdaterThread {
             };
             match msg {
                 Msg::Done => break,
+                Msg::Quiesce(ack) => {
+                    let _ = ack.send(()); // FIFO: everything before us applied
+                }
+                Msg::StateDict(ack) => {
+                    let _ = ack.send((self.opt.state_dict(), self.rng.state()));
+                }
+                Msg::Load(opt, rng, ack) => {
+                    let r = self.opt.load_state_dict(&opt);
+                    if r.is_ok() {
+                        self.rng = Pcg32::from_state(rng);
+                    }
+                    let _ = ack.send(r);
+                }
                 Msg::Layer { step, layer, grads } => {
                     if !pushes.contains_key(&step) {
                         let m = self.shared.m;
                         let peer = self.topology.peer(self.wid, m, step as u64, &mut self.rng);
-                        let shipped = self.shared.weights[self.wid].halve();
-                        pushes.insert(step, SimPush { peer, open: Some(shipped), skipped: false });
+                        if self.shared.membership.alive(peer) {
+                            let shipped = self.shared.weights[self.wid].halve();
+                            pushes
+                                .insert(step, SimPush { peer, open: Some(shipped), skipped: false });
+                        } else {
+                            // dead peer (chaos injection): the step's pushes
+                            // are skipped, the weight never leaves home
+                            self.shared.weights[self.wid]
+                                .skipped
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            self.shared.events.emit(TrainEvent::GossipSkipped {
+                                worker: self.wid,
+                                peer,
+                                step,
+                            });
+                            pushes.insert(step, SimPush { peer, open: None, skipped: true });
+                        }
                     }
                     // local update first — Algorithm 1's
                     // `x^{i,l} <- x̃^{i,l} - η ∇L` never waits on a link
@@ -347,12 +422,23 @@ impl UpdaterThread {
     }
 
     /// Start of an iteration: pick a peer, halve own weight, claim the
-    /// peer's accept slot (skip on contention).
+    /// peer's accept slot (skip on contention or a dead peer).
     fn open_iteration(&mut self, step: usize) -> PushState {
         let m = self.shared.m;
         let peer = self
             .topology
             .peer(self.wid, m, step as u64, &mut self.rng);
+        if !self.shared.membership.alive(peer) {
+            // dead peer (chaos injection): same semantics as a contention
+            // skip — the weight stays home, propagation is delayed
+            self.shared.weights[self.wid]
+                .skipped
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.shared
+                .events
+                .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+            return PushState { peer, frac: None, shipped_w: 0.0 };
+        }
         let shipped_w = self.shared.weights[self.wid].halve();
         let frac = self.shared.weights[peer].try_accept(shipped_w);
         if frac.is_none() {

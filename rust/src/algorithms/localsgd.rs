@@ -13,12 +13,13 @@ use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
 use crate::tensor::Tensor;
 
 pub struct LocalSgd {
     pub(crate) wid: usize,
     pub(crate) shared: Arc<Shared>,
-    opt: PerLayerOpt,
+    pub(crate) opt: PerLayerOpt,
     pub(crate) sync_period: usize,
     pub(crate) comm_latency_s: f64,
 }
@@ -82,7 +83,10 @@ impl LocalSgd {
                     *a += b;
                 }
             }
-            let m = self.shared.m as f32;
+            // under the Shrink recovery policy the collect skips dead
+            // workers, so the denominator is the contributors actually
+            // collected (== m on a fault-free run: bit-identical averages)
+            let m = flats.len() as f32;
             for a in &mut acc {
                 *a /= m;
             }
@@ -114,6 +118,17 @@ impl WorkerAlgo for LocalSgd {
             if let Some(avg) = self.global_average(step)? {
                 self.shared.params[self.wid].store_flat(&avg);
             }
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState { opt: Some(self.opt.state_dict()), ..AlgoState::default() })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.opt.load_state_dict(opt)?;
         }
         Ok(())
     }

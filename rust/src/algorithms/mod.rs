@@ -59,7 +59,8 @@ use crate::config::{Algorithm, TrainConfig};
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
 use crate::model::ModelParams;
-use crate::optim::{LayerOptimizer, OptimKind, Schedule};
+use crate::optim::{LayerOptimizer, OptState, OptimKind, Schedule};
+use crate::resilience::AlgoState;
 use crate::sim::SimAlgo;
 use crate::tensor::Tensor;
 
@@ -114,6 +115,29 @@ pub trait WorkerAlgo: Send {
 
     /// Called once after the last step (join helper threads, flush state).
     fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Block until every asynchronously dispatched update (e.g. LayUp's
+    /// updater-thread queue) has been applied to the shared stores. The
+    /// checkpoint rendezvous calls this on every worker before snapshotting,
+    /// and the deterministic lockstep driver calls it after every hook so
+    /// replays are bit-exact. Synchronous algorithms have nothing in flight.
+    fn quiesce(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Snapshot the algorithm's cross-step state (optimizer moments, gossip
+    /// RNG, outer momentum) for a `resilience::checkpoint`. Must be called
+    /// quiesced, at a step boundary.
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState::default())
+    }
+
+    /// Restore a [`WorkerAlgo::state_dict`] snapshot (checkpoint resume).
+    /// Called before the first step runs.
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        let _ = state;
         Ok(())
     }
 }
@@ -255,6 +279,26 @@ impl PerLayerOpt {
     pub fn step_layer(&mut self, params: &ModelParams, li: usize, grads: &[Tensor], step: usize) {
         let lr = self.schedule.lr_at(step);
         self.opts[li].step(&params.layers[li].tensors, grads, lr);
+    }
+
+    /// Checkpoint view of every layer's optimizer moments.
+    pub fn state_dict(&self) -> OptState {
+        OptState { layers: self.opts.iter().map(LayerOptimizer::state_dict).collect() }
+    }
+
+    /// Restore a [`PerLayerOpt::state_dict`] snapshot.
+    pub fn load_state_dict(&mut self, state: &OptState) -> Result<()> {
+        if state.layers.len() != self.opts.len() {
+            bail!(
+                "optimizer state_dict has {} layers, model has {}",
+                state.layers.len(),
+                self.opts.len()
+            );
+        }
+        for (opt, st) in self.opts.iter_mut().zip(&state.layers) {
+            opt.load_state_dict(st)?;
+        }
+        Ok(())
     }
 
     /// Fused updater hot path (§Perf): apply one layer's gradient *and* push

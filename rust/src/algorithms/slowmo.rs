@@ -21,6 +21,7 @@ use crate::algorithms::{localsgd::LocalSgd, StepState, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
+use crate::resilience::{AlgoState, OuterState};
 use crate::tensor::Tensor;
 
 pub struct SlowMo {
@@ -94,6 +95,28 @@ impl WorkerAlgo for SlowMo {
                 );
                 self.inner.shared.params[self.inner.wid].store_flat(&x_new);
             }
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState {
+            opt: Some(self.inner.opt.state_dict()),
+            rng: None,
+            outer: Some(OuterState { u: self.u.clone(), x_prev: self.x_prev.clone() }),
+        })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.inner.opt.load_state_dict(opt)?;
+        }
+        if let Some(outer) = state.outer {
+            if outer.u.len() != self.u.len() || outer.x_prev.len() != self.x_prev.len() {
+                anyhow::bail!("outer-momentum state_dict length mismatch");
+            }
+            self.u = outer.u;
+            self.x_prev = outer.x_prev;
         }
         Ok(())
     }

@@ -8,7 +8,7 @@
 //! traffic through `FabricCore::record_instant`; only the collective shares
 //! (DDP gradients, LocalSGD/SlowMo/CO2 snapshots) route through `push`.
 
-use crate::comm::{apply, ApplyResult, Fabric, FabricCore, Payload, PushOutcome};
+use crate::comm::{apply, ApplyResult, Fabric, FabricCore, InFlight, Payload, PushOutcome};
 use crate::coordinator::Shared;
 
 /// See the module docs: zero-delay, loss-free, in-process links.
@@ -59,6 +59,29 @@ impl Fabric for InstantFabric {
     fn deliver_due(&self, _shared: &Shared, _wid: usize, _recv_step: usize) -> usize {
         0 // nothing is ever queued
     }
+
+    fn drain(&self, _wid: usize) -> Vec<InFlight> {
+        Vec::new() // nothing is ever in flight
+    }
+
+    fn restore(&self, shared: &Shared, msgs: Vec<InFlight>) {
+        // Restoring (e.g. a checkpoint taken on a simulated fabric) onto the
+        // zero-delay transport applies the messages immediately — the
+        // instant-fabric semantics of "no time passes on the link". A busy
+        // push-sum accept slot cannot happen here (restore runs before any
+        // worker thread spawns), but reclaim defensively so weight mass can
+        // never be destroyed.
+        for m in msgs {
+            let shipped = m.payload.shipped_weight();
+            if matches!(
+                self.push(shared, m.from, m.to, m.step, m.payload),
+                PushOutcome::Busy | PushOutcome::Dropped
+            ) && shipped > 0.0
+            {
+                shared.weights[m.from].reclaim(shipped);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +126,29 @@ mod tests {
         assert_eq!(stats.msgs_delivered, 1);
         assert_eq!(stats.bytes_sent, wire_bytes(1));
         assert_eq!(stats.staleness_sum, 0, "instant delivery has zero staleness");
+    }
+
+    /// The instant transport never queues, so drain is empty; restoring
+    /// (e.g. a sim-fabric checkpoint) applies the messages immediately.
+    #[test]
+    fn drain_is_empty_and_restore_applies_immediately() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::new(2));
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        assert!(fabric.drain(0).is_empty());
+        assert!(fabric.drain(1).is_empty());
+        fabric.restore(
+            &shared,
+            vec![crate::comm::InFlight {
+                from: 0,
+                to: 1,
+                step: 4,
+                remaining_s: 0.25, // remaining delay collapses to zero here
+                payload: Payload::ParamShare { flat: Arc::new(vec![7.0, 7.0]) },
+            }],
+        );
+        let (step, flat) = fabric.core().latest_params(1, 0).unwrap();
+        assert_eq!(step, 4);
+        assert_eq!(*flat, vec![7.0, 7.0]);
     }
 
     #[test]

@@ -48,6 +48,7 @@ use anyhow::{bail, Context, Result};
 use crate::algorithms::GradSet;
 use crate::coordinator::Shared;
 use crate::metrics::{CommStats, LinkTraffic};
+use crate::resilience::membership::{Membership, RecoveryPolicy};
 use crate::session::events::TrainEvent;
 use crate::util::rng::Pcg32;
 
@@ -146,6 +147,23 @@ impl Payload {
             _ => 0.0,
         }
     }
+}
+
+/// One queued message pulled off a transport by [`Fabric::drain`] — the
+/// checkpoint/crash view of traffic still riding the links. Restorable via
+/// [`Fabric::restore`]; serialized by `resilience::checkpoint`.
+#[derive(Clone)]
+pub struct InFlight {
+    /// sending worker
+    pub from: usize,
+    /// receiving worker
+    pub to: usize,
+    /// sender's step at send time
+    pub step: usize,
+    /// link delay left when drained (0 on instant transports; a restored
+    /// message becomes due this many seconds after the restore)
+    pub remaining_s: f64,
+    pub payload: Payload,
 }
 
 /// What [`Fabric::push`] did with the message.
@@ -364,6 +382,18 @@ pub trait Fabric: Send + Sync {
     /// transports); returns how many were applied. Called by the receiving
     /// worker at its step boundaries — `recv_step` is its current step.
     fn deliver_due(&self, shared: &Shared, wid: usize, recv_step: usize) -> usize;
+
+    /// Remove every message queued toward `wid` without applying it
+    /// (checkpoint quiesce, crash reclaim). Instant transports queue
+    /// nothing, so they return an empty vec. Deliveries on the drained link
+    /// keep their send order.
+    fn drain(&self, wid: usize) -> Vec<InFlight>;
+
+    /// Re-inject messages taken by [`Fabric::drain`] (or loaded from a
+    /// checkpoint): queued transports re-queue them with their remaining
+    /// delay, instant transports apply them on the spot. Send-time dice
+    /// (drop, latency) were already rolled — restoring must not re-roll.
+    fn restore(&self, shared: &Shared, msgs: Vec<InFlight>);
 }
 
 /// Per-link traffic counters (lock-free; snapshot via [`FabricCore::snapshot`]).
@@ -395,22 +425,32 @@ pub struct FabricCore {
     /// per receiver: `(from, step) -> mixing fraction` for in-flight
     /// layer-wise pushes
     pending_frac: Vec<Mutex<HashMap<(usize, usize), f32>>>,
+    /// elastic worker membership (shared with `Shared` so transports and
+    /// algorithms agree on liveness; see `crate::resilience::membership`)
+    membership: Arc<Membership>,
 }
 
 impl FabricCore {
-    /// Fresh core for an `m`-worker fabric.
+    /// Fresh core for an `m`-worker fabric (all slots alive).
     pub fn new(m: usize) -> FabricCore {
         FabricCore {
             m,
             links: (0..m * m).map(|_| LinkCounters::default()).collect(),
             shares: (0..m * m).map(|_| Mutex::new(ShareSlot::default())).collect(),
             pending_frac: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
+            membership: Arc::new(Membership::new(m)),
         }
     }
 
     /// Number of workers this fabric connects.
     pub fn workers(&self) -> usize {
         self.m
+    }
+
+    /// The fabric's membership table (versioned epoch; shared with the run's
+    /// `Shared` state).
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
     }
 
     fn link(&self, from: usize, to: usize) -> &LinkCounters {
@@ -641,12 +681,19 @@ pub(crate) fn apply(
 /// arrived at `wid`. `mine` fills the own-worker position so the result is
 /// ordered by sender id — the all-reduce averaging order the seed code used,
 /// kept for bit-identical averages. Returns `None` when the run is stopping.
+///
+/// Membership-aware: under the `Shrink` recovery policy a dead sender is
+/// skipped (the collective averages over live contributors); under `Stall`
+/// the collect keeps waiting — the worker rejoins, or the chaos supervisor
+/// reports the stall and stops the run. Liveness is re-read every pass, so a
+/// mid-collect membership change unblocks waiters.
 pub fn collect_grads(
     shared: &Shared,
     wid: usize,
     step: usize,
     mine: Arc<GradSet>,
 ) -> Option<Vec<Arc<GradSet>>> {
+    let shrink = shared.membership.policy() == RecoveryPolicy::Shrink;
     loop {
         shared.fabric.deliver_due(shared, wid, step);
         let mut out: Vec<Arc<GradSet>> = Vec::with_capacity(shared.m);
@@ -654,6 +701,9 @@ pub fn collect_grads(
         for from in 0..shared.m {
             if from == wid {
                 out.push(Arc::clone(&mine));
+                continue;
+            }
+            if shrink && !shared.membership.alive(from) {
                 continue;
             }
             match shared.fabric.core().latest_grads(wid, from) {
@@ -675,13 +725,15 @@ pub fn collect_grads(
 }
 
 /// Block (pumping deliveries) until every peer's parameter share for `step`
-/// arrived at `wid`; ordering as in [`collect_grads`]. `None` when stopping.
+/// arrived at `wid`; ordering and membership semantics as in
+/// [`collect_grads`]. `None` when stopping.
 pub fn collect_params(
     shared: &Shared,
     wid: usize,
     step: usize,
     mine: Arc<Vec<f32>>,
 ) -> Option<Vec<Arc<Vec<f32>>>> {
+    let shrink = shared.membership.policy() == RecoveryPolicy::Shrink;
     loop {
         shared.fabric.deliver_due(shared, wid, step);
         let mut out: Vec<Arc<Vec<f32>>> = Vec::with_capacity(shared.m);
@@ -689,6 +741,9 @@ pub fn collect_params(
         for from in 0..shared.m {
             if from == wid {
                 out.push(Arc::clone(&mine));
+                continue;
+            }
+            if shrink && !shared.membership.alive(from) {
                 continue;
             }
             match shared.fabric.core().latest_params(wid, from) {

@@ -17,7 +17,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::comm::{apply, ApplyResult, Fabric, FabricCore, LatencyDist, Payload, PushOutcome};
+use crate::comm::{
+    apply, ApplyResult, Fabric, FabricCore, InFlight, LatencyDist, Payload, PushOutcome,
+};
 use crate::coordinator::Shared;
 use crate::util::rng::Pcg32;
 
@@ -196,12 +198,10 @@ impl Fabric for SimFabric {
         if due.is_empty() {
             return 0;
         }
-        due.sort_by(|a, b| {
-            a.ready_at
-                .partial_cmp(&b.ready_at)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.seq.cmp(&b.seq))
-        });
+        // total_cmp: a NaN ready time (impossible by construction, but this
+        // is the same class of bug as the simulator's device pick) must not
+        // scramble FIFO order silently
+        due.sort_by(|a, b| a.ready_at.total_cmp(&b.ready_at).then(a.seq.cmp(&b.seq)));
         let mut applied = 0usize;
         let mut replies: Vec<(usize, Payload)> = Vec::new();
         let mut leftover: Vec<Queued> = Vec::new();
@@ -236,6 +236,44 @@ impl Fabric for SimFabric {
             let _ = self.push(shared, wid, dest, recv_step, p);
         }
         applied
+    }
+
+    fn drain(&self, wid: usize) -> Vec<InFlight> {
+        let now = self.now();
+        let mut queued: Vec<Queued> = self.inboxes[wid].lock().unwrap().drain(..).collect();
+        // keep the link's delivery order (ready time, then send sequence)
+        queued.sort_by(|a, b| {
+            a.ready_at
+                .total_cmp(&b.ready_at)
+                .then(a.seq.cmp(&b.seq))
+        });
+        queued
+            .into_iter()
+            .map(|q| InFlight {
+                from: q.from,
+                to: wid,
+                step: q.step,
+                remaining_s: (q.ready_at - now).max(0.0),
+                payload: q.payload,
+            })
+            .collect()
+    }
+
+    fn restore(&self, _shared: &Shared, msgs: Vec<InFlight>) {
+        // These messages already paid their send-time dice (drop decision,
+        // latency sample, serialization delay) — re-queue them with the
+        // remaining delay, in order, without touching the link RNGs.
+        let now = self.now();
+        for m in msgs {
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            self.inboxes[m.to].lock().unwrap().push(Queued {
+                seq,
+                ready_at: now + m.remaining_s,
+                from: m.from,
+                step: m.step,
+                payload: m.payload,
+            });
+        }
     }
 }
 
@@ -342,6 +380,66 @@ mod tests {
             Payload::ParamShare { flat: Arc::new(vec![0.0; 4]) },
         );
         assert_eq!(out, PushOutcome::Queued);
+    }
+
+    /// Checkpoint quiesce contract: drain removes queued traffic without
+    /// applying it, restore re-queues it with its remaining delay, and the
+    /// push-sum mass riding the links survives the round trip.
+    #[test]
+    fn drain_restore_roundtrip_conserves_in_flight_mass() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, 2, 4));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        let shipped = shared.weights[0].halve();
+        let values = Arc::new(vec![vec![vec![5.0f32, 5.0]]]);
+        let _ = fabric.push(&shared, 0, 1, 3, Payload::ModelPush { w_in: shipped, values });
+        let (mass_before, _) = sim.in_flight_push_sum_mass();
+        assert!((mass_before - shipped as f64).abs() < 1e-9);
+
+        let msgs = fabric.drain(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!((msgs[0].from, msgs[0].to, msgs[0].step), (0, 1, 3));
+        assert_eq!(sim.pending_count(), 0, "drained, nothing queued");
+        let (mass_drained, _) = sim.in_flight_push_sum_mass();
+        assert_eq!(mass_drained, 0.0);
+        // nothing was applied: the receiver is untouched
+        assert_eq!(shared.params[1].flatten(), vec![1.0, 1.0]);
+
+        fabric.restore(&shared, msgs);
+        assert_eq!(sim.pending_count(), 1);
+        let (mass_restored, _) = sim.in_flight_push_sum_mass();
+        assert!((mass_restored - shipped as f64).abs() < 1e-9, "mass back on the links");
+
+        assert_eq!(fabric.deliver_due(&shared, 1, 5), 1);
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-6, "total mass conserved end-to-end");
+    }
+
+    /// Drained messages carry their remaining delay: restoring a not-yet-due
+    /// message keeps it undeliverable until that delay passes.
+    #[test]
+    fn drain_preserves_remaining_latency() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(30.0), 0.0, 0.0, 2, 5));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            0,
+            Payload::ParamShare { flat: Arc::new(vec![1.0, 1.0]) },
+        );
+        let msgs = fabric.drain(1);
+        assert_eq!(msgs.len(), 1);
+        assert!(
+            msgs[0].remaining_s > 25.0 && msgs[0].remaining_s <= 30.0,
+            "remaining {}",
+            msgs[0].remaining_s
+        );
+        fabric.restore(&shared, msgs);
+        assert_eq!(fabric.deliver_due(&shared, 1, 0), 0, "still not due after restore");
+        assert_eq!(sim.pending_count(), 1);
     }
 
     #[test]

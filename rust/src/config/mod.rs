@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::{FabricSpec, LatencyDist};
 use crate::optim::{OptimKind, Schedule};
+use crate::resilience::{FaultPlan, RecoveryPolicy};
 use crate::topology::Topology;
 
 /// Parsed TOML-subset document: section -> key -> value.
@@ -241,6 +242,22 @@ pub struct TrainConfig {
     /// default) or `Sim` (per-link latency, bandwidth and loss — the
     /// delay-robustness experiments)
     pub fabric: FabricSpec,
+    /// write a `resilience::checkpoint` every k steps (0 = off)
+    pub checkpoint_every: usize,
+    /// parent directory for periodic checkpoints (`step-XXXXXX` subdirs)
+    pub checkpoint_dir: std::path::PathBuf,
+    /// chaos fault schedule (empty = no injected failures)
+    pub faults: FaultPlan,
+    /// how collective (barrier) algorithms react to a dead peer
+    pub recovery: RecoveryPolicy,
+    /// Stall policy: seconds a permanently lost worker may block the
+    /// collective before the run is reported stalled and stopped
+    pub stall_timeout_s: f64,
+    /// deterministic lockstep driver: one thread runs every worker
+    /// round-robin with quiesced updates — same seed, same floats, every
+    /// run (resume-parity testing, replay debugging). Rejected for barrier
+    /// algorithms, decoupled pools, chaos and stragglers.
+    pub lockstep: bool,
 }
 
 impl TrainConfig {
@@ -266,6 +283,12 @@ impl TrainConfig {
             bwd_threads: 1,
             queue_depth: 2,
             fabric: FabricSpec::Instant,
+            checkpoint_every: 0,
+            checkpoint_dir: std::path::PathBuf::from("checkpoints"),
+            faults: FaultPlan::default(),
+            recovery: RecoveryPolicy::Stall,
+            stall_timeout_s: 60.0,
+            lockstep: false,
         }
     }
 
@@ -300,6 +323,70 @@ impl TrainConfig {
             );
         }
         self.fabric.validate()?;
+        self.faults.validate(self.workers, self.steps)?;
+        if !self.faults.is_empty() && self.decoupled {
+            bail!(
+                "chaos injection drives the serial per-worker loop; it cannot tear down \
+                 decoupled forward/backward pools (set decoupled = false or drop the faults)"
+            );
+        }
+        if self.checkpoint_every > 0 && self.decoupled {
+            bail!(
+                "checkpointing quiesces workers at a common step boundary, which decoupled \
+                 pools (out-of-order passes) do not have; set decoupled = false"
+            );
+        }
+        let has_restart_fault = self.faults.faults.iter().any(|f| f.restart_after_s.is_some());
+        if self.checkpoint_every > 0 && has_restart_fault {
+            bail!(
+                "periodic checkpoints cannot be combined with crash/restart faults: a \
+                 rejoined worker runs several steps behind the survivors, so it would hit \
+                 checkpoint boundaries the others have already passed (tearing or hanging \
+                 the rendezvous); checkpoint alongside permanent faults, or run the \
+                 restart schedule without checkpointing"
+            );
+        }
+        if self.recovery == RecoveryPolicy::Shrink
+            && self.algorithm.uses_barrier()
+            && has_restart_fault
+        {
+            bail!(
+                "{}: a worker cannot rejoin a SHRUNKEN collective — the survivors advance \
+                 past its step-tagged exchanges during the downtime and neither side's \
+                 collect can complete; use the stall policy for crash/restart faults, or \
+                 make the loss permanent",
+                self.algorithm.name()
+            );
+        }
+        if self.stall_timeout_s <= 0.0 || !self.stall_timeout_s.is_finite() {
+            bail!("stall_timeout_s must be a finite positive number of seconds");
+        }
+        if self.lockstep {
+            if self.algorithm.uses_barrier() {
+                bail!(
+                    "{} blocks at a collective barrier and would deadlock the single \
+                     lockstep driver thread; run it on the threaded engine (its \
+                     step-tagged exchanges are deterministic there already)",
+                    self.algorithm.name()
+                );
+            }
+            if self.decoupled {
+                bail!("lockstep is a serial driver; it cannot run decoupled pools");
+            }
+            if !self.faults.is_empty() {
+                bail!("chaos injection requires the threaded engine; drop lockstep");
+            }
+            if self.straggler.is_some() {
+                bail!("straggler injection (wall-clock sleeps) is meaningless under lockstep");
+            }
+            if !matches!(self.fabric, FabricSpec::Instant) {
+                bail!(
+                    "lockstep's same-seed-same-floats guarantee holds on the instant \
+                     fabric only: simulated links deliver on wall-clock time, which the \
+                     deterministic driver cannot control; use the instant fabric"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -362,6 +449,20 @@ impl TrainConfig {
             let delay = doc.f64_or("straggler", "delay_iterations", 1.0);
             cfg.straggler = Some((w, delay));
         }
+
+        // [checkpoint]: periodic snapshots (resilience subsystem)
+        cfg.checkpoint_every = doc.usize_or("checkpoint", "every", 0);
+        cfg.checkpoint_dir =
+            std::path::PathBuf::from(doc.str_or("checkpoint", "dir", "checkpoints"));
+
+        // [chaos]: seeded fault schedule + recovery knobs
+        if let Some(spec) = doc.get("chaos", "faults").and_then(|v| v.as_str()) {
+            cfg.faults = FaultPlan::parse(spec)?;
+        }
+        cfg.recovery = RecoveryPolicy::parse(doc.str_or("chaos", "policy", "stall"))?;
+        cfg.stall_timeout_s = doc.f64_or("chaos", "stall_timeout_s", cfg.stall_timeout_s);
+
+        cfg.lockstep = doc.bool_or("run", "lockstep", false);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -530,6 +631,113 @@ mod tests {
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Toml::parse("[fabric]\nkind = \"carrier-pigeon\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_chaos_sections_parse_and_validate() {
+        let doc = Toml::parse(
+            r#"
+            [run]
+            algorithm = "layup"
+            workers = 3
+            steps = 100
+            [checkpoint]
+            every = 25
+            dir = "snaps"
+            [chaos]
+            faults = "1@20+0.5, 2@40"
+            policy = "shrink"
+            stall_timeout_s = 5.0
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_every, 25);
+        assert_eq!(cfg.checkpoint_dir, std::path::PathBuf::from("snaps"));
+        assert_eq!(cfg.faults.faults.len(), 2);
+        assert_eq!(cfg.recovery, RecoveryPolicy::Shrink);
+        assert!((cfg.stall_timeout_s - 5.0).abs() < 1e-12);
+
+        // defaults: no checkpointing, no chaos, stall policy
+        let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        assert_eq!(d.checkpoint_every, 0);
+        assert!(d.faults.is_empty());
+        assert_eq!(d.recovery, RecoveryPolicy::Stall);
+        assert!(!d.lockstep);
+        d.validate().unwrap();
+
+        // fault schedules are validated against the run shape at parse time
+        let doc = Toml::parse("[run]\nworkers = 2\nsteps = 10\n[chaos]\nfaults = \"5@3\"\n")
+            .unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err(), "fault targets worker 5 of 2");
+    }
+
+    #[test]
+    fn lockstep_and_resilience_validation_rules() {
+        // lockstep runs any non-barrier algorithm
+        for algo in [Algorithm::LayUp, Algorithm::GoSgd, Algorithm::AdPsgd, Algorithm::Co2] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.lockstep = true;
+            cfg.validate().unwrap();
+        }
+        // ...but not the barrier family (single driver thread would deadlock)
+        for algo in [Algorithm::Ddp, Algorithm::LocalSgd, Algorithm::SlowMo] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.lockstep = true;
+            assert!(cfg.validate().is_err(), "{algo:?}");
+        }
+        // lockstep excludes decoupled pools, chaos and stragglers
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.lockstep = true;
+        cfg.decoupled = true;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.lockstep = true;
+        cfg.faults = FaultPlan::default().crash(1, 5);
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.lockstep = true;
+        cfg.straggler = Some((1, 2.0));
+        assert!(cfg.validate().is_err());
+        // ...and the sim fabric (wall-clock deliveries break determinism)
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.lockstep = true;
+        cfg.fabric = FabricSpec::sim_default();
+        assert!(cfg.validate().is_err());
+        // chaos + decoupled and checkpoint + decoupled are rejected
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.decoupled = true;
+        cfg.faults = FaultPlan::default().crash_restart(1, 5, 0.1);
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.decoupled = true;
+        cfg.checkpoint_every = 5;
+        assert!(cfg.validate().is_err());
+        // a bad stall timeout is rejected
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::Ddp, 2, 10);
+        cfg.stall_timeout_s = 0.0;
+        assert!(cfg.validate().is_err());
+        // restart faults tear the checkpoint rendezvous (rejoiner runs
+        // behind); permanent faults checkpoint fine
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.checkpoint_every = 4;
+        cfg.faults = FaultPlan::default().crash_restart(1, 5, 0.1);
+        assert!(cfg.validate().is_err());
+        cfg.faults = FaultPlan::default().crash(1, 5);
+        cfg.validate().unwrap();
+        // a worker cannot rejoin a SHRUNKEN barrier collective...
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::Ddp, 3, 10);
+        cfg.recovery = RecoveryPolicy::Shrink;
+        cfg.faults = FaultPlan::default().crash_restart(1, 5, 0.1);
+        assert!(cfg.validate().is_err());
+        // ...but stall-and-rejoin supports the restart, and gossip
+        // algorithms rejoin a shrink-policy run fine (no collectives)
+        cfg.recovery = RecoveryPolicy::Stall;
+        cfg.validate().unwrap();
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 3, 10);
+        cfg.recovery = RecoveryPolicy::Shrink;
+        cfg.faults = FaultPlan::default().crash_restart(1, 5, 0.1);
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -1,43 +1,265 @@
-//! The run engine: spawns one driver per simulated device (serial loop or
-//! decoupled forward/backward pools — see [`super::worker`]), propagates the
-//! cooperative stop flag on error, and joins everything back into per-worker
+//! The run engine: a supervising loop that spawns one driver per simulated
+//! device (serial loop or decoupled forward/backward pools — see
+//! [`super::worker`]), executes the chaos fault schedule (tear down /
+//! respawn with per-algorithm recovery), propagates the cooperative stop
+//! flag on error, and joins everything back into per-worker
 //! [`WorkerStats`]. Summary assembly lives in [`crate::session`].
+//!
+//! # Crash / recovery protocol
+//!
+//! A worker whose scheduled fault fires exits its thread with
+//! `WorkerExit::Crashed`. The supervisor then:
+//!
+//! 1. marks the slot dead (membership epoch bumps) and emits
+//!    [`TrainEvent::WorkerCrashed`];
+//! 2. drains the dead worker's fabric inbox, reclaiming any shipped
+//!    push-sum weight to its senders — **mass is never destroyed**;
+//! 3. for gossip algorithms, folds the dead worker's own push-sum weight
+//!    into the lowest-id live peer (same invariant);
+//! 4. if the fault schedules a restart, respawns the worker after the
+//!    downtime: gossip workers re-enter from that peer's *current*
+//!    parameters with half the donor's weight (conserved), barrier workers
+//!    keep their own (still-current) replica; either way the optimizer
+//!    moments died with the device. [`TrainEvent::WorkerJoined`] fires with
+//!    the new membership epoch.
+//!
+//! Under the `Stall` recovery policy a *permanent* loss leaves barrier
+//! algorithms waiting forever; after `TrainConfig::stall_timeout_s` the
+//! supervisor marks the run stalled (`RunStats::recovery.stalled`) and stops
+//! it — the fault-tolerance bench's DDP rows are exactly this path.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
-use crate::coordinator::{worker, Shared, WorkerStats};
+use crate::coordinator::worker::{WorkerBoot, WorkerExit};
+use crate::coordinator::{lockstep, worker, Shared, WorkerStats};
 use crate::manifest::Manifest;
+use crate::resilience::{Checkpoint, RecoveryPolicy};
+use crate::session::events::TrainEvent;
+
+/// Supervisor's view of one worker slot.
+enum Slot<'scope> {
+    Running(std::thread::ScopedJoinHandle<'scope, Result<WorkerExit>>),
+    /// crashed with a scheduled restart: respawn once `at` passes
+    Waiting { at: Instant, boot: WorkerBoot },
+    Done,
+}
 
 /// Drive the configured run to completion on the thread cluster.
 pub(crate) fn execute(
     cfg: &TrainConfig,
     manifest: &Manifest,
     shared: &Arc<Shared>,
+    resume: Option<&Checkpoint>,
 ) -> Result<Vec<WorkerStats>> {
+    if cfg.lockstep {
+        return lockstep::run(cfg, manifest, shared, resume);
+    }
+    let start_step = resume.map(|c| c.step).unwrap_or(0);
+    let boot_for = |wid: usize| -> WorkerBoot {
+        match resume {
+            Some(ck) => WorkerBoot {
+                start_step,
+                cursor: ck.workers_state[wid].cursor,
+                algo: Some(ck.workers_state[wid].algo.clone()),
+            },
+            None => WorkerBoot::default(),
+        }
+    };
+
     std::thread::scope(|scope| -> Result<Vec<WorkerStats>> {
-        let mut handles = Vec::new();
-        for wid in 0..cfg.workers {
+        let spawn_worker = |wid: usize, boot: WorkerBoot| {
             let shared = Arc::clone(shared);
             let cfg = cfg.clone();
-            handles.push(scope.spawn(move || {
+            scope.spawn(move || {
                 let r = if cfg.decoupled {
                     worker::worker_decoupled(&cfg, wid, &shared, manifest)
+                        .map(WorkerExit::Completed)
                 } else {
-                    worker::worker_main(&cfg, wid, &shared, manifest)
+                    worker::worker_main(&cfg, wid, &shared, manifest, boot)
                 };
                 if r.is_err() {
                     shared.stop.store(true, Ordering::Relaxed);
                 }
                 r
-            }));
+            })
+        };
+
+        let mut slots: Vec<Slot> = (0..cfg.workers)
+            .map(|wid| Slot::Running(spawn_worker(wid, boot_for(wid))))
+            .collect();
+        let mut stats: Vec<WorkerStats> = vec![WorkerStats::default(); cfg.workers];
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut permanent_crash_at: Option<Instant> = None;
+
+        loop {
+            let mut all_done = true;
+            for wid in 0..cfg.workers {
+                let slot = &mut slots[wid];
+                match slot {
+                    Slot::Done => {}
+                    Slot::Running(h) if h.is_finished() => {
+                        let h = match std::mem::replace(slot, Slot::Done) {
+                            Slot::Running(h) => h,
+                            _ => unreachable!(),
+                        };
+                        match h.join().expect("worker thread panicked") {
+                            Ok(WorkerExit::Completed(ws)) => stats[wid].absorb(&ws),
+                            Ok(WorkerExit::Crashed { next_step, cursor, stats: ws }) => {
+                                stats[wid].absorb(&ws);
+                                handle_crash(cfg, shared, wid, next_step);
+                                let restart = shared
+                                    .chaos
+                                    .as_ref()
+                                    .and_then(|c| c.restart_after(wid, next_step));
+                                match restart {
+                                    Some(secs) => {
+                                        *slot = Slot::Waiting {
+                                            at: Instant::now() + Duration::from_secs_f64(secs),
+                                            boot: WorkerBoot {
+                                                start_step: next_step,
+                                                cursor,
+                                                algo: None,
+                                            },
+                                        };
+                                        all_done = false;
+                                    }
+                                    None => {
+                                        permanent_crash_at.get_or_insert_with(Instant::now);
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                shared.stop.store(true, Ordering::Relaxed);
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    Slot::Running(_) => all_done = false,
+                    Slot::Waiting { at, .. } => {
+                        if shared.should_stop() {
+                            *slot = Slot::Done;
+                        } else if Instant::now() >= *at {
+                            let boot = match std::mem::replace(slot, Slot::Done) {
+                                Slot::Waiting { boot, .. } => boot,
+                                _ => unreachable!(),
+                            };
+                            recover_worker(cfg, shared, wid, boot.start_step);
+                            *slot = Slot::Running(spawn_worker(wid, boot));
+                            all_done = false;
+                        } else {
+                            all_done = false;
+                        }
+                    }
+                }
+            }
+            if all_done {
+                break;
+            }
+            // Stall detection: a permanently lost worker under the Stall
+            // policy leaves barrier collectives waiting for a peer that is
+            // never coming back. Report and stop instead of hanging.
+            if let Some(t0) = permanent_crash_at {
+                if cfg.algorithm.uses_barrier()
+                    && shared.membership.policy() == RecoveryPolicy::Stall
+                    && !shared.membership.stalled()
+                    && t0.elapsed().as_secs_f64() > cfg.stall_timeout_s
+                {
+                    shared.membership.mark_stalled();
+                    shared.stop.store(true, Ordering::Relaxed);
+                }
+            }
+            // Dead-slot weight sweep: a gossip peer that read alive==true an
+            // instant before mark_dead can still deposit push-sum weight
+            // into the dead slot (lock-free stores, no global quiesce).
+            // Re-fold any residue into a live peer every supervisor pass —
+            // try_drain claims the accept slot so a deposit mid-flight is
+            // never lost to a read-zero-write race; on contention we simply
+            // retry next pass. Mass can park for a poll interval, never
+            // strand — the conservation invariant holds under chaos.
+            if !cfg.algorithm.uses_barrier() {
+                for w in 0..cfg.workers {
+                    if !shared.membership.alive(w) {
+                        if let Some(donor) = shared.membership.first_live() {
+                            match shared.weights[w].try_drain() {
+                                Some(residue) if residue > 0.0 => {
+                                    shared.weights[donor].reclaim(residue);
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("worker thread panicked"))
-            .collect()
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(stats),
+        }
     })
+}
+
+/// Supervisor-side teardown of a crashed worker (see module docs, steps
+/// 1–3). The worker's thread has already exited cleanly.
+fn handle_crash(cfg: &TrainConfig, shared: &Arc<Shared>, wid: usize, step: usize) {
+    shared.membership.mark_dead(wid);
+    shared.events.emit(TrainEvent::WorkerCrashed { worker: wid, step });
+    // In-flight traffic addressed to the dead worker: gossip payloads are
+    // lost with the device (delayed information) and their shipped push-sum
+    // weight is reclaimed at the senders — mass is never destroyed. Reliable
+    // collective shares (GradShare/ParamShare) are NOT discarded: they stay
+    // queued like bytes in a TCP buffer waiting for the host to come back,
+    // so a respawned worker can still complete the step-tagged collect its
+    // peers are blocked on.
+    let (reliable, gossip): (Vec<_>, Vec<_>) = shared
+        .fabric
+        .drain(wid)
+        .into_iter()
+        .partition(|m| !m.payload.droppable());
+    for msg in gossip {
+        let w = msg.payload.shipped_weight();
+        if w > 0.0 {
+            shared.weights[msg.from].reclaim(w);
+        }
+    }
+    shared.fabric.restore(shared, reliable);
+    // the dead worker's own weight folds into a surviving peer; gossip
+    // consensus keeps total mass 1 (barrier algorithms don't use weights).
+    // try_drain claims the accept slot so a racing deposit isn't lost; if a
+    // peer is mid-deposit right now, the supervisor's per-pass sweep picks
+    // the slot up a poll interval later.
+    if !cfg.algorithm.uses_barrier() {
+        if let Some(donor) = shared.membership.first_live() {
+            if let Some(w) = shared.weights[wid].try_drain() {
+                shared.weights[donor].reclaim(w);
+            }
+        }
+    }
+}
+
+/// Supervisor-side recovery right before a respawn (module docs, step 4).
+fn recover_worker(cfg: &TrainConfig, shared: &Arc<Shared>, wid: usize, step: usize) {
+    if !cfg.algorithm.uses_barrier() {
+        if let Some(donor) = shared.membership.first_live() {
+            // re-enter gossip from the donor's CURRENT parameters (the
+            // joiner's own replica is stale by the downtime) with half the
+            // donor's push-sum weight — mass conserved
+            shared.params[wid].copy_from(&shared.params[donor]);
+            let w = shared.weights[donor].halve();
+            shared.weights[wid].reclaim(w);
+        }
+    }
+    shared.membership.mark_alive(wid);
+    shared.events.emit(TrainEvent::WorkerJoined {
+        worker: wid,
+        step,
+        epoch: shared.membership.epoch(),
+    });
 }

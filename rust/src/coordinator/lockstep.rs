@@ -1,0 +1,211 @@
+//! Deterministic lockstep driver: every simulated device of the run is
+//! driven round-robin by ONE thread, with the algorithms' asynchronous
+//! updates quiesced after each hook.
+//!
+//! The threaded engine is intentionally racy — gossip writes land in peers'
+//! stores whenever the OS schedules the updater threads, exactly as the
+//! paper describes. That realism makes gossip runs non-reproducible
+//! run-to-run, which is fatal for one specific job: proving that a
+//! checkpoint resume is **bit-identical** to an uninterrupted run. Lockstep
+//! mode (`TrainConfig::lockstep`) removes the scheduler from the picture:
+//!
+//! * phase A — for each worker in id order: forward, backward (streaming
+//!   `on_layer_grads`), then [`crate::algorithms::WorkerAlgo::quiesce`], so
+//!   LayUp's updater has applied every local update *and* peer push before
+//!   the next worker computes;
+//! * phase B — for each worker in id order: `on_step_end` + quiesce, then
+//!   the fabric's step-boundary deliveries.
+//!
+//! Same seed → same floats, every run. Barrier algorithms (which would
+//! deadlock a single driving thread at their collectives), decoupled pools,
+//! chaos schedules, stragglers and the simulated fabric (wall-clock
+//! deliveries) are rejected by `TrainConfig::validate` for this mode;
+//! checkpointing works and is how the resume-parity tests pin the
+//! save→load→continue invariant for the gossip algorithms.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{self, StepState, WorkerAlgo};
+use crate::comm::Fabric;
+use crate::config::TrainConfig;
+use crate::coordinator::worker::{self, DriftScratch, WorkerBoot};
+use crate::coordinator::{Shared, WorkerSlot, WorkerStats};
+use crate::data::{self, Dataset};
+use crate::manifest::Manifest;
+use crate::metrics::{CurvePoint, QueueStats};
+use crate::model::ModelExec;
+use crate::resilience::Checkpoint;
+use crate::runtime::Runtime;
+use crate::session::events::TrainEvent;
+
+/// Per-worker execution context owned by the driving thread. The runtime
+/// must outlive its executables, so it rides along.
+struct Wctx {
+    _rt: Runtime,
+    exec: ModelExec,
+    dataset: Box<dyn Dataset>,
+    algo: Box<dyn WorkerAlgo>,
+    completed: usize,
+    fwd_s: f64,
+    bwd_s: f64,
+}
+
+/// Drive the whole run on the calling thread (see module docs).
+pub(crate) fn run(
+    cfg: &TrainConfig,
+    manifest: &Manifest,
+    shared: &Arc<Shared>,
+    resume: Option<&Checkpoint>,
+) -> Result<Vec<WorkerStats>> {
+    let model = manifest.model(&cfg.model)?;
+    let n_layers = model.layers.len();
+    let m = cfg.workers;
+    let start_step = resume.map(|c| c.step).unwrap_or(0);
+
+    let mut ctxs: Vec<Wctx> = Vec::with_capacity(m);
+    for wid in 0..m {
+        let boot = match resume {
+            Some(ck) => WorkerBoot {
+                start_step,
+                cursor: ck.workers_state[wid].cursor,
+                algo: Some(ck.workers_state[wid].algo.clone()),
+            },
+            None => WorkerBoot::default(),
+        };
+        let mut rt = Runtime::new().context("lockstep runtime")?;
+        let exec = ModelExec::load(&mut rt, manifest, &cfg.model)
+            .with_context(|| format!("lockstep worker {wid}: loading model"))?;
+        let mut dataset = data::build(model, wid, cfg.workers, cfg.seed)?;
+        if boot.cursor > 0 {
+            dataset.skip(boot.cursor);
+        }
+        let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), model)?;
+        if let Some(state) = boot.algo {
+            algo.load_state_dict(state)
+                .with_context(|| format!("lockstep worker {wid}: restoring state"))?;
+        }
+        ctxs.push(Wctx {
+            _rt: rt,
+            exec,
+            dataset,
+            algo,
+            completed: 0,
+            fwd_s: 0.0,
+            bwd_s: 0.0,
+        });
+    }
+
+    let mut drift_scratch = DriftScratch::new(m);
+    let mut states: Vec<Option<(StepState, f64)>> = (0..m).map(|_| None).collect();
+    'steps: for step in start_step..cfg.steps {
+        // phase A: compute, serialized in worker-id order — THE schedule
+        for wid in 0..m {
+            if shared.should_stop() {
+                break 'steps;
+            }
+            let c = &mut ctxs[wid];
+            let batch = c.dataset.next_batch();
+            let fwd_before = c.exec.compute_s;
+            let pass = c.exec.forward(&shared.params[wid], &batch)?;
+            if !pass.loss.is_finite() {
+                anyhow::bail!("lockstep worker {wid}: loss diverged (step {step})");
+            }
+            let fwd_after = c.exec.compute_s;
+            c.fwd_s += fwd_after - fwd_before;
+            let mut ctx = StepState::new(step, n_layers);
+            {
+                let exec = &mut c.exec;
+                let algo = &mut c.algo;
+                let mut err: Option<anyhow::Error> = None;
+                let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
+                    if err.is_none() {
+                        if let Err(e) = algo.on_layer_grads(&mut ctx, li, grads) {
+                            err = Some(e);
+                        }
+                    }
+                };
+                exec.backward(&shared.params[wid], &pass, &mut sink)?;
+                if let Some(e) = err {
+                    return Err(e);
+                }
+            }
+            c.bwd_s += c.exec.compute_s - fwd_after;
+            // every streamed update of this worker lands before the next
+            // worker computes — the determinism guarantee
+            c.algo.quiesce()?;
+            states[wid] = Some((ctx, pass.loss as f64));
+        }
+        // phase B: step ends, same order
+        for wid in 0..m {
+            let Some((ctx, loss)) = states[wid].take() else {
+                break 'steps; // stopped mid-phase-A
+            };
+            let c = &mut ctxs[wid];
+            c.algo.on_step_end(ctx)?;
+            c.algo.quiesce()?;
+            c.completed += 1;
+            shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+            shared.fabric.deliver_due(shared, wid, step);
+            shared
+                .events
+                .emit(TrainEvent::StepCompleted { worker: wid, step, loss });
+        }
+        // worker-0 duties: evaluation + drift sampling, same cadence as the
+        // threaded serial loop (compute/flop counters excluded)
+        if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let c = &mut ctxs[0];
+            let flops_before = c.exec.flops_retired;
+            let compute_before = c.exec.compute_s;
+            let (loss, acc) = c.exec.evaluate(&shared.params[0], c.dataset.as_ref(), 4)?;
+            c.exec.flops_retired = flops_before;
+            c.exec.compute_s = compute_before;
+            let time_s = shared.elapsed_s();
+            shared.curve.lock().unwrap().push(CurvePoint {
+                step,
+                time_s,
+                loss,
+                accuracy: acc,
+            });
+            shared
+                .events
+                .emit(TrainEvent::EvalPoint { step, time_s, loss, accuracy: acc });
+        }
+        if cfg.track_drift_every > 0 && step % cfg.track_drift_every == 0 {
+            let v = worker::sample_drift(&shared.params, &mut drift_scratch);
+            shared.drift.lock().unwrap().push_sample(step, v);
+        }
+        // checkpoint boundary — single-threaded, so no rendezvous barrier:
+        // quiesce everyone, deposit every slot, write
+        if let Some(ck) = shared.ckpt.as_ref() {
+            if (step + 1) % ck.every == 0 && step + 1 < cfg.steps {
+                for (wid, c) in ctxs.iter_mut().enumerate() {
+                    c.algo.quiesce()?;
+                    ck.slots.lock().unwrap()[wid] = Some(WorkerSlot {
+                        cursor: c.dataset.cursor(),
+                        algo: c.algo.state_dict()?,
+                    });
+                }
+                worker::write_checkpoint(cfg, shared, ck, step + 1)?;
+            }
+        }
+    }
+
+    let mut stats = Vec::with_capacity(m);
+    for mut c in ctxs {
+        c.algo.finish()?;
+        stats.push(WorkerStats {
+            compute_s: c.exec.compute_s,
+            fwd_compute_s: c.fwd_s,
+            bwd_compute_s: c.bwd_s,
+            flops: c.exec.flops_retired,
+            steps: c.completed,
+            upload_hits: c.exec.upload_hits,
+            upload_misses: c.exec.upload_misses,
+            queue: QueueStats::default(),
+        });
+    }
+    Ok(stats)
+}

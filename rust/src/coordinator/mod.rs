@@ -34,9 +34,11 @@
 //! [`WorkerStats`]); the public run entry is `layup::session`.
 
 pub(crate) mod engine;
+pub(crate) mod lockstep;
 pub mod queue;
 pub(crate) mod worker;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -48,30 +50,70 @@ use crate::config::TrainConfig;
 use crate::manifest::Manifest;
 use crate::metrics::{Curve, DriftTracker, QueueStats};
 use crate::model::ModelParams;
+use crate::resilience::{AlgoState, ChaosRuntime, Checkpoint, Membership, RecoveryPolicy};
 use crate::session::events::EventBus;
 use crate::topology::PushSumWeight;
 
 /// A barrier that can be abandoned when the run is stopping (a plain
 /// `std::sync::Barrier` would deadlock the surviving workers if one worker
 /// errors out mid-run).
+///
+/// Membership-aware ([`crate::resilience::membership`]): with a membership
+/// attached, the release target follows the live worker count — always for
+/// `live_counted` barriers (the checkpoint rendezvous must not wait for a
+/// dead worker), and under the `Shrink` recovery policy for the run barrier
+/// (a shrunken collective synchronizes among survivors; under `Stall` the
+/// target stays fixed, which is exactly the stall the fault-tolerance bench
+/// measures). Liveness is re-read every wake-up, so a membership change
+/// mid-wait releases waiters within the poll interval.
 pub struct StopBarrier {
     n: usize,
     state: Mutex<(usize, u64)>, // (arrived count, generation)
     cv: Condvar,
+    membership: Option<Arc<Membership>>,
+    /// live-count the target regardless of recovery policy
+    always_live: bool,
 }
 
 impl StopBarrier {
     pub fn new(n: usize) -> Self {
-        StopBarrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() }
+        StopBarrier {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+            membership: None,
+            always_live: false,
+        }
     }
 
-    /// Returns `true` when all workers arrived, `false` if `stop` was raised
-    /// while waiting (caller should wind down).
+    /// A run barrier whose target follows membership under the `Shrink`
+    /// policy (and stays fixed under `Stall`).
+    pub fn with_membership(n: usize, membership: Arc<Membership>) -> Self {
+        StopBarrier { membership: Some(membership), ..StopBarrier::new(n) }
+    }
+
+    /// A barrier that always counts live workers only (checkpoint
+    /// rendezvous).
+    pub fn live_counted(n: usize, membership: Arc<Membership>) -> Self {
+        StopBarrier { membership: Some(membership), always_live: true, ..StopBarrier::new(n) }
+    }
+
+    fn target(&self) -> usize {
+        match &self.membership {
+            Some(m) if self.always_live || m.policy() == RecoveryPolicy::Shrink => {
+                m.live_count().clamp(1, self.n)
+            }
+            _ => self.n,
+        }
+    }
+
+    /// Returns `true` when the collective arrived, `false` if `stop` was
+    /// raised while waiting (caller should wind down).
     pub fn wait(&self, stop: &AtomicBool) -> bool {
         let mut st = self.state.lock().unwrap();
         let gen = st.1;
         st.0 += 1;
-        if st.0 == self.n {
+        if st.0 >= self.target() {
             st.0 = 0;
             st.1 += 1;
             self.cv.notify_all();
@@ -86,11 +128,59 @@ impl StopBarrier {
             if st.1 != gen {
                 return true;
             }
+            if st.0 >= self.target() {
+                // the membership shrank while we waited: release the round
+                st.0 = 0;
+                st.1 += 1;
+                self.cv.notify_all();
+                return true;
+            }
             if stop.load(Ordering::Relaxed) {
                 // undo our arrival so a later generation isn't corrupted
                 st.0 = st.0.saturating_sub(1);
                 return false;
             }
+        }
+    }
+}
+
+/// Per-worker snapshot deposited during a checkpoint rendezvous (the
+/// worker-thread-owned state the writer cannot reach itself; the resume
+/// step is the rendezvous boundary, tracked by the writer).
+pub struct WorkerSlot {
+    /// data-loader cursor
+    pub cursor: u64,
+    /// algorithm state (optimizer moments, gossip RNG, outer momentum)
+    pub algo: AlgoState,
+}
+
+/// Rendezvous state for periodic checkpoints: every live worker quiesces,
+/// deposits a [`WorkerSlot`], and the lowest-id live worker writes the
+/// snapshot (see `worker::maybe_checkpoint` for the three-phase protocol).
+pub struct CheckpointRendezvous {
+    /// checkpoint every k steps (validated > 0)
+    pub every: usize,
+    /// parent directory; snapshots land in `step-XXXXXX` subdirectories
+    pub dir: PathBuf,
+    /// live-counted phase barrier (reused across the three phases —
+    /// generations make reuse safe)
+    pub barrier: StopBarrier,
+    pub slots: Mutex<Vec<Option<WorkerSlot>>>,
+    /// checkpoints written so far (surfaced in `RunStats::recovery`)
+    pub saved: AtomicU64,
+    /// a failed write is recorded here and fails the run on every worker
+    pub failure: Mutex<Option<String>>,
+}
+
+impl CheckpointRendezvous {
+    fn new(every: usize, dir: PathBuf, m: usize, membership: Arc<Membership>) -> Self {
+        CheckpointRendezvous {
+            every,
+            dir,
+            barrier: StopBarrier::live_counted(m, membership),
+            slots: Mutex::new((0..m).map(|_| None).collect()),
+            saved: AtomicU64::new(0),
+            failure: Mutex::new(None),
         }
     }
 }
@@ -102,11 +192,18 @@ pub struct Shared {
     pub params: Vec<Arc<ModelParams>>,
     /// push-sum weights (gossip algorithms)
     pub weights: Vec<PushSumWeight>,
-    /// synchronization barrier (DDP / LocalSGD family)
+    /// synchronization barrier (DDP / LocalSGD family); membership-aware
     pub barrier: StopBarrier,
     /// the run's communication fabric: every inter-worker byte (gossip
     /// pushes, all-reduce shares, snapshot exchanges) goes through it
     pub fabric: Arc<dyn Fabric>,
+    /// elastic worker membership (shared with the fabric core; epochs bump
+    /// on every crash/join)
+    pub membership: Arc<Membership>,
+    /// chaos fault schedule runtime (`None`: no faults planned)
+    pub chaos: Option<Arc<ChaosRuntime>>,
+    /// periodic-checkpoint rendezvous (`None`: checkpointing off)
+    pub ckpt: Option<CheckpointRendezvous>,
     /// cooperative shutdown (set on worker error)
     pub stop: AtomicBool,
     /// eval learning curve (written by worker 0)
@@ -118,20 +215,26 @@ pub struct Shared {
     /// typed-event fan-out (observers attached by the session builder)
     pub events: EventBus,
     pub start: Instant,
+    /// wall seconds of training that happened before this process
+    /// (checkpoint resume; keeps loss-vs-wallclock curves continuous)
+    pub start_offset_s: f64,
 }
 
 impl Shared {
     /// Shared state with no observers attached (tests and benches that poke
     /// the internals directly).
     pub fn new(cfg: &TrainConfig, manifest: &Manifest) -> Result<Arc<Shared>> {
-        Shared::with_events(cfg, manifest, EventBus::new())
+        Shared::with_events(cfg, manifest, EventBus::new(), None)
     }
 
-    /// Shared state carrying the session's event bus.
+    /// Shared state carrying the session's event bus, optionally restored
+    /// from a checkpoint (replica values, push-sum weights, step counters,
+    /// recorded curve/drift and in-flight fabric traffic).
     pub fn with_events(
         cfg: &TrainConfig,
         manifest: &Manifest,
         events: EventBus,
+        resume: Option<&Checkpoint>,
     ) -> Result<Arc<Shared>> {
         let model = manifest.model(&cfg.model)?;
         let m = cfg.workers;
@@ -143,19 +246,67 @@ impl Shared {
             .chain((1..m).map(|_| proto.replica()))
             .collect();
         let fabric = crate::comm::build_fabric(&cfg.fabric, m, cfg.seed ^ 0xfab41c);
-        Ok(Arc::new(Shared {
+        let membership = Arc::clone(fabric.core().membership());
+        membership.set_policy(cfg.recovery);
+        let weights: Vec<PushSumWeight> =
+            (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect();
+        let mut curve = Curve::default();
+        let mut drift = DriftTracker::default();
+        let mut steps_done: Vec<AtomicU64> = (0..m).map(|_| AtomicU64::new(0)).collect();
+        let mut start_offset_s = 0.0;
+        if let Some(ck) = resume {
+            for (p, state) in params.iter().zip(&ck.params) {
+                p.load_state_dict(state)?;
+            }
+            for (w, ws) in ck.workers_state.iter().enumerate() {
+                weights[w].set(ws.weight);
+                steps_done[w] = AtomicU64::new(ws.steps_done);
+            }
+            curve.points = ck.curve.clone();
+            for &(step, v) in &ck.drift {
+                drift.push_sample(step as usize, v);
+            }
+            start_offset_s = ck.elapsed_s;
+            // membership starts all-alive: resuming revives every slot, like
+            // restarting the job (a mid-downtime respawn is not persisted)
+        }
+        let chaos = if cfg.faults.is_empty() {
+            None
+        } else {
+            Some(Arc::new(ChaosRuntime::new(cfg.faults.clone())))
+        };
+        let ckpt = if cfg.checkpoint_every > 0 {
+            Some(CheckpointRendezvous::new(
+                cfg.checkpoint_every,
+                cfg.checkpoint_dir.clone(),
+                m,
+                Arc::clone(&membership),
+            ))
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
             m,
             params,
-            weights: (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect(),
-            barrier: StopBarrier::new(m),
+            weights,
+            barrier: StopBarrier::with_membership(m, Arc::clone(&membership)),
             fabric,
+            membership,
+            chaos,
+            ckpt,
             stop: AtomicBool::new(false),
-            curve: Mutex::new(Curve::default()),
-            drift: Mutex::new(DriftTracker::default()),
-            steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
+            curve: Mutex::new(curve),
+            drift: Mutex::new(drift),
+            steps_done,
             events,
             start: Instant::now(),
-        }))
+            start_offset_s,
+        });
+        if let Some(ck) = resume {
+            // put the snapshot's in-flight messages back on the links
+            shared.fabric.restore(&shared, ck.in_flight.clone());
+        }
+        Ok(shared)
     }
 
     /// Minimal shared state for unit and property tests that drive a fabric
@@ -163,23 +314,34 @@ impl Shared {
     /// runtime). Weights start at `1/m`, as in a real run.
     pub fn for_tests(params: Vec<Arc<ModelParams>>, fabric: Arc<dyn Fabric>) -> Arc<Shared> {
         let m = params.len();
+        let membership = Arc::clone(fabric.core().membership());
         Arc::new(Shared {
             m,
             params,
             weights: (0..m).map(|_| PushSumWeight::new(1.0 / m as f32)).collect(),
-            barrier: StopBarrier::new(m),
+            barrier: StopBarrier::with_membership(m, Arc::clone(&membership)),
             fabric,
+            membership,
+            chaos: None,
+            ckpt: None,
             stop: AtomicBool::new(false),
             curve: Mutex::new(Curve::default()),
             drift: Mutex::new(DriftTracker::default()),
             steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
             events: EventBus::new(),
             start: Instant::now(),
+            start_offset_s: 0.0,
         })
     }
 
     pub fn should_stop(&self) -> bool {
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Wall seconds of training including any checkpointed history (the
+    /// time axis of eval points and summaries).
+    pub fn elapsed_s(&self) -> f64 {
+        self.start_offset_s + self.start.elapsed().as_secs_f64()
     }
 
     /// Sum of gossip (applied, skipped) counters.

@@ -14,13 +14,40 @@ use crate::algorithms::{self, StepState, WorkerAlgo};
 use crate::comm::Fabric;
 use crate::config::TrainConfig;
 use crate::coordinator::queue::{BoundedQueue, PassPool};
-use crate::coordinator::{Shared, WorkerStats};
-use crate::data;
+use crate::coordinator::{CheckpointRendezvous, Shared, WorkerSlot, WorkerStats};
+use crate::data::{self, Dataset};
 use crate::manifest::Manifest;
 use crate::metrics::{CurvePoint, QueueStats};
 use crate::model::{HostPass, ModelExec, ModelParams};
+use crate::resilience::checkpoint::{self, Checkpoint, WorkerState, FORMAT_VERSION};
+use crate::resilience::AlgoState;
 use crate::runtime::Runtime;
 use crate::session::events::TrainEvent;
+
+/// Where a (re)spawned worker starts: the first step it runs, its
+/// data-loader cursor, and optionally a checkpointed algorithm state. A
+/// fresh run boots at zeros; a resume boots at the snapshot; a chaos respawn
+/// boots at the crash point with a fresh algorithm state (the device died —
+/// its optimizer moments died with it).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct WorkerBoot {
+    pub start_step: usize,
+    pub cursor: u64,
+    pub algo: Option<AlgoState>,
+}
+
+/// How a worker's thread ended.
+pub(crate) enum WorkerExit {
+    /// Ran to the end of its step budget (or the run-wide stop flag).
+    Completed(WorkerStats),
+    /// A scheduled chaos fault fired: the worker tore down at `next_step`
+    /// (that step not executed). The supervisor decides about a respawn.
+    Crashed {
+        next_step: usize,
+        cursor: u64,
+        stats: WorkerStats,
+    },
+}
 
 /// The paper's "computation thread" for one device.
 pub(crate) fn worker_main(
@@ -28,14 +55,22 @@ pub(crate) fn worker_main(
     wid: usize,
     shared: &Arc<Shared>,
     manifest: &Manifest,
-) -> Result<WorkerStats> {
+    boot: WorkerBoot,
+) -> Result<WorkerExit> {
     let mut rt = Runtime::new().context("worker runtime")?;
     let mut exec = ModelExec::load(&mut rt, manifest, &cfg.model)
         .with_context(|| format!("worker {wid}: loading model"))?;
     let model = manifest.model(&cfg.model)?;
     let n_layers = model.layers.len();
     let mut dataset = data::build(model, wid, cfg.workers, cfg.seed)?;
+    if boot.cursor > 0 {
+        dataset.skip(boot.cursor);
+    }
     let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), &exec.manifest)?;
+    if let Some(state) = boot.algo {
+        algo.load_state_dict(state)
+            .with_context(|| format!("worker {wid}: restoring algorithm state"))?;
+    }
 
     let my_params = Arc::clone(&shared.params[wid]);
     let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
@@ -46,9 +81,30 @@ pub(crate) fn worker_main(
     let mut fwd_s = 0.0f64;
     let mut bwd_s = 0.0f64;
 
-    for step in 0..cfg.steps {
+    for step in boot.start_step..cfg.steps {
         if shared.should_stop() {
             break;
+        }
+        // Chaos injection: a scheduled fault kills this device at the top of
+        // its crash step. Helper threads are torn down cleanly (we simulate
+        // a dead device, not a wedged harness); the supervisor reclaims the
+        // worker's push-sum weight and decides about a respawn.
+        if shared.chaos.as_ref().is_some_and(|c| c.due(wid, step)) {
+            algo.finish()?;
+            return Ok(WorkerExit::Crashed {
+                next_step: step,
+                cursor: dataset.cursor(),
+                stats: WorkerStats {
+                    compute_s: exec.compute_s,
+                    fwd_compute_s: fwd_s,
+                    bwd_compute_s: bwd_s,
+                    flops: exec.flops_retired,
+                    steps: completed,
+                    upload_hits: exec.upload_hits,
+                    upload_misses: exec.upload_misses,
+                    queue: QueueStats::default(),
+                },
+            });
         }
         // Straggler injection (Section 5.4): idle for a multiple of the
         // measured fwd+bwd time.
@@ -95,10 +151,10 @@ pub(crate) fn worker_main(
             .events
             .emit(TrainEvent::StepCompleted { worker: wid, step, loss: pass.loss as f64 });
 
-        if step < 3 {
+        if completed <= 3 {
             // calibrate the straggler delay unit on undelayed steps
             let dt = step_t0.elapsed().as_secs_f64();
-            baseline_step_s = if step == 0 { dt } else { 0.5 * (baseline_step_s + dt) };
+            baseline_step_s = if completed == 1 { dt } else { 0.5 * (baseline_step_s + dt) };
         }
 
         // Evaluation + drift tracking (worker 0 evaluates its replica;
@@ -109,7 +165,7 @@ pub(crate) fn worker_main(
             let (loss, acc) = exec.evaluate(&my_params, dataset.as_ref(), 4)?;
             exec.flops_retired = flops_before;
             exec.compute_s = compute_before;
-            let time_s = shared.start.elapsed().as_secs_f64();
+            let time_s = shared.elapsed_s();
             shared.curve.lock().unwrap().push(CurvePoint {
                 step,
                 time_s,
@@ -127,10 +183,14 @@ pub(crate) fn worker_main(
             let v = sample_drift(&shared.params, &mut drift_scratch);
             shared.drift.lock().unwrap().push_sample(step, v);
         }
+
+        // Periodic checkpoint rendezvous (the last action of a step body, so
+        // the snapshot point is identical wherever the run is driven from).
+        maybe_checkpoint(cfg, wid, shared, step, algo.as_mut(), dataset.as_ref())?;
     }
 
     algo.finish()?;
-    Ok(WorkerStats {
+    Ok(WorkerExit::Completed(WorkerStats {
         compute_s: exec.compute_s,
         fwd_compute_s: fwd_s,
         bwd_compute_s: bwd_s,
@@ -139,7 +199,7 @@ pub(crate) fn worker_main(
         upload_hits: exec.upload_hits,
         upload_misses: exec.upload_misses,
         queue: QueueStats::default(),
-    })
+    }))
 }
 
 /// Decoupled worker: forward pool -> bounded pass queue -> backward pool,
@@ -373,7 +433,7 @@ fn backward_pool_main(
                 let (loss, acc) = exec.evaluate(&my_params, ds, 4)?;
                 exec.flops_retired = flops_before;
                 exec.compute_s = compute_before;
-                let time_s = shared.start.elapsed().as_secs_f64();
+                let time_s = shared.elapsed_s();
                 shared.curve.lock().unwrap().push(CurvePoint {
                     step,
                     time_s,
@@ -401,10 +461,133 @@ fn backward_pool_main(
     })
 }
 
+/// Periodic checkpoint rendezvous, called at the end of every step body.
+/// Three phases over the live-counted barrier (reused across phases —
+/// generations make that safe):
+///
+/// 1. every live worker quiesces its async updates, then meets — after the
+///    release, all pre-boundary writes are applied and every live worker is
+///    paused here, so the shared stores are stable;
+/// 2. every worker deposits its thread-owned state ([`WorkerSlot`]), meets
+///    again;
+/// 3. the lowest-id live worker writes the snapshot, everyone meets once
+///    more and resumes training.
+///
+/// A write failure is recorded on the rendezvous and fails the run on every
+/// worker (a checkpoint you asked for but did not get is an error, not a
+/// log line).
+pub(crate) fn maybe_checkpoint(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: &Arc<Shared>,
+    step: usize,
+    algo: &mut dyn WorkerAlgo,
+    dataset: &dyn Dataset,
+) -> Result<()> {
+    let Some(ck) = shared.ckpt.as_ref() else {
+        return Ok(());
+    };
+    if (step + 1) % ck.every != 0 || step + 1 >= cfg.steps {
+        return Ok(());
+    }
+    algo.quiesce()?;
+    if !ck.barrier.wait(&shared.stop) {
+        return Ok(()); // run is stopping
+    }
+    let slot = WorkerSlot { cursor: dataset.cursor(), algo: algo.state_dict()? };
+    ck.slots.lock().unwrap()[wid] = Some(slot);
+    if !ck.barrier.wait(&shared.stop) {
+        return Ok(());
+    }
+    if shared.membership.first_live() == Some(wid) {
+        if let Err(e) = write_checkpoint(cfg, shared, ck, step + 1) {
+            *ck.failure.lock().unwrap() = Some(format!("{e:#}"));
+            shared.stop.store(true, Ordering::Relaxed);
+        }
+    }
+    let _ = ck.barrier.wait(&shared.stop);
+    if let Some(msg) = ck.failure.lock().unwrap().clone() {
+        anyhow::bail!("checkpoint at step {} failed: {msg}", step + 1);
+    }
+    Ok(())
+}
+
+/// Assemble and write one snapshot into `<dir>/step-XXXXXX`. Caller
+/// guarantees quiescence (every live worker is paused at the boundary with
+/// its slot deposited). Shared with the lockstep driver.
+pub(crate) fn write_checkpoint(
+    cfg: &TrainConfig,
+    shared: &Arc<Shared>,
+    ck: &CheckpointRendezvous,
+    next_step: usize,
+) -> Result<()> {
+    let workers_state: Vec<WorkerState> = {
+        let mut slots = ck.slots.lock().unwrap();
+        (0..shared.m)
+            .map(|w| {
+                let steps_done = shared.steps_done[w].load(Ordering::Relaxed);
+                match slots[w].take() {
+                    Some(slot) => WorkerState {
+                        alive: true,
+                        steps_done,
+                        cursor: slot.cursor,
+                        weight: shared.weights[w].get(),
+                        algo: slot.algo,
+                    },
+                    // a chaos-dead worker has no thread to deposit a slot:
+                    // record it dead with a fresh algorithm state (its
+                    // optimizer moments died with the device)
+                    None => WorkerState {
+                        alive: shared.membership.alive(w),
+                        steps_done,
+                        cursor: steps_done,
+                        weight: shared.weights[w].get(),
+                        algo: AlgoState::default(),
+                    },
+                }
+            })
+            .collect()
+    };
+    let params = shared.params.iter().map(|p| p.state_dict()).collect();
+    // quiesce the links: drain serializes the in-flight messages, restore
+    // puts the very same messages back (their send-time dice stay rolled)
+    let mut in_flight = Vec::new();
+    for w in 0..shared.m {
+        in_flight.extend(shared.fabric.drain(w));
+    }
+    shared.fabric.restore(shared, in_flight.clone());
+    let mut curve = shared.curve.lock().unwrap().clone();
+    curve.sort_by_step();
+    let drift = shared.drift.lock().unwrap().clone();
+    let snapshot = Checkpoint {
+        version: FORMAT_VERSION,
+        model: cfg.model.clone(),
+        algorithm: cfg.algorithm.name().to_string(),
+        workers: cfg.workers,
+        seed: cfg.seed,
+        step: next_step,
+        elapsed_s: shared.elapsed_s(),
+        epoch: shared.membership.epoch(),
+        params,
+        workers_state,
+        in_flight,
+        curve: curve.points,
+        drift: drift.samples.iter().map(|&(s, v)| (s as u64, v)).collect(),
+    };
+    let dir = checkpoint::step_dir(&ck.dir, next_step);
+    checkpoint::save(&dir, &snapshot)?;
+    ck.saved.fetch_add(1, Ordering::Relaxed);
+    shared.events.emit(TrainEvent::CheckpointSaved {
+        step: next_step,
+        path: dir.display().to_string(),
+    });
+    Ok(())
+}
+
 /// Reusable buffers for streamed drift sampling (§Perf: `flatten()`
 /// materialized every replica's full parameter vector per sample; these
 /// buffers are sized to the largest single tensor instead).
-struct DriftScratch {
+pub(crate) struct DriftScratch {
     /// per-worker snapshot of the tensor currently being swept
     snaps: Vec<Vec<f32>>,
     /// per-element mean of that tensor (f64 accumulation)
@@ -414,7 +597,7 @@ struct DriftScratch {
 }
 
 impl DriftScratch {
-    fn new(m: usize) -> DriftScratch {
+    pub(crate) fn new(m: usize) -> DriftScratch {
         DriftScratch { snaps: vec![Vec::new(); m], mean: Vec::new(), sq: vec![0.0; m] }
     }
 }
@@ -424,7 +607,7 @@ impl DriftScratch {
 /// ‖x_w − x̄‖² = Σ_tensors ‖chunk_w − chunk_mean‖² — numerically identical to
 /// `DriftTracker::record` on full flattened vectors, without the per-sample
 /// full-model allocations.
-fn sample_drift(params: &[Arc<ModelParams>], scratch: &mut DriftScratch) -> f64 {
+pub(crate) fn sample_drift(params: &[Arc<ModelParams>], scratch: &mut DriftScratch) -> f64 {
     let m = params.len();
     if m == 0 {
         return 0.0;

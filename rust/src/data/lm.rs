@@ -34,6 +34,8 @@ pub struct LmDataset {
     rng: Pcg32,
     eval_seed: u64,
     batches_per_epoch: usize,
+    /// training batches drawn (checkpoint cursor)
+    drawn: u64,
 }
 
 impl LmDataset {
@@ -86,6 +88,7 @@ impl LmDataset {
             rng: stream_rng(seed ^ style_tag, worker, 0x6c6d),
             eval_seed: seed ^ style_tag ^ 0x6576_616c,
             batches_per_epoch: (8192 / m.max(1) / batch).max(8),
+            drawn: 0,
         }
     }
 
@@ -129,6 +132,7 @@ impl LmDataset {
 
 impl Dataset for LmDataset {
     fn next_batch(&mut self) -> Batch {
+        self.drawn += 1;
         let mut rng = self.rng.split(0);
         self.make_batch(&mut rng)
     }
@@ -144,6 +148,17 @@ impl Dataset for LmDataset {
 
     fn batches_per_epoch(&self) -> usize {
         self.batches_per_epoch
+    }
+
+    fn cursor(&self) -> u64 {
+        self.drawn
+    }
+
+    fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            let _ = self.rng.split(0);
+        }
+        self.drawn += n;
     }
 }
 

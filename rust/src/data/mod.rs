@@ -38,6 +38,13 @@ pub trait Dataset: Send {
     fn eval_len(&self) -> usize;
     /// Batches per "epoch" per worker (drives epoch-boundary bookkeeping).
     fn batches_per_epoch(&self) -> usize;
+    /// Training batches drawn so far — the data-loader cursor a
+    /// `resilience::checkpoint` records.
+    fn cursor(&self) -> u64;
+    /// Fast-forward the train stream as if `n` more batches had been drawn
+    /// (checkpoint resume: `skip(cursor)` on a fresh dataset reproduces the
+    /// stream position without materializing the skipped batches).
+    fn skip(&mut self, n: u64);
 }
 
 /// Build the dataset matching a model manifest for worker `worker` of `m`.
@@ -89,6 +96,37 @@ pub(crate) fn stream_rng(seed: u64, worker: usize, tag: u64) -> Pcg32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Checkpoint-cursor contract, for every dataset kind: a fresh dataset
+    /// fast-forwarded with `skip(n)` produces exactly the batches a dataset
+    /// that drew `n` batches would produce next.
+    #[test]
+    fn skip_replays_the_train_stream_exactly() {
+        let builders: Vec<Box<dyn Fn() -> Box<dyn Dataset>>> = vec![
+            Box::new(|| Box::new(vision::VisionDataset::new(4, 16, 5, 1, 3, 77))),
+            Box::new(|| {
+                Box::new(lm::LmDataset::new(2, 8, 32, 1, 3, 77, lm::CorpusStyle::Pretrain))
+            }),
+            Box::new(|| Box::new(sentiment::SentimentDataset::new(4, 8, 32, 1, 3, 77))),
+        ];
+        for build in builders {
+            let mut walked = build();
+            for _ in 0..5 {
+                let _ = walked.next_batch();
+            }
+            assert_eq!(walked.cursor(), 5);
+            let mut skipped = build();
+            skipped.skip(5);
+            assert_eq!(skipped.cursor(), 5);
+            for _ in 0..3 {
+                let a = walked.next_batch();
+                let b = skipped.next_batch();
+                assert_eq!(a.x_f32, b.x_f32);
+                assert_eq!(a.x_i32, b.x_i32);
+                assert_eq!(a.targets, b.targets);
+            }
+        }
+    }
 
     #[test]
     fn stream_rngs_are_decorrelated() {

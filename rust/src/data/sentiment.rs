@@ -19,6 +19,8 @@ pub struct SentimentDataset {
     rng: Pcg32,
     eval_seed: u64,
     batches_per_epoch: usize,
+    /// training batches drawn (checkpoint cursor)
+    drawn: u64,
 }
 
 impl SentimentDataset {
@@ -32,6 +34,7 @@ impl SentimentDataset {
             rng: stream_rng(seed, worker, 0x73656e74), // "sent"
             eval_seed: seed ^ 0x7365_6e74,
             batches_per_epoch: (2048 / m.max(1) / batch).max(8),
+            drawn: 0,
         }
     }
 
@@ -69,6 +72,7 @@ impl SentimentDataset {
 
 impl Dataset for SentimentDataset {
     fn next_batch(&mut self) -> Batch {
+        self.drawn += 1;
         let mut rng = self.rng.split(0);
         self.make_batch(&mut rng)
     }
@@ -84,6 +88,17 @@ impl Dataset for SentimentDataset {
 
     fn batches_per_epoch(&self) -> usize {
         self.batches_per_epoch
+    }
+
+    fn cursor(&self) -> u64 {
+        self.drawn
+    }
+
+    fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            let _ = self.rng.split(0);
+        }
+        self.drawn += n;
     }
 }
 

@@ -25,6 +25,8 @@ pub struct VisionDataset {
     rng: Pcg32,
     eval_seed: u64,
     batches_per_epoch: usize,
+    /// training batches drawn (checkpoint cursor)
+    drawn: u64,
 }
 
 impl VisionDataset {
@@ -57,6 +59,7 @@ impl VisionDataset {
             rng: stream_rng(seed, worker, 0x7261696e), // "rain" (train)
             eval_seed: seed ^ 0x65766121,              // "eva!"
             batches_per_epoch: (4096 / m.max(1) / batch).max(8),
+            drawn: 0,
         }
     }
 
@@ -89,6 +92,7 @@ impl VisionDataset {
 
 impl Dataset for VisionDataset {
     fn next_batch(&mut self) -> Batch {
+        self.drawn += 1;
         let mut rng = self.rng.split(0);
         self.make_batch(&mut rng)
     }
@@ -104,6 +108,19 @@ impl Dataset for VisionDataset {
 
     fn batches_per_epoch(&self) -> usize {
         self.batches_per_epoch
+    }
+
+    fn cursor(&self) -> u64 {
+        self.drawn
+    }
+
+    fn skip(&mut self, n: u64) {
+        // each draw consumes exactly one split() of the stream RNG; advance
+        // the stream without materializing the batches
+        for _ in 0..n {
+            let _ = self.rng.split(0);
+        }
+        self.drawn += n;
     }
 }
 

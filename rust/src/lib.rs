@@ -1,3 +1,4 @@
+#![deny(clippy::all)]
 //! # layup — asynchronous decentralized SGD with layer-wise updates
 //!
 //! A production-shaped reproduction of *"LAYUP: Asynchronous decentralized
@@ -31,6 +32,7 @@ pub mod manifest;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod resilience;
 pub mod runtime;
 pub mod session;
 pub mod sim;

@@ -27,6 +27,7 @@ use layup::comm::{FabricSpec, LatencyDist};
 use layup::config::{Algorithm, Toml, TrainConfig};
 use layup::manifest::Manifest;
 use layup::optim::Schedule;
+use layup::resilience::{FaultPlan, RecoveryPolicy};
 use layup::session::events::JsonlSink;
 use layup::session::SessionBuilder;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
@@ -58,6 +59,13 @@ const TRAIN_FLAGS: &[&str] = &[
     "link-latency",
     "link-drop",
     "link-bandwidth",
+    "ckpt-every",
+    "ckpt-dir",
+    "resume",
+    "crash",
+    "recovery",
+    "stall-timeout",
+    "lockstep",
     "events",
     "out",
     "curve",
@@ -161,9 +169,14 @@ fn print_usage() {
          \x20               [--fwd-threads N] [--bwd-threads N] [--queue-depth N]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
          \x20               [--link-bandwidth MBPS]\n\
+         \x20               [--ckpt-every K] [--ckpt-dir DIR] [--resume DIR]\n\
+         \x20               [--crash W@STEP[+SECS],..] [--recovery stall|shrink]\n\
+         \x20               [--stall-timeout S] [--lockstep true]\n\
          \x20               [--events events.jsonl] [--out results.json] [--curve curve.csv]\n\
          \x20               (latency SPEC: seconds | constant:S | uniform:LO..HI |\n\
-         \x20               pareto:SCALE,ALPHA; --link-* flags imply --fabric sim)\n\
+         \x20               pareto:SCALE,ALPHA; --link-* flags imply --fabric sim;\n\
+         \x20               --crash schedules chaos faults, --resume continues a\n\
+         \x20               checkpoint dir or its latest step-XXXXXX snapshot)\n\
          \x20 layup sim     [--cluster c1|c2|c3] [--workload resnet18_cifar|resnet50_cifar|\n\
          \x20               resnet50_imagenet|gpt2_medium|gpt2_xl] [--algorithm A|all]\n\
          \x20               [--sync-period K] [--straggler W:D] [--seed K]\n\
@@ -207,6 +220,24 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
         let (w, d) = s.split_once(':').context("--straggler wants WORKER:DELAY")?;
         cfg.straggler = Some((w.parse()?, d.parse()?));
     }
+
+    // Resilience: periodic checkpoints, chaos schedule, recovery knobs.
+    cfg.checkpoint_every = args.usize_or("ckpt-every", cfg.checkpoint_every)?;
+    if let Some(dir) = args.get("ckpt-dir") {
+        cfg.checkpoint_dir = dir.into();
+    }
+    if let Some(spec) = args.get("crash") {
+        cfg.faults = FaultPlan::parse(spec).with_context(|| format!("--crash {spec:?}"))?;
+    }
+    if let Some(p) = args.get("recovery") {
+        cfg.recovery = RecoveryPolicy::parse(p)?;
+    }
+    if let Some(v) = args.get("stall-timeout") {
+        cfg.stall_timeout_s = v
+            .parse()
+            .with_context(|| format!("--stall-timeout: expected seconds, got {v:?}"))?;
+    }
+    cfg.lockstep = args.bool_or("lockstep", cfg.lockstep)?;
 
     // Communication fabric. The --link-* knobs describe simulated links, so
     // they imply --fabric sim; naming --fabric instant alongside them is a
@@ -279,7 +310,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         builder = builder.observer(Arc::new(JsonlSink::create(path)?));
         println!("typed event stream -> {path}");
     }
-    let summary = builder.build(&manifest)?.run()?;
+    let mut session = builder.build(&manifest)?;
+    if let Some(dir) = args.get("resume") {
+        session = session.resume_from(dir)?;
+        println!("resuming from checkpoint {dir}");
+    }
+    let summary = session.run()?;
     println!(
         "done in {:.1}s: best_acc={:.4} best_loss={:.4} (ppl {:.2}) occupancy={:.1}% gossip applied/skipped={}/{}",
         t0.elapsed().as_secs_f64(),
@@ -299,6 +335,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             comm.msgs_delivered,
             comm.msgs_dropped,
             comm.mean_delivered_staleness(),
+        );
+    }
+    let rec = &summary.stats.recovery;
+    if rec.crashes > 0 || rec.checkpoints_saved > 0 || rec.stalled {
+        println!(
+            "resilience: {} crashes, {} rejoins, {} checkpoints (membership epoch {}){}",
+            rec.crashes,
+            rec.joins,
+            rec.checkpoints_saved,
+            rec.membership_epoch,
+            if rec.stalled { " — RUN STALLED" } else { "" }
         );
     }
     if let Some(path) = args.get("curve") {

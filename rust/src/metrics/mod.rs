@@ -335,6 +335,23 @@ impl DriftTracker {
     }
 }
 
+/// Fault-tolerance counters of one run (resilience subsystem): the chaos
+/// timeline a summary carries alongside the loss curve.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// workers torn down by the chaos schedule
+    pub crashes: u64,
+    /// workers respawned and rejoined
+    pub joins: u64,
+    /// periodic checkpoints written
+    pub checkpoints_saved: u64,
+    /// final membership epoch (0 when membership never changed)
+    pub membership_epoch: u64,
+    /// true when a Stall-policy collective waited past the stall timeout
+    /// for a permanently lost worker and the run was stopped
+    pub stalled: bool,
+}
+
 /// Typed per-run statistics — the replacement for the seed-era stringly
 /// `extras: BTreeMap<String, f64>` map. Every field is still emitted under
 /// its old key in the summary JSON, so downstream result files keep parsing.
@@ -356,6 +373,8 @@ pub struct RunStats {
     pub queue: QueueStats,
     /// communication-fabric traffic and delivered-staleness counters
     pub comm: CommStats,
+    /// fault-tolerance counters (crashes, joins, checkpoints, stall flag)
+    pub recovery: RecoveryStats,
 }
 
 impl RunStats {
@@ -376,6 +395,11 @@ impl RunStats {
             ("comm_dropped", self.comm.msgs_dropped as f64),
             ("comm_delivered", self.comm.msgs_delivered as f64),
             ("comm_mean_staleness", self.comm.mean_delivered_staleness()),
+            ("recovery_crashes", self.recovery.crashes as f64),
+            ("recovery_joins", self.recovery.joins as f64),
+            ("checkpoints_saved", self.recovery.checkpoints_saved as f64),
+            ("membership_epoch", self.recovery.membership_epoch as f64),
+            ("stalled", if self.recovery.stalled { 1.0 } else { 0.0 }),
         ]
     }
 }
@@ -589,6 +613,11 @@ mod tests {
             "comm_dropped",
             "comm_delivered",
             "comm_mean_staleness",
+            "recovery_crashes",
+            "recovery_joins",
+            "checkpoints_saved",
+            "membership_epoch",
+            "stalled",
             "links",
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");

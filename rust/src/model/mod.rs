@@ -105,6 +105,44 @@ impl ModelParams {
         }
     }
 
+    /// Checkpoint view of the replica: `state[layer][tensor]` holds that
+    /// parameter's values. Together with [`ModelParams::load_state_dict`]
+    /// this is the `resilience::checkpoint` contract for model state.
+    pub fn state_dict(&self) -> Vec<Vec<Vec<f32>>> {
+        self.layers
+            .iter()
+            .map(|l| l.tensors.iter().map(|t| t.state_dict()).collect())
+            .collect()
+    }
+
+    /// Restore every parameter from a [`ModelParams::state_dict`] snapshot.
+    /// The snapshot must have been taken from a same-shaped model.
+    pub fn load_state_dict(&self, state: &[Vec<Vec<f32>>]) -> Result<()> {
+        if state.len() != self.layers.len() {
+            bail!(
+                "model state_dict has {} layers, model has {}",
+                state.len(),
+                self.layers.len()
+            );
+        }
+        for (l, ls) in self.layers.iter().zip(state) {
+            if ls.len() != l.tensors.len() {
+                bail!("model state_dict layer tensor count mismatch");
+            }
+            for (t, ts) in l.tensors.iter().zip(ls) {
+                if ts.len() != t.numel() {
+                    bail!(
+                        "model state_dict tensor has {} values, store holds {}",
+                        ts.len(),
+                        t.numel()
+                    );
+                }
+                t.load_state_dict(ts);
+            }
+        }
+        Ok(())
+    }
+
     /// A fresh replica holding identical values. Cheaper than `init` +
     /// `copy_from` (no RNG draws, one pass per tensor) — `Shared::new` builds
     /// every worker's replica from one prototype this way.

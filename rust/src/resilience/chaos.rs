@@ -1,0 +1,259 @@
+//! Chaos injection: a seeded fault schedule the coordinator engine executes.
+//!
+//! A [`FaultPlan`] lists worker crashes (`crash-at-step`), each optionally
+//! followed by a restart after a fixed downtime (`restart-after`); a fault
+//! with no restart is a **permanent loss**. The engine's supervisor tears the
+//! worker's thread down when its crash step arrives (the worker exits its
+//! loop cleanly — we simulate a dead *device*, the harness itself is not
+//! `kill -9`'d), reclaims the dead worker's push-sum weight so gossip mass
+//! is conserved, and respawns the worker after the downtime under the
+//! algorithm's recovery policy (see [`super::membership::RecoveryPolicy`]
+//! and the engine docs).
+//!
+//! Schedules are deterministic: build one explicitly with the builder
+//! methods, parse one from the CLI `--crash` spec, or draw a seeded random
+//! schedule with [`FaultPlan::random`].
+
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::rng::Pcg32;
+
+/// One scheduled worker failure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fault {
+    /// which worker slot dies
+    pub worker: usize,
+    /// the step at which it dies (checked at the top of that step, before
+    /// any compute for it happens)
+    pub at_step: usize,
+    /// downtime before the supervisor respawns it; `None` = permanent loss
+    pub restart_after_s: Option<f64>,
+}
+
+/// A deterministic crash/restart schedule (empty by default: no chaos).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Add a permanent crash: `worker` dies at `at_step` and never returns.
+    pub fn crash(mut self, worker: usize, at_step: usize) -> FaultPlan {
+        self.faults.push(Fault { worker, at_step, restart_after_s: None });
+        self
+    }
+
+    /// Add a crash/restart: `worker` dies at `at_step` and is respawned
+    /// after `restart_after_s` seconds of downtime.
+    pub fn crash_restart(mut self, worker: usize, at_step: usize, restart_after_s: f64) -> FaultPlan {
+        self.faults
+            .push(Fault { worker, at_step, restart_after_s: Some(restart_after_s) });
+        self
+    }
+
+    /// A seeded random schedule: `n_faults` crashes at uniform steps in
+    /// `[1, steps)`, spread over workers `1..m` (worker 0 is spared so the
+    /// eval stream keeps flowing), each with the given downtime.
+    pub fn random(
+        seed: u64,
+        workers: usize,
+        steps: usize,
+        n_faults: usize,
+        restart_after_s: Option<f64>,
+    ) -> FaultPlan {
+        let mut rng = Pcg32::new(seed ^ 0xc4a05);
+        let mut plan = FaultPlan::default();
+        if workers < 2 || steps < 2 {
+            return plan;
+        }
+        for _ in 0..n_faults {
+            let worker = 1 + rng.below_usize(workers - 1);
+            let at_step = 1 + rng.below_usize(steps - 1);
+            plan.faults.push(Fault { worker, at_step, restart_after_s });
+        }
+        plan
+    }
+
+    /// Parse a CLI spec: comma-separated `WORKER@STEP` (permanent) or
+    /// `WORKER@STEP+SECONDS` (restart after a downtime), e.g. `1@20+0.5,2@40`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (worker, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fault {part:?}: expected WORKER@STEP[+SECONDS]"))?;
+            let worker: usize = worker
+                .trim()
+                .parse()
+                .with_context(|| format!("fault {part:?}: bad worker id"))?;
+            let (step, restart) = match rest.split_once('+') {
+                Some((s, r)) => {
+                    let secs: f64 = r
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("fault {part:?}: bad restart seconds"))?;
+                    (s, Some(secs))
+                }
+                None => (rest, None),
+            };
+            let at_step: usize = step
+                .trim()
+                .parse()
+                .with_context(|| format!("fault {part:?}: bad crash step"))?;
+            plan.faults.push(Fault { worker, at_step, restart_after_s: restart });
+        }
+        Ok(plan)
+    }
+
+    /// Reject schedules that cannot execute on an `(m, steps)` run.
+    pub fn validate(&self, workers: usize, steps: usize) -> Result<()> {
+        if self.is_empty() {
+            return Ok(());
+        }
+        if workers < 2 {
+            bail!("chaos injection needs at least 2 workers (a donor must survive)");
+        }
+        for f in &self.faults {
+            if f.worker >= workers {
+                bail!("fault targets worker {} but the run has {workers}", f.worker);
+            }
+            if f.at_step >= steps {
+                bail!(
+                    "fault at step {} is beyond the run's {steps} steps",
+                    f.at_step
+                );
+            }
+            if let Some(s) = f.restart_after_s {
+                if s < 0.0 || !s.is_finite() {
+                    bail!("fault restart downtime must be finite and >= 0, got {s}");
+                }
+            }
+        }
+        let mut by_worker: Vec<Vec<&Fault>> = vec![Vec::new(); workers];
+        for f in &self.faults {
+            by_worker[f.worker].push(f);
+        }
+        for (w, faults) in by_worker.iter().enumerate() {
+            for (i, a) in faults.iter().enumerate() {
+                for b in &faults[i + 1..] {
+                    if a.at_step == b.at_step {
+                        bail!("worker {w} has two faults at step {}", a.at_step);
+                    }
+                }
+                if a.restart_after_s.is_none() && faults.len() > 1 {
+                    bail!("worker {w}: a permanent fault cannot be combined with others");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The fault that fires for `(worker, step)`, if any.
+    pub fn fault_at(&self, worker: usize, step: usize) -> Option<(usize, &Fault)> {
+        self.faults
+            .iter()
+            .enumerate()
+            .find(|(_, f)| f.worker == worker && f.at_step == step)
+    }
+}
+
+/// Runtime state of a plan: which faults already fired. A respawned worker
+/// restarts *at* its crash step, so without this latch the same fault would
+/// kill it again immediately.
+pub struct ChaosRuntime {
+    pub plan: FaultPlan,
+    fired: Vec<AtomicBool>,
+}
+
+impl ChaosRuntime {
+    pub fn new(plan: FaultPlan) -> ChaosRuntime {
+        let fired = (0..plan.faults.len()).map(|_| AtomicBool::new(false)).collect();
+        ChaosRuntime { plan, fired }
+    }
+
+    /// Fire-once check: `true` exactly the first time `(worker, step)`
+    /// matches an unfired fault.
+    pub fn due(&self, worker: usize, step: usize) -> bool {
+        match self.plan.fault_at(worker, step) {
+            Some((idx, _)) => !self.fired[idx].swap(true, Ordering::AcqRel),
+            None => false,
+        }
+    }
+
+    /// The scheduled downtime of the fault that killed `worker` at `step`
+    /// (`None` = permanent).
+    pub fn restart_after(&self, worker: usize, step: usize) -> Option<f64> {
+        self.plan
+            .fault_at(worker, step)
+            .and_then(|(_, f)| f.restart_after_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_parse_roundtrip() {
+        let built = FaultPlan::default().crash_restart(1, 20, 0.5).crash(2, 40);
+        let parsed = FaultPlan::parse("1@20+0.5, 2@40").unwrap();
+        assert_eq!(built, parsed);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("nope").is_err());
+        assert!(FaultPlan::parse("1@x").is_err());
+        assert!(FaultPlan::parse("1@5+abc").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_impossible_schedules() {
+        let plan = FaultPlan::default().crash(1, 5);
+        plan.validate(3, 10).unwrap();
+        assert!(plan.validate(1, 10).is_err(), "needs a surviving donor");
+        assert!(plan.validate(3, 5).is_err(), "crash step beyond the run");
+        assert!(FaultPlan::default().crash(7, 1).validate(3, 10).is_err());
+        let dup = FaultPlan::default().crash_restart(1, 5, 0.1).crash_restart(1, 5, 0.2);
+        assert!(dup.validate(3, 10).is_err());
+        let after_permanent = FaultPlan::default().crash(1, 5).crash_restart(1, 8, 0.1);
+        assert!(after_permanent.validate(3, 10).is_err());
+        let neg = FaultPlan::default().crash_restart(1, 5, -1.0);
+        assert!(neg.validate(3, 10).is_err());
+        // empty plans validate against anything
+        FaultPlan::default().validate(1, 1).unwrap();
+    }
+
+    #[test]
+    fn random_schedules_are_seed_deterministic_and_spare_worker_zero() {
+        let a = FaultPlan::random(9, 4, 100, 6, Some(0.25));
+        let b = FaultPlan::random(9, 4, 100, 6, Some(0.25));
+        assert_eq!(a, b);
+        assert_eq!(a.faults.len(), 6);
+        for f in &a.faults {
+            assert!(f.worker >= 1 && f.worker < 4);
+            assert!(f.at_step >= 1 && f.at_step < 100);
+            assert_eq!(f.restart_after_s, Some(0.25));
+        }
+        let c = FaultPlan::random(10, 4, 100, 6, Some(0.25));
+        assert_ne!(a, c, "different seeds draw different schedules");
+        assert!(FaultPlan::random(1, 1, 100, 3, None).is_empty());
+    }
+
+    #[test]
+    fn runtime_fires_each_fault_exactly_once() {
+        let rt = ChaosRuntime::new(FaultPlan::default().crash_restart(1, 3, 0.1));
+        assert!(!rt.due(0, 3), "wrong worker");
+        assert!(!rt.due(1, 2), "wrong step");
+        assert!(rt.due(1, 3), "first match fires");
+        assert!(!rt.due(1, 3), "a respawned worker passing its crash step survives");
+        assert_eq!(rt.restart_after(1, 3), Some(0.1));
+        assert_eq!(rt.restart_after(1, 4), None);
+    }
+}

@@ -1,0 +1,830 @@
+//! Versioned, self-describing training snapshots.
+//!
+//! A checkpoint directory holds two files:
+//!
+//! * `meta.json` — human-readable inventory: format name + version, run
+//!   identity (model, algorithm, workers, seed), the resume step, and counts
+//!   of everything the binary blob carries. Written *last*, so a directory
+//!   with a `meta.json` is a complete checkpoint (commit marker).
+//! * `state.bin` — the full training state in a little-endian binary layout
+//!   (exact f32/f64 bits, no decimal round-tripping): every worker's model
+//!   replica ([`crate::model::ModelParams::state_dict`]), optimizer moments
+//!   and gossip RNG streams ([`AlgoState`]), data-loader cursors, push-sum
+//!   weights, membership flags, the quiesced in-flight fabric messages
+//!   ([`crate::comm::InFlight`]) and the learning curve so far.
+//!
+//! The invariant the round-trip tests pin: **save → load → continue is
+//! bit-identical to an uninterrupted run** (on the instant fabric, under a
+//! deterministic driver — see the engine's lockstep mode and the parity
+//! tests in `tests/resilience.rs`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::{InFlight, Payload};
+use crate::metrics::CurvePoint;
+use crate::optim::{LayerOptState, OptState};
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, s, Json};
+
+/// Bump on any layout change; `load` rejects unknown versions.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Format name written to `meta.json` (self-description).
+pub const FORMAT_NAME: &str = "layup-checkpoint";
+
+const MAGIC: &[u8; 8] = b"LAYUPCKP";
+const META_FILE: &str = "meta.json";
+const STATE_FILE: &str = "state.bin";
+
+/// Cross-step state of one worker's algorithm object, as captured by
+/// [`crate::algorithms::WorkerAlgo::state_dict`]. Which fields are present
+/// depends on the algorithm (DDP: optimizer only; GoSGD: optimizer + peer
+/// RNG; SlowMo/CO2: optimizer + outer momentum; ...).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AlgoState {
+    /// per-layer optimizer moments
+    pub opt: Option<OptState>,
+    /// gossip peer-selection RNG stream (`Pcg32::state`)
+    pub rng: Option<(u64, u64)>,
+    /// SlowMo/CO2 outer-momentum state
+    pub outer: Option<OuterState>,
+}
+
+/// SlowMo/CO2 slow-momentum buffers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OuterState {
+    /// slow momentum buffer u (model-size)
+    pub u: Vec<f32>,
+    /// parameters right after the previous outer step
+    pub x_prev: Vec<f32>,
+}
+
+/// Everything worker-local a resume needs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerState {
+    /// was the slot alive at snapshot time (a chaos-killed worker is saved
+    /// dead; resume revives every slot, like restarting the job)
+    pub alive: bool,
+    /// completed-step counter at snapshot time
+    pub steps_done: u64,
+    /// data-loader cursor (training batches drawn)
+    pub cursor: u64,
+    /// push-sum weight
+    pub weight: f32,
+    /// algorithm state (optimizer moments, gossip RNG, outer momentum)
+    pub algo: AlgoState,
+}
+
+/// One full training snapshot (see module docs for the on-disk layout).
+/// (No `Debug`/`PartialEq`: [`InFlight`] payloads intentionally don't
+/// implement them — compare fields, as the codec tests do.)
+#[derive(Clone)]
+pub struct Checkpoint {
+    pub version: u32,
+    pub model: String,
+    /// canonical algorithm display name
+    pub algorithm: String,
+    pub workers: usize,
+    pub seed: u64,
+    /// every worker completed steps `< step`; resume starts here
+    pub step: usize,
+    /// wall seconds of training before the snapshot (curve continuity)
+    pub elapsed_s: f64,
+    /// membership epoch at snapshot time
+    pub epoch: u64,
+    /// per-worker model replicas (`params[w][layer][tensor]`)
+    pub params: Vec<Vec<Vec<Vec<f32>>>>,
+    pub workers_state: Vec<WorkerState>,
+    /// quiesced fabric messages still riding the links
+    pub in_flight: Vec<InFlight>,
+    /// eval curve recorded before the snapshot
+    pub curve: Vec<CurvePoint>,
+    /// drift samples recorded before the snapshot
+    pub drift: Vec<(u64, f64)>,
+}
+
+impl Checkpoint {
+    /// Reject a resume into a session whose config does not match the run
+    /// that produced the snapshot.
+    pub fn check_compatible(
+        &self,
+        model: &str,
+        algorithm: &str,
+        workers: usize,
+        seed: u64,
+    ) -> Result<()> {
+        if self.version != FORMAT_VERSION {
+            bail!(
+                "checkpoint format v{} is not supported (this build reads v{FORMAT_VERSION})",
+                self.version
+            );
+        }
+        if self.model != model || self.algorithm != algorithm {
+            bail!(
+                "checkpoint was taken from {}/{}, the session runs {model}/{algorithm}",
+                self.model,
+                self.algorithm
+            );
+        }
+        if self.workers != workers {
+            bail!(
+                "checkpoint has {} workers, the session runs {workers}",
+                self.workers
+            );
+        }
+        if self.seed != seed {
+            bail!(
+                "checkpoint was taken at seed {}, the session runs seed {seed} \
+                 (data streams would diverge; resume with the original seed)",
+                self.seed
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The subdirectory a periodic checkpoint at `step` is written to.
+pub fn step_dir(dir: &Path, step: usize) -> std::path::PathBuf {
+    dir.join(format!("step-{step:06}"))
+}
+
+/// Resolve a user-supplied resume path: either a checkpoint directory
+/// itself (holds `meta.json`) or a parent directory of `step-XXXXXX`
+/// checkpoints, in which case the latest one is picked.
+pub fn resolve(dir: &Path) -> Result<std::path::PathBuf> {
+    if dir.join(META_FILE).exists() {
+        return Ok(dir.to_path_buf());
+    }
+    let mut best: Option<(u64, std::path::PathBuf)> = None;
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        // compare the parsed step number, not the name: lexicographic order
+        // misfiles steps past the zero-padding width (step-1000000 sorts
+        // before step-999999)
+        let Some(step) = name.strip_prefix("step-").and_then(|s| s.parse::<u64>().ok()) else {
+            continue;
+        };
+        if path.join(META_FILE).exists()
+            && best.as_ref().map(|&(b, _)| step > b).unwrap_or(true)
+        {
+            best = Some((step, path));
+        }
+    }
+    best.map(|(_, p)| p).ok_or_else(|| {
+        anyhow::anyhow!(
+            "{} holds no checkpoint (no meta.json, no step-* subdirectory)",
+            dir.display()
+        )
+    })
+}
+
+/// Write `ckpt` into `dir` (created if missing): `state.bin` first, then the
+/// self-describing `meta.json` commit marker.
+pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let mut enc = Enc::default();
+    encode(ckpt, &mut enc);
+    std::fs::write(dir.join(STATE_FILE), &enc.buf)
+        .with_context(|| format!("writing {}", dir.join(STATE_FILE).display()))?;
+    let live = ckpt.workers_state.iter().filter(|w| w.alive).count();
+    let meta = obj(vec![
+        ("format", s(FORMAT_NAME)),
+        ("format_version", num(ckpt.version as f64)),
+        ("state_file", s(STATE_FILE)),
+        ("model", s(&ckpt.model)),
+        ("algorithm", s(&ckpt.algorithm)),
+        ("workers", num(ckpt.workers as f64)),
+        ("live_workers", num(live as f64)),
+        ("seed", num(ckpt.seed as f64)),
+        ("step", num(ckpt.step as f64)),
+        ("elapsed_s", num(ckpt.elapsed_s)),
+        ("membership_epoch", num(ckpt.epoch as f64)),
+        ("in_flight_msgs", num(ckpt.in_flight.len() as f64)),
+        ("curve_points", num(ckpt.curve.len() as f64)),
+        ("drift_samples", num(ckpt.drift.len() as f64)),
+    ]);
+    std::fs::write(dir.join(META_FILE), meta.dump())
+        .with_context(|| format!("writing {}", dir.join(META_FILE).display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint directory written by [`save`].
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let meta_path = dir.join(META_FILE);
+    let meta_text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("reading {} (incomplete checkpoint?)", meta_path.display()))?;
+    let meta = Json::parse(&meta_text).context("parsing checkpoint meta.json")?;
+    let format = meta.get("format")?.as_str()?.to_string();
+    if format != FORMAT_NAME {
+        bail!("{} is not a layup checkpoint (format {format:?})", dir.display());
+    }
+    let version = meta.get("format_version")?.as_usize()? as u32;
+    if version != FORMAT_VERSION {
+        bail!("checkpoint format v{version} is not supported (this build reads v{FORMAT_VERSION})");
+    }
+    let state_file = meta.get("state_file")?.as_str()?.to_string();
+    let bytes = std::fs::read(dir.join(&state_file))
+        .with_context(|| format!("reading {}", dir.join(&state_file).display()))?;
+    let ckpt = decode(&bytes).context("decoding checkpoint state.bin")?;
+    // the meta header must agree with the binary payload (self-description
+    // is only useful if it is truthful)
+    if ckpt.step != meta.get("step")?.as_usize()? || ckpt.workers != meta.get("workers")?.as_usize()?
+    {
+        bail!("checkpoint meta.json disagrees with state.bin (corrupt checkpoint)");
+    }
+    Ok(ckpt)
+}
+
+// ---------------------------------------------------------------------------
+// binary codec
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, v: &str) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn usizes(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("checkpoint truncated at byte {} (wanted {n} more)", self.i);
+        }
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // a corrupt length must error, not OOM the process
+        if n > (self.b.len() - self.i) as u64 {
+            bail!("checkpoint declares {n} elements but only {} bytes remain", self.b.len() - self.i);
+        }
+        Ok(n as usize)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        String::from_utf8(self.take(n)?.to_vec()).context("checkpoint string not UTF-8")
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()? as usize);
+        }
+        Ok(out)
+    }
+}
+
+fn encode(ckpt: &Checkpoint, e: &mut Enc) {
+    e.buf.extend_from_slice(MAGIC);
+    e.u32(ckpt.version);
+    e.str(&ckpt.model);
+    e.str(&ckpt.algorithm);
+    e.u64(ckpt.workers as u64);
+    e.u64(ckpt.seed);
+    e.u64(ckpt.step as u64);
+    e.f64(ckpt.elapsed_s);
+    e.u64(ckpt.epoch);
+    e.u64(ckpt.params.len() as u64);
+    for worker in &ckpt.params {
+        e.u64(worker.len() as u64);
+        for layer in worker {
+            e.u64(layer.len() as u64);
+            for tensor in layer {
+                e.f32s(tensor);
+            }
+        }
+    }
+    e.u64(ckpt.workers_state.len() as u64);
+    for w in &ckpt.workers_state {
+        e.bool(w.alive);
+        e.u64(w.steps_done);
+        e.u64(w.cursor);
+        e.f32(w.weight);
+        encode_algo(&w.algo, e);
+    }
+    e.u64(ckpt.in_flight.len() as u64);
+    for m in &ckpt.in_flight {
+        e.u64(m.from as u64);
+        e.u64(m.to as u64);
+        e.u64(m.step as u64);
+        e.f64(m.remaining_s);
+        encode_payload(&m.payload, e);
+    }
+    e.u64(ckpt.curve.len() as u64);
+    for p in &ckpt.curve {
+        e.u64(p.step as u64);
+        e.f64(p.time_s);
+        e.f64(p.loss);
+        e.f64(p.accuracy);
+    }
+    e.u64(ckpt.drift.len() as u64);
+    for &(step, v) in &ckpt.drift {
+        e.u64(step);
+        e.f64(v);
+    }
+}
+
+fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    let mut d = Dec { b: bytes, i: 0 };
+    if d.take(MAGIC.len())? != MAGIC {
+        bail!("bad checkpoint magic (not a layup state.bin)");
+    }
+    let version = d.u32()?;
+    if version != FORMAT_VERSION {
+        bail!("checkpoint format v{version} is not supported (this build reads v{FORMAT_VERSION})");
+    }
+    let model = d.str()?;
+    let algorithm = d.str()?;
+    let workers = d.u64()? as usize;
+    let seed = d.u64()?;
+    let step = d.u64()? as usize;
+    let elapsed_s = d.f64()?;
+    let epoch = d.u64()?;
+    let n_workers_params = d.len()?;
+    let mut params = Vec::with_capacity(n_workers_params);
+    for _ in 0..n_workers_params {
+        let n_layers = d.len()?;
+        let mut worker = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n_tensors = d.len()?;
+            let mut layer = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                layer.push(d.f32s()?);
+            }
+            worker.push(layer);
+        }
+        params.push(worker);
+    }
+    let n_states = d.len()?;
+    let mut workers_state = Vec::with_capacity(n_states);
+    for _ in 0..n_states {
+        workers_state.push(WorkerState {
+            alive: d.bool()?,
+            steps_done: d.u64()?,
+            cursor: d.u64()?,
+            weight: d.f32()?,
+            algo: decode_algo(&mut d)?,
+        });
+    }
+    let n_in_flight = d.len()?;
+    let mut in_flight = Vec::with_capacity(n_in_flight);
+    for _ in 0..n_in_flight {
+        in_flight.push(InFlight {
+            from: d.u64()? as usize,
+            to: d.u64()? as usize,
+            step: d.u64()? as usize,
+            remaining_s: d.f64()?,
+            payload: decode_payload(&mut d)?,
+        });
+    }
+    let n_curve = d.len()?;
+    let mut curve = Vec::with_capacity(n_curve);
+    for _ in 0..n_curve {
+        curve.push(CurvePoint {
+            step: d.u64()? as usize,
+            time_s: d.f64()?,
+            loss: d.f64()?,
+            accuracy: d.f64()?,
+        });
+    }
+    let n_drift = d.len()?;
+    let mut drift = Vec::with_capacity(n_drift);
+    for _ in 0..n_drift {
+        drift.push((d.u64()?, d.f64()?));
+    }
+    if d.i != d.b.len() {
+        bail!("checkpoint has {} trailing bytes", d.b.len() - d.i);
+    }
+    // the per-worker arrays must match the declared worker count — a
+    // mismatch would otherwise surface as an engine panic or, worse, a
+    // silently partial restore (zip stopping at the shorter side)
+    if params.len() != workers || workers_state.len() != workers {
+        bail!(
+            "checkpoint declares {workers} workers but carries {} replicas and {} worker states",
+            params.len(),
+            workers_state.len()
+        );
+    }
+    Ok(Checkpoint {
+        version,
+        model,
+        algorithm,
+        workers,
+        seed,
+        step,
+        elapsed_s,
+        epoch,
+        params,
+        workers_state,
+        in_flight,
+        curve,
+        drift,
+    })
+}
+
+fn encode_algo(a: &AlgoState, e: &mut Enc) {
+    match &a.opt {
+        None => e.bool(false),
+        Some(opt) => {
+            e.bool(true);
+            e.u64(opt.layers.len() as u64);
+            for l in &opt.layers {
+                e.u64(l.m.len() as u64);
+                for buf in &l.m {
+                    e.f32s(buf);
+                }
+                e.u64(l.v.len() as u64);
+                for buf in &l.v {
+                    e.f32s(buf);
+                }
+                e.u64(l.t);
+            }
+        }
+    }
+    match a.rng {
+        None => e.bool(false),
+        Some((state, inc)) => {
+            e.bool(true);
+            e.u64(state);
+            e.u64(inc);
+        }
+    }
+    match &a.outer {
+        None => e.bool(false),
+        Some(o) => {
+            e.bool(true);
+            e.f32s(&o.u);
+            e.f32s(&o.x_prev);
+        }
+    }
+}
+
+fn decode_algo(d: &mut Dec) -> Result<AlgoState> {
+    let opt = if d.bool()? {
+        let n_layers = d.len()?;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n_m = d.len()?;
+            let mut m = Vec::with_capacity(n_m);
+            for _ in 0..n_m {
+                m.push(d.f32s()?);
+            }
+            let n_v = d.len()?;
+            let mut v = Vec::with_capacity(n_v);
+            for _ in 0..n_v {
+                v.push(d.f32s()?);
+            }
+            layers.push(LayerOptState { m, v, t: d.u64()? });
+        }
+        Some(OptState { layers })
+    } else {
+        None
+    };
+    let rng = if d.bool()? { Some((d.u64()?, d.u64()?)) } else { None };
+    let outer = if d.bool()? {
+        Some(OuterState { u: d.f32s()?, x_prev: d.f32s()? })
+    } else {
+        None
+    };
+    Ok(AlgoState { opt, rng, outer })
+}
+
+fn encode_payload(p: &Payload, e: &mut Enc) {
+    match p {
+        Payload::LayerPush { layer, open, values } => {
+            e.u8(0);
+            e.u64(*layer as u64);
+            match open {
+                None => e.bool(false),
+                Some(w) => {
+                    e.bool(true);
+                    e.f32(*w);
+                }
+            }
+            e.u64(values.len() as u64);
+            for v in values.iter() {
+                e.f32s(v);
+            }
+        }
+        Payload::ModelPush { w_in, values } => {
+            e.u8(1);
+            e.f32(*w_in);
+            e.u64(values.len() as u64);
+            for layer in values.iter() {
+                e.u64(layer.len() as u64);
+                for v in layer {
+                    e.f32s(v);
+                }
+            }
+        }
+        Payload::PairAverage { flat, reply } => {
+            e.u8(2);
+            e.bool(*reply);
+            e.f32s(flat);
+        }
+        Payload::GradShare { set } => {
+            e.u8(3);
+            e.u64(set.len() as u64);
+            for layer in set.iter() {
+                e.u64(layer.len() as u64);
+                for t in layer {
+                    e.usizes(&t.shape);
+                    e.f32s(&t.data);
+                }
+            }
+        }
+        Payload::ParamShare { flat } => {
+            e.u8(4);
+            e.f32s(flat);
+        }
+    }
+}
+
+fn decode_payload(d: &mut Dec) -> Result<Payload> {
+    Ok(match d.u8()? {
+        0 => {
+            let layer = d.u64()? as usize;
+            let open = if d.bool()? { Some(d.f32()?) } else { None };
+            let n = d.len()?;
+            let mut values = Vec::with_capacity(n);
+            for _ in 0..n {
+                values.push(d.f32s()?);
+            }
+            Payload::LayerPush { layer, open, values: Arc::new(values) }
+        }
+        1 => {
+            let w_in = d.f32()?;
+            let n_layers = d.len()?;
+            let mut values = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let n_tensors = d.len()?;
+                let mut layer = Vec::with_capacity(n_tensors);
+                for _ in 0..n_tensors {
+                    layer.push(d.f32s()?);
+                }
+                values.push(layer);
+            }
+            Payload::ModelPush { w_in, values: Arc::new(values) }
+        }
+        2 => {
+            let reply = d.bool()?;
+            Payload::PairAverage { flat: Arc::new(d.f32s()?), reply }
+        }
+        3 => {
+            let n_layers = d.len()?;
+            let mut set = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                let n_params = d.len()?;
+                let mut layer = Vec::with_capacity(n_params);
+                for _ in 0..n_params {
+                    let shape = d.usizes()?;
+                    let data = d.f32s()?;
+                    if shape.iter().product::<usize>() != data.len() {
+                        bail!("checkpoint GradShare tensor shape/data mismatch");
+                    }
+                    layer.push(Tensor::from_vec(&shape, data));
+                }
+                set.push(layer);
+            }
+            Payload::GradShare { set: Arc::new(set) }
+        }
+        4 => Payload::ParamShare { flat: Arc::new(d.f32s()?) },
+        tag => bail!("unknown checkpoint payload tag {tag}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            version: FORMAT_VERSION,
+            model: "mlpnet18".into(),
+            algorithm: "LayUp".into(),
+            workers: 2,
+            seed: 42,
+            step: 10,
+            elapsed_s: 1.5,
+            epoch: 3,
+            params: vec![
+                vec![vec![vec![1.0, -2.5], vec![0.125]], vec![vec![3.0]]],
+                vec![vec![vec![0.5, 0.5], vec![-1.0]], vec![vec![f32::MIN_POSITIVE]]],
+            ],
+            workers_state: vec![
+                WorkerState {
+                    alive: true,
+                    steps_done: 10,
+                    cursor: 10,
+                    weight: 0.5,
+                    algo: AlgoState {
+                        opt: Some(OptState {
+                            layers: vec![LayerOptState {
+                                m: vec![vec![0.1, 0.2], vec![0.3]],
+                                v: Vec::new(),
+                                t: 10,
+                            }],
+                        }),
+                        rng: Some((123, 457)),
+                        outer: None,
+                    },
+                },
+                WorkerState {
+                    alive: false,
+                    steps_done: 7,
+                    cursor: 7,
+                    weight: 0.0,
+                    algo: AlgoState {
+                        opt: None,
+                        rng: None,
+                        outer: Some(OuterState { u: vec![1.0], x_prev: vec![2.0] }),
+                    },
+                },
+            ],
+            in_flight: vec![
+                InFlight {
+                    from: 0,
+                    to: 1,
+                    step: 9,
+                    remaining_s: 0.004,
+                    payload: Payload::LayerPush {
+                        layer: 1,
+                        open: Some(0.25),
+                        values: Arc::new(vec![vec![9.0, 8.0]]),
+                    },
+                },
+                InFlight {
+                    from: 1,
+                    to: 0,
+                    step: 8,
+                    remaining_s: 0.0,
+                    payload: Payload::GradShare {
+                        set: Arc::new(vec![vec![Tensor::from_vec(&[2, 1], vec![1.0, 2.0])]]),
+                    },
+                },
+            ],
+            curve: vec![CurvePoint { step: 5, time_s: 0.7, loss: 1.25, accuracy: 0.5 }],
+            drift: vec![(4, 0.125)],
+        }
+    }
+
+    fn payloads_eq(a: &Payload, b: &Payload) -> bool {
+        match (a, b) {
+            (
+                Payload::LayerPush { layer: la, open: oa, values: va },
+                Payload::LayerPush { layer: lb, open: ob, values: vb },
+            ) => la == lb && oa == ob && va == vb,
+            (
+                Payload::ModelPush { w_in: wa, values: va },
+                Payload::ModelPush { w_in: wb, values: vb },
+            ) => wa == wb && va == vb,
+            (
+                Payload::PairAverage { flat: fa, reply: ra },
+                Payload::PairAverage { flat: fb, reply: rb },
+            ) => fa == fb && ra == rb,
+            (Payload::GradShare { set: sa }, Payload::GradShare { set: sb }) => sa == sb,
+            (Payload::ParamShare { flat: fa }, Payload::ParamShare { flat: fb }) => fa == fb,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("layup-ckpt-test-{}", std::process::id()));
+        let ckpt = sample();
+        save(&dir, &ckpt).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.model, ckpt.model);
+        assert_eq!(back.algorithm, ckpt.algorithm);
+        assert_eq!(back.workers, ckpt.workers);
+        assert_eq!(back.seed, ckpt.seed);
+        assert_eq!(back.step, ckpt.step);
+        assert_eq!(back.elapsed_s.to_bits(), ckpt.elapsed_s.to_bits());
+        assert_eq!(back.epoch, ckpt.epoch);
+        assert_eq!(back.params, ckpt.params);
+        assert_eq!(back.workers_state, ckpt.workers_state);
+        assert_eq!(back.in_flight.len(), ckpt.in_flight.len());
+        for (a, b) in back.in_flight.iter().zip(&ckpt.in_flight) {
+            assert_eq!((a.from, a.to, a.step), (b.from, b.to, b.step));
+            assert_eq!(a.remaining_s.to_bits(), b.remaining_s.to_bits());
+            assert!(payloads_eq(&a.payload, &b.payload));
+        }
+        assert_eq!(back.curve.len(), 1);
+        assert_eq!(back.curve[0].loss.to_bits(), ckpt.curve[0].loss.to_bits());
+        assert_eq!(back.drift, ckpt.drift);
+        // meta.json is a truthful self-description
+        let meta =
+            Json::parse(&std::fs::read_to_string(dir.join(META_FILE)).unwrap()).unwrap();
+        assert_eq!(meta.get("format").unwrap().as_str().unwrap(), FORMAT_NAME);
+        assert_eq!(meta.get("step").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(meta.get("live_workers").unwrap().as_usize().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_or_foreign_inputs_are_rejected() {
+        assert!(decode(b"not a checkpoint").is_err());
+        let mut enc = Enc::default();
+        encode(&sample(), &mut enc);
+        // truncation anywhere must surface as an error, not a panic
+        for cut in [8, 12, 40, enc.buf.len() - 1] {
+            assert!(decode(&enc.buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage is rejected too
+        let mut long = enc.buf.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+        // a bad version is rejected up front
+        let mut bad = enc.buf.clone();
+        bad[8] = 99;
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn compatibility_gate_matches_run_identity() {
+        let ckpt = sample();
+        ckpt.check_compatible("mlpnet18", "LayUp", 2, 42).unwrap();
+        assert!(ckpt.check_compatible("gpt_mini", "LayUp", 2, 42).is_err());
+        assert!(ckpt.check_compatible("mlpnet18", "DDP", 2, 42).is_err());
+        assert!(ckpt.check_compatible("mlpnet18", "LayUp", 3, 42).is_err());
+        assert!(ckpt.check_compatible("mlpnet18", "LayUp", 2, 7).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Versioned worker membership: which of a run's worker slots are alive.
+//!
+//! The seed-era cluster had a fixed worker count for the life of a run; the
+//! resilience subsystem makes membership *elastic*: a slot transitions
+//! dead/alive as the chaos supervisor tears workers down and respawns them,
+//! and every transition bumps a monotone **epoch** so long-running readers
+//! (barriers, collect loops, gossip peer pickers) can cheaply detect that
+//! the world changed. Capacity is bounded by the initial worker count — a
+//! "join" re-activates a slot (the TorchElastic max-world-size model), it
+//! does not grow the parameter-store vectors mid-run.
+//!
+//! One `Membership` is shared by [`crate::coordinator::Shared`] and the
+//! communication fabric's [`crate::comm::FabricCore`], so transports and
+//! algorithms agree on liveness.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+/// How collective (barrier) algorithms react to a dead peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Hold the collective at the barrier until the worker rejoins (the
+    /// DDP-stalls-on-failure behaviour the fault-tolerance figure shows);
+    /// the supervisor reports a stall if the worker never comes back.
+    Stall,
+    /// Shrink the collective to the live workers: barriers count live slots
+    /// and all-reduces average over live contributors only.
+    Shrink,
+}
+
+impl RecoveryPolicy {
+    /// Parse a CLI / TOML spelling.
+    pub fn parse(s: &str) -> anyhow::Result<RecoveryPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "stall" | "stall-and-rejoin" => Ok(RecoveryPolicy::Stall),
+            "shrink" => Ok(RecoveryPolicy::Shrink),
+            other => anyhow::bail!("unknown recovery policy {other:?} (expected stall or shrink)"),
+        }
+    }
+
+    /// Short name for logs and summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::Stall => "stall",
+            RecoveryPolicy::Shrink => "shrink",
+        }
+    }
+}
+
+/// Shared, lock-free membership table (see module docs).
+pub struct Membership {
+    /// bumped on every alive/dead transition
+    epoch: AtomicU64,
+    alive: Vec<AtomicBool>,
+    /// 0 = Stall, 1 = Shrink (fixed per run, set before workers spawn)
+    policy: AtomicU32,
+    /// set by the supervisor when a Stall-policy collective waited past the
+    /// stall timeout for a worker that is never coming back
+    stalled: AtomicBool,
+    crashes: AtomicU64,
+    joins: AtomicU64,
+}
+
+impl Membership {
+    /// Fresh membership: all `m` slots alive, epoch 0, Stall policy.
+    pub fn new(m: usize) -> Membership {
+        Membership {
+            epoch: AtomicU64::new(0),
+            alive: (0..m).map(|_| AtomicBool::new(true)).collect(),
+            policy: AtomicU32::new(0),
+            stalled: AtomicBool::new(false),
+            crashes: AtomicU64::new(0),
+            joins: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot capacity (the run's initial worker count).
+    pub fn workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn alive(&self, w: usize) -> bool {
+        self.alive[w].load(Ordering::Acquire)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::Acquire)).count()
+    }
+
+    /// Lowest-id live worker, if any (checkpoint writer / respawn donor).
+    pub fn first_live(&self) -> Option<usize> {
+        (0..self.workers()).find(|&w| self.alive(w))
+    }
+
+    /// Monotone membership version; any change bumps it.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Mark `w` dead. Returns `false` (and does nothing) if it already was.
+    pub fn mark_dead(&self, w: usize) -> bool {
+        if self.alive[w].swap(false, Ordering::AcqRel) {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+            self.crashes.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Mark `w` alive again (a respawned worker rejoining). Returns `false`
+    /// if it already was.
+    pub fn mark_alive(&self, w: usize) -> bool {
+        if !self.alive[w].swap(true, Ordering::AcqRel) {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+            self.joins.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn policy(&self) -> RecoveryPolicy {
+        if self.policy.load(Ordering::Relaxed) == 1 {
+            RecoveryPolicy::Shrink
+        } else {
+            RecoveryPolicy::Stall
+        }
+    }
+
+    /// Select the run's recovery policy (called once, before workers spawn).
+    pub fn set_policy(&self, policy: RecoveryPolicy) {
+        let v = match policy {
+            RecoveryPolicy::Stall => 0,
+            RecoveryPolicy::Shrink => 1,
+        };
+        self.policy.store(v, Ordering::Relaxed);
+    }
+
+    pub fn stalled(&self) -> bool {
+        self.stalled.load(Ordering::Relaxed)
+    }
+
+    pub fn mark_stalled(&self) {
+        self.stalled.store(true, Ordering::Relaxed);
+    }
+
+    /// Total dead transitions (summary stats).
+    pub fn crash_count(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    /// Total rejoin transitions (summary stats).
+    pub fn join_count(&self) -> u64 {
+        self.joins.load(Ordering::Relaxed)
+    }
+
+    /// Checkpoint view of the alive flags.
+    pub fn alive_flags(&self) -> Vec<bool> {
+        (0..self.workers()).map(|w| self.alive(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transitions_bump_the_epoch_once_each() {
+        let m = Membership::new(3);
+        assert_eq!(m.live_count(), 3);
+        assert_eq!(m.epoch(), 0);
+        assert!(m.mark_dead(1));
+        assert!(!m.mark_dead(1), "double-kill is a no-op");
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.live_count(), 2);
+        assert!(!m.alive(1));
+        assert_eq!(m.first_live(), Some(0));
+        assert!(m.mark_alive(1));
+        assert!(!m.mark_alive(1));
+        assert_eq!(m.epoch(), 2);
+        assert_eq!((m.crash_count(), m.join_count()), (1, 1));
+        assert_eq!(m.alive_flags(), vec![true, true, true]);
+    }
+
+    #[test]
+    fn policy_parse_and_roundtrip() {
+        let m = Membership::new(2);
+        assert_eq!(m.policy(), RecoveryPolicy::Stall);
+        m.set_policy(RecoveryPolicy::Shrink);
+        assert_eq!(m.policy(), RecoveryPolicy::Shrink);
+        assert_eq!(RecoveryPolicy::parse("stall").unwrap(), RecoveryPolicy::Stall);
+        assert_eq!(RecoveryPolicy::parse("Shrink").unwrap(), RecoveryPolicy::Shrink);
+        assert!(RecoveryPolicy::parse("panic").is_err());
+        assert_eq!(RecoveryPolicy::Shrink.name(), "shrink");
+    }
+
+    #[test]
+    fn stall_flag_latches() {
+        let m = Membership::new(2);
+        assert!(!m.stalled());
+        m.mark_stalled();
+        assert!(m.stalled());
+    }
+}

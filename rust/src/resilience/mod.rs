@@ -1,0 +1,38 @@
+//! Resilience subsystem: checkpoint/restore, chaos injection and elastic
+//! worker membership.
+//!
+//! The paper's central claim is robustness: layer-wise partial updates
+//! tolerate delays and throughput differences that stall synchronous DDP.
+//! This subsystem extends that robustness from *slow* workers to *dead* and
+//! *joining* workers, and makes it measurable:
+//!
+//! * [`checkpoint`] — versioned, self-describing snapshots of full training
+//!   state (model replicas, optimizer moments, RNG streams, data cursors,
+//!   push-sum weights, quiesced in-flight fabric traffic, membership and the
+//!   learning curve), with the save→load→continue ≡ uninterrupted invariant
+//!   pinned by the resume-parity tests. Wired in via
+//!   `SessionBuilder::checkpoint_every(..)` / `Session::resume_from(..)`,
+//!   the `[checkpoint]` config section and the `layup train --resume` /
+//!   `--ckpt-every` CLI flags.
+//! * [`chaos`] — seeded crash/restart schedules ([`chaos::FaultPlan`]) the
+//!   coordinator engine executes by tearing down and respawning worker
+//!   threads, with per-algorithm recovery: gossip algorithms re-enter from a
+//!   live peer's current parameters (push-sum weight donated by the peer so
+//!   mass is conserved), collective algorithms either stall-and-rejoin or
+//!   shrink the collective ([`membership::RecoveryPolicy`]).
+//! * [`membership`] — the versioned-epoch membership table `Shared` and the
+//!   communication fabric consult, making worker count elastic within the
+//!   run's slot capacity.
+//!
+//! Fault timelines surface as typed events
+//! (`TrainEvent::{WorkerCrashed, WorkerJoined, CheckpointSaved, Resumed}`)
+//! and in `RunStats::recovery`; `benches/fig_fault_tolerance.rs` turns them
+//! into the loss-vs-wallclock fault-tolerance figure.
+
+pub mod chaos;
+pub mod checkpoint;
+pub mod membership;
+
+pub use chaos::{ChaosRuntime, Fault, FaultPlan};
+pub use checkpoint::{AlgoState, Checkpoint, OuterState, WorkerState};
+pub use membership::{Membership, RecoveryPolicy};

@@ -45,6 +45,17 @@ pub enum TrainEvent {
     CommDelivered { from: usize, to: usize, step: usize, staleness: i64 },
     /// The configured straggler idled before this step.
     StragglerInjected { worker: usize, step: usize, delay_s: f64 },
+    /// A chaos fault tore this worker down before it ran `step`
+    /// (resilience subsystem; the membership epoch bumped).
+    WorkerCrashed { worker: usize, step: usize },
+    /// A crashed worker was respawned and rejoined the run at `step`;
+    /// `epoch` is the membership version after the join.
+    WorkerJoined { worker: usize, step: usize, epoch: u64 },
+    /// A periodic checkpoint was written; resume with
+    /// `Session::resume_from(path)` (or `layup train --resume <path>`).
+    CheckpointSaved { step: usize, path: String },
+    /// The session restored a checkpoint and will continue from `step`.
+    Resumed { step: usize, path: String },
     /// All workers joined; the summary is being assembled.
     RunCompleted { total_steps: usize, wall_s: f64 },
 }
@@ -63,6 +74,10 @@ impl TrainEvent {
             TrainEvent::CommDropped { .. } => "comm_dropped",
             TrainEvent::CommDelivered { .. } => "comm_delivered",
             TrainEvent::StragglerInjected { .. } => "straggler_injected",
+            TrainEvent::WorkerCrashed { .. } => "worker_crashed",
+            TrainEvent::WorkerJoined { .. } => "worker_joined",
+            TrainEvent::CheckpointSaved { .. } => "checkpoint_saved",
+            TrainEvent::Resumed { .. } => "resumed",
             TrainEvent::RunCompleted { .. } => "run_completed",
         }
     }
@@ -120,6 +135,23 @@ impl TrainEvent {
                 fields.push(("worker", num(*worker as f64)));
                 fields.push(("step", num(*step as f64)));
                 fields.push(("delay_s", num(*delay_s)));
+            }
+            TrainEvent::WorkerCrashed { worker, step } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("step", num(*step as f64)));
+            }
+            TrainEvent::WorkerJoined { worker, step, epoch } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("epoch", num(*epoch as f64)));
+            }
+            TrainEvent::CheckpointSaved { step, path } => {
+                fields.push(("step", num(*step as f64)));
+                fields.push(("path", s(path)));
+            }
+            TrainEvent::Resumed { step, path } => {
+                fields.push(("step", num(*step as f64)));
+                fields.push(("path", s(path)));
             }
             TrainEvent::RunCompleted { total_steps, wall_s } => {
                 fields.push(("total_steps", num(*total_steps as f64)));
@@ -194,6 +226,18 @@ impl Observer for ProgressPrinter {
                     "[eval] step {step:>6}  t={time_s:>7.1}s  loss {loss:.4}  acc {:.1}%",
                     100.0 * accuracy
                 );
+            }
+            TrainEvent::WorkerCrashed { worker, step } => {
+                println!("[chaos] worker {worker} crashed at step {step}");
+            }
+            TrainEvent::WorkerJoined { worker, step, epoch } => {
+                println!("[chaos] worker {worker} rejoined at step {step} (epoch {epoch})");
+            }
+            TrainEvent::CheckpointSaved { step, path } => {
+                println!("[ckpt] step {step} -> {path}");
+            }
+            TrainEvent::Resumed { step, path } => {
+                println!("[ckpt] resumed from {path} at step {step}");
             }
             TrainEvent::RunCompleted { total_steps, wall_s } => {
                 println!("[done] {total_steps} steps in {wall_s:.1}s");
@@ -304,6 +348,28 @@ mod tests {
         let delivered = TrainEvent::CommDelivered { from: 1, to: 0, step: 7, staleness: -2 };
         assert_eq!(delivered.kind(), "comm_delivered");
         assert!(delivered.to_json().dump().contains("\"staleness\":-2"));
+    }
+
+    #[test]
+    fn resilience_events_serialize_the_fault_timeline() {
+        let crash = TrainEvent::WorkerCrashed { worker: 1, step: 20 };
+        assert_eq!(crash.kind(), "worker_crashed");
+        assert!(crash.to_json().dump().contains("\"worker\":1"));
+
+        let join = TrainEvent::WorkerJoined { worker: 1, step: 20, epoch: 2 };
+        assert_eq!(join.kind(), "worker_joined");
+        assert!(join.to_json().dump().contains("\"epoch\":2"));
+
+        let saved =
+            TrainEvent::CheckpointSaved { step: 25, path: "ck/step-000025".into() };
+        assert_eq!(saved.kind(), "checkpoint_saved");
+        let j = saved.to_json().dump();
+        assert!(j.contains("\"step\":25"), "{j}");
+        assert!(j.contains("\"path\":\"ck/step-000025\""), "{j}");
+
+        let resumed = TrainEvent::Resumed { step: 25, path: "ck/step-000025".into() };
+        assert_eq!(resumed.kind(), "resumed");
+        assert!(resumed.to_json().dump().contains("\"event\":\"resumed\""));
     }
 
     #[test]

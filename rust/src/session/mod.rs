@@ -1,4 +1,3 @@
-#![deny(clippy::all)]
 //! The crate's public training facade: build a [`Session`] from a
 //! [`TrainConfig`] + [`Manifest`], attach typed-event observers, run, get a
 //! [`RunSummary`].
@@ -55,6 +54,7 @@
 
 pub mod events;
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -65,7 +65,8 @@ use crate::config::{Algorithm, TrainConfig};
 use crate::coordinator::{engine, Shared};
 use crate::data;
 use crate::manifest::Manifest;
-use crate::metrics::{QueueStats, RunStats, RunSummary};
+use crate::metrics::{QueueStats, RecoveryStats, RunStats, RunSummary};
+use crate::resilience::{checkpoint, Checkpoint, FaultPlan, RecoveryPolicy};
 use self::events::{EventBus, Observer, TrainEvent};
 
 /// Configures a training session: config + observers.
@@ -98,6 +99,35 @@ impl SessionBuilder {
         self
     }
 
+    /// Write a `resilience::checkpoint` every `every` steps (0 disables).
+    /// Snapshots land in `step-XXXXXX` subdirectories of the checkpoint dir
+    /// (see [`SessionBuilder::checkpoint_dir`]); resume one with
+    /// [`Session::resume_from`].
+    pub fn checkpoint_every(mut self, every: usize) -> SessionBuilder {
+        self.cfg.checkpoint_every = every;
+        self
+    }
+
+    /// Parent directory for periodic checkpoints (default `checkpoints/`).
+    pub fn checkpoint_dir<P: Into<std::path::PathBuf>>(mut self, dir: P) -> SessionBuilder {
+        self.cfg.checkpoint_dir = dir.into();
+        self
+    }
+
+    /// Install a chaos fault schedule (`resilience::chaos`): the engine
+    /// tears the scheduled workers down and respawns them per the plan.
+    pub fn chaos(mut self, plan: FaultPlan) -> SessionBuilder {
+        self.cfg.faults = plan;
+        self
+    }
+
+    /// How collective (barrier) algorithms react to a dead peer:
+    /// stall-and-rejoin (default) or shrink to the survivors.
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> SessionBuilder {
+        self.cfg.recovery = policy;
+        self
+    }
+
     /// Convenience: stream every event to a JSONL file at `path`.
     ///
     /// The file is created (truncated) HERE, before `build` validates the
@@ -113,7 +143,7 @@ impl SessionBuilder {
     pub fn build(self, manifest: &Manifest) -> Result<Session<'_>> {
         self.cfg.validate()?;
         manifest.model(&self.cfg.model)?; // unknown models fail at build too
-        Ok(Session { cfg: self.cfg, manifest, events: self.events })
+        Ok(Session { cfg: self.cfg, manifest, events: self.events, resume: None })
     }
 }
 
@@ -122,6 +152,7 @@ pub struct Session<'m> {
     cfg: TrainConfig,
     manifest: &'m Manifest,
     events: EventBus,
+    resume: Option<Checkpoint>,
 }
 
 impl Session<'_> {
@@ -129,12 +160,47 @@ impl Session<'_> {
         &self.cfg
     }
 
+    /// Restore a `resilience::checkpoint` so [`Session::run`] continues the
+    /// snapshotted run instead of starting fresh. `dir` is either a
+    /// checkpoint directory itself or a parent holding `step-XXXXXX`
+    /// snapshots (the latest is picked). The checkpoint must match the
+    /// session's model, algorithm, worker count and seed; resuming into
+    /// decoupled pools is rejected (snapshots are taken at the serial
+    /// engines' step boundaries).
+    pub fn resume_from<P: AsRef<Path>>(mut self, dir: P) -> Result<Self> {
+        if self.cfg.decoupled {
+            anyhow::bail!(
+                "checkpoints are taken at serial step boundaries; resume with \
+                 decoupled = false"
+            );
+        }
+        let dir = checkpoint::resolve(dir.as_ref())?;
+        let ck = checkpoint::load(&dir)?;
+        ck.check_compatible(
+            &self.cfg.model,
+            self.cfg.algorithm.name(),
+            self.cfg.workers,
+            self.cfg.seed,
+        )?;
+        if ck.step >= self.cfg.steps {
+            anyhow::bail!(
+                "checkpoint is at step {} but the session runs only {} steps — \
+                 nothing left to do",
+                ck.step,
+                self.cfg.steps
+            );
+        }
+        self.events.emit(TrainEvent::Resumed { step: ck.step, path: dir.display().to_string() });
+        self.resume = Some(ck);
+        Ok(self)
+    }
+
     /// Run the full training job on the thread cluster. Returns the learning
     /// curve, MFU/occupancy, drift samples, gossip counters and the typed
     /// [`RunStats`].
     pub fn run(self) -> Result<RunSummary> {
-        let Session { cfg, manifest, events } = self;
-        let shared = Shared::with_events(&cfg, manifest, events)?;
+        let Session { cfg, manifest, events, resume } = self;
+        let shared = Shared::with_events(&cfg, manifest, events, resume.as_ref())?;
         shared.events.emit(TrainEvent::RunStarted {
             algorithm: cfg.algorithm.name(),
             workers: cfg.workers,
@@ -143,7 +209,7 @@ impl Session<'_> {
         });
         let t0 = Instant::now();
 
-        let stats = engine::execute(&cfg, manifest, &shared)?;
+        let stats = engine::execute(&cfg, manifest, &shared, resume.as_ref())?;
 
         let wall = t0.elapsed().as_secs_f64();
         let total_compute: f64 = stats.iter().map(|s| s.compute_s).sum();
@@ -189,6 +255,17 @@ impl Session<'_> {
                 .min(1.0),
             queue,
             comm: shared.fabric.core().snapshot(),
+            recovery: RecoveryStats {
+                crashes: shared.membership.crash_count(),
+                joins: shared.membership.join_count(),
+                checkpoints_saved: shared
+                    .ckpt
+                    .as_ref()
+                    .map(|c| c.saved.load(std::sync::atomic::Ordering::Relaxed))
+                    .unwrap_or(0),
+                membership_epoch: shared.membership.epoch(),
+                stalled: shared.membership.stalled(),
+            },
         };
 
         shared.events.emit(TrainEvent::RunCompleted { total_steps, wall_s: wall });

@@ -338,10 +338,13 @@ fn sim_async_gossip(cluster: &Cluster, w: &Workload, algo: SimAlgo, seed: u64) -
         if healthy_done {
             break;
         }
-        // earliest-free device with work left takes the next batch
+        // earliest-free device with work left takes the next batch.
+        // total_cmp: a NaN free time (e.g. a degenerate jitter draw) must
+        // not panic the simulator mid-run — NaN sorts last and the run
+        // proceeds on the healthy devices.
         let Some(dev) = (0..m)
             .filter(|&d| remaining[d] > 0)
-            .min_by(|&a, &b| free[a].partial_cmp(&free[b]).unwrap())
+            .min_by(|&a, &b| free[a].total_cmp(&free[b]))
         else {
             break;
         };

@@ -197,6 +197,21 @@ impl AtomicTensor {
         peer.bump();
     }
 
+    /// Checkpoint view of the store: the current values as a plain host
+    /// vector (a relaxed snapshot, like [`AtomicTensor::snapshot`] without
+    /// the shape).
+    pub fn state_dict(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.data.len()];
+        self.load_into(&mut out);
+        out
+    }
+
+    /// Restore from a [`AtomicTensor::state_dict`] snapshot (bumps the
+    /// version so upload caches invalidate, exactly like any other write).
+    pub fn load_state_dict(&self, values: &[f32]) {
+        self.store_from(values);
+    }
+
     /// Element-wise average with `k` other parameter stores (DDP all-reduce
     /// endpoint; AD-PSGD pairwise averaging uses the 2-way case).
     pub fn average_with(&self, others: &[&AtomicTensor]) {

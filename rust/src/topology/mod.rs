@@ -97,6 +97,25 @@ impl PushSumWeight {
         let cur = self.get();
         self.set(cur + w_half);
     }
+
+    /// Atomically (w.r.t. the accept slot) drain the whole weight: claims
+    /// the busy flag so a concurrent `try_accept` deposit cannot be lost to
+    /// a read-zero-write race, zeroes the weight and returns it. `None`
+    /// when the slot is busy — the caller retries later. Used by the chaos
+    /// supervisor to fold a dead worker's weight into a survivor.
+    pub fn try_drain(&self) -> Option<f32> {
+        if self
+            .busy
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return None;
+        }
+        let w = self.get();
+        self.set(0.0);
+        self.release();
+        Some(w)
+    }
 }
 
 /// Peer-selection strategies. The paper uses uniform random gossip; the ring
@@ -184,6 +203,19 @@ mod tests {
         let shipped = a.halve();
         a.reclaim(shipped);
         assert!((a.get() - 0.15).abs() < 1e-7);
+    }
+
+    #[test]
+    fn try_drain_respects_the_accept_slot() {
+        let w = PushSumWeight::new(0.5);
+        // busy slot (a peer mid-deposit): drain backs off, weight untouched
+        assert!(w.try_accept(0.125).is_some());
+        assert!(w.try_drain().is_none());
+        w.release();
+        // free slot: the whole weight moves out exactly once
+        assert_eq!(w.try_drain(), Some(0.625));
+        assert_eq!(w.get(), 0.0);
+        assert_eq!(w.try_drain(), Some(0.0), "second drain finds nothing");
     }
 
     #[test]

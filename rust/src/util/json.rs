@@ -17,15 +17,27 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json: expected {expected} at {path}")]
     Type { path: String, expected: &'static str },
-    #[error("json: missing key {0}")]
     Missing(String),
 }
+
+// Hand-rolled Display/Error impls: `thiserror` is not in the offline crate
+// set (it was never a declared dependency), and these three arms don't earn
+// a proc-macro.
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse(at, what) => write!(f, "json parse error at byte {at}: {what}"),
+            JsonError::Type { path, expected } => write!(f, "json: expected {expected} at {path}"),
+            JsonError::Missing(key) => write!(f, "json: missing key {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

@@ -164,6 +164,86 @@ fn prop_sim_fabric_push_sum_mass_delayed_never_destroyed() {
     });
 }
 
+/// Checkpoint-quiesce property (resilience subsystem): draining every inbox
+/// and restoring the same messages — exactly what a checkpoint does to the
+/// links — is invisible to push-sum mass: total weight and the weighted
+/// parameter sum are unchanged at every quiesce point and after final
+/// delivery.
+#[test]
+fn prop_sim_fabric_drain_restore_conserves_mass() {
+    prop("drain_restore_mass", 20, |rng| {
+        let m = 2 + rng.below_usize(4);
+        let dim = 3usize;
+        let params: Vec<Arc<ModelParams>> = (0..m)
+            .map(|_| {
+                let t = Tensor::from_vec(&[dim], (0..dim).map(|_| rng.normal()).collect());
+                Arc::new(ModelParams {
+                    layers: vec![LayerParams { tensors: vec![AtomicTensor::from_tensor(&t)] }],
+                })
+            })
+            .collect();
+        let fabric = Arc::new(SimFabric::new(
+            LatencyDist::Uniform { lo: 0.0, hi: 0.002 },
+            0.0,
+            0.3,
+            m,
+            rng.next_u64(),
+        ));
+        let shared = Shared::for_tests(params, fabric.clone());
+
+        let mass = |shared: &Shared, fabric: &SimFabric| -> f64 {
+            let (mut w, _) = fabric.in_flight_push_sum_mass();
+            for i in 0..shared.m {
+                w += shared.weights[i].get() as f64;
+            }
+            w
+        };
+        assert!((mass(&shared, &fabric) - 1.0).abs() < 1e-4);
+
+        for round in 0..60 {
+            let i = rng.below_usize(m);
+            let j = rng.peer(i, m);
+            let shipped = shared.weights[i].halve();
+            let values: Vec<Vec<Vec<f32>>> = shared.params[i]
+                .layers
+                .iter()
+                .map(|l| l.tensors.iter().map(|t| t.snapshot().data).collect())
+                .collect();
+            match shared.fabric.push(
+                &shared,
+                i,
+                j,
+                round,
+                Payload::ModelPush { w_in: shipped, values: Arc::new(values) },
+            ) {
+                PushOutcome::Dropped | PushOutcome::Busy => {
+                    shared.weights[i].reclaim(shipped);
+                }
+                _ => {}
+            }
+            if round % 10 == 9 {
+                // the checkpoint quiesce: pull everything off the links...
+                let mut msgs = Vec::new();
+                for w in 0..m {
+                    msgs.extend(shared.fabric.drain(w));
+                }
+                let (w_links, _) = fabric.in_flight_push_sum_mass();
+                assert_eq!(w_links, 0.0, "drained links hold no mass");
+                // ...and put the very same messages back
+                shared.fabric.restore(&shared, msgs);
+                let w = mass(&shared, &fabric);
+                assert!((w - 1.0).abs() < 1e-3, "mass drifted across drain/restore: {w}");
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        for w in 0..m {
+            shared.fabric.deliver_due(&shared, w, 100);
+        }
+        let w = mass(&shared, &fabric);
+        assert!((w - 1.0).abs() < 1e-3, "mass destroyed: {w}");
+    });
+}
+
 #[test]
 fn prop_mix_from_is_convex_and_bounded() {
     prop("mix_convex", 50, |rng| {

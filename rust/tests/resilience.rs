@@ -1,0 +1,281 @@
+//! Resilience-subsystem integration tests: checkpoint resume parity, chaos
+//! injection and recovery policies over the full stack. Like
+//! `integration.rs`, these need `artifacts/` and self-skip politely when the
+//! manifest is missing.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use layup::config::{Algorithm, TrainConfig};
+use layup::manifest::Manifest;
+use layup::metrics::RunSummary;
+use layup::optim::OptimKind;
+use layup::optim::Schedule;
+use layup::resilience::{checkpoint, FaultPlan, RecoveryPolicy};
+use layup::session::events::TrainEvent;
+use layup::session::SessionBuilder;
+
+fn manifest() -> Option<Manifest> {
+    let dir = layup::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+fn pick_model(man: &Manifest) -> String {
+    if man.models.contains_key("mlpnet18") {
+        "mlpnet18".into()
+    } else {
+        man.models.keys().next().unwrap().clone()
+    }
+}
+
+fn quick_cfg(model: &str, algo: Algorithm, workers: usize, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(model, algo, workers, steps);
+    cfg.optim = OptimKind::sgd(0.9, 0.0);
+    cfg.schedule = Schedule::Constant { lr: 0.03 };
+    cfg.eval_every = 3;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("layup-resilience-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn run(cfg: &TrainConfig, man: &Manifest) -> RunSummary {
+    SessionBuilder::new(cfg.clone())
+        .build(man)
+        .expect("config invalid")
+        .run()
+        .expect("run failed")
+}
+
+/// Per-step losses/accuracies must match bit-for-bit (wall times may not).
+fn assert_curves_identical(a: &RunSummary, b: &RunSummary, what: &str) {
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: point counts differ");
+    for (pa, pb) in a.curve.points.iter().zip(b.curve.points.iter()) {
+        assert_eq!(pa.step, pb.step, "{what}: eval steps differ");
+        assert_eq!(
+            pa.loss.to_bits(),
+            pb.loss.to_bits(),
+            "{what}: loss at step {} differs ({} vs {})",
+            pa.step,
+            pa.loss,
+            pb.loss
+        );
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "{what}: accuracy at step {} differs",
+            pa.step
+        );
+    }
+}
+
+/// The tentpole acceptance: a run checkpointed at step k and resumed from
+/// that snapshot produces a bit-identical loss curve to the uninterrupted
+/// run, on the instant fabric. Gossip algorithms run under the
+/// deterministic lockstep driver (the threaded engine's gossip races are
+/// scheduler-dependent by design); DDP runs threaded — its barrier already
+/// makes it deterministic.
+#[test]
+fn resume_parity_bit_identical_for_layup_gosgd_adpsgd_and_ddp() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let cases = [
+        (Algorithm::LayUp, true),
+        (Algorithm::GoSgd, true),
+        (Algorithm::AdPsgd, true),
+        (Algorithm::Ddp, false),
+    ];
+    for (algo, lockstep) in cases {
+        let dir = tmp_dir(&format!("parity-{algo:?}"));
+        let steps = 12;
+        let every = 4;
+
+        // reference: uninterrupted run that also writes checkpoints
+        let mut cfg = quick_cfg(&model_name, algo, 2, steps);
+        cfg.lockstep = lockstep;
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = dir.clone();
+        let full = run(&cfg, &man);
+        assert_eq!(
+            full.stats.recovery.checkpoints_saved, 2,
+            "{algo:?}: expected snapshots at steps 4 and 8"
+        );
+
+        // resumed: fresh session, restore the step-4 snapshot, run to the end
+        let mut resume_cfg = quick_cfg(&model_name, algo, 2, steps);
+        resume_cfg.lockstep = lockstep;
+        let resumed = SessionBuilder::new(resume_cfg)
+            .build(&man)
+            .unwrap()
+            .resume_from(checkpoint::step_dir(&dir, every))
+            .unwrap_or_else(|e| panic!("{algo:?}: resume failed: {e:#}"))
+            .run()
+            .unwrap_or_else(|e| panic!("{algo:?}: resumed run failed: {e:#}"));
+
+        assert_curves_identical(&full, &resumed, &format!("{algo:?} resume parity"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// `resolve` picks the latest snapshot when handed the parent directory, and
+/// incompatible sessions are rejected up front.
+#[test]
+fn resume_resolution_and_compatibility_gates() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let dir = tmp_dir("resolve");
+    let mut cfg = quick_cfg(&model_name, Algorithm::GoSgd, 2, 12);
+    cfg.lockstep = true;
+    cfg.checkpoint_every = 4;
+    cfg.checkpoint_dir = dir.clone();
+    let _ = run(&cfg, &man);
+
+    let latest = checkpoint::resolve(&dir).unwrap();
+    assert!(latest.ends_with("step-000008"), "latest is step 8, got {}", latest.display());
+
+    // wrong seed: the data streams would diverge — rejected
+    let mut bad = quick_cfg(&model_name, Algorithm::GoSgd, 2, 12);
+    bad.lockstep = true;
+    bad.seed = 7777;
+    assert!(SessionBuilder::new(bad).build(&man).unwrap().resume_from(&dir).is_err());
+    // wrong algorithm: rejected
+    let mut other = quick_cfg(&model_name, Algorithm::AdPsgd, 2, 12);
+    other.lockstep = true;
+    assert!(SessionBuilder::new(other).build(&man).unwrap().resume_from(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-injection acceptance: under a permanent worker loss, LayUp keeps
+/// training on the survivors and finishes, while DDP's barrier stalls and
+/// the run reports it.
+#[test]
+fn layup_survives_a_permanent_crash_while_ddp_reports_the_stall() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let steps = 10;
+
+    // LayUp: worker 1 dies at step 3 and never returns; worker 0 finishes
+    // its full step budget, gossip pushes to the dead peer become skips.
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, steps);
+    cfg.faults = FaultPlan::default().crash(1, 3);
+    let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = {
+        let events = Arc::clone(&events);
+        move |ev: &TrainEvent| {
+            events.lock().unwrap().push(ev.kind().to_string());
+        }
+    };
+    let summary = SessionBuilder::new(cfg)
+        .observer(Arc::new(sink))
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(summary.total_steps, steps + 3, "survivor finishes, victim stops at 3");
+    assert_eq!(summary.stats.recovery.crashes, 1);
+    assert_eq!(summary.stats.recovery.joins, 0);
+    assert!(!summary.stats.recovery.stalled, "gossip never stalls on a dead peer");
+    assert_eq!(summary.stats.recovery.membership_epoch, 1);
+    assert!(summary.curve.best_loss().is_finite());
+    assert!(events.lock().unwrap().iter().any(|k| k == "worker_crashed"));
+
+    // DDP, same fault, Stall policy: the all-reduce waits for the dead
+    // worker until the supervisor reports the stall and stops the run.
+    let mut cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, steps);
+    cfg.faults = FaultPlan::default().crash(1, 3);
+    cfg.stall_timeout_s = 1.0;
+    let summary = run(&cfg, &man);
+    assert!(summary.stats.recovery.stalled, "DDP must report the stall");
+    assert!(
+        summary.total_steps < 2 * steps,
+        "a stalled DDP run cannot have finished: {} steps",
+        summary.total_steps
+    );
+
+    // DDP, same fault, Shrink policy: the collective shrinks to the
+    // survivor set and the run completes.
+    let mut cfg = quick_cfg(&model_name, Algorithm::Ddp, 3, steps);
+    cfg.faults = FaultPlan::default().crash(2, 3);
+    cfg.recovery = RecoveryPolicy::Shrink;
+    let summary = run(&cfg, &man);
+    assert!(!summary.stats.recovery.stalled);
+    assert_eq!(
+        summary.total_steps,
+        2 * steps + 3,
+        "survivors finish, victim contributed 3 steps"
+    );
+    assert!(summary.curve.best_loss().is_finite());
+}
+
+/// Crash/restart: the worker rejoins from a live peer's parameters, the
+/// membership epoch records both transitions, and every scheduled step of
+/// the respawned worker still happens.
+#[test]
+fn crashed_worker_rejoins_and_completes_its_step_budget() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let steps = 14;
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, steps);
+    cfg.faults = FaultPlan::default().crash_restart(1, 4, 0.2);
+    let events: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = {
+        let events = Arc::clone(&events);
+        move |ev: &TrainEvent| {
+            events.lock().unwrap().push(ev.kind().to_string());
+        }
+    };
+    let summary = SessionBuilder::new(cfg)
+        .observer(Arc::new(sink))
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(summary.total_steps, 2 * steps, "the rejoined worker finished its budget");
+    assert_eq!(summary.stats.recovery.crashes, 1);
+    assert_eq!(summary.stats.recovery.joins, 1);
+    assert_eq!(summary.stats.recovery.membership_epoch, 2, "dead + alive transitions");
+    let kinds = events.lock().unwrap();
+    assert!(kinds.iter().any(|k| k == "worker_crashed"));
+    assert!(kinds.iter().any(|k| k == "worker_joined"));
+}
+
+/// Checkpoint events flow through the observer stream, and the snapshot
+/// directories are complete (meta.json present — the commit marker).
+#[test]
+fn checkpoint_events_and_directories_are_complete() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let dir = tmp_dir("events");
+    let mut cfg = quick_cfg(&model_name, Algorithm::GoSgd, 2, 9);
+    cfg.checkpoint_every = 4;
+    cfg.checkpoint_dir = dir.clone();
+    let saved: Arc<Mutex<Vec<(usize, String)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = {
+        let saved = Arc::clone(&saved);
+        move |ev: &TrainEvent| {
+            if let TrainEvent::CheckpointSaved { step, path } = ev {
+                saved.lock().unwrap().push((*step, path.clone()));
+            }
+        }
+    };
+    let summary = SessionBuilder::new(cfg)
+        .observer(Arc::new(sink))
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    let saved = saved.lock().unwrap();
+    assert_eq!(saved.len(), 2, "snapshots at steps 4 and 8");
+    assert_eq!(summary.stats.recovery.checkpoints_saved, 2);
+    for (step, path) in saved.iter() {
+        assert!(PathBuf::from(path).join("meta.json").exists(), "step {step} incomplete");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
