@@ -18,6 +18,7 @@ use layup::manifest::Manifest;
 use layup::metrics::RunSummary;
 use layup::optim::{OptimKind, Schedule};
 use layup::session::SessionBuilder;
+use layup::util::json::{num, obj, s, Json};
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -121,4 +122,83 @@ pub fn paper_algorithms() -> Vec<Algorithm> {
 
 pub fn hr() {
     println!("{}", "-".repeat(78));
+}
+
+/// One stable machine-readable row of the cross-PR perf trajectory: bench
+/// label, wall-clock, final/best loss, and the run's staleness statistics.
+/// The key vocabulary is append-only — downstream tooling diffs these files
+/// across PRs.
+pub fn summary_row(label: &str, sum: &RunSummary) -> Json {
+    // a run with no eval points (e.g. fig_fb_ratio's timing window) has no
+    // loss to report: emit null, never a sentinel that reads as a metric
+    let finite_or_null = |v: Option<f64>| match v {
+        Some(x) if x.is_finite() => num(x),
+        _ => Json::Null,
+    };
+    let pts = &sum.curve.points;
+    obj(vec![
+        ("label", s(label)),
+        ("algorithm", s(&sum.algorithm)),
+        ("wall_s", num(sum.total_time_s)),
+        ("final_loss", finite_or_null(pts.last().map(|p| p.loss))),
+        (
+            "best_loss",
+            finite_or_null((!pts.is_empty()).then(|| sum.curve.best_loss())),
+        ),
+        (
+            "best_accuracy",
+            finite_or_null((!pts.is_empty()).then(|| sum.curve.best_accuracy())),
+        ),
+        ("total_steps", num(sum.total_steps as f64)),
+        ("stale_applies", num(sum.stats.staleness.total_applies() as f64)),
+        ("stale_tau_mean", num(sum.stats.staleness.mean_tau())),
+        ("stale_tau_max", num(sum.stats.staleness.max_tau() as f64)),
+        (
+            "comm_mean_staleness",
+            num(sum.stats.comm.mean_delivered_staleness()),
+        ),
+    ])
+}
+
+/// Merge this bench's rows into `results/bench_summary.json` under the
+/// bench's name. Read-modify-write: every bench contributes its section to
+/// ONE stable file, so the perf trajectory can be tracked across PRs
+/// without scraping per-bench CSVs.
+pub fn write_bench_summary(bench: &str, rows: Vec<Json>) {
+    let path = results_dir().join("bench_summary.json");
+    let mut doc = std::collections::BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        match Json::parse(&text) {
+            Ok(Json::Obj(m)) => doc = m,
+            // an unreadable trajectory file is worth a loud warning — the
+            // other benches' sections cannot be preserved, only this one's
+            // will survive the rewrite
+            _ => eprintln!(
+                "warning: {} exists but is not a JSON object; rewriting it                  with only the {bench} section",
+                path.display()
+            ),
+        }
+    }
+    doc.insert(bench.to_string(), Json::Arr(rows));
+    // write-then-rename so a killed bench never leaves truncated JSON
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, Json::Obj(doc).dump()).expect("write bench_summary.json.tmp");
+    std::fs::rename(&tmp, &path).expect("commit bench_summary.json");
+    println!("bench summary -> {}", path.display());
+}
+
+/// `key` as f64 from the environment (bench knob), `default` otherwise.
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Parse the `LAYUP_LATENCIES` sweep knob (comma-separated one-way
+/// seconds), shared by the delay/staleness benches.
+pub fn env_latencies(default: &str) -> Vec<f64> {
+    std::env::var("LAYUP_LATENCIES")
+        .unwrap_or_else(|_| default.into())
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse().expect("LAYUP_LATENCIES: bad seconds value"))
+        .collect()
 }

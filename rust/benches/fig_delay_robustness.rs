@@ -24,12 +24,7 @@ use layup::util::json::{arr, num, obj, s, Json};
 fn main() {
     let man = common::manifest();
     let steps = common::env_usize("LAYUP_STEPS", 48);
-    let latencies: Vec<f64> = std::env::var("LAYUP_LATENCIES")
-        .unwrap_or_else(|_| "0,0.001,0.005,0.02".into())
-        .split(',')
-        .filter(|t| !t.trim().is_empty())
-        .map(|t| t.trim().parse().expect("LAYUP_LATENCIES: bad seconds value"))
-        .collect();
+    let latencies = common::env_latencies("0,0.001,0.005,0.02");
     let drop_prob: f64 = std::env::var("LAYUP_DROP")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -52,6 +47,7 @@ fn main() {
         "algorithm", "lat (ms)", "wall (s)", "slowdown", "best loss", "staleness", "dropped"
     );
     let mut rows: Vec<Json> = Vec::new();
+    let mut summary_rows: Vec<Json> = Vec::new();
     let mut csv = String::from(
         "algorithm,latency_s,wall_s,slowdown,best_loss,mean_staleness,msgs_dropped,bytes_sent\n",
     );
@@ -103,11 +99,16 @@ fn main() {
                 ("msgs_dropped", num(comm.msgs_dropped as f64)),
                 ("bytes_sent", num(comm.bytes_sent as f64)),
             ]));
+            summary_rows.push(common::summary_row(
+                &format!("{}-{}ms", sum.algorithm, (1e3 * lat) as u64),
+                &sum,
+            ));
         }
         common::hr();
     }
     let dir = common::results_dir();
     std::fs::write(dir.join("fig_delay_robustness.csv"), csv).expect("write csv");
     std::fs::write(dir.join("fig_delay_robustness.json"), arr(rows).dump()).expect("write json");
+    common::write_bench_summary("fig_delay_robustness", summary_rows);
     println!("wrote results/fig_delay_robustness.csv and .json");
 }

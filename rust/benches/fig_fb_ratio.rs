@@ -32,8 +32,10 @@ fn main() {
     let mut base = common::vision_cfg(model, Algorithm::LayUp, steps);
     base.eval_every = usize::MAX / 2; // measurement window excludes eval
 
+    let mut summary_rows = Vec::new();
     // serial baseline: the original interlocked fwd->bwd loop
     let serial = common::run_one(&base, &man);
+    summary_rows.push(common::summary_row("serial", &serial));
     let serial_sps = serial.total_steps as f64 / serial.total_time_s;
     println!(
         "{:<14} {:>9.2} {:>12.3e} {:>8.1}% {:>8.1}% {:>8} {:>8}",
@@ -61,6 +63,7 @@ fn main() {
         cfg.bwd_threads = b;
         cfg.queue_depth = 2 * f;
         let r = common::run_one(&cfg, &man);
+        summary_rows.push(common::summary_row(&format!("decoupled-{f}-{b}"), &r));
         let sps = r.total_steps as f64 / r.total_time_s;
         if sps > best.0 {
             best = (sps, (f, b));
@@ -98,5 +101,6 @@ fn main() {
 
     let out = common::results_dir().join("fig_fb_ratio.csv");
     std::fs::write(&out, csv).expect("writing csv");
+    common::write_bench_summary("fig_fb_ratio", summary_rows);
     println!("wrote {}", out.display());
 }

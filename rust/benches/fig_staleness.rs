@@ -1,0 +1,148 @@
+//! **Staleness policies under fabric delay** — the per-layer staleness-clock
+//! experiment: sweep simulated link delay × update policy
+//! {plain, dc, adaptive} for LayUp, with AD-PSGD under {plain, dc} as the
+//! symmetric-gossip baseline.
+//!
+//! Each cell trains the same workload for the same step budget; the table
+//! reports loss-at-budget (best eval loss within the budget), the fabric's
+//! delivered staleness in steps, and the per-layer observed τ the staleness
+//! clocks measured at gradient-apply time. The claim under test: once
+//! delivered staleness is large (≥50 steps of delay), the
+//! delay-compensated (`dc`) and staleness-adaptive (`adaptive`) arms beat
+//! plain LayUp on loss-at-budget.
+//!
+//! Environment knobs:
+//!   LAYUP_LATENCIES  comma-separated one-way seconds (default 0,0.05,0.2)
+//!   LAYUP_DC_LAMBDA  DC-ASGD λ (default 0.04)
+//!   LAYUP_MIX_BETA   adaptive attenuation β (default 0.5)
+//!   LAYUP_STEPS / LAYUP_WORKERS as usual
+
+#[path = "common.rs"]
+mod common;
+
+use layup::comm::{FabricSpec, LatencyDist};
+use layup::config::{Algorithm, Compensation, Mixing};
+use layup::metrics::STALENESS_BUCKET_LABELS;
+use layup::util::json::{arr, num, obj, s, Json};
+
+/// One policy arm: how the staleness knobs are set on top of the base run.
+struct Arm {
+    name: &'static str,
+    compensation: Compensation,
+    mixing: Mixing,
+}
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 48);
+    let latencies = common::env_latencies("0,0.05,0.2");
+    let dc_lambda = common::env_f64("LAYUP_DC_LAMBDA", 0.04) as f32;
+    let mix_beta = common::env_f64("LAYUP_MIX_BETA", 0.5) as f32;
+
+    let layup_arms = [
+        Arm { name: "plain", compensation: Compensation::None, mixing: Mixing::Fixed },
+        Arm { name: "dc", compensation: Compensation::Dc, mixing: Mixing::Fixed },
+        Arm { name: "adaptive", compensation: Compensation::None, mixing: Mixing::Adaptive },
+    ];
+    let adpsgd_arms = [
+        Arm { name: "plain", compensation: Compensation::None, mixing: Mixing::Fixed },
+        Arm { name: "dc", compensation: Compensation::Dc, mixing: Mixing::Fixed },
+    ];
+
+    println!(
+        "fig: staleness policies — mlpnet18, {} workers, {} steps, λ={dc_lambda}, β={mix_beta}",
+        common::workers(),
+        steps
+    );
+    common::hr();
+    println!(
+        "{:<10} {:<9} {:>9} {:>9} {:>11} {:>10} {:>9} {:>8}",
+        "algorithm", "policy", "lat (ms)", "wall (s)", "loss@budget", "delivered", "tau mean",
+        "tau max"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut summary_rows: Vec<Json> = Vec::new();
+    let mut csv = String::from(
+        "algorithm,policy,latency_s,wall_s,loss_at_budget,mean_delivered_staleness,\
+         stale_tau_mean,stale_tau_max,hist_labels,hist_total\n",
+    );
+    for (algo, arms) in [
+        (Algorithm::LayUp, &layup_arms[..]),
+        (Algorithm::AdPsgd, &adpsgd_arms[..]),
+    ] {
+        for arm in arms {
+            for &lat in &latencies {
+                let mut cfg = common::vision_cfg("mlpnet18", algo, steps);
+                cfg.eval_every = (steps / 6).max(1);
+                cfg.staleness.compensation = arm.compensation;
+                cfg.staleness.dc_lambda = dc_lambda;
+                cfg.staleness.mixing = arm.mixing;
+                cfg.staleness.mix_beta = mix_beta;
+                cfg.fabric = FabricSpec::Sim {
+                    latency: LatencyDist::Constant(lat),
+                    bandwidth_bytes_per_s: 0.0,
+                    drop_prob: 0.0,
+                };
+                let sum = common::run_one(&cfg, &man);
+                let stale = &sum.stats.staleness;
+                let comm = &sum.stats.comm;
+                let loss = sum.curve.best_loss();
+                println!(
+                    "{:<10} {:<9} {:>9.1} {:>9.2} {:>11.4} {:>10.2} {:>9.2} {:>8}",
+                    sum.algorithm,
+                    arm.name,
+                    1e3 * lat,
+                    sum.total_time_s,
+                    loss,
+                    comm.mean_delivered_staleness(),
+                    stale.mean_tau(),
+                    stale.max_tau()
+                );
+                // aggregate τ histogram over layers (stable label order)
+                let mut hist = [0u64; layup::metrics::STALENESS_BUCKETS];
+                for l in &stale.layers {
+                    for (b, &c) in l.hist.iter().enumerate() {
+                        hist[b] += c;
+                    }
+                }
+                csv.push_str(&format!(
+                    "{},{},{},{:.3},{:.5},{:.3},{:.3},{},{},{}\n",
+                    sum.algorithm,
+                    arm.name,
+                    lat,
+                    sum.total_time_s,
+                    loss,
+                    comm.mean_delivered_staleness(),
+                    stale.mean_tau(),
+                    stale.max_tau(),
+                    STALENESS_BUCKET_LABELS.join(";"),
+                    hist.map(|c| c.to_string()).join(";"),
+                ));
+                rows.push(obj(vec![
+                    ("algorithm", s(&sum.algorithm)),
+                    ("policy", s(arm.name)),
+                    ("latency_s", num(lat)),
+                    ("wall_s", num(sum.total_time_s)),
+                    ("loss_at_budget", num(loss)),
+                    ("mean_delivered_staleness", num(comm.mean_delivered_staleness())),
+                    ("stale_tau_mean", num(stale.mean_tau())),
+                    ("stale_tau_max", num(stale.max_tau() as f64)),
+                    (
+                        "tau_hist",
+                        arr(hist.iter().map(|&c| num(c as f64)).collect()),
+                    ),
+                ]));
+                summary_rows.push(common::summary_row(
+                    &format!("{}-{}-{}ms", sum.algorithm, arm.name, (1e3 * lat) as u64),
+                    &sum,
+                ));
+            }
+            common::hr();
+        }
+    }
+    let dir = common::results_dir();
+    std::fs::write(dir.join("fig_staleness.csv"), csv).expect("write csv");
+    std::fs::write(dir.join("fig_staleness.json"), arr(rows).dump()).expect("write json");
+    common::write_bench_summary("fig_staleness", summary_rows);
+    println!("wrote results/fig_staleness.csv and .json");
+}

@@ -40,7 +40,7 @@ fn main() {
         .map(|w| data::build(model, w, m, cfg.seed).expect("dataset"))
         .collect();
     let mut opts: Vec<PerLayerOpt> = (0..m)
-        .map(|_| PerLayerOpt::new(&cfg.optim, &cfg.schedule, &exec.manifest))
+        .map(|w| PerLayerOpt::new(&cfg.optim, &cfg.schedule, &exec.manifest, w))
         .collect();
     let mut rng = Pcg32::new(99);
     let mut tracker = BiasTracker::default();
@@ -67,6 +67,9 @@ fn main() {
                         let snap = t.snapshot();
                         shared.params[peer].layers[li].tensors[ti].mix_from(1.0 - f, f, &snap.data);
                     }
+                    // stamp the peer's staleness clock so its upload cache
+                    // sees the gossip write (the clock is the cache key)
+                    shared.params[peer].layers[li].clock.record(w, step);
                 }
             }
             if frac.is_some() {

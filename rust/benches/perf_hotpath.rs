@@ -63,8 +63,9 @@ fn main() {
         for l in &params.layers {
             for t in &l.tensors {
                 let snap = t.snapshot();
-                t.store_from(&snap.data); // bump version, same values
+                t.store_from(&snap.data); // same values
             }
+            l.clock.record(0, 0); // stamp the layer clock: cache invalidated
         }
         let _ = exec.forward(params, &batch).unwrap();
     });

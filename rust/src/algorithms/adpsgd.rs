@@ -16,7 +16,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{
+    comm_delay, maybe_compensate, observe_apply, PerLayerOpt, StepState, WorkerAlgo,
+};
 use crate::comm::{wire_bytes, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
@@ -46,7 +48,7 @@ impl AdPsgd {
         AdPsgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0xadb5d ^ ((wid as u64) << 24)),
             comm_latency_s: cfg.comm_latency_s,
@@ -67,11 +69,14 @@ impl WorkerAlgo for AdPsgd {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        let my = &self.shared.params[self.wid];
-        let grads = ctx.take_grads();
-        for (li, g) in grads.iter().enumerate() {
-            self.opt.step_layer(my, li, g, step);
+        let mut grads = ctx.take_grads();
+        for (li, g) in grads.iter_mut().enumerate() {
+            observe_apply(&self.shared, self.wid, ctx.stamp(li), li, step);
+            let xt = ctx.take_x_then(li);
+            maybe_compensate(&mut self.opt, &self.shared, self.wid, li, g, xt.as_ref());
+            self.opt.step_layer(&self.shared.params[self.wid], li, g, step);
         }
+        let my = &self.shared.params[self.wid];
 
         // symmetric pairwise averaging — two transfers (there and back),
         // hence 2x the communication volume of a push-only scheme
@@ -99,6 +104,9 @@ impl WorkerAlgo for AdPsgd {
                     let avg = peer_params.layers[li].tensors[ti].snapshot();
                     t.store_from(&avg.data);
                 }
+                // both halves of the swap were written: stamp both clocks
+                peer_params.layers[li].clock.record(self.wid, step);
+                my.layers[li].clock.record(peer, step);
             }
             let bytes = wire_bytes(my.numel());
             self.shared

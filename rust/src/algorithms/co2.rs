@@ -117,8 +117,7 @@ impl WorkerAlgo for Co2 {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        let grads = ctx.take_grads();
-        self.inner.local_step(step, grads);
+        self.inner.local_step(&mut ctx);
         if (step + 1) % self.inner.sync_period == 0 {
             let shared = Arc::clone(&self.inner.shared);
             let wid = self.inner.wid;
@@ -149,7 +148,7 @@ impl WorkerAlgo for Co2 {
                 self.outer_momentum,
                 self.outer_lr,
             );
-            shared.params[wid].store_flat(&x_new);
+            shared.params[wid].store_flat(&x_new, wid, step);
         }
         Ok(())
     }

@@ -22,7 +22,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{average_grad_sets, comm_delay, GradSet, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{
+    average_grad_sets, comm_delay, observe_apply, GradSet, PerLayerOpt, StepState, WorkerAlgo,
+};
 use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
@@ -42,7 +44,7 @@ impl Ddp {
         Ddp {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
             comm_latency_s: cfg.comm_latency_s,
         }
     }
@@ -98,6 +100,7 @@ impl WorkerAlgo for Ddp {
         // identical update on every worker keeps replicas in lock-step
         let my = &self.shared.params[self.wid];
         for (li, grads) in avg.iter().enumerate() {
+            observe_apply(&self.shared, self.wid, ctx.stamp(li), li, step);
             self.opt.step_layer(my, li, grads, step);
         }
         Ok(())

@@ -18,7 +18,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{
+    comm_delay, maybe_compensate, observe_apply, PerLayerOpt, StepState, WorkerAlgo,
+};
 use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
@@ -48,7 +50,7 @@ impl GoSgd {
         GoSgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0x60560d ^ ((wid as u64) << 32)),
             comm_latency_s: cfg.comm_latency_s,
@@ -69,12 +71,16 @@ impl WorkerAlgo for GoSgd {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        // local SGD step over all layers at once
-        let my = &self.shared.params[self.wid];
-        let grads = ctx.take_grads();
-        for (li, g) in grads.iter().enumerate() {
-            self.opt.step_layer(my, li, g, step);
+        // local SGD step over all layers at once, each apply observed
+        // against the pass's clock snapshot (+ optional DC compensation)
+        let mut grads = ctx.take_grads();
+        for (li, g) in grads.iter_mut().enumerate() {
+            observe_apply(&self.shared, self.wid, ctx.stamp(li), li, step);
+            let xt = ctx.take_x_then(li);
+            maybe_compensate(&mut self.opt, &self.shared, self.wid, li, g, xt.as_ref());
+            self.opt.step_layer(&self.shared.params[self.wid], li, g, step);
         }
+        let my = &self.shared.params[self.wid];
 
         // push-sum gossip of the whole model
         let peer = self
@@ -111,6 +117,7 @@ impl WorkerAlgo for GoSgd {
                             peer_params.layers[li].tensors[ti]
                                 .mix_from(1.0 - frac, frac, &snap.data);
                         }
+                        peer_params.layers[li].clock.record(self.wid, step);
                     }
                     self.shared.weights[peer].release();
                     self.shared.fabric.core().record_instant(

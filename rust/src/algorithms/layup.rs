@@ -38,20 +38,33 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::algorithms::{comm_delay, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{
+    attenuate_frac, comm_delay, maybe_compensate, observe_apply, PerLayerOpt, StepState,
+    WorkerAlgo,
+};
 use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
-use crate::config::TrainConfig;
+use crate::config::{Mixing, TrainConfig};
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
 use crate::optim::OptState;
 use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
+use crate::tensor::clock::ClockStamp;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
 use crate::util::rng::Pcg32;
 
 enum Msg {
-    Layer { step: usize, layer: usize, grads: Vec<Tensor> },
+    Layer {
+        step: usize,
+        layer: usize,
+        grads: Vec<Tensor>,
+        /// the pass's read-time clock snapshot of this layer (None when the
+        /// engine captured no snapshot — unit tests)
+        stamp: Option<ClockStamp>,
+        /// forward-time parameter values (DC compensation; None when off)
+        x_then: Option<Vec<Tensor>>,
+    },
     Done,
     /// Checkpoint/lockstep sync point: every message sent before this one
     /// has been applied when the ack fires (the channel is FIFO).
@@ -77,7 +90,7 @@ impl LayUp {
         model_granularity: bool,
     ) -> LayUp {
         let (tx, rx) = channel();
-        let opt = PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest);
+        let opt = PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid);
         let updater = UpdaterThread {
             wid,
             shared,
@@ -108,8 +121,10 @@ impl WorkerAlgo for LayUp {
             ctx.stash(layer, grads);
             return Ok(());
         }
+        let stamp = ctx.stamp(layer);
+        let x_then = ctx.take_x_then(layer);
         self.tx
-            .send(Msg::Layer { step: ctx.step(), layer, grads })
+            .send(Msg::Layer { step: ctx.step(), layer, grads, stamp, x_then })
             .context("updater thread gone")
     }
 
@@ -120,8 +135,10 @@ impl WorkerAlgo for LayUp {
             // iteration bookkeeping — open at the deepest layer, close at
             // layer 0 — matches the streaming path
             for (layer, grads) in ctx.take_grads().into_iter().enumerate().rev() {
+                let stamp = ctx.stamp(layer);
+                let x_then = ctx.take_x_then(layer);
                 self.tx
-                    .send(Msg::Layer { step, layer, grads })
+                    .send(Msg::Layer { step, layer, grads, stamp, x_then })
                     .context("updater thread gone")?;
             }
         }
@@ -233,7 +250,7 @@ impl UpdaterThread {
                     }
                     let _ = ack.send(r);
                 }
-                Msg::Layer { step, layer, grads } => {
+                Msg::Layer { step, layer, mut grads, stamp, x_then } => {
                     if !pushes.contains_key(&step) {
                         let p = self.open_iteration(step);
                         pushes.insert(step, p);
@@ -243,13 +260,34 @@ impl UpdaterThread {
                         (p.frac, p.peer)
                     };
 
-                    // Local Update + Communication + Peer Update.
+                    // Staleness observation + opt-in update policies: τ is
+                    // the writes that landed on this layer between the
+                    // pass's read and this apply (clock snapshot delta).
+                    let tau = observe_apply(&self.shared, self.wid, stamp, layer, step);
+                    maybe_compensate(
+                        &mut self.opt,
+                        &self.shared,
+                        self.wid,
+                        layer,
+                        &mut grads,
+                        x_then.as_ref(),
+                    );
+                    // Adaptive mixing attenuates the per-layer mixing
+                    // fraction by observed τ (identity when fixed / τ = 0).
+                    let pol = self.shared.staleness_cfg;
+                    let eff = |frac: f32| match pol.mixing {
+                        Mixing::Adaptive => attenuate_frac(frac, tau, pol.mix_beta),
+                        Mixing::Fixed => frac,
+                    };
                     let my = &self.shared.params[self.wid];
+
+                    // Local Update + Communication + Peer Update.
                     match frac {
                         // §Perf fused hot path: local update and peer push in
                         // ONE traversal of the layer's data (the step + load
                         // + mix sequence walked it three times).
                         Some(frac) if self.comm_latency_s <= 0.0 => {
+                            let frac = eff(frac);
                             let peer_params = &self.shared.params[peer];
                             self.opt.step_layer_mix(
                                 my,
@@ -272,6 +310,7 @@ impl UpdaterThread {
                         // *before* the transit sleep (the device does not wait
                         // on the network), so the push stays a separate pass.
                         Some(frac) => {
+                            let frac = eff(frac);
                             self.opt.step_layer(my, layer, &grads, step);
                             comm_delay(self.comm_latency_s);
                             let peer_params = &self.shared.params[peer];
@@ -281,6 +320,7 @@ impl UpdaterThread {
                                 peer_params.layers[layer].tensors[ti]
                                     .mix_from(1.0 - frac, frac, &self.scratch);
                             }
+                            peer_params.layers[layer].clock.record(self.wid, step);
                             self.shared.fabric.core().record_instant(
                                 &self.shared,
                                 self.wid,
@@ -340,7 +380,7 @@ impl UpdaterThread {
                     }
                     let _ = ack.send(r);
                 }
-                Msg::Layer { step, layer, grads } => {
+                Msg::Layer { step, layer, mut grads, stamp, x_then } => {
                     if !pushes.contains_key(&step) {
                         let m = self.shared.m;
                         let peer = self.topology.peer(self.wid, m, step as u64, &mut self.rng);
@@ -362,6 +402,17 @@ impl UpdaterThread {
                             pushes.insert(step, SimPush { peer, open: None, skipped: true });
                         }
                     }
+                    // Staleness observation + optional DC compensation (τ is
+                    // computed BEFORE the local apply below lands).
+                    let tau = observe_apply(&self.shared, self.wid, stamp, layer, step);
+                    maybe_compensate(
+                        &mut self.opt,
+                        &self.shared,
+                        self.wid,
+                        layer,
+                        &mut grads,
+                        x_then.as_ref(),
+                    );
                     // local update first — Algorithm 1's
                     // `x^{i,l} <- x̃^{i,l} - η ∇L` never waits on a link
                     self.opt
@@ -377,12 +428,22 @@ impl UpdaterThread {
                             vals.push(v);
                         }
                         let open_w = p.open.take();
+                        // the payload header carries the pushed layer's
+                        // post-update clock stamp and the sender-observed τ
+                        // (the receiver's adaptive mixing attenuates on it)
+                        let sent_stamp = self.shared.params[self.wid].layers[layer].clock.stamp();
                         let outcome = self.shared.fabric.push(
                             &self.shared,
                             self.wid,
                             p.peer,
                             step,
-                            Payload::LayerPush { layer, open: open_w, values: Arc::new(vals) },
+                            Payload::LayerPush {
+                                layer,
+                                open: open_w,
+                                values: Arc::new(vals),
+                                stamp: sent_stamp,
+                                tau,
+                            },
                         );
                         if matches!(outcome, PushOutcome::Dropped | PushOutcome::Busy) {
                             if let Some(w) = open_w {

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algorithms::{comm_delay, GradSet, PerLayerOpt, StepState, WorkerAlgo};
+use crate::algorithms::{comm_delay, observe_apply, PerLayerOpt, StepState, WorkerAlgo};
 use crate::comm::{self, Fabric, Payload};
 use crate::config::TrainConfig;
 use crate::coordinator::Shared;
@@ -34,16 +34,20 @@ impl LocalSgd {
         LocalSgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
             sync_period: cfg.sync_period.max(1),
             comm_latency_s: cfg.comm_latency_s,
         }
     }
 
-    /// Apply one step's full gradient set locally (inner loop).
-    pub(crate) fn local_step(&mut self, step: usize, grads: GradSet) {
+    /// Apply one step's full gradient set locally (inner loop), recording
+    /// each layer's observed staleness against the pass's clock snapshot.
+    pub(crate) fn local_step(&mut self, ctx: &mut StepState) {
+        let step = ctx.step();
+        let grads = ctx.take_grads();
         let my = &self.shared.params[self.wid];
         for (li, g) in grads.iter().enumerate() {
+            observe_apply(&self.shared, self.wid, ctx.stamp(li), li, step);
             self.opt.step_layer(my, li, g, step);
         }
     }
@@ -112,11 +116,10 @@ impl WorkerAlgo for LocalSgd {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        let grads = ctx.take_grads();
-        self.local_step(step, grads);
+        self.local_step(&mut ctx);
         if (step + 1) % self.sync_period == 0 {
             if let Some(avg) = self.global_average(step)? {
-                self.shared.params[self.wid].store_flat(&avg);
+                self.shared.params[self.wid].store_flat(&avg, self.wid, step);
             }
         }
         Ok(())

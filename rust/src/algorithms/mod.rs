@@ -55,13 +55,15 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{Algorithm, TrainConfig};
+use crate::config::{Algorithm, Compensation, TrainConfig};
 use crate::coordinator::Shared;
 use crate::manifest::ModelManifest;
 use crate::model::ModelParams;
 use crate::optim::{LayerOptimizer, OptState, OptimKind, Schedule};
 use crate::resilience::AlgoState;
+use crate::session::events::TrainEvent;
 use crate::sim::SimAlgo;
+use crate::tensor::clock::ClockStamp;
 use crate::tensor::Tensor;
 
 /// Per-pass step context, owned by the training engine.
@@ -76,12 +78,54 @@ use crate::tensor::Tensor;
 pub struct StepState {
     step: usize,
     stash: GradStash,
+    /// per-layer staleness-clock snapshot taken when the pass read its
+    /// parameters (empty when the engine did not capture one — unit tests)
+    clocks: Vec<ClockStamp>,
+    /// forward-time parameter values per layer for DC-ASGD compensation
+    /// (empty when `compensation = "none"`); taken per layer by the apply
+    /// site, exactly once
+    x_then: Vec<Option<Vec<Tensor>>>,
 }
 
 impl StepState {
     /// Open the context for `step` on a model with `n_layers` layers.
     pub fn new(step: usize, n_layers: usize) -> StepState {
-        StepState { step, stash: GradStash::new(n_layers) }
+        StepState {
+            step,
+            stash: GradStash::new(n_layers),
+            clocks: Vec::new(),
+            x_then: Vec::new(),
+        }
+    }
+
+    /// Attach the pass's parameter-clock snapshot (builder style; the
+    /// engine calls this right before the forward pass reads the stores).
+    pub fn with_clocks(mut self, clocks: Vec<ClockStamp>) -> StepState {
+        self.clocks = clocks;
+        self
+    }
+
+    /// Attach the forward-time parameter values (`x_then[layer][param]`)
+    /// for DC-ASGD delay compensation.
+    pub fn with_x_then(mut self, x_then: Vec<Vec<Tensor>>) -> StepState {
+        self.x_then = x_then.into_iter().map(Some).collect();
+        self
+    }
+
+    /// The clock snapshot of `layer` at parameter-read time, when captured.
+    pub fn stamp(&self, layer: usize) -> Option<ClockStamp> {
+        self.clocks.get(layer).copied()
+    }
+
+    /// The full clock snapshot (empty when not captured).
+    pub fn clocks(&self) -> &[ClockStamp] {
+        &self.clocks
+    }
+
+    /// Take `layer`'s forward-time parameter values (DC compensation);
+    /// `None` when compensation is off or the layer was already taken.
+    pub fn take_x_then(&mut self, layer: usize) -> Option<Vec<Tensor>> {
+        self.x_then.get_mut(layer).and_then(Option::take)
     }
 
     /// The training step this context belongs to.
@@ -256,14 +300,18 @@ pub fn build(
     Ok((spec(cfg.algorithm).build)(cfg, wid, shared, manifest))
 }
 
-/// One optimizer per layer — the granularity LayUp steps at.
+/// One optimizer per layer — the granularity LayUp steps at. Owns the
+/// worker id so every apply stamps `(worker, step)` provenance into the
+/// written layer's staleness clock.
 pub struct PerLayerOpt {
     pub opts: Vec<LayerOptimizer>,
     pub schedule: Schedule,
+    /// the worker whose replica this optimizer stack updates (clock stamps)
+    pub wid: usize,
 }
 
 impl PerLayerOpt {
-    pub fn new(kind: &OptimKind, schedule: &Schedule, manifest: &ModelManifest) -> Self {
+    pub fn new(kind: &OptimKind, schedule: &Schedule, manifest: &ModelManifest, wid: usize) -> Self {
         let opts = manifest
             .layers
             .iter()
@@ -272,13 +320,29 @@ impl PerLayerOpt {
                 LayerOptimizer::new(kind.clone(), &sizes)
             })
             .collect();
-        PerLayerOpt { opts, schedule: schedule.clone() }
+        PerLayerOpt { opts, schedule: schedule.clone(), wid }
     }
 
-    /// Apply one layer's gradient to the shared store at `step`'s LR.
+    /// Apply one layer's gradient to the shared store at `step`'s LR and
+    /// stamp the layer's staleness clock.
     pub fn step_layer(&mut self, params: &ModelParams, li: usize, grads: &[Tensor], step: usize) {
         let lr = self.schedule.lr_at(step);
         self.opts[li].step(&params.layers[li].tensors, grads, lr);
+        params.layers[li].clock.record(self.wid, step);
+    }
+
+    /// DC-ASGD delay compensation for one layer (mutates `grads` in place;
+    /// see [`LayerOptimizer::compensate`]). A separate pre-pass so it
+    /// composes with both the plain and the fused apply below.
+    pub fn compensate_layer(
+        &mut self,
+        params: &ModelParams,
+        li: usize,
+        grads: &mut [Tensor],
+        lambda: f32,
+        x_then: &[Tensor],
+    ) {
+        self.opts[li].compensate(&params.layers[li].tensors, grads, lambda, x_then);
     }
 
     /// Checkpoint view of every layer's optimizer moments.
@@ -325,7 +389,66 @@ impl PerLayerOpt {
             keep_frac,
             push_frac,
         );
+        params.layers[li].clock.record(self.wid, step);
+        peer.layers[li].clock.record(self.wid, step);
     }
+}
+
+/// Observe one gradient apply against the pass's clock snapshot: compute
+/// the layer's observed delay τ (writes that landed on the layer between
+/// the pass's parameter read and this apply), record it in the run's
+/// per-layer staleness histogram, and emit a [`TrainEvent::StaleApply`]
+/// when someone is listening. Returns τ (0 when no snapshot was captured).
+pub fn observe_apply(
+    shared: &Shared,
+    wid: usize,
+    stamp: Option<ClockStamp>,
+    layer: usize,
+    step: usize,
+) -> u64 {
+    let Some(snap) = stamp else {
+        return 0;
+    };
+    let tau = shared.params[wid].layers[layer].clock.observed_tau(&snap);
+    shared.staleness.record(layer, tau);
+    if tau > 0 && shared.events.has_observers() {
+        shared
+            .events
+            .emit(TrainEvent::StaleApply { worker: wid, layer, step, tau });
+    }
+    tau
+}
+
+/// Apply the run's DC compensation policy to one layer's gradients (in
+/// place): identity unless `compensation = "dc"` AND the pass captured a
+/// forward-time snapshot for this layer. One definition for every
+/// gradient-apply site (LayUp's two updater loops, GoSGD, AD-PSGD).
+pub(crate) fn maybe_compensate(
+    opt: &mut PerLayerOpt,
+    shared: &Shared,
+    wid: usize,
+    li: usize,
+    grads: &mut [Tensor],
+    x_then: Option<&Vec<Tensor>>,
+) {
+    if shared.staleness_cfg.compensation == Compensation::Dc {
+        if let Some(xt) = x_then {
+            opt.compensate_layer(
+                &shared.params[wid],
+                li,
+                grads,
+                shared.staleness_cfg.dc_lambda,
+                xt,
+            );
+        }
+    }
+}
+
+/// Staleness-adaptive mixing attenuation: `frac / (1 + β·τ)` — the more
+/// writes a pushed layer missed, the less of it the receiver mixes in.
+/// Identity at τ = 0 or β = 0 (the `mixing = "fixed"` numerics).
+pub fn attenuate_frac(frac: f32, tau: u64, beta: f32) -> f32 {
+    frac / (1.0 + beta * tau as f32)
 }
 
 /// A full gradient set: grads[layer][param].

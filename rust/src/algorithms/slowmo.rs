@@ -82,8 +82,7 @@ impl WorkerAlgo for SlowMo {
 
     fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
         let step = ctx.step();
-        let grads = ctx.take_grads();
-        self.inner.local_step(step, grads);
+        self.inner.local_step(&mut ctx);
         if (step + 1) % self.inner.sync_period == 0 {
             if let Some(avg) = self.inner.global_average(step)? {
                 let x_new = Self::outer_step(
@@ -93,7 +92,8 @@ impl WorkerAlgo for SlowMo {
                     self.outer_momentum,
                     self.outer_lr,
                 );
-                self.inner.shared.params[self.inner.wid].store_flat(&x_new);
+                self.inner.shared.params[self.inner.wid]
+                    .store_flat(&x_new, self.inner.wid, step);
             }
         }
         Ok(())

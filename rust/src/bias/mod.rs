@@ -73,9 +73,9 @@ impl BiasTracker {
         let probe = data.eval_batch(0);
         let scratch = ModelParams::init(&exec.manifest, 0);
 
-        scratch.store_flat(&flats[wid]);
+        scratch.store_flat(&flats[wid], wid, step);
         let g_i = full_gradient(exec, &scratch, &probe)?;
-        scratch.store_flat(&mean);
+        scratch.store_flat(&mean, wid, step);
         let g_bar = full_gradient(exec, &scratch, &probe)?;
 
         let bias_sq = sq_dist(&g_i, &g_bar);

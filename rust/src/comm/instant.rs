@@ -43,6 +43,13 @@ impl Fabric for InstantFabric {
         self.core.record_send(shared, from, to, step, payload.bytes());
         match apply(&self.core, shared, to, from, step, &payload) {
             ApplyResult::Busy => PushOutcome::Busy,
+            ApplyResult::Malformed => {
+                // truncated/corrupt payload: counted as a drop, never a
+                // partial write; the Dropped outcome makes the sender
+                // reclaim any shipped push-sum weight
+                self.core.record_rejected(shared, from, to, step);
+                PushOutcome::Dropped
+            }
             ApplyResult::Applied { reply } => {
                 // applied at send time: zero staleness by definition
                 self.core.record_delivered(shared, from, to, step, step);
@@ -99,12 +106,9 @@ mod tests {
         let params = (0..2)
             .map(|w| {
                 Arc::new(ModelParams {
-                    layers: vec![LayerParams {
-                        tensors: vec![AtomicTensor::from_tensor(&Tensor::from_vec(
-                            &[2],
-                            vec![w as f32, w as f32],
-                        ))],
-                    }],
+                    layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(
+                        &Tensor::from_vec(&[2], vec![w as f32, w as f32]),
+                    )])],
                 })
             })
             .collect();
@@ -149,6 +153,34 @@ mod tests {
         let (step, flat) = fabric.core().latest_params(1, 0).unwrap();
         assert_eq!(step, 4);
         assert_eq!(*flat, vec![7.0, 7.0]);
+    }
+
+    /// Satellite: the instant transport rejects malformed payloads at push
+    /// time — the sender sees `Dropped` (and reclaims any shipped weight),
+    /// the receiver's store is untouched.
+    #[test]
+    fn malformed_payload_is_dropped_not_partially_applied() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::new(2));
+        let shared = two_worker_shared(Arc::clone(&fabric));
+        let before = shared.params[1].flatten();
+        // receiver's flat size is 2; ship 3 values
+        let out = fabric.push(
+            &shared,
+            0,
+            1,
+            0,
+            Payload::PairAverage { flat: Arc::new(vec![1.0, 2.0, 3.0]), reply: false },
+        );
+        assert_eq!(out, PushOutcome::Dropped);
+        assert_eq!(shared.params[1].flatten(), before, "no partial write");
+        let stats = fabric.core().snapshot();
+        assert_eq!(stats.msgs_dropped, 1);
+        assert_eq!(stats.msgs_delivered, 0);
+        // a short GradShare never lands in the mailbox
+        let set: GradSet = vec![]; // zero layers, model has one
+        let out = fabric.push(&shared, 0, 1, 1, Payload::GradShare { set: Arc::new(set) });
+        assert_eq!(out, PushOutcome::Dropped);
+        assert!(fabric.core().latest_grads(1, 0).is_none());
     }
 
     #[test]

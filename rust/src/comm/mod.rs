@@ -46,8 +46,10 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::algorithms::GradSet;
+use crate::config::Mixing;
 use crate::coordinator::Shared;
 use crate::metrics::{CommStats, LinkTraffic};
+use crate::tensor::clock::ClockStamp;
 use crate::resilience::membership::{Membership, RecoveryPolicy};
 use crate::session::events::TrainEvent;
 use crate::util::rng::Pcg32;
@@ -77,6 +79,12 @@ pub enum Payload {
         open: Option<f32>,
         /// the layer's parameter tensors, flattened per parameter
         values: Arc<Vec<Vec<f32>>>,
+        /// the sender's post-update staleness-clock stamp of this layer
+        /// (provenance header: who produced these values, at which step)
+        stamp: ClockStamp,
+        /// sender-observed delay τ of the gradient behind this push; the
+        /// receiver's `mixing = "adaptive"` policy attenuates on it
+        tau: u64,
     },
     /// GoSGD: whole-model push-sum push (`values[layer][param]`).
     ModelPush {
@@ -482,6 +490,16 @@ impl FabricCore {
         }
     }
 
+    /// Count a message rejected at delivery time (malformed payload): it
+    /// was already counted as sent at push time, so only the drop counter
+    /// bumps; the drop event still fires so the stream shows the loss.
+    pub fn record_rejected(&self, shared: &Shared, from: usize, to: usize, step: usize) {
+        self.link(from, to).drops.fetch_add(1, Ordering::Relaxed);
+        if shared.events.has_observers() {
+            shared.events.emit(TrainEvent::CommDropped { from, to, step });
+        }
+    }
+
     /// Count one delivery into `to`; staleness is `recv_step - sent_step`.
     pub fn record_delivered(
         &self,
@@ -582,6 +600,46 @@ pub(crate) enum ApplyResult {
     /// The receiver's push-sum accept slot was busy; redeliver later
     /// (delayed, never destroyed).
     Busy,
+    /// The payload's tensor lengths do not match the receiver's stores
+    /// (truncated or corrupt message). Counted as a drop — NEVER partially
+    /// applied; any shipped push-sum weight is refunded to the sender.
+    Malformed,
+}
+
+/// Release-build shape validation of a delivered payload against the
+/// receiver's stores. The mutating paths below rely on `debug_assert!`s in
+/// `Tensor::axpy`/`AtomicTensor::mix_from`, so without this gate a
+/// truncated message would silently mis-apply (or partially write) in
+/// release builds. A malformed message counts as a drop, never a partial
+/// write.
+fn payload_shape_ok(shared: &Shared, wid: usize, payload: &Payload) -> bool {
+    let model = &shared.params[wid];
+    match payload {
+        Payload::LayerPush { layer, values, .. } => {
+            let Some(lp) = model.layers.get(*layer) else {
+                return false;
+            };
+            values.len() == lp.tensors.len()
+                && values.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
+        }
+        Payload::ModelPush { values, .. } => {
+            values.len() == model.layers.len()
+                && values.iter().zip(&model.layers).all(|(lv, lp)| {
+                    lv.len() == lp.tensors.len()
+                        && lv.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
+                })
+        }
+        Payload::PairAverage { flat, .. } | Payload::ParamShare { flat } => {
+            flat.len() == model.numel()
+        }
+        Payload::GradShare { set } => {
+            set.len() == model.layers.len()
+                && set.iter().zip(&model.layers).all(|(lv, lp)| {
+                    lv.len() == lp.tensors.len()
+                        && lv.iter().zip(&lp.tensors).all(|(g, t)| g.data.len() == t.numel())
+                })
+        }
+    }
 }
 
 /// Apply `payload` (sent by `from` at `step`) to worker `wid`'s state:
@@ -597,8 +655,11 @@ pub(crate) fn apply(
     step: usize,
     payload: &Payload,
 ) -> ApplyResult {
+    if !payload_shape_ok(shared, wid, payload) {
+        return ApplyResult::Malformed;
+    }
     match payload {
-        Payload::LayerPush { layer, open, values } => {
+        Payload::LayerPush { layer, open, values, stamp, tau } => {
             let frac = match open {
                 Some(w_in) => match shared.weights[wid].try_accept(*w_in) {
                     None => return ApplyResult::Busy,
@@ -618,9 +679,21 @@ pub(crate) fn apply(
                     None => return ApplyResult::Applied { reply: None },
                 },
             };
+            // staleness-adaptive mixing: a push whose gradient was computed
+            // against τ-stale parameters mixes in attenuated (per layer)
+            let frac = match shared.staleness_cfg.mixing {
+                Mixing::Adaptive => {
+                    crate::algorithms::attenuate_frac(frac, *tau, shared.staleness_cfg.mix_beta)
+                }
+                Mixing::Fixed => frac,
+            };
             for (ti, vals) in values.iter().enumerate() {
                 shared.params[wid].layers[*layer].tensors[ti].mix_from(1.0 - frac, frac, vals);
             }
+            // provenance: this layer now carries the sender's stamped write
+            shared.params[wid].layers[*layer]
+                .clock
+                .record(stamp.worker as usize, stamp.step as usize);
             if *layer == 0 {
                 core.clear_frac(wid, from, step);
             }
@@ -633,6 +706,7 @@ pub(crate) fn apply(
                     for (ti, vals) in layer.iter().enumerate() {
                         shared.params[wid].layers[li].tensors[ti].mix_from(1.0 - frac, frac, vals);
                     }
+                    shared.params[wid].layers[li].clock.record(from, step);
                 }
                 shared.weights[wid].release();
                 shared
@@ -660,6 +734,7 @@ pub(crate) fn apply(
                     t.mix_from(0.5, 0.5, &flat[off..off + n]);
                     off += n;
                 }
+                layer.clock.record(from, step);
             }
             shared
                 .events
@@ -824,6 +899,8 @@ mod tests {
             layer: 0,
             open: Some(0.25),
             values: Arc::new(vec![vec![0.0; 10], vec![0.0; 2]]),
+            stamp: crate::tensor::clock::ClockStamp::default(),
+            tau: 0,
         };
         assert_eq!(layer.bytes(), wire_bytes(12));
         assert!(layer.droppable());

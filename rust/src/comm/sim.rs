@@ -216,6 +216,16 @@ impl Fabric for SimFabric {
                     leftover.extend(it);
                     break;
                 }
+                ApplyResult::Malformed => {
+                    // truncated/corrupt payload: count it as a drop and
+                    // refund any shipped push-sum weight to the sender —
+                    // never a partial write, mass never destroyed
+                    self.core.record_rejected(shared, q.from, wid, q.step);
+                    let w = q.payload.shipped_weight();
+                    if w > 0.0 {
+                        shared.weights[q.from].reclaim(w);
+                    }
+                }
                 ApplyResult::Applied { reply } => {
                     self.core.record_delivered(shared, q.from, wid, q.step, recv_step);
                     if let Some((dest, p)) = reply {
@@ -291,12 +301,9 @@ mod tests {
         let params = (0..2)
             .map(|w| {
                 Arc::new(ModelParams {
-                    layers: vec![LayerParams {
-                        tensors: vec![AtomicTensor::from_tensor(&Tensor::from_vec(
-                            &[2],
-                            vec![w as f32, w as f32],
-                        ))],
-                    }],
+                    layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(
+                        &Tensor::from_vec(&[2], vec![w as f32, w as f32]),
+                    )])],
                 })
             })
             .collect();
@@ -440,6 +447,68 @@ mod tests {
         fabric.restore(&shared, msgs);
         assert_eq!(fabric.deliver_due(&shared, 1, 0), 0, "still not due after restore");
         assert_eq!(sim.pending_count(), 1);
+    }
+
+    /// Satellite: a truncated payload is rejected at delivery in RELEASE
+    /// builds too — counted as a drop, never a partial write, shipped
+    /// push-sum weight refunded to the sender.
+    #[test]
+    fn malformed_payload_counts_as_drop_never_partial_write() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, 2, 8));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        let before = shared.params[1].flatten();
+        let w_before: f32 = shared.weights.iter().map(|w| w.get()).sum();
+        let shipped = shared.weights[0].halve();
+        // receiver tensors hold 2 values; this push carries only 1
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            0,
+            Payload::ModelPush { w_in: shipped, values: Arc::new(vec![vec![vec![9.0]]]) },
+        );
+        assert_eq!(fabric.deliver_due(&shared, 1, 1), 0, "malformed is not applied");
+        assert_eq!(shared.params[1].flatten(), before, "no partial write");
+        let stats = fabric.core().snapshot();
+        assert_eq!(stats.msgs_dropped, 1, "counted as a drop");
+        assert_eq!(stats.msgs_delivered, 0);
+        let w_after: f32 = shared.weights.iter().map(|w| w.get()).sum();
+        assert!((w_after - w_before).abs() < 1e-6, "shipped weight refunded to the sender");
+
+        // a truncated LayerPush is rejected the same way
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            1,
+            Payload::LayerPush {
+                layer: 0,
+                open: None,
+                values: Arc::new(vec![vec![1.0]]), // store holds 2 values
+                stamp: crate::tensor::clock::ClockStamp::default(),
+                tau: 0,
+            },
+        );
+        assert_eq!(fabric.deliver_due(&shared, 1, 2), 0);
+        assert_eq!(shared.params[1].flatten(), before);
+        // an out-of-range layer index is rejected too (no panic)
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            2,
+            Payload::LayerPush {
+                layer: 7,
+                open: None,
+                values: Arc::new(vec![vec![1.0, 1.0]]),
+                stamp: crate::tensor::clock::ClockStamp::default(),
+                tau: 0,
+            },
+        );
+        assert_eq!(fabric.deliver_due(&shared, 1, 3), 0);
+        assert_eq!(fabric.core().snapshot().msgs_dropped, 3);
     }
 
     #[test]

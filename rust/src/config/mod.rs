@@ -153,6 +153,90 @@ fn parse_value(v: &str) -> Result<TomlValue> {
     bail!("unrecognized value")
 }
 
+/// Stale-gradient correction policy (`[staleness] compensation`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compensation {
+    /// Apply gradients as computed (the default; numerics-neutral).
+    None,
+    /// DC-ASGD delay compensation (Zheng et al.): correct each applied
+    /// gradient with `λ·g⊙g⊙(x_now − x_then)` against the forward-time
+    /// parameter snapshot.
+    Dc,
+}
+
+/// Gossip mixing policy under observed staleness (`[staleness] mixing`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mixing {
+    /// The push-sum fraction as the weight handshake produced it (default).
+    Fixed,
+    /// Attenuate LayUp's per-layer mixing fraction by the observed per-layer
+    /// delay: `frac / (1 + β·τ)` — a stale push mixes in less.
+    Adaptive,
+}
+
+/// Staleness policy knobs (`[staleness]` config section, `--compensation` /
+/// `--adaptive-mix` CLI flags, `SessionBuilder::staleness`). The defaults
+/// (`compensation = "none"`, `mixing = "fixed"`) are numerics-neutral: runs
+/// are bit-identical to a build without the staleness machinery.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StalenessConfig {
+    pub compensation: Compensation,
+    /// DC-ASGD correction strength λ (the paper uses 0.04–0.1)
+    pub dc_lambda: f32,
+    pub mixing: Mixing,
+    /// adaptive-mixing attenuation strength β in `frac / (1 + β·τ)`
+    pub mix_beta: f32,
+}
+
+impl Default for StalenessConfig {
+    fn default() -> Self {
+        StalenessConfig {
+            compensation: Compensation::None,
+            dc_lambda: 0.04,
+            mixing: Mixing::Fixed,
+            mix_beta: 0.5,
+        }
+    }
+}
+
+impl StalenessConfig {
+    /// Reject nonsensical knobs and policy/algorithm combinations. The
+    /// policies act where gradients are applied against possibly-stale
+    /// parameters: compensation needs the gossip algorithms' per-worker
+    /// apply path, adaptive mixing needs LayUp's push-sum fractions.
+    pub fn validate(&self, algorithm: Algorithm) -> Result<()> {
+        if !self.dc_lambda.is_finite() || self.dc_lambda < 0.0 {
+            bail!("staleness.lambda must be a finite nonnegative number, got {}", self.dc_lambda);
+        }
+        if !self.mix_beta.is_finite() || self.mix_beta < 0.0 {
+            bail!("staleness.beta must be a finite nonnegative number, got {}", self.mix_beta);
+        }
+        let gossip = matches!(
+            algorithm,
+            Algorithm::LayUp
+                | Algorithm::LayUpModelGranularity
+                | Algorithm::GoSgd
+                | Algorithm::AdPsgd
+        );
+        if self.compensation == Compensation::Dc && !gossip {
+            bail!(
+                "compensation = \"dc\" corrects stale asynchronous applies and is \
+                 supported for layup/layup-model/gosgd/adpsgd; {} applies synchronously",
+                algorithm.name()
+            );
+        }
+        let layup = matches!(algorithm, Algorithm::LayUp | Algorithm::LayUpModelGranularity);
+        if self.mixing == Mixing::Adaptive && !layup {
+            bail!(
+                "mixing = \"adaptive\" attenuates LayUp's push-sum mixing fractions; \
+                 {} does not use them",
+                algorithm.name()
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Which distributed algorithm a run uses (Section 4 "Baseline").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
@@ -258,6 +342,9 @@ pub struct TrainConfig {
     /// run (resume-parity testing, replay debugging). Rejected for barrier
     /// algorithms, decoupled pools, chaos and stragglers.
     pub lockstep: bool,
+    /// staleness update policies: delay compensation and adaptive mixing
+    /// (defaults off — numerics-neutral)
+    pub staleness: StalenessConfig,
 }
 
 impl TrainConfig {
@@ -289,6 +376,7 @@ impl TrainConfig {
             recovery: RecoveryPolicy::Stall,
             stall_timeout_s: 60.0,
             lockstep: false,
+            staleness: StalenessConfig::default(),
         }
     }
 
@@ -323,6 +411,7 @@ impl TrainConfig {
             );
         }
         self.fabric.validate()?;
+        self.staleness.validate(self.algorithm)?;
         self.faults.validate(self.workers, self.steps)?;
         if !self.faults.is_empty() && self.decoupled {
             bail!(
@@ -463,6 +552,25 @@ impl TrainConfig {
         cfg.stall_timeout_s = doc.f64_or("chaos", "stall_timeout_s", cfg.stall_timeout_s);
 
         cfg.lockstep = doc.bool_or("run", "lockstep", false);
+
+        // [staleness]: delay-compensated and staleness-adaptive updates
+        cfg.staleness.compensation = match doc.str_or("staleness", "compensation", "none") {
+            "none" => Compensation::None,
+            "dc" => Compensation::Dc,
+            other => bail!("staleness.compensation: expected \"none\" or \"dc\", got {other:?}"),
+        };
+        cfg.staleness.dc_lambda =
+            doc.f64_or("staleness", "lambda", cfg.staleness.dc_lambda as f64) as f32;
+        cfg.staleness.mixing = match doc.str_or("staleness", "mixing", "fixed") {
+            "fixed" => Mixing::Fixed,
+            "adaptive" => Mixing::Adaptive,
+            other => {
+                bail!("staleness.mixing: expected \"fixed\" or \"adaptive\", got {other:?}")
+            }
+        };
+        cfg.staleness.mix_beta =
+            doc.f64_or("staleness", "beta", cfg.staleness.mix_beta as f64) as f32;
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -738,6 +846,65 @@ mod tests {
         cfg.recovery = RecoveryPolicy::Shrink;
         cfg.faults = FaultPlan::default().crash_restart(1, 5, 0.1);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn staleness_section_parses_and_validates() {
+        // defaults are off (numerics-neutral)
+        let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        assert_eq!(d.staleness.compensation, Compensation::None);
+        assert_eq!(d.staleness.mixing, Mixing::Fixed);
+        d.validate().unwrap();
+
+        let doc = Toml::parse(
+            r#"
+            [run]
+            algorithm = "layup"
+            [staleness]
+            compensation = "dc"
+            lambda = 0.1
+            mixing = "adaptive"
+            beta = 0.25
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.staleness.compensation, Compensation::Dc);
+        assert!((cfg.staleness.dc_lambda - 0.1).abs() < 1e-7);
+        assert_eq!(cfg.staleness.mixing, Mixing::Adaptive);
+        assert!((cfg.staleness.mix_beta - 0.25).abs() < 1e-7);
+
+        // unknown spellings are rejected at parse time
+        let doc = Toml::parse("[staleness]\ncompensation = \"hessian\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[staleness]\nmixing = \"sticky\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+
+        // dc rides the asynchronous gossip apply path only
+        for algo in [Algorithm::LayUp, Algorithm::GoSgd, Algorithm::AdPsgd] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.staleness.compensation = Compensation::Dc;
+            cfg.validate().unwrap_or_else(|e| panic!("{algo:?}: {e}"));
+        }
+        for algo in [Algorithm::Ddp, Algorithm::LocalSgd, Algorithm::SlowMo, Algorithm::Co2] {
+            let mut cfg = TrainConfig::new("mlpnet18", algo, 2, 10);
+            cfg.staleness.compensation = Compensation::Dc;
+            assert!(cfg.validate().is_err(), "{algo:?} has no stale apply path");
+        }
+        // adaptive mixing attenuates LayUp's push-sum fractions only
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.staleness.mixing = Mixing::Adaptive;
+        cfg.validate().unwrap();
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::GoSgd, 2, 10);
+        cfg.staleness.mixing = Mixing::Adaptive;
+        assert!(cfg.validate().is_err());
+        // knob ranges
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.staleness.dc_lambda = f32::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        cfg.staleness.mix_beta = -1.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

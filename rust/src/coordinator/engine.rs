@@ -251,7 +251,7 @@ fn recover_worker(cfg: &TrainConfig, shared: &Arc<Shared>, wid: usize, step: usi
             // re-enter gossip from the donor's CURRENT parameters (the
             // joiner's own replica is stale by the downtime) with half the
             // donor's push-sum weight — mass conserved
-            shared.params[wid].copy_from(&shared.params[donor]);
+            shared.params[wid].copy_from(&shared.params[donor], donor, step);
             let w = shared.weights[donor].halve();
             shared.weights[wid].reclaim(w);
         }

@@ -109,13 +109,14 @@ pub(crate) fn run(
             let c = &mut ctxs[wid];
             let batch = c.dataset.next_batch();
             let fwd_before = c.exec.compute_s;
+            // clock snapshot (and DC x_then) before the forward reads
+            let mut ctx = worker::open_step(cfg, &shared.params[wid], step, n_layers);
             let pass = c.exec.forward(&shared.params[wid], &batch)?;
             if !pass.loss.is_finite() {
                 anyhow::bail!("lockstep worker {wid}: loss diverged (step {step})");
             }
             let fwd_after = c.exec.compute_s;
             c.fwd_s += fwd_after - fwd_before;
-            let mut ctx = StepState::new(step, n_layers);
             {
                 let exec = &mut c.exec;
                 let algo = &mut c.algo;

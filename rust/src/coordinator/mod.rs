@@ -46,9 +46,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::comm::Fabric;
-use crate::config::TrainConfig;
+use crate::config::{StalenessConfig, TrainConfig};
 use crate::manifest::Manifest;
-use crate::metrics::{Curve, DriftTracker, QueueStats};
+use crate::metrics::{Curve, DriftTracker, QueueStats, StalenessTracker};
 use crate::model::ModelParams;
 use crate::resilience::{AlgoState, ChaosRuntime, Checkpoint, Membership, RecoveryPolicy};
 use crate::session::events::EventBus;
@@ -214,6 +214,11 @@ pub struct Shared {
     pub steps_done: Vec<AtomicU64>,
     /// typed-event fan-out (observers attached by the session builder)
     pub events: EventBus,
+    /// per-layer observed-staleness counters (τ at gradient apply),
+    /// recorded by every apply site against the pass's clock snapshot
+    pub staleness: StalenessTracker,
+    /// staleness update policies of the run (compensation / mixing knobs)
+    pub staleness_cfg: StalenessConfig,
     pub start: Instant,
     /// wall seconds of training that happened before this process
     /// (checkpoint resume; keeps loss-vs-wallclock curves continuous)
@@ -258,6 +263,11 @@ impl Shared {
             for (p, state) in params.iter().zip(&ck.params) {
                 p.load_state_dict(state)?;
             }
+            // restore each replica's staleness clocks bit-identically (the
+            // plain load above must not double-stamp them)
+            for (p, stamps) in params.iter().zip(&ck.clocks) {
+                p.load_clocks(stamps)?;
+            }
             for (w, ws) in ck.workers_state.iter().enumerate() {
                 weights[w].set(ws.weight);
                 steps_done[w] = AtomicU64::new(ws.steps_done);
@@ -285,6 +295,7 @@ impl Shared {
         } else {
             None
         };
+        let n_layers = model.layers.len();
         let shared = Arc::new(Shared {
             m,
             params,
@@ -299,6 +310,8 @@ impl Shared {
             drift: Mutex::new(drift),
             steps_done,
             events,
+            staleness: StalenessTracker::new(n_layers),
+            staleness_cfg: cfg.staleness,
             start: Instant::now(),
             start_offset_s,
         });
@@ -314,6 +327,7 @@ impl Shared {
     /// runtime). Weights start at `1/m`, as in a real run.
     pub fn for_tests(params: Vec<Arc<ModelParams>>, fabric: Arc<dyn Fabric>) -> Arc<Shared> {
         let m = params.len();
+        let n_layers = params.first().map(|p| p.layers.len()).unwrap_or(0);
         let membership = Arc::clone(fabric.core().membership());
         Arc::new(Shared {
             m,
@@ -329,6 +343,8 @@ impl Shared {
             drift: Mutex::new(DriftTracker::default()),
             steps_done: (0..m).map(|_| AtomicU64::new(0)).collect(),
             events: EventBus::new(),
+            staleness: StalenessTracker::new(n_layers),
+            staleness_cfg: StalenessConfig::default(),
             start: Instant::now(),
             start_offset_s: 0.0,
         })

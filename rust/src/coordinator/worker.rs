@@ -12,13 +12,14 @@ use anyhow::{Context, Result};
 
 use crate::algorithms::{self, StepState, WorkerAlgo};
 use crate::comm::Fabric;
-use crate::config::TrainConfig;
+use crate::config::{Compensation, TrainConfig};
 use crate::coordinator::queue::{BoundedQueue, PassPool};
 use crate::coordinator::{CheckpointRendezvous, Shared, WorkerSlot, WorkerStats};
 use crate::data::{self, Dataset};
 use crate::manifest::Manifest;
 use crate::metrics::{CurvePoint, QueueStats};
 use crate::model::{HostPass, ModelExec, ModelParams};
+use crate::tensor::clock::ClockStamp;
 use crate::resilience::checkpoint::{self, Checkpoint, WorkerState, FORMAT_VERSION};
 use crate::resilience::AlgoState;
 use crate::runtime::Runtime;
@@ -119,13 +120,16 @@ pub(crate) fn worker_main(
 
         let compute_before_fwd = exec.compute_s;
         let batch = dataset.next_batch();
+        // the pass's parameter provenance is what the forward is about to
+        // read: snapshot the staleness clocks (and, under DC compensation,
+        // the parameter values) BEFORE the first upload
+        let mut ctx = open_step(cfg, &my_params, step, n_layers);
         let pass = exec.forward(&my_params, &batch)?;
         if !pass.loss.is_finite() {
             anyhow::bail!("worker {wid}: loss diverged (step {step})");
         }
         let compute_after_fwd = exec.compute_s;
         fwd_s += compute_after_fwd - compute_before_fwd;
-        let mut ctx = StepState::new(step, n_layers);
         {
             let mut err: Option<anyhow::Error> = None;
             let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
@@ -327,6 +331,7 @@ fn forward_pool_main(
         let batch = dataset.next_batch();
         let mut pass = pool.take();
         pass.step = step;
+        capture_pass_provenance(cfg, &my_params, &mut pass);
         exec.forward_host(&my_params, &batch, &mut pass)?;
         if !pass.loss.is_finite() {
             anyhow::bail!("worker {wid}: loss diverged (step {step})");
@@ -396,10 +401,16 @@ fn backward_pool_main(
     let mut drift_scratch = DriftScratch::new(shared.m);
     let mut completed = 0usize;
 
-    while let Some(pass) = pass_queue.pop(&shared.stop) {
+    while let Some(mut pass) = pass_queue.pop(&shared.stop) {
         let step = pass.step;
         let loss = pass.loss as f64;
-        let mut ctx = StepState::new(step, n_layers);
+        let mut ctx = StepState::new(step, n_layers)
+            .with_clocks(std::mem::take(&mut pass.clocks));
+        if !pass.x_then.is_empty() {
+            // hand the forward-time values to the apply sites (the pooled
+            // buffers are rebuilt by the next capture)
+            ctx = ctx.with_x_then(std::mem::take(&mut pass.x_then));
+        }
         {
             let mut err: Option<anyhow::Error> = None;
             let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
@@ -459,6 +470,35 @@ fn backward_pool_main(
         upload_misses: exec.upload_misses,
         ..Default::default()
     })
+}
+
+/// Open the engine-owned context for one pass: capture every layer's
+/// staleness-clock snapshot — and, when DC compensation is on, the
+/// forward-time parameter values `x_then` — BEFORE the forward pass reads
+/// the stores. Serial and lockstep drivers share this.
+pub(crate) fn open_step(
+    cfg: &TrainConfig,
+    params: &ModelParams,
+    step: usize,
+    n_layers: usize,
+) -> StepState {
+    let mut ctx = StepState::new(step, n_layers).with_clocks(params.clock_snapshot());
+    if cfg.staleness.compensation == Compensation::Dc {
+        ctx = ctx.with_x_then(params.layers.iter().map(|l| l.snapshot()).collect());
+    }
+    ctx
+}
+
+/// Decoupled-mode counterpart of [`open_step`]: fill the pooled
+/// [`HostPass`]'s provenance fields on the forward-pool thread, right
+/// before the forward reads the stores.
+fn capture_pass_provenance(cfg: &TrainConfig, params: &ModelParams, pass: &mut HostPass) {
+    pass.clocks.clear();
+    pass.clocks.extend(params.clock_snapshot());
+    pass.x_then.clear();
+    if cfg.staleness.compensation == Compensation::Dc {
+        pass.x_then = params.layers.iter().map(|l| l.snapshot()).collect();
+    }
 }
 
 /// Periodic checkpoint rendezvous, called at the end of every step body.
@@ -549,6 +589,7 @@ pub(crate) fn write_checkpoint(
             .collect()
     };
     let params = shared.params.iter().map(|p| p.state_dict()).collect();
+    let clocks: Vec<Vec<ClockStamp>> = shared.params.iter().map(|p| p.clock_state()).collect();
     // quiesce the links: drain serializes the in-flight messages, restore
     // puts the very same messages back (their send-time dice stay rolled)
     let mut in_flight = Vec::new();
@@ -569,6 +610,7 @@ pub(crate) fn write_checkpoint(
         elapsed_s: shared.elapsed_s(),
         epoch: shared.membership.epoch(),
         params,
+        clocks,
         workers_state,
         in_flight,
         curve: curve.points,
@@ -667,13 +709,11 @@ mod tests {
             .map(|_| {
                 Arc::new(ModelParams {
                     layers: vec![
-                        LayerParams {
-                            tensors: vec![
-                                random_store(&mut rng, &[4, 3]),
-                                random_store(&mut rng, &[3]),
-                            ],
-                        },
-                        LayerParams { tensors: vec![random_store(&mut rng, &[5])] },
+                        LayerParams::new(vec![
+                            random_store(&mut rng, &[4, 3]),
+                            random_store(&mut rng, &[3]),
+                        ]),
+                        LayerParams::new(vec![random_store(&mut rng, &[5])]),
                     ],
                 })
             })

@@ -24,7 +24,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use layup::comm::{FabricSpec, LatencyDist};
-use layup::config::{Algorithm, Toml, TrainConfig};
+use layup::config::{Algorithm, Compensation, Mixing, Toml, TrainConfig};
 use layup::manifest::Manifest;
 use layup::optim::Schedule;
 use layup::resilience::{FaultPlan, RecoveryPolicy};
@@ -66,6 +66,10 @@ const TRAIN_FLAGS: &[&str] = &[
     "recovery",
     "stall-timeout",
     "lockstep",
+    "compensation",
+    "dc-lambda",
+    "adaptive-mix",
+    "mix-beta",
     "events",
     "out",
     "curve",
@@ -169,6 +173,8 @@ fn print_usage() {
          \x20               [--fwd-threads N] [--bwd-threads N] [--queue-depth N]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
          \x20               [--link-bandwidth MBPS]\n\
+         \x20               [--compensation none|dc] [--dc-lambda F]\n\
+         \x20               [--adaptive-mix true] [--mix-beta F]\n\
          \x20               [--ckpt-every K] [--ckpt-dir DIR] [--resume DIR]\n\
          \x20               [--crash W@STEP[+SECS],..] [--recovery stall|shrink]\n\
          \x20               [--stall-timeout S] [--lockstep true]\n\
@@ -203,7 +209,15 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     }
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.steps = args.usize_or("steps", cfg.steps)?;
-    cfg.eval_every = args.usize_or("eval-every", (cfg.steps / 20).max(1))?;
+    // --eval-every wins; otherwise a config file's cadence is honored, and
+    // without a config file the default follows the (possibly overridden)
+    // step count
+    let eval_default = if args.get("config").is_none() {
+        (cfg.steps / 20).max(1)
+    } else {
+        cfg.eval_every
+    };
+    cfg.eval_every = args.usize_or("eval-every", eval_default)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
     cfg.track_drift_every = args.usize_or("drift-every", cfg.track_drift_every)?;
     cfg.decoupled = args.bool_or("decoupled", cfg.decoupled)?;
@@ -238,6 +252,30 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
             .with_context(|| format!("--stall-timeout: expected seconds, got {v:?}"))?;
     }
     cfg.lockstep = args.bool_or("lockstep", cfg.lockstep)?;
+
+    // Staleness policies: DC-ASGD delay compensation + adaptive mixing.
+    if let Some(v) = args.get("compensation") {
+        cfg.staleness.compensation = match v {
+            "none" => Compensation::None,
+            "dc" => Compensation::Dc,
+            other => bail!("--compensation: expected none or dc, got {other:?}"),
+        };
+    }
+    if let Some(v) = args.get("dc-lambda") {
+        cfg.staleness.dc_lambda = v
+            .parse()
+            .with_context(|| format!("--dc-lambda: expected a number, got {v:?}"))?;
+    }
+    if args.bool_or("adaptive-mix", cfg.staleness.mixing == Mixing::Adaptive)? {
+        cfg.staleness.mixing = Mixing::Adaptive;
+    } else {
+        cfg.staleness.mixing = Mixing::Fixed;
+    }
+    if let Some(v) = args.get("mix-beta") {
+        cfg.staleness.mix_beta = v
+            .parse()
+            .with_context(|| format!("--mix-beta: expected a number, got {v:?}"))?;
+    }
 
     // Communication fabric. The --link-* knobs describe simulated links, so
     // they imply --fabric sim; naming --fabric instant alongside them is a
@@ -335,6 +373,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             comm.msgs_delivered,
             comm.msgs_dropped,
             comm.mean_delivered_staleness(),
+        );
+    }
+    let stale = &summary.stats.staleness;
+    if stale.total_applies() > 0 {
+        println!(
+            "staleness: {} applies observed, mean tau {:.2} writes, max {}",
+            stale.total_applies(),
+            stale.mean_tau(),
+            stale.max_tau(),
         );
     }
     let rec = &summary.stats.recovery;

@@ -267,6 +267,138 @@ impl CommStats {
     }
 }
 
+/// Histogram bucket count for observed per-layer staleness τ. Buckets:
+/// `0, 1, 2, 3–4, 5–8, 9–16, 17–32, 33+` intervening writes.
+pub const STALENESS_BUCKETS: usize = 8;
+
+/// Upper-inclusive bucket labels (stable JSON/CSV vocabulary).
+pub const STALENESS_BUCKET_LABELS: [&str; STALENESS_BUCKETS] =
+    ["0", "1", "2", "3-4", "5-8", "9-16", "17-32", "33+"];
+
+fn staleness_bucket(tau: u64) -> usize {
+    match tau {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3..=4 => 3,
+        5..=8 => 4,
+        9..=16 => 5,
+        17..=32 => 6,
+        _ => 7,
+    }
+}
+
+/// Observed-staleness counters of one layer: how stale were the parameters
+/// each applied gradient was computed against, in intervening writes τ
+/// (see `crate::tensor::clock`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayerStaleness {
+    /// layer index
+    pub layer: usize,
+    /// gradient applies observed (τ recorded once per apply)
+    pub applies: u64,
+    /// Σ τ over applies
+    pub tau_sum: u64,
+    /// max τ observed
+    pub tau_max: u64,
+    /// histogram over [`STALENESS_BUCKET_LABELS`]
+    pub hist: [u64; STALENESS_BUCKETS],
+}
+
+impl LayerStaleness {
+    /// Mean observed τ (0 when nothing was applied).
+    pub fn mean_tau(&self) -> f64 {
+        if self.applies == 0 {
+            return 0.0;
+        }
+        self.tau_sum as f64 / self.applies as f64
+    }
+}
+
+/// Per-layer staleness histograms of one run (`RunStats::staleness`).
+#[derive(Clone, Debug, Default)]
+pub struct StalenessStats {
+    /// one entry per model layer, in layer order
+    pub layers: Vec<LayerStaleness>,
+}
+
+impl StalenessStats {
+    /// Total gradient applies observed across layers.
+    pub fn total_applies(&self) -> u64 {
+        self.layers.iter().map(|l| l.applies).sum()
+    }
+
+    /// Mean observed τ across all layers' applies.
+    pub fn mean_tau(&self) -> f64 {
+        let applies = self.total_applies();
+        if applies == 0 {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.tau_sum).sum::<u64>() as f64 / applies as f64
+    }
+
+    /// Max observed τ across layers.
+    pub fn max_tau(&self) -> u64 {
+        self.layers.iter().map(|l| l.tau_max).fold(0, u64::max)
+    }
+}
+
+/// Lock-free run-time collector behind [`StalenessStats`]: one set of
+/// atomic counters per layer, recorded by every gradient-apply site (LayUp's
+/// updater threads, the stash algorithms' step-end loops) and snapshotted
+/// into the summary.
+pub struct StalenessTracker {
+    layers: Vec<LayerStalenessCounters>,
+}
+
+#[derive(Default)]
+struct LayerStalenessCounters {
+    applies: std::sync::atomic::AtomicU64,
+    tau_sum: std::sync::atomic::AtomicU64,
+    tau_max: std::sync::atomic::AtomicU64,
+    hist: [std::sync::atomic::AtomicU64; STALENESS_BUCKETS],
+}
+
+impl StalenessTracker {
+    /// A tracker for an `n_layers`-layer model.
+    pub fn new(n_layers: usize) -> StalenessTracker {
+        StalenessTracker {
+            layers: (0..n_layers).map(|_| LayerStalenessCounters::default()).collect(),
+        }
+    }
+
+    /// Record one gradient apply on `layer` with observed staleness `tau`.
+    pub fn record(&self, layer: usize, tau: u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let Some(l) = self.layers.get(layer) else {
+            return;
+        };
+        l.applies.fetch_add(1, Relaxed);
+        l.tau_sum.fetch_add(tau, Relaxed);
+        l.tau_max.fetch_max(tau, Relaxed);
+        l.hist[staleness_bucket(tau)].fetch_add(1, Relaxed);
+    }
+
+    /// Snapshot the counters into a summary-ready [`StalenessStats`].
+    pub fn snapshot(&self) -> StalenessStats {
+        use std::sync::atomic::Ordering::Relaxed;
+        StalenessStats {
+            layers: self
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(layer, l)| LayerStaleness {
+                    layer,
+                    applies: l.applies.load(Relaxed),
+                    tau_sum: l.tau_sum.load(Relaxed),
+                    tau_max: l.tau_max.load(Relaxed),
+                    hist: std::array::from_fn(|b| l.hist[b].load(Relaxed)),
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Model disagreement across workers (Fig A1): mean over workers of
 /// ‖x_i − x̄‖ / √d, sampled during training.
 #[derive(Clone, Debug, Default)]
@@ -373,6 +505,8 @@ pub struct RunStats {
     pub queue: QueueStats,
     /// communication-fabric traffic and delivered-staleness counters
     pub comm: CommStats,
+    /// per-layer parameter-staleness histograms (observed τ at apply)
+    pub staleness: StalenessStats,
     /// fault-tolerance counters (crashes, joins, checkpoints, stall flag)
     pub recovery: RecoveryStats,
 }
@@ -395,6 +529,9 @@ impl RunStats {
             ("comm_dropped", self.comm.msgs_dropped as f64),
             ("comm_delivered", self.comm.msgs_delivered as f64),
             ("comm_mean_staleness", self.comm.mean_delivered_staleness()),
+            ("stale_applies", self.staleness.total_applies() as f64),
+            ("stale_tau_mean", self.staleness.mean_tau()),
+            ("stale_tau_max", self.staleness.max_tau() as f64),
             ("recovery_crashes", self.recovery.crashes as f64),
             ("recovery_joins", self.recovery.joins as f64),
             ("checkpoints_saved", self.recovery.checkpoints_saved as f64),
@@ -435,6 +572,29 @@ impl RunSummary {
         for (k, v) in self.stats.fields() {
             fields.push((k, num(v)));
         }
+        // per-layer staleness histograms (layers with applies only)
+        fields.push((
+            "staleness_layers",
+            arr(self
+                .stats
+                .staleness
+                .layers
+                .iter()
+                .filter(|l| l.applies > 0)
+                .map(|l| {
+                    obj(vec![
+                        ("layer", num(l.layer as f64)),
+                        ("applies", num(l.applies as f64)),
+                        ("tau_mean", num(l.mean_tau())),
+                        ("tau_max", num(l.tau_max as f64)),
+                        (
+                            "hist",
+                            arr(l.hist.iter().map(|&c| num(c as f64)).collect()),
+                        ),
+                    ])
+                })
+                .collect()),
+        ));
         // per-link traffic breakdown (nonzero links only)
         fields.push((
             "links",
@@ -550,6 +710,73 @@ mod tests {
     }
 
     #[test]
+    fn staleness_tracker_buckets_and_snapshot() {
+        let t = StalenessTracker::new(2);
+        // layer 0: τ = 0, 1, 40 ; layer 1: τ = 6
+        t.record(0, 0);
+        t.record(0, 1);
+        t.record(0, 40);
+        t.record(1, 6);
+        t.record(9, 3); // out-of-range layer is ignored, not a panic
+        let s = t.snapshot();
+        assert_eq!(s.layers.len(), 2);
+        assert_eq!(s.layers[0].applies, 3);
+        assert_eq!(s.layers[0].tau_sum, 41);
+        assert_eq!(s.layers[0].tau_max, 40);
+        assert_eq!(s.layers[0].hist[0], 1, "τ=0 bucket");
+        assert_eq!(s.layers[0].hist[1], 1, "τ=1 bucket");
+        assert_eq!(s.layers[0].hist[7], 1, "33+ bucket");
+        assert_eq!(s.layers[1].hist[4], 1, "5-8 bucket");
+        assert_eq!(s.total_applies(), 4);
+        assert!((s.mean_tau() - 47.0 / 4.0).abs() < 1e-12);
+        assert_eq!(s.max_tau(), 40);
+        assert!((s.layers[1].mean_tau() - 6.0).abs() < 1e-12);
+        // buckets cover every τ exactly once
+        for tau in 0..200 {
+            assert!(staleness_bucket(tau) < STALENESS_BUCKETS);
+        }
+        assert_eq!(staleness_bucket(2), 2);
+        assert_eq!(staleness_bucket(4), 3);
+        assert_eq!(staleness_bucket(5), 4);
+        assert_eq!(staleness_bucket(16), 5);
+        assert_eq!(staleness_bucket(17), 6);
+        assert_eq!(staleness_bucket(33), 7);
+    }
+
+    #[test]
+    fn staleness_layers_serialize_into_the_summary_json() {
+        let stats = RunStats {
+            staleness: StalenessStats {
+                layers: vec![LayerStaleness {
+                    layer: 1,
+                    applies: 4,
+                    tau_sum: 8,
+                    tau_max: 5,
+                    hist: [1, 1, 0, 1, 1, 0, 0, 0],
+                }],
+            },
+            ..Default::default()
+        };
+        let summary = RunSummary {
+            algorithm: "LayUp".into(),
+            curve: Curve::default(),
+            mfu: 0.5,
+            compute_occupancy: 0.5,
+            total_time_s: 1.0,
+            total_steps: 10,
+            epochs: 1,
+            gossip_skipped: 0,
+            gossip_applied: 0,
+            stats,
+        };
+        let j = summary.to_json().dump();
+        assert!(j.contains("\"stale_tau_mean\":2"), "8/4 applies: {j}");
+        assert!(j.contains("\"staleness_layers\":[{"), "{j}");
+        assert!(j.contains("\"tau_max\":5"), "{j}");
+        assert!(j.contains("\"hist\":[1,1,0,1,1,0,0,0]"), "{j}");
+    }
+
+    #[test]
     fn comm_stats_staleness_and_drop_fractions() {
         let mut c = CommStats::default();
         assert_eq!(c.mean_delivered_staleness(), 0.0);
@@ -613,6 +840,10 @@ mod tests {
             "comm_dropped",
             "comm_delivered",
             "comm_mean_staleness",
+            "stale_applies",
+            "stale_tau_mean",
+            "stale_tau_max",
+            "staleness_layers",
             "recovery_crashes",
             "recovery_joins",
             "checkpoints_saved",

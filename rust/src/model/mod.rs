@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::Batch;
 use crate::manifest::{DType, LayerKind, Manifest, ModelManifest};
 use crate::runtime::{self, Executable, Runtime};
+use crate::tensor::clock::ClockStamp;
 use crate::tensor::{AtomicTensor, LayerParams, Tensor};
 use crate::util::rng::Pcg32;
 
@@ -39,29 +40,30 @@ impl ModelParams {
         let layers = manifest
             .layers
             .iter()
-            .map(|lm| LayerParams {
-                tensors: lm
-                    .params
-                    .iter()
-                    .map(|p| {
-                        let mut t = Tensor::zeros(&p.shape);
-                        match p.init.as_str() {
-                            "zeros" => {}
-                            "ones" => t.fill(1.0),
-                            "uniform" => {
-                                for v in &mut t.data {
-                                    *v = (rng.next_f32() * 2.0 - 1.0) * p.scale;
+            .map(|lm| {
+                LayerParams::new(
+                    lm.params
+                        .iter()
+                        .map(|p| {
+                            let mut t = Tensor::zeros(&p.shape);
+                            match p.init.as_str() {
+                                "zeros" => {}
+                                "ones" => t.fill(1.0),
+                                "uniform" => {
+                                    for v in &mut t.data {
+                                        *v = (rng.next_f32() * 2.0 - 1.0) * p.scale;
+                                    }
+                                }
+                                _ => {
+                                    for v in &mut t.data {
+                                        *v = rng.normal() * p.scale;
+                                    }
                                 }
                             }
-                            _ => {
-                                for v in &mut t.data {
-                                    *v = rng.normal() * p.scale;
-                                }
-                            }
-                        }
-                        AtomicTensor::from_tensor(&t)
-                    })
-                    .collect(),
+                            AtomicTensor::from_tensor(&t)
+                        })
+                        .collect(),
+                )
             })
             .collect();
         Arc::new(ModelParams { layers })
@@ -83,8 +85,9 @@ impl ModelParams {
         out
     }
 
-    /// Overwrite every parameter from a flat vector (inverse of `flatten`).
-    pub fn store_flat(&self, flat: &[f32]) {
+    /// Overwrite every parameter from a flat vector (inverse of `flatten`),
+    /// stamping each layer's clock with `(worker, step)` provenance.
+    pub fn store_flat(&self, flat: &[f32], worker: usize, step: usize) {
         let mut off = 0;
         for l in &self.layers {
             for t in &l.tensors {
@@ -92,17 +95,51 @@ impl ModelParams {
                 t.store_from(&flat[off..off + n]);
                 off += n;
             }
+            l.clock.record(worker, step);
         }
         debug_assert_eq!(off, flat.len());
     }
 
-    /// Copy all values from another replica (checkpoint restore / broadcast).
-    pub fn copy_from(&self, other: &ModelParams) {
+    /// Copy all values from another replica (gossip rejoin / broadcast),
+    /// stamping each layer's clock with the donor's `(worker, step)`.
+    pub fn copy_from(&self, other: &ModelParams, worker: usize, step: usize) {
         for (a, b) in self.layers.iter().zip(&other.layers) {
             for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
                 ta.store_from(&tb.snapshot().data);
             }
+            a.clock.record(worker, step);
         }
+    }
+
+    /// Reader-side snapshot of every layer's staleness clock — the
+    /// provenance of the parameters a forward pass is about to consume.
+    /// The engine threads this through `StepState`/`HostPass` so the
+    /// gradient-apply sites can compute the observed per-layer delay τ.
+    pub fn clock_snapshot(&self) -> Vec<ClockStamp> {
+        self.layers.iter().map(|l| l.clock.stamp()).collect()
+    }
+
+    /// Per-layer clock state for a checkpoint (restored by
+    /// [`ModelParams::load_clocks`] bit-identically).
+    pub fn clock_state(&self) -> Vec<ClockStamp> {
+        self.clock_snapshot()
+    }
+
+    /// Restore exact per-layer clock state from a checkpoint. A count
+    /// mismatch is rejected like any other shape mismatch — a silently
+    /// partial restore would break resume bit-parity and mis-compute τ.
+    pub fn load_clocks(&self, stamps: &[ClockStamp]) -> Result<()> {
+        if stamps.len() != self.layers.len() {
+            bail!(
+                "checkpoint carries {} layer clocks, model has {} layers",
+                stamps.len(),
+                self.layers.len()
+            );
+        }
+        for (l, &st) in self.layers.iter().zip(stamps) {
+            l.clock.load(st);
+        }
+        Ok(())
     }
 
     /// Checkpoint view of the replica: `state[layer][tensor]` holds that
@@ -150,8 +187,10 @@ impl ModelParams {
         let layers = self
             .layers
             .iter()
-            .map(|l| LayerParams {
-                tensors: l.tensors.iter().map(|t| AtomicTensor::from_tensor(&t.snapshot())).collect(),
+            .map(|l| {
+                LayerParams::new(
+                    l.tensors.iter().map(|t| AtomicTensor::from_tensor(&t.snapshot())).collect(),
+                )
             })
             .collect();
         Arc::new(ModelParams { layers })
@@ -202,6 +241,13 @@ pub struct HostPass {
     /// the input lives in `x_f32`/`x_i32` because its dtype varies by model.
     acts: Vec<Tensor>,
     targets: Vec<i32>,
+    /// per-layer staleness-clock snapshot taken when the pass read its
+    /// parameters (filled by the forward pool; consumed into the backward
+    /// pass's `StepState`)
+    pub clocks: Vec<ClockStamp>,
+    /// forward-time parameter values per layer (`x_then[layer][param]`) for
+    /// DC-ASGD delay compensation; empty when `compensation = "none"`
+    pub x_then: Vec<Vec<Tensor>>,
 }
 
 /// Thread-local executor for one model on one worker.

@@ -150,6 +150,37 @@ impl LayerOptimizer {
         Ok(())
     }
 
+    /// DC-ASGD delay compensation (Zheng et al., "Asynchronous SGD with
+    /// Delay Compensation"): correct a stale gradient with the cheap
+    /// Hessian-diagonal approximation
+    /// `g ← g + λ · g ⊙ g ⊙ (x_now − x_then)`, where `x_then[i]` holds the
+    /// parameter values the gradient was computed against (the forward-time
+    /// snapshot) and `x_now` is the store's current value. Mutates `grads`
+    /// in place, so it composes with every step flavour (plain and fused).
+    /// With `lambda = 0` (or `x_now == x_then`, i.e. τ = 0) this is exact
+    /// identity.
+    pub fn compensate(
+        &mut self,
+        params: &[AtomicTensor],
+        grads: &mut [Tensor],
+        lambda: f32,
+        x_then: &[Tensor],
+    ) {
+        debug_assert_eq!(params.len(), grads.len());
+        debug_assert_eq!(params.len(), x_then.len());
+        if lambda == 0.0 {
+            return;
+        }
+        for ((p, g), xt) in params.iter().zip(grads.iter_mut()).zip(x_then) {
+            debug_assert_eq!(g.data.len(), xt.data.len());
+            self.scratch.resize(p.numel(), 0.0);
+            p.load_into(&mut self.scratch);
+            for (k, gv) in g.data.iter_mut().enumerate() {
+                *gv += lambda * *gv * *gv * (self.scratch[k] - xt.data[k]);
+            }
+        }
+    }
+
     /// Apply one update to the shared parameter store for this layer.
     /// `grads[i]` matches `params.tensors[i]` elementwise.
     pub fn step(&mut self, params: &[AtomicTensor], grads: &[Tensor], lr: f32) {
@@ -361,6 +392,34 @@ mod tests {
         let mut opt = LayerOptimizer::new(OptimKind::sgd(0.9, 0.0), &[3]);
         let bad = LayerOptState { m: vec![vec![0.0; 2]], v: Vec::new(), t: 1 };
         assert!(opt.load_state_dict(&bad).is_err());
+    }
+
+    /// DC compensation contract: identity when nothing moved (τ = 0) or
+    /// λ = 0, and exactly `g + λ·g⊙g⊙(x_now − x_then)` otherwise.
+    #[test]
+    fn dc_compensation_matches_formula_and_is_identity_at_zero() {
+        let p = store(&[2.0, -1.0, 0.5]);
+        let mut opt = LayerOptimizer::new(OptimKind::sgd(0.0, 0.0), &[3]);
+
+        // x_now == x_then: no correction, whatever lambda
+        let mut g = [Tensor::from_vec(&[3], vec![1.0, -2.0, 0.25])];
+        let unchanged = g[0].data.clone();
+        opt.compensate(std::slice::from_ref(&p), &mut g, 0.1, &[p.snapshot()]);
+        assert_eq!(g[0].data, unchanged);
+
+        // lambda == 0: identity even when the params moved
+        let x_then = [Tensor::from_vec(&[3], vec![0.0, 0.0, 0.0])];
+        opt.compensate(std::slice::from_ref(&p), &mut g, 0.0, &x_then);
+        assert_eq!(g[0].data, unchanged);
+
+        // moved params + positive lambda: the DC-ASGD formula elementwise
+        let lambda = 0.04f32;
+        opt.compensate(std::slice::from_ref(&p), &mut g, lambda, &x_then);
+        let x_now = p.snapshot().data;
+        for k in 0..3 {
+            let want = unchanged[k] + lambda * unchanged[k] * unchanged[k] * (x_now[k] - 0.0);
+            assert!((g[0].data[k] - want).abs() < 1e-6, "k={k}");
+        }
     }
 
     #[test]

@@ -26,11 +26,14 @@ use anyhow::{bail, Context, Result};
 use crate::comm::{InFlight, Payload};
 use crate::metrics::CurvePoint;
 use crate::optim::{LayerOptState, OptState};
+use crate::tensor::clock::ClockStamp;
 use crate::tensor::Tensor;
 use crate::util::json::{num, obj, s, Json};
 
 /// Bump on any layout change; `load` rejects unknown versions.
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: per-layer staleness clocks (`Checkpoint::clocks`) + provenance
+/// headers (`stamp`, `tau`) on `Payload::LayerPush`.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Format name written to `meta.json` (self-description).
 pub const FORMAT_NAME: &str = "layup-checkpoint";
@@ -97,6 +100,9 @@ pub struct Checkpoint {
     pub epoch: u64,
     /// per-worker model replicas (`params[w][layer][tensor]`)
     pub params: Vec<Vec<Vec<Vec<f32>>>>,
+    /// per-worker, per-layer staleness-clock state (`clocks[w][layer]`),
+    /// restored bit-identically on resume
+    pub clocks: Vec<Vec<ClockStamp>>,
     pub workers_state: Vec<WorkerState>,
     /// quiesced fabric messages still riding the links
     pub in_flight: Vec<InFlight>,
@@ -372,6 +378,13 @@ fn encode(ckpt: &Checkpoint, e: &mut Enc) {
             }
         }
     }
+    e.u64(ckpt.clocks.len() as u64);
+    for worker in &ckpt.clocks {
+        e.u64(worker.len() as u64);
+        for st in worker {
+            encode_stamp(st, e);
+        }
+    }
     e.u64(ckpt.workers_state.len() as u64);
     for w in &ckpt.workers_state {
         e.bool(w.alive);
@@ -433,6 +446,16 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         }
         params.push(worker);
     }
+    let n_clock_workers = d.len()?;
+    let mut clocks = Vec::with_capacity(n_clock_workers);
+    for _ in 0..n_clock_workers {
+        let n_layers = d.len()?;
+        let mut worker = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            worker.push(decode_stamp(&mut d)?);
+        }
+        clocks.push(worker);
+    }
     let n_states = d.len()?;
     let mut workers_state = Vec::with_capacity(n_states);
     for _ in 0..n_states {
@@ -476,12 +499,25 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     // the per-worker arrays must match the declared worker count — a
     // mismatch would otherwise surface as an engine panic or, worse, a
     // silently partial restore (zip stopping at the shorter side)
-    if params.len() != workers || workers_state.len() != workers {
+    if params.len() != workers || workers_state.len() != workers || clocks.len() != workers {
         bail!(
-            "checkpoint declares {workers} workers but carries {} replicas and {} worker states",
+            "checkpoint declares {workers} workers but carries {} replicas, {} clock sets \
+             and {} worker states",
             params.len(),
+            clocks.len(),
             workers_state.len()
         );
+    }
+    // each worker's clock list must cover exactly its replica's layers — a
+    // shorter list would otherwise restore partially (zip stops early)
+    for (w, (p, c)) in params.iter().zip(&clocks).enumerate() {
+        if p.len() != c.len() {
+            bail!(
+                "checkpoint worker {w} carries {} layers but {} layer clocks",
+                p.len(),
+                c.len()
+            );
+        }
     }
     Ok(Checkpoint {
         version,
@@ -493,11 +529,22 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         elapsed_s,
         epoch,
         params,
+        clocks,
         workers_state,
         in_flight,
         curve,
         drift,
     })
+}
+
+fn encode_stamp(st: &ClockStamp, e: &mut Enc) {
+    e.u32(st.worker);
+    e.u64(st.step);
+    e.u64(st.version);
+}
+
+fn decode_stamp(d: &mut Dec) -> Result<ClockStamp> {
+    Ok(ClockStamp { worker: d.u32()?, step: d.u64()?, version: d.u64()? })
 }
 
 fn encode_algo(a: &AlgoState, e: &mut Enc) {
@@ -569,7 +616,7 @@ fn decode_algo(d: &mut Dec) -> Result<AlgoState> {
 
 fn encode_payload(p: &Payload, e: &mut Enc) {
     match p {
-        Payload::LayerPush { layer, open, values } => {
+        Payload::LayerPush { layer, open, values, stamp, tau } => {
             e.u8(0);
             e.u64(*layer as u64);
             match open {
@@ -583,6 +630,8 @@ fn encode_payload(p: &Payload, e: &mut Enc) {
             for v in values.iter() {
                 e.f32s(v);
             }
+            encode_stamp(stamp, e);
+            e.u64(*tau);
         }
         Payload::ModelPush { w_in, values } => {
             e.u8(1);
@@ -628,7 +677,9 @@ fn decode_payload(d: &mut Dec) -> Result<Payload> {
             for _ in 0..n {
                 values.push(d.f32s()?);
             }
-            Payload::LayerPush { layer, open, values: Arc::new(values) }
+            let stamp = decode_stamp(d)?;
+            let tau = d.u64()?;
+            Payload::LayerPush { layer, open, values: Arc::new(values), stamp, tau }
         }
         1 => {
             let w_in = d.f32()?;
@@ -689,6 +740,16 @@ mod tests {
                 vec![vec![vec![1.0, -2.5], vec![0.125]], vec![vec![3.0]]],
                 vec![vec![vec![0.5, 0.5], vec![-1.0]], vec![vec![f32::MIN_POSITIVE]]],
             ],
+            clocks: vec![
+                vec![
+                    ClockStamp { worker: 0, step: 9, version: 40 },
+                    ClockStamp { worker: 1, step: 8, version: 12 },
+                ],
+                vec![
+                    ClockStamp { worker: 1, step: 7, version: 33 },
+                    ClockStamp { worker: 0, step: 9, version: 41 },
+                ],
+            ],
             workers_state: vec![
                 WorkerState {
                     alive: true,
@@ -729,6 +790,8 @@ mod tests {
                         layer: 1,
                         open: Some(0.25),
                         values: Arc::new(vec![vec![9.0, 8.0]]),
+                        stamp: ClockStamp { worker: 0, step: 9, version: 40 },
+                        tau: 3,
                     },
                 },
                 InFlight {
@@ -749,9 +812,9 @@ mod tests {
     fn payloads_eq(a: &Payload, b: &Payload) -> bool {
         match (a, b) {
             (
-                Payload::LayerPush { layer: la, open: oa, values: va },
-                Payload::LayerPush { layer: lb, open: ob, values: vb },
-            ) => la == lb && oa == ob && va == vb,
+                Payload::LayerPush { layer: la, open: oa, values: va, stamp: sa, tau: ta },
+                Payload::LayerPush { layer: lb, open: ob, values: vb, stamp: sb, tau: tb },
+            ) => la == lb && oa == ob && va == vb && sa == sb && ta == tb,
             (
                 Payload::ModelPush { w_in: wa, values: va },
                 Payload::ModelPush { w_in: wb, values: vb },
@@ -780,6 +843,7 @@ mod tests {
         assert_eq!(back.elapsed_s.to_bits(), ckpt.elapsed_s.to_bits());
         assert_eq!(back.epoch, ckpt.epoch);
         assert_eq!(back.params, ckpt.params);
+        assert_eq!(back.clocks, ckpt.clocks, "LayerClock state survives bit-identically");
         assert_eq!(back.workers_state, ckpt.workers_state);
         assert_eq!(back.in_flight.len(), ckpt.in_flight.len());
         for (a, b) in back.in_flight.iter().zip(&ckpt.in_flight) {

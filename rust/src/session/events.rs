@@ -43,6 +43,11 @@ pub enum TrainEvent {
     /// A message was applied at its receiver; `staleness` is the receiver's
     /// step minus the sender's step at send time.
     CommDelivered { from: usize, to: usize, step: usize, staleness: i64 },
+    /// A gradient was applied against parameters that had moved since the
+    /// pass read them: `tau` is the number of intervening writes observed
+    /// on that layer's staleness clock (emitted only when τ > 0 and
+    /// observers are attached — this is per-(apply, layer)).
+    StaleApply { worker: usize, layer: usize, step: usize, tau: u64 },
     /// The configured straggler idled before this step.
     StragglerInjected { worker: usize, step: usize, delay_s: f64 },
     /// A chaos fault tore this worker down before it ran `step`
@@ -73,6 +78,7 @@ impl TrainEvent {
             TrainEvent::CommSent { .. } => "comm_sent",
             TrainEvent::CommDropped { .. } => "comm_dropped",
             TrainEvent::CommDelivered { .. } => "comm_delivered",
+            TrainEvent::StaleApply { .. } => "stale_apply",
             TrainEvent::StragglerInjected { .. } => "straggler_injected",
             TrainEvent::WorkerCrashed { .. } => "worker_crashed",
             TrainEvent::WorkerJoined { .. } => "worker_joined",
@@ -130,6 +136,12 @@ impl TrainEvent {
                 fields.push(("to", num(*to as f64)));
                 fields.push(("step", num(*step as f64)));
                 fields.push(("staleness", num(*staleness as f64)));
+            }
+            TrainEvent::StaleApply { worker, layer, step, tau } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("layer", num(*layer as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("tau", num(*tau as f64)));
             }
             TrainEvent::StragglerInjected { worker, step, delay_s } => {
                 fields.push(("worker", num(*worker as f64)));
@@ -348,6 +360,15 @@ mod tests {
         let delivered = TrainEvent::CommDelivered { from: 1, to: 0, step: 7, staleness: -2 };
         assert_eq!(delivered.kind(), "comm_delivered");
         assert!(delivered.to_json().dump().contains("\"staleness\":-2"));
+    }
+
+    #[test]
+    fn stale_apply_serializes_layer_and_tau() {
+        let ev = TrainEvent::StaleApply { worker: 2, layer: 5, step: 40, tau: 7 };
+        assert_eq!(ev.kind(), "stale_apply");
+        let j = ev.to_json().dump();
+        assert!(j.contains("\"layer\":5"), "{j}");
+        assert!(j.contains("\"tau\":7"), "{j}");
     }
 
     #[test]

@@ -61,7 +61,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::comm::{Fabric, FabricSpec};
-use crate::config::{Algorithm, TrainConfig};
+use crate::config::{Algorithm, Compensation, Mixing, StalenessConfig, TrainConfig};
 use crate::coordinator::{engine, Shared};
 use crate::data;
 use crate::manifest::Manifest;
@@ -125,6 +125,29 @@ impl SessionBuilder {
     /// stall-and-rejoin (default) or shrink to the survivors.
     pub fn recovery(mut self, policy: RecoveryPolicy) -> SessionBuilder {
         self.cfg.recovery = policy;
+        self
+    }
+
+    /// Replace the run's staleness policy knobs wholesale
+    /// (`[staleness]` config section equivalent).
+    pub fn staleness(mut self, cfg: StalenessConfig) -> SessionBuilder {
+        self.cfg.staleness = cfg;
+        self
+    }
+
+    /// Select the stale-gradient correction policy:
+    /// `Compensation::Dc` applies the DC-ASGD `λ·g⊙g⊙(x_now − x_then)`
+    /// correction at every asynchronous gradient apply.
+    pub fn compensation(mut self, policy: Compensation) -> SessionBuilder {
+        self.cfg.staleness.compensation = policy;
+        self
+    }
+
+    /// Toggle staleness-adaptive gossip mixing: LayUp's per-layer push-sum
+    /// mixing fraction is attenuated by the observed per-layer delay τ
+    /// (`frac / (1 + β·τ)`).
+    pub fn adaptive_mix(mut self, on: bool) -> SessionBuilder {
+        self.cfg.staleness.mixing = if on { Mixing::Adaptive } else { Mixing::Fixed };
         self
     }
 
@@ -255,6 +278,7 @@ impl Session<'_> {
                 .min(1.0),
             queue,
             comm: shared.fabric.core().snapshot(),
+            staleness: shared.staleness.snapshot(),
             recovery: RecoveryStats {
                 crashes: shared.membership.crash_count(),
                 joins: shared.membership.join_count(),

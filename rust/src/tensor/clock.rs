@@ -1,0 +1,187 @@
+//! Per-layer staleness clocks: versioned write provenance for the shared
+//! parameter stores.
+//!
+//! The seed-era code counted writes per *tensor* (`AtomicTensor.version`)
+//! purely as an upload-cache key; nothing recorded *who* wrote or *when*, so
+//! the staleness the paper reasons about — "the gradient was computed
+//! against parameters that have since been overwritten k times" — was not
+//! observable. A [`LayerClock`] makes it first-class:
+//!
+//! * every **writer** (optimizer step, gossip mix, checkpoint restore)
+//!   stamps `(worker, step)` provenance and bumps a monotone version
+//!   counter via [`LayerClock::record`];
+//! * every **reader** (forward upload, backward, fabric send) takes a
+//!   [`ClockStamp`] snapshot via [`LayerClock::stamp`];
+//! * at gradient-apply time the observed per-layer delay is
+//!   `τ = version_now − snapshot.version` — the number of writes that landed
+//!   on the layer between the pass's parameter read and this apply
+//!   ([`observed_tau`]). On a serial 1-worker instant-fabric run τ is 0; the
+//!   decoupled pools and delayed fabrics make it positive, which is exactly
+//!   what the delay-compensated (`dc`) and staleness-adaptive update
+//!   policies act on.
+//!
+//! Like the parameter stores themselves, clocks are lock-free: the version
+//! counter is strictly monotone (`fetch_add`), while the packed provenance
+//! word is a racy last-writer-wins store — a concurrent [`stamp`] may pair a
+//! version with the provenance of a neighbouring write. That tearing only
+//! blurs *who* wrote (diagnostics); τ, the upload-cache key and the
+//! histogram counts all derive from the monotone version alone.
+//!
+//! [`stamp`]: LayerClock::stamp
+//! [`observed_tau`]: LayerClock::observed_tau
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Snapshot of one layer's clock: the last writer's provenance plus the
+/// monotone write-version at snapshot time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClockStamp {
+    /// worker id of the last writer (0 for the initializer)
+    pub worker: u32,
+    /// the last writer's training step
+    pub step: u64,
+    /// monotone write counter at snapshot time
+    pub version: u64,
+}
+
+// The provenance word packs the full 32-bit worker id with the low 32 bits
+// of the step into one atomic u64 (so a stamp can never pair one writer's
+// worker with another's step). Steps are recorded modulo 2^32 — ~4 billion
+// steps, far beyond any run this system drives — so `load` round-trips
+// every checkpoint exactly.
+const STEP_BITS: u32 = 32;
+const STEP_MASK: u64 = (1 << STEP_BITS) - 1;
+
+fn pack(worker: u32, step: u64) -> u64 {
+    ((worker as u64) << STEP_BITS) | (step & STEP_MASK)
+}
+
+fn unpack(packed: u64) -> (u32, u64) {
+    ((packed >> STEP_BITS) as u32, packed & STEP_MASK)
+}
+
+/// One layer's staleness clock (see module docs). Owned by
+/// [`crate::tensor::LayerParams`]; the runtime's upload cache keys on
+/// [`LayerClock::version`], replacing the seed-era per-tensor counters.
+#[derive(Debug, Default)]
+pub struct LayerClock {
+    /// strictly monotone write counter (the upload-cache key)
+    version: AtomicU64,
+    /// `(worker, step)` of the last writer, packed (racy vs `version`)
+    packed: AtomicU64,
+}
+
+impl LayerClock {
+    /// A fresh clock: version 0, provenance "worker 0 at step 0".
+    pub fn new() -> LayerClock {
+        LayerClock::default()
+    }
+
+    /// Monotone write counter; readers use it to invalidate upload caches
+    /// and to compute observed staleness.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Stamp one write: record `(worker, step)` provenance and bump the
+    /// version. Called by every parameter writer *after* its data stores.
+    pub fn record(&self, worker: usize, step: usize) {
+        self.packed.store(pack(worker as u32, step as u64), Ordering::Relaxed);
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Reader snapshot: the last writer's provenance + current version.
+    pub fn stamp(&self) -> ClockStamp {
+        let version = self.version.load(Ordering::Acquire);
+        let (worker, step) = unpack(self.packed.load(Ordering::Relaxed));
+        ClockStamp { worker, step, version }
+    }
+
+    /// Observed delay of a gradient apply against a read-time snapshot: the
+    /// number of writes that landed on this layer since `snap` was taken.
+    pub fn observed_tau(&self, snap: &ClockStamp) -> u64 {
+        self.version().saturating_sub(snap.version)
+    }
+
+    /// Restore an exact clock state (checkpoint resume). Unlike
+    /// [`LayerClock::record`] this sets the version rather than bumping it,
+    /// so a resumed run carries the snapshot's clocks bit-identically.
+    pub fn load(&self, stamp: ClockStamp) {
+        self.packed.store(pack(stamp.worker, stamp.step), Ordering::Relaxed);
+        self.version.store(stamp.version, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn record_stamps_provenance_and_bumps_version() {
+        let c = LayerClock::new();
+        assert_eq!(c.stamp(), ClockStamp { worker: 0, step: 0, version: 0 });
+        c.record(3, 17);
+        let s = c.stamp();
+        assert_eq!((s.worker, s.step, s.version), (3, 17, 1));
+        c.record(1, 18);
+        let s2 = c.stamp();
+        assert_eq!((s2.worker, s2.step, s2.version), (1, 18, 2));
+        assert_eq!(c.observed_tau(&s), 1, "one write landed since the snapshot");
+        assert_eq!(c.observed_tau(&s2), 0);
+    }
+
+    #[test]
+    fn load_restores_exact_state_for_resume() {
+        let c = LayerClock::new();
+        c.record(0, 1);
+        c.record(2, 5);
+        let snap = c.stamp();
+        let restored = LayerClock::new();
+        restored.load(snap);
+        assert_eq!(restored.stamp(), snap, "resume carries clocks bit-identically");
+        // a later snapshot from the past never yields negative τ
+        let old = ClockStamp { worker: 0, step: 0, version: snap.version + 10 };
+        assert_eq!(restored.observed_tau(&old), 0);
+    }
+
+    #[test]
+    fn wide_worker_and_step_values_round_trip() {
+        // the full u32 worker range survives (the provenance word gives the
+        // worker all 32 bits; steps carry their low 32 bits)
+        let c = LayerClock::new();
+        c.record(u32::MAX as usize, (u32::MAX - 1) as usize);
+        let s = c.stamp();
+        assert_eq!(s.worker, u32::MAX);
+        assert_eq!(s.step, (u32::MAX - 1) as u64);
+        let restored = LayerClock::new();
+        restored.load(s);
+        assert_eq!(restored.stamp(), s, "load round-trips wide ids exactly");
+    }
+
+    /// The tentpole invariant: the version counter is strictly monotone
+    /// under concurrent writers — every record is counted exactly once, so
+    /// τ can never under-report intervening writes.
+    #[test]
+    fn version_is_monotone_and_exact_under_concurrent_writers() {
+        let c = Arc::new(LayerClock::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    for i in 0..1000 {
+                        c.record(t, i);
+                        let v = c.version();
+                        assert!(v > last, "monotone per observer");
+                        last = v;
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(c.version(), 4000, "every write counted exactly once");
+    }
+}

@@ -14,11 +14,19 @@
 //!   overwritten"), but expressed in safe Rust: races lose *updates*, never
 //!   memory safety.
 //!
-//! Each `AtomicTensor` carries a monotonically increasing `version` counter
-//! bumped by every writer. The runtime uses it to cache the XLA `Literal`
-//! upload of a parameter until someone actually changed it (DESIGN.md §Perf).
+//! Write tracking lives one level up: every [`LayerParams`] carries a
+//! [`clock::LayerClock`] stamped with `(worker, step)` provenance by each
+//! writer. The runtime keys its XLA `Literal` upload cache on the clock's
+//! monotone version (DESIGN.md §Perf), and the staleness machinery derives
+//! the observed per-layer delay τ from clock snapshots — see
+//! [`clock`] for the contract. (The seed-era per-tensor `version` counter
+//! was folded into the layer clock.)
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+pub mod clock;
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use clock::LayerClock;
 
 /// Plain host tensor: row-major f32 data plus shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -84,23 +92,25 @@ impl Tensor {
     }
 }
 
-/// Lock-free shared parameter tensor (see module docs).
+/// Lock-free shared parameter tensor (see module docs). Write tracking
+/// (upload-cache invalidation, staleness provenance) lives on the owning
+/// layer's [`clock::LayerClock`], not here — writers stamp the layer clock
+/// after their data stores.
 pub struct AtomicTensor {
     shape: Vec<usize>,
     data: Box<[AtomicU32]>,
-    version: AtomicU64,
 }
 
 impl AtomicTensor {
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
         let data: Box<[AtomicU32]> = (0..n).map(|_| AtomicU32::new(0f32.to_bits())).collect();
-        AtomicTensor { shape: shape.to_vec(), data, version: AtomicU64::new(0) }
+        AtomicTensor { shape: shape.to_vec(), data }
     }
 
     pub fn from_tensor(t: &Tensor) -> Self {
         let data: Box<[AtomicU32]> = t.data.iter().map(|&x| AtomicU32::new(x.to_bits())).collect();
-        AtomicTensor { shape: t.shape.clone(), data, version: AtomicU64::new(0) }
+        AtomicTensor { shape: t.shape.clone(), data }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -109,15 +119,6 @@ impl AtomicTensor {
 
     pub fn numel(&self) -> usize {
         self.data.len()
-    }
-
-    /// Monotone write counter; readers use it to invalidate upload caches.
-    pub fn version(&self) -> u64 {
-        self.version.load(Ordering::Acquire)
-    }
-
-    fn bump(&self) {
-        self.version.fetch_add(1, Ordering::Release);
     }
 
     /// Relaxed-read the whole tensor into `out`. A concurrent writer may be
@@ -143,7 +144,6 @@ impl AtomicTensor {
         for (a, &s) in self.data.iter().zip(src.iter()) {
             a.store(s.to_bits(), Ordering::Relaxed);
         }
-        self.bump();
     }
 
     /// Lock-free SGD-style update: `p -= lr * g` elementwise.
@@ -155,7 +155,6 @@ impl AtomicTensor {
             let cur = f32::from_bits(a.load(Ordering::Relaxed));
             a.store((cur - lr * g).to_bits(), Ordering::Relaxed);
         }
-        self.bump();
     }
 
     /// Lock-free push-sum mix used by the gossip updater threads:
@@ -166,7 +165,6 @@ impl AtomicTensor {
             let cur = f32::from_bits(a.load(Ordering::Relaxed));
             a.store((self_frac * cur + peer_frac * inc).to_bits(), Ordering::Relaxed);
         }
-        self.bump();
     }
 
     /// Fused updater hot path (§Perf): apply the local update `p -= lr * u`
@@ -193,8 +191,6 @@ impl AtomicTensor {
             let pcur = f32::from_bits(pa.load(Ordering::Relaxed));
             pa.store((keep_frac * pcur + push_frac * new).to_bits(), Ordering::Relaxed);
         }
-        self.bump();
-        peer.bump();
     }
 
     /// Checkpoint view of the store: the current values as a plain host
@@ -206,8 +202,9 @@ impl AtomicTensor {
         out
     }
 
-    /// Restore from a [`AtomicTensor::state_dict`] snapshot (bumps the
-    /// version so upload caches invalidate, exactly like any other write).
+    /// Restore from a [`AtomicTensor::state_dict`] snapshot. Like every
+    /// other write, the caller stamps the owning layer's clock so upload
+    /// caches invalidate.
     pub fn load_state_dict(&self, values: &[f32]) {
         self.store_from(values);
     }
@@ -224,23 +221,31 @@ impl AtomicTensor {
             }
             self.data[i].store((acc / denom).to_bits(), Ordering::Relaxed);
         }
-        self.bump();
     }
 }
 
-/// One model layer's named parameter tensors (shared store).
+/// One model layer's named parameter tensors (shared store) plus the
+/// layer's staleness clock. Writers stamp the clock after their data
+/// stores; readers snapshot it (see [`clock`]).
 pub struct LayerParams {
     pub tensors: Vec<AtomicTensor>,
+    /// per-layer write clock: provenance-stamped, monotone-versioned
+    pub clock: LayerClock,
 }
 
 impl LayerParams {
+    /// A layer store with a fresh clock.
+    pub fn new(tensors: Vec<AtomicTensor>) -> LayerParams {
+        LayerParams { tensors, clock: LayerClock::new() }
+    }
+
     pub fn numel(&self) -> usize {
         self.tensors.iter().map(|t| t.numel()).sum()
     }
 
-    /// Aggregate version over the layer (cheap cache key).
+    /// The layer's write-version (upload-cache key) — the clock's counter.
     pub fn version(&self) -> u64 {
-        self.tensors.iter().map(|t| t.version()).sum()
+        self.clock.version()
     }
 
     pub fn snapshot(&self) -> Vec<Tensor> {
@@ -271,12 +276,22 @@ mod tests {
     }
 
     #[test]
-    fn atomic_roundtrip_and_version() {
+    fn atomic_roundtrip() {
         let at = AtomicTensor::zeros(&[4]);
-        assert_eq!(at.version(), 0);
         at.store_from(&[1.0, -2.0, 3.5, 0.25]);
-        assert_eq!(at.version(), 1);
         assert_eq!(at.snapshot().data, vec![1.0, -2.0, 3.5, 0.25]);
+    }
+
+    #[test]
+    fn layer_params_version_tracks_the_clock() {
+        let lp = LayerParams::new(vec![AtomicTensor::zeros(&[2]), AtomicTensor::zeros(&[3])]);
+        assert_eq!(lp.numel(), 5);
+        assert_eq!(lp.version(), 0);
+        lp.tensors[0].store_from(&[1.0, 2.0]);
+        lp.clock.record(1, 7);
+        assert_eq!(lp.version(), 1, "a stamped write invalidates the upload cache");
+        let s = lp.clock.stamp();
+        assert_eq!((s.worker, s.step), (1, 7));
     }
 
     #[test]
@@ -320,7 +335,6 @@ mod tests {
 
         assert_eq!(af.snapshot().data, a.snapshot().data);
         assert_eq!(pf.snapshot().data, p.snapshot().data);
-        assert!(af.version() >= 1 && pf.version() >= 1, "both stores must bump versions");
     }
 
     #[test]
@@ -356,6 +370,5 @@ mod tests {
         for v in at.snapshot().data {
             assert!((1.0..=4.0).contains(&v), "v={v}");
         }
-        assert!(at.version() >= 8000);
     }
 }

@@ -6,7 +6,7 @@
 use std::sync::{Arc, Mutex};
 
 use layup::comm::{FabricSpec, LatencyDist};
-use layup::config::{Algorithm, TrainConfig};
+use layup::config::{Algorithm, Compensation, Mixing, TrainConfig};
 use layup::coordinator::Shared;
 use layup::data::{self, Dataset};
 use layup::manifest::Manifest;
@@ -488,4 +488,57 @@ fn upload_cache_hits_when_params_unchanged() {
     let _ = exec.forward(&shared.params[0], &b).unwrap();
     assert_eq!(exec.upload_misses, misses_after_first, "second fwd must hit the cache");
     assert!(exec.upload_hits > 0);
+}
+
+/// Tentpole: per-layer staleness histograms are populated in BOTH serial
+/// and decoupled modes, the summary JSON carries the new keys, and the
+/// opt-in policies (DC compensation, adaptive mixing) train without
+/// divergence on LayUp and AD-PSGD.
+#[test]
+fn staleness_histograms_populate_and_policies_train() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let n_layers = man.model(&model_name).unwrap().layers.len();
+
+    // serial: every apply is observed, one histogram per layer
+    let cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, 12);
+    let summary = run(&cfg, &man).unwrap();
+    let stale = &summary.stats.staleness;
+    assert!(stale.total_applies() > 0, "serial: no applies observed");
+    assert_eq!(stale.layers.len(), n_layers, "one histogram per layer");
+    let j = summary.to_json().dump();
+    for key in ["stale_applies", "stale_tau_mean", "stale_tau_max", "staleness_layers"] {
+        assert!(j.contains(&format!("\"{key}\":")), "metrics JSON missing {key}");
+    }
+
+    // decoupled pools: the pipeline's inherent lag shows up as observed τ
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, 12);
+    cfg.decoupled = true;
+    cfg.fwd_threads = 2;
+    cfg.bwd_threads = 1;
+    cfg.queue_depth = 2;
+    let summary = run(&cfg, &man).unwrap();
+    assert!(
+        summary.stats.staleness.total_applies() > 0,
+        "decoupled: no applies observed"
+    );
+
+    // DC compensation + adaptive mixing: LayUp still learns
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, 20);
+    cfg.staleness.compensation = Compensation::Dc;
+    cfg.staleness.mixing = Mixing::Adaptive;
+    let summary = run(&cfg, &man).unwrap();
+    let first = summary.curve.points.first().unwrap().loss;
+    assert!(summary.curve.best_loss().is_finite(), "policies-on run diverged");
+    assert!(
+        summary.curve.best_loss() < first,
+        "policies-on run did not improve: {first} -> {}",
+        summary.curve.best_loss()
+    );
+
+    // DC rides AD-PSGD's apply path too
+    let mut cfg = quick_cfg(&model_name, Algorithm::AdPsgd, 2, 12);
+    cfg.staleness.compensation = Compensation::Dc;
+    let summary = run(&cfg, &man).unwrap();
+    assert!(summary.curve.best_loss().is_finite(), "AD-PSGD + dc diverged");
 }

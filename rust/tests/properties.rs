@@ -11,6 +11,7 @@ use layup::metrics::{Curve, CurvePoint};
 use layup::model::ModelParams;
 use layup::optim::Schedule;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+use layup::tensor::clock::LayerClock;
 use layup::tensor::{AtomicTensor, LayerParams, Tensor};
 use layup::topology::{PushSumWeight, Topology};
 use layup::util::rng::Pcg32;
@@ -81,7 +82,7 @@ fn prop_sim_fabric_push_sum_mass_delayed_never_destroyed() {
             .map(|_| {
                 let t = Tensor::from_vec(&[dim], (0..dim).map(|_| rng.normal()).collect());
                 Arc::new(ModelParams {
-                    layers: vec![LayerParams { tensors: vec![AtomicTensor::from_tensor(&t)] }],
+                    layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(&t)])],
                 })
             })
             .collect();
@@ -178,7 +179,7 @@ fn prop_sim_fabric_drain_restore_conserves_mass() {
             .map(|_| {
                 let t = Tensor::from_vec(&[dim], (0..dim).map(|_| rng.normal()).collect());
                 Arc::new(ModelParams {
-                    layers: vec![LayerParams { tensors: vec![AtomicTensor::from_tensor(&t)] }],
+                    layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(&t)])],
                 })
             })
             .collect();
@@ -388,5 +389,96 @@ fn prop_atomic_store_load_roundtrip_any_pattern() {
         let at = AtomicTensor::zeros(&[n]);
         at.store_from(&vals);
         assert_eq!(at.snapshot().data, vals);
+    });
+}
+
+/// Staleness-clock property: the version counter is strictly monotone and
+/// exact under any interleaving of concurrent writers — every `record` is
+/// counted exactly once, so observed τ can never under-count intervening
+/// writes — and a sequential tail always leaves the last writer's
+/// provenance visible.
+#[test]
+fn prop_layer_clock_monotone_under_concurrent_writers() {
+    prop("clock_monotone", 10, |rng| {
+        let clock = Arc::new(LayerClock::new());
+        let writers = 2 + rng.below_usize(4);
+        let per = 200 + rng.below_usize(300);
+        std::thread::scope(|scope| {
+            for t in 0..writers {
+                let clock = Arc::clone(&clock);
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    for i in 0..per {
+                        clock.record(t, i);
+                        let v = clock.version();
+                        assert!(v > last, "version went backwards: {v} <= {last}");
+                        last = v;
+                    }
+                });
+            }
+        });
+        assert_eq!(clock.version() as usize, writers * per, "every write counted once");
+        // sequential tail: provenance is last-writer-wins
+        clock.record(7, 42);
+        let s = clock.stamp();
+        assert_eq!((s.worker, s.step), (7, 42));
+        assert_eq!(s.version as usize, writers * per + 1);
+    });
+}
+
+/// Clock provenance is conserved by the checkpoint quiesce (`Fabric::drain`
+/// / `restore`): a layer-wise push pulled off the links and re-injected
+/// still stamps the receiver's clock with the sender's exact `(worker,
+/// step)` provenance on delivery, and the mixing it performs is identical.
+#[test]
+fn prop_drain_restore_conserves_clock_provenance() {
+    prop("drain_restore_clocks", 20, |rng| {
+        let dim = 2usize;
+        let mk = |v: f32| {
+            Arc::new(ModelParams {
+                layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(
+                    &Tensor::from_vec(&[dim], vec![v; dim]),
+                )])],
+            })
+        };
+        let fabric =
+            Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, 2, rng.next_u64()));
+        let shared = Shared::for_tests(vec![mk(0.0), mk(1.0)], fabric.clone());
+
+        let sender_step = 3 + rng.below_usize(50);
+        shared.params[0].layers[0].clock.record(0, sender_step);
+        let stamp = shared.params[0].layers[0].clock.stamp();
+        let shipped = shared.weights[0].halve();
+        let out = shared.fabric.push(
+            &shared,
+            0,
+            1,
+            sender_step,
+            Payload::LayerPush {
+                layer: 0,
+                open: Some(shipped),
+                values: Arc::new(vec![vec![5.0; dim]]),
+                stamp,
+                tau: 2,
+            },
+        );
+        assert_eq!(out, PushOutcome::Queued);
+
+        // checkpoint quiesce: drain, then restore the very same messages
+        let msgs = shared.fabric.drain(1);
+        assert_eq!(msgs.len(), 1);
+        shared.fabric.restore(&shared, msgs);
+
+        let receiver_before = shared.params[1].layers[0].clock.version();
+        assert_eq!(shared.fabric.deliver_due(&shared, 1, sender_step + 1), 1);
+        let got = shared.params[1].layers[0].clock.stamp();
+        assert_eq!(
+            (got.worker, got.step),
+            (stamp.worker, stamp.step),
+            "delivered push must carry the sender's provenance through drain/restore"
+        );
+        assert_eq!(got.version, receiver_before + 1, "exactly one stamped write");
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-5, "push-sum mass conserved: {total}");
     });
 }

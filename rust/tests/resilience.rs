@@ -108,9 +108,14 @@ fn resume_parity_bit_identical_for_layup_gosgd_adpsgd_and_ddp() {
             "{algo:?}: expected snapshots at steps 4 and 8"
         );
 
-        // resumed: fresh session, restore the step-4 snapshot, run to the end
+        // resumed: fresh session, restore the step-4 snapshot, run to the
+        // end — writing its own checkpoints so the step-8 snapshots of both
+        // runs can be compared below
+        let resumed_dir = tmp_dir(&format!("parity-resumed-{algo:?}"));
         let mut resume_cfg = quick_cfg(&model_name, algo, 2, steps);
         resume_cfg.lockstep = lockstep;
+        resume_cfg.checkpoint_every = every;
+        resume_cfg.checkpoint_dir = resumed_dir.clone();
         let resumed = SessionBuilder::new(resume_cfg)
             .build(&man)
             .unwrap()
@@ -120,7 +125,22 @@ fn resume_parity_bit_identical_for_layup_gosgd_adpsgd_and_ddp() {
             .unwrap_or_else(|e| panic!("{algo:?}: resumed run failed: {e:#}"));
 
         assert_curves_identical(&full, &resumed, &format!("{algo:?} resume parity"));
+
+        // the step-8 snapshots of the uninterrupted and the resumed run
+        // must agree bit-for-bit — parameters AND per-layer staleness
+        // clocks (the resume carried LayerClock state exactly)
+        let ck_full = checkpoint::load(&checkpoint::step_dir(&dir, 2 * every))
+            .unwrap_or_else(|e| panic!("{algo:?}: loading full-run step-8 snapshot: {e:#}"));
+        let ck_resumed = checkpoint::load(&checkpoint::step_dir(&resumed_dir, 2 * every))
+            .unwrap_or_else(|e| panic!("{algo:?}: loading resumed-run step-8 snapshot: {e:#}"));
+        assert_eq!(ck_full.params, ck_resumed.params, "{algo:?}: replica values diverged");
+        assert_eq!(
+            ck_full.clocks, ck_resumed.clocks,
+            "{algo:?}: staleness clocks diverged across resume"
+        );
+
         std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&resumed_dir).ok();
     }
 }
 
