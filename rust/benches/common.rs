@@ -43,6 +43,13 @@ pub fn manifest() -> Manifest {
     Manifest::load(&layup::artifacts_dir()).expect("run `make artifacts` first")
 }
 
+/// `Some(manifest)` when artifacts/ exists, `None` on a bare checkout —
+/// lets kernel-only bench sections (and the CI perf gate fed by them) run
+/// without `make artifacts`.
+pub fn try_manifest() -> Option<Manifest> {
+    Manifest::load(&layup::artifacts_dir()).ok()
+}
+
 /// Run one config through the session facade.
 pub fn run_one(cfg: &TrainConfig, man: &Manifest) -> RunSummary {
     SessionBuilder::new(cfg.clone())

@@ -13,6 +13,8 @@
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
+
 use layup::algorithms::PerLayerOpt;
 use layup::bias::BiasTracker;
 use layup::config::{Algorithm, TrainConfig};
@@ -40,7 +42,15 @@ fn main() {
         .map(|w| data::build(model, w, m, cfg.seed).expect("dataset"))
         .collect();
     let mut opts: Vec<PerLayerOpt> = (0..m)
-        .map(|w| PerLayerOpt::new(&cfg.optim, &cfg.schedule, &exec.manifest, w))
+        .map(|w| {
+            PerLayerOpt::new(
+                &cfg.optim,
+                &cfg.schedule,
+                &exec.manifest,
+                w,
+                Arc::clone(&shared.update_pool),
+            )
+        })
         .collect();
     let mut rng = Pcg32::new(99);
     let mut tracker = BiasTracker::default();

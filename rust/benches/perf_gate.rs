@@ -1,0 +1,139 @@
+//! **§Perf CI gate** — diffs the kernel rows `perf_hotpath` just wrote to
+//! `results/bench_summary.json` against the committed baseline
+//! `BENCH_6.json` at the repo root, and exits non-zero when any kernel
+//! regressed past the tolerance.
+//!
+//! The comparison is machine-independent: each kernel's `wall_s` is divided
+//! by the same run's `calibration_copy` wall (a plain `f32` memcpy over the
+//! same footprint), and those *ratios* — kernel cost in memcpy units — are
+//! what gets diffed. A faster or slower runner shifts both sides of every
+//! ratio equally; only a real change in kernel efficiency moves it.
+//!
+//! Knobs:
+//!   LAYUP_BENCH_BASELINE  baseline JSON path (default: search for
+//!                         BENCH_6.json upward from the current directory)
+//!   LAYUP_GATE_TOL        allowed fractional regression (default 0.15)
+
+#[path = "common.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use layup::util::json::Json;
+
+const BASELINE_NAME: &str = "BENCH_6.json";
+const CALIBRATION: &str = "calibration_copy";
+
+fn baseline_path() -> PathBuf {
+    if let Ok(p) = std::env::var("LAYUP_BENCH_BASELINE") {
+        return PathBuf::from(p);
+    }
+    // `cargo bench` runs from the package root (rust/); the baseline lives
+    // one level up at the repo root, so walk ancestors
+    let mut dir = std::env::current_dir().expect("cwd");
+    loop {
+        let cand = dir.join(BASELINE_NAME);
+        if cand.exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            panic!("{BASELINE_NAME} not found in any ancestor of the current directory");
+        }
+    }
+}
+
+/// `label -> wall_s` for every kernel row under `doc["perf_hotpath"]`.
+fn kernel_walls(doc: &Json, what: &str) -> BTreeMap<String, f64> {
+    let rows = doc
+        .get("perf_hotpath")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|e| panic!("{what}: missing perf_hotpath section: {e}"));
+    assert!(!rows.is_empty(), "{what}: perf_hotpath section is empty");
+    rows.iter()
+        .map(|row| {
+            let label = row.get("label").and_then(Json::as_str).expect("row label");
+            let wall = row.get("wall_s").and_then(Json::as_f64).expect("row wall_s");
+            assert!(wall > 0.0, "{what}: non-positive wall_s for {label}");
+            (label.to_string(), wall)
+        })
+        .collect()
+}
+
+fn load(path: &std::path::Path, what: &str) -> BTreeMap<String, f64> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{what}: cannot read {}: {e}", path.display()));
+    let doc = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("{what}: {} is not valid JSON: {e}", path.display()));
+    kernel_walls(&doc, what)
+}
+
+fn main() {
+    let tol = common::env_f64("LAYUP_GATE_TOL", 0.15);
+    let current_path = common::results_dir().join("bench_summary.json");
+    let current = load(&current_path, "current run");
+    let base_path = baseline_path();
+    let baseline = load(&base_path, "baseline");
+
+    let cal_cur = *current
+        .get(CALIBRATION)
+        .unwrap_or_else(|| panic!("current run: no {CALIBRATION} row"));
+    let cal_base = *baseline
+        .get(CALIBRATION)
+        .unwrap_or_else(|| panic!("baseline: no {CALIBRATION} row"));
+
+    println!(
+        "perf gate: {} vs {}  (tolerance {:.0}%)",
+        current_path.display(),
+        base_path.display(),
+        100.0 * tol
+    );
+    println!(
+        "{:<28} {:>12} {:>12} {:>9}  verdict",
+        "kernel", "base ratio", "now ratio", "delta"
+    );
+
+    let mut failures = Vec::new();
+    for (label, base_wall) in &baseline {
+        if label == CALIBRATION {
+            continue;
+        }
+        let Some(cur_wall) = current.get(label) else {
+            // a dropped row is a silent coverage loss, not a perf win
+            failures.push(format!("{label}: present in baseline, missing from current run"));
+            continue;
+        };
+        let base_ratio = base_wall / cal_base;
+        let cur_ratio = cur_wall / cal_cur;
+        let delta = cur_ratio / base_ratio - 1.0;
+        let regressed = delta > tol;
+        println!(
+            "{:<28} {:>12.3} {:>12.3} {:>+8.1}%  {}",
+            label,
+            base_ratio,
+            cur_ratio,
+            100.0 * delta,
+            if regressed { "REGRESSED" } else { "ok" }
+        );
+        if regressed {
+            failures.push(format!(
+                "{label}: {cur_ratio:.3}x memcpy vs baseline {base_ratio:.3}x (+{:.1}%)",
+                100.0 * delta
+            ));
+        }
+    }
+    for label in current.keys() {
+        if !baseline.contains_key(label) {
+            println!("{label:<28} (new row — not in baseline, not gated)");
+        }
+    }
+
+    if !failures.is_empty() {
+        eprintln!("\nperf gate FAILED:");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("\nperf gate passed: no kernel regressed more than {:.0}%", 100.0 * tol);
+}

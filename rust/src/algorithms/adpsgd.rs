@@ -45,10 +45,11 @@ impl AdPsgd {
         shared: Arc<Shared>,
         manifest: &ModelManifest,
     ) -> AdPsgd {
+        let pool = Arc::clone(&shared.update_pool);
         AdPsgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid, pool),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0xadb5d ^ ((wid as u64) << 24)),
             comm_latency_s: cfg.comm_latency_s,
@@ -95,14 +96,15 @@ impl WorkerAlgo for AdPsgd {
             // shared-memory fast path: the seed-era synchronous swap
             let peer_params = &self.shared.params[peer];
             comm_delay(2.0 * self.comm_latency_s);
+            let pool = &self.shared.update_pool;
             for (li, layer) in my.layers.iter().enumerate() {
                 for (ti, t) in layer.tensors.iter().enumerate() {
                     let mine = t.snapshot();
                     // peer = (peer + mine)/2
-                    peer_params.layers[li].tensors[ti].mix_from(0.5, 0.5, &mine.data);
+                    peer_params.layers[li].tensors[ti].mix_from_sharded(0.5, 0.5, &mine.data, pool);
                     // mine = the freshly averaged peer value (symmetric result)
                     let avg = peer_params.layers[li].tensors[ti].snapshot();
-                    t.store_from(&avg.data);
+                    t.store_from_sharded(&avg.data, pool);
                 }
                 // both halves of the swap were written: stamp both clocks
                 peer_params.layers[li].clock.record(self.wid, step);

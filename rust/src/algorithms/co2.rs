@@ -148,7 +148,7 @@ impl WorkerAlgo for Co2 {
                 self.outer_momentum,
                 self.outer_lr,
             );
-            shared.params[wid].store_flat(&x_new, wid, step);
+            shared.params[wid].store_flat_sharded(&x_new, wid, step, &shared.update_pool);
         }
         Ok(())
     }

@@ -41,10 +41,11 @@ pub struct Ddp {
 
 impl Ddp {
     pub fn new(cfg: &TrainConfig, wid: usize, shared: Arc<Shared>, manifest: &ModelManifest) -> Ddp {
+        let pool = Arc::clone(&shared.update_pool);
         Ddp {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid, pool),
             comm_latency_s: cfg.comm_latency_s,
         }
     }

@@ -47,10 +47,11 @@ impl GoSgd {
         shared: Arc<Shared>,
         manifest: &ModelManifest,
     ) -> GoSgd {
+        let pool = Arc::clone(&shared.update_pool);
         GoSgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid, pool),
             topology: cfg.topology.clone(),
             rng: Pcg32::new(cfg.seed ^ 0x60560d ^ ((wid as u64) << 32)),
             comm_latency_s: cfg.comm_latency_s,
@@ -111,11 +112,16 @@ impl WorkerAlgo for GoSgd {
                 Some(frac) => {
                     comm_delay(self.comm_latency_s);
                     let peer_params = &self.shared.params[peer];
+                    let pool = &self.shared.update_pool;
                     for (li, layer) in my.layers.iter().enumerate() {
                         for (ti, t) in layer.tensors.iter().enumerate() {
                             let snap = t.snapshot();
-                            peer_params.layers[li].tensors[ti]
-                                .mix_from(1.0 - frac, frac, &snap.data);
+                            peer_params.layers[li].tensors[ti].mix_from_sharded(
+                                1.0 - frac,
+                                frac,
+                                &snap.data,
+                                pool,
+                            );
                         }
                         peer_params.layers[li].clock.record(self.wid, step);
                     }

@@ -90,7 +90,13 @@ impl LayUp {
         model_granularity: bool,
     ) -> LayUp {
         let (tx, rx) = channel();
-        let opt = PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid);
+        let opt = PerLayerOpt::new(
+            &cfg.optim,
+            &cfg.schedule,
+            manifest,
+            wid,
+            Arc::clone(&shared.update_pool),
+        );
         let updater = UpdaterThread {
             wid,
             shared,
@@ -314,11 +320,16 @@ impl UpdaterThread {
                             self.opt.step_layer(my, layer, &grads, step);
                             comm_delay(self.comm_latency_s);
                             let peer_params = &self.shared.params[peer];
+                            let pool = &self.shared.update_pool;
                             for (ti, t) in my.layers[layer].tensors.iter().enumerate() {
                                 self.scratch.resize(t.numel(), 0.0);
-                                t.load_into(&mut self.scratch);
-                                peer_params.layers[layer].tensors[ti]
-                                    .mix_from(1.0 - frac, frac, &self.scratch);
+                                t.load_into_sharded(&mut self.scratch, pool);
+                                peer_params.layers[layer].tensors[ti].mix_from_sharded(
+                                    1.0 - frac,
+                                    frac,
+                                    &self.scratch,
+                                    pool,
+                                );
                             }
                             peer_params.layers[layer].clock.record(self.wid, step);
                             self.shared.fabric.core().record_instant(
@@ -424,7 +435,7 @@ impl UpdaterThread {
                         let mut vals: Vec<Vec<f32>> = Vec::with_capacity(tensors.len());
                         for t in tensors {
                             let mut v = vec![0.0f32; t.numel()];
-                            t.load_into(&mut v);
+                            t.load_into_sharded(&mut v, &self.shared.update_pool);
                             vals.push(v);
                         }
                         let open_w = p.open.take();

@@ -31,10 +31,11 @@ impl LocalSgd {
         shared: Arc<Shared>,
         manifest: &ModelManifest,
     ) -> LocalSgd {
+        let pool = Arc::clone(&shared.update_pool);
         LocalSgd {
             wid,
             shared,
-            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid),
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid, pool),
             sync_period: cfg.sync_period.max(1),
             comm_latency_s: cfg.comm_latency_s,
         }
@@ -119,7 +120,12 @@ impl WorkerAlgo for LocalSgd {
         self.local_step(&mut ctx);
         if (step + 1) % self.sync_period == 0 {
             if let Some(avg) = self.global_average(step)? {
-                self.shared.params[self.wid].store_flat(&avg, self.wid, step);
+                self.shared.params[self.wid].store_flat_sharded(
+                    &avg,
+                    self.wid,
+                    step,
+                    &self.shared.update_pool,
+                );
             }
         }
         Ok(())

@@ -64,6 +64,7 @@ use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
 use crate::sim::SimAlgo;
 use crate::tensor::clock::ClockStamp;
+use crate::tensor::shard::ShardPool;
 use crate::tensor::Tensor;
 
 /// Per-pass step context, owned by the training engine.
@@ -311,13 +312,23 @@ pub struct PerLayerOpt {
 }
 
 impl PerLayerOpt {
-    pub fn new(kind: &OptimKind, schedule: &Schedule, manifest: &ModelManifest, wid: usize) -> Self {
+    /// One [`LayerOptimizer`] per manifest layer, all sharing `pool` for
+    /// their parameter traversals (§Perf). Algorithm constructors pass the
+    /// run's `Shared::update_pool`; pass `ShardPool::serial()` where
+    /// sharding is not wired (tests, standalone benches).
+    pub fn new(
+        kind: &OptimKind,
+        schedule: &Schedule,
+        manifest: &ModelManifest,
+        wid: usize,
+        pool: Arc<ShardPool>,
+    ) -> Self {
         let opts = manifest
             .layers
             .iter()
             .map(|lm| {
                 let sizes: Vec<usize> = lm.params.iter().map(|p| p.numel()).collect();
-                LayerOptimizer::new(kind.clone(), &sizes)
+                LayerOptimizer::with_pool(kind.clone(), &sizes, Arc::clone(&pool))
             })
             .collect();
         PerLayerOpt { opts, schedule: schedule.clone(), wid }

@@ -92,8 +92,12 @@ impl WorkerAlgo for SlowMo {
                     self.outer_momentum,
                     self.outer_lr,
                 );
-                self.inner.shared.params[self.inner.wid]
-                    .store_flat(&x_new, self.inner.wid, step);
+                self.inner.shared.params[self.inner.wid].store_flat_sharded(
+                    &x_new,
+                    self.inner.wid,
+                    step,
+                    &self.inner.shared.update_pool,
+                );
             }
         }
         Ok(())

@@ -688,7 +688,12 @@ pub(crate) fn apply(
                 Mixing::Fixed => frac,
             };
             for (ti, vals) in values.iter().enumerate() {
-                shared.params[wid].layers[*layer].tensors[ti].mix_from(1.0 - frac, frac, vals);
+                shared.params[wid].layers[*layer].tensors[ti].mix_from_sharded(
+                    1.0 - frac,
+                    frac,
+                    vals,
+                    &shared.update_pool,
+                );
             }
             // provenance: this layer now carries the sender's stamped write
             shared.params[wid].layers[*layer]
@@ -704,7 +709,12 @@ pub(crate) fn apply(
             Some(frac) => {
                 for (li, layer) in values.iter().enumerate() {
                     for (ti, vals) in layer.iter().enumerate() {
-                        shared.params[wid].layers[li].tensors[ti].mix_from(1.0 - frac, frac, vals);
+                        shared.params[wid].layers[li].tensors[ti].mix_from_sharded(
+                            1.0 - frac,
+                            frac,
+                            vals,
+                            &shared.update_pool,
+                        );
                     }
                     shared.params[wid].layers[li].clock.record(from, step);
                 }
@@ -731,7 +741,7 @@ pub(crate) fn apply(
             for layer in &shared.params[wid].layers {
                 for t in &layer.tensors {
                     let n = t.numel();
-                    t.mix_from(0.5, 0.5, &flat[off..off + n]);
+                    t.mix_from_sharded(0.5, 0.5, &flat[off..off + n], &shared.update_pool);
                     off += n;
                 }
                 layer.clock.record(from, step);

@@ -319,6 +319,11 @@ pub struct TrainConfig {
     pub fwd_threads: usize,
     /// backward-pool threads per worker (decoupled mode)
     pub bwd_threads: usize,
+    /// shard-pool lanes for the parameter hot path (§Perf): traversals of
+    /// the lock-free stores (optimizer steps, gossip mixes, collective
+    /// write-backs) split across this many threads. 1 (default) keeps the
+    /// serial path — bit-identical to the unsharded behavior.
+    pub update_threads: usize,
     /// bounded pass-queue capacity per worker: the forward pool blocks
     /// (backpressure) once this many passes await backward
     pub queue_depth: usize,
@@ -368,6 +373,7 @@ impl TrainConfig {
             decoupled: false,
             fwd_threads: 1,
             bwd_threads: 1,
+            update_threads: 1,
             queue_depth: 2,
             fabric: FabricSpec::Instant,
             checkpoint_every: 0,
@@ -399,6 +405,9 @@ impl TrainConfig {
                 self.fwd_threads,
                 self.bwd_threads
             );
+        }
+        if self.update_threads == 0 {
+            bail!("update_threads must be >= 1 (1 = the serial parameter hot path)");
         }
         if self.queue_depth == 0 {
             bail!("queue_depth must be >= 1 (the pass queue is bounded but not empty)");
@@ -496,6 +505,7 @@ impl TrainConfig {
         cfg.decoupled = doc.bool_or("run", "decoupled", false);
         cfg.fwd_threads = doc.usize_or("run", "fwd_threads", 1);
         cfg.bwd_threads = doc.usize_or("run", "bwd_threads", 1);
+        cfg.update_threads = doc.usize_or("run", "update_threads", 1);
         cfg.queue_depth = doc.usize_or("run", "queue_depth", 2);
 
         // [fabric] section: kind = "instant" | "sim", plus the sim link knobs
@@ -649,6 +659,7 @@ mod tests {
             decoupled = true
             fwd_threads = 3
             bwd_threads = 1
+            update_threads = 4
             queue_depth = 6
             "#,
         )
@@ -656,10 +667,12 @@ mod tests {
         let cfg = TrainConfig::from_toml(&doc).unwrap();
         assert!(cfg.decoupled);
         assert_eq!((cfg.fwd_threads, cfg.bwd_threads, cfg.queue_depth), (3, 1, 6));
+        assert_eq!(cfg.update_threads, 4);
         // defaults preserve serial semantics
         let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
         assert!(!d.decoupled);
         assert_eq!((d.fwd_threads, d.bwd_threads), (1, 1));
+        assert_eq!(d.update_threads, 1, "default must keep the serial hot path");
         d.validate().unwrap();
     }
 
@@ -672,6 +685,9 @@ mod tests {
         cfg.fwd_threads = 0;
         assert!(cfg.validate().is_err());
         cfg.fwd_threads = 2;
+        cfg.update_threads = 0;
+        assert!(cfg.validate().is_err(), "update_threads = 0 has no lane to run on");
+        cfg.update_threads = 4;
         cfg.queue_depth = 0;
         assert!(cfg.validate().is_err());
         cfg.queue_depth = 2;

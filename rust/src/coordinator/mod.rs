@@ -223,6 +223,11 @@ pub struct Shared {
     /// wall seconds of training that happened before this process
     /// (checkpoint resume; keeps loss-vs-wallclock curves continuous)
     pub start_offset_s: f64,
+    /// shard pool for the parameter hot path (§Perf): sized by
+    /// `cfg.update_threads`, shared by every optimizer stack and gossip
+    /// apply site of this run. `update_threads = 1` ⇒ serial, bit-identical
+    /// to the unsharded path.
+    pub update_pool: Arc<crate::tensor::shard::ShardPool>,
 }
 
 impl Shared {
@@ -314,6 +319,7 @@ impl Shared {
             staleness_cfg: cfg.staleness,
             start: Instant::now(),
             start_offset_s,
+            update_pool: crate::tensor::shard::ShardPool::new(cfg.update_threads),
         });
         if let Some(ck) = resume {
             // put the snapshot's in-flight messages back on the links
@@ -347,6 +353,7 @@ impl Shared {
             staleness_cfg: StalenessConfig::default(),
             start: Instant::now(),
             start_offset_s: 0.0,
+            update_pool: crate::tensor::shard::ShardPool::serial(),
         })
     }
 

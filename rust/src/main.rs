@@ -6,7 +6,7 @@
 //! layup train  [--config cfg.toml] [--model M] [--algorithm A] [--workers N]
 //!              [--steps S] [--eval-every K] [--lr F] [--seed K]
 //!              [--straggler W:D] [--drift-every K] [--decoupled true]
-//!              [--fwd-threads N] [--bwd-threads N] [--queue-depth N]
+//!              [--fwd-threads N] [--bwd-threads N] [--update-threads N] [--queue-depth N]
 //!              [--events events.jsonl] [--out results.json] [--curve out.csv]
 //! layup sim    [--cluster c1|c2|c3] [--workload W] [--algorithm A|all]
 //!              [--sync-period K] [--straggler W:D] [--seed K]
@@ -54,6 +54,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "decoupled",
     "fwd-threads",
     "bwd-threads",
+    "update-threads",
     "queue-depth",
     "fabric",
     "link-latency",
@@ -170,7 +171,8 @@ fn print_usage() {
          \x20 layup train   [--config f.toml] [--model M] [--algorithm A] [--workers N]\n\
          \x20               [--steps S] [--eval-every K] [--lr F] [--seed K]\n\
          \x20               [--straggler W:D] [--drift-every K] [--decoupled true]\n\
-         \x20               [--fwd-threads N] [--bwd-threads N] [--queue-depth N]\n\
+         \x20               [--fwd-threads N] [--bwd-threads N] [--update-threads N]\n\
+         \x20               [--queue-depth N]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
          \x20               [--link-bandwidth MBPS]\n\
          \x20               [--compensation none|dc] [--dc-lambda F]\n\
@@ -223,6 +225,7 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     cfg.decoupled = args.bool_or("decoupled", cfg.decoupled)?;
     cfg.fwd_threads = args.usize_or("fwd-threads", cfg.fwd_threads)?;
     cfg.bwd_threads = args.usize_or("bwd-threads", cfg.bwd_threads)?;
+    cfg.update_threads = args.usize_or("update-threads", cfg.update_threads)?;
     cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
     if let Some(v) = args.get("lr") {
         let lr: f32 = v

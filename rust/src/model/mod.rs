@@ -25,6 +25,7 @@ use crate::data::Batch;
 use crate::manifest::{DType, LayerKind, Manifest, ModelManifest};
 use crate::runtime::{self, Executable, Runtime};
 use crate::tensor::clock::ClockStamp;
+use crate::tensor::shard::ShardPool;
 use crate::tensor::{AtomicTensor, LayerParams, Tensor};
 use crate::util::rng::Pcg32;
 
@@ -88,11 +89,19 @@ impl ModelParams {
     /// Overwrite every parameter from a flat vector (inverse of `flatten`),
     /// stamping each layer's clock with `(worker, step)` provenance.
     pub fn store_flat(&self, flat: &[f32], worker: usize, step: usize) {
+        self.store_flat_sharded(flat, worker, step, &ShardPool::serial());
+    }
+
+    /// [`ModelParams::store_flat`] with each tensor's copy sharded across
+    /// `pool` (§Perf — the LocalSGD/SlowMo/CO2 collective write-back path).
+    /// The clock protocol is unchanged: one stamp per layer per logical
+    /// write, regardless of how many shards the stores split into.
+    pub fn store_flat_sharded(&self, flat: &[f32], worker: usize, step: usize, pool: &ShardPool) {
         let mut off = 0;
         for l in &self.layers {
             for t in &l.tensors {
                 let n = t.numel();
-                t.store_from(&flat[off..off + n]);
+                t.store_from_sharded(&flat[off..off + n], pool);
                 off += n;
             }
             l.clock.record(worker, step);

@@ -5,8 +5,12 @@
 //! updater threads use, so an optimizer step can race with incoming gossip
 //! exactly as in the paper (`x^{i,l} ← x̃^{i,l} − η ∇L(S_k, x̂^{i,l})`).
 
+use std::ops::Range;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
+use crate::tensor::shard::{DisjointMut, ShardPool};
 use crate::tensor::{AtomicTensor, Tensor};
 
 /// Learning-rate schedule. All schedules support a linear warmup prefix,
@@ -111,19 +115,30 @@ pub struct LayerOptimizer {
     /// AdamW bias-correction step count
     t: u64,
     /// reusable scratch (param snapshot / update vector) — §Perf: keeps the
-    /// per-layer step allocation-free after the first call
+    /// per-layer step allocation-free after the first call. Grown to the
+    /// layer's largest param once, never shrunk (no per-param resize churn).
     scratch: Vec<f32>,
     scratch2: Vec<f32>,
+    /// shard pool the update traversals run on (§Perf); the serial pool
+    /// reproduces the unsharded scalar path bit-for-bit
+    pool: Arc<ShardPool>,
 }
 
 impl LayerOptimizer {
     pub fn new(kind: OptimKind, param_sizes: &[usize]) -> Self {
+        LayerOptimizer::with_pool(kind, param_sizes, ShardPool::serial())
+    }
+
+    /// Like [`LayerOptimizer::new`], with the shard pool that
+    /// [`LayerOptimizer::step`]/[`LayerOptimizer::step_mix`]/
+    /// [`LayerOptimizer::compensate`] split their parameter traversals on.
+    pub fn with_pool(kind: OptimKind, param_sizes: &[usize], pool: Arc<ShardPool>) -> Self {
         let m = param_sizes.iter().map(|&n| vec![0.0; n]).collect();
         let v = match kind {
             OptimKind::AdamW { .. } => param_sizes.iter().map(|&n| vec![0.0; n]).collect(),
             _ => Vec::new(),
         };
-        LayerOptimizer { kind, m, v, t: 0, scratch: Vec::new(), scratch2: Vec::new() }
+        LayerOptimizer { kind, m, v, t: 0, scratch: Vec::new(), scratch2: Vec::new(), pool }
     }
 
     /// Checkpoint view of the optimizer's cross-step state.
@@ -171,20 +186,34 @@ impl LayerOptimizer {
         if lambda == 0.0 {
             return;
         }
+        // one scratch sized to the layer's largest param up front — §Perf:
+        // no `resize` churn inside the per-param loop
+        let max_n = params.iter().map(AtomicTensor::numel).max().unwrap_or(0);
+        if self.scratch.len() < max_n {
+            self.scratch.resize(max_n, 0.0);
+        }
+        let LayerOptimizer { scratch, pool, .. } = self;
         for ((p, g), xt) in params.iter().zip(grads.iter_mut()).zip(x_then) {
             debug_assert_eq!(g.data.len(), xt.data.len());
-            self.scratch.resize(p.numel(), 0.0);
-            p.load_into(&mut self.scratch);
-            for (k, gv) in g.data.iter_mut().enumerate() {
-                *gv += lambda * *gv * *gv * (self.scratch[k] - xt.data[k]);
-            }
+            let n = p.numel();
+            let x_now = &mut scratch[..n];
+            p.load_into_sharded(x_now, pool);
+            let xdm = DisjointMut::new(x_now);
+            let gdm = DisjointMut::new(&mut g.data);
+            pool.run(n, |r| {
+                // SAFETY: pool shards are disjoint ranges
+                let (x, gd) = unsafe { (xdm.slice(r.clone()), gdm.slice(r.clone())) };
+                for ((gv, &xv), &xtv) in gd.iter_mut().zip(x.iter()).zip(&xt.data[r]) {
+                    *gv += lambda * *gv * *gv * (xv - xtv);
+                }
+            });
         }
     }
 
     /// Apply one update to the shared parameter store for this layer.
     /// `grads[i]` matches `params.tensors[i]` elementwise.
     pub fn step(&mut self, params: &[AtomicTensor], grads: &[Tensor], lr: f32) {
-        self.step_with(params, grads, lr, |_, p, lr, u| p.sub_scaled(lr, u));
+        self.step_with(params, grads, lr, |_, p, lr, u, r| p.sub_scaled_range(r, lr, u));
     }
 
     /// Fused updater hot path (§Perf): like [`step`], but the final parameter
@@ -204,66 +233,106 @@ impl LayerOptimizer {
         push_frac: f32,
     ) {
         debug_assert_eq!(params.len(), peer.len());
-        self.step_with(params, grads, lr, |pi, p, lr, u| {
-            p.sub_scaled_then_mix_into(lr, u, &peer[pi], keep_frac, push_frac);
+        self.step_with(params, grads, lr, |pi, p, lr, u, r| {
+            p.sub_scaled_then_mix_range(r, lr, u, &peer[pi], keep_frac, push_frac);
         });
     }
 
     /// Compute each parameter's update vector (momentum / weight decay /
-    /// AdamW preconditioning) and hand it to `write(param_idx, param, lr, u)`
-    /// for the actual store — the writer decides whether the write is a plain
-    /// `sub_scaled` or the fused update+mix traversal.
-    fn step_with<W: FnMut(usize, &AtomicTensor, f32, &[f32])>(
+    /// AdamW preconditioning) and hand it to
+    /// `write(param_idx, param, lr, u, range)` for the actual store — the
+    /// writer decides whether the write is a plain `sub_scaled` or the fused
+    /// update+mix traversal.
+    ///
+    /// §Perf: the whole per-param body (momentum/moment math *and* the
+    /// store) runs per shard range on the pool, so the update vector for a
+    /// shard is computed and written back while it is still cache-hot.
+    /// `write` receives the range-aligned update slice (`u[j]` pairs with
+    /// element `range.start + j`) and may be called once per shard. The
+    /// arithmetic per element is unchanged, so any pool width is
+    /// bit-identical to the serial path.
+    fn step_with<W: Fn(usize, &AtomicTensor, f32, &[f32], Range<usize>) + Sync>(
         &mut self,
         params: &[AtomicTensor],
         grads: &[Tensor],
         lr: f32,
-        mut write: W,
+        write: W,
     ) {
         debug_assert_eq!(params.len(), grads.len());
-        self.t += 1;
-        match self.kind {
+        let LayerOptimizer { kind, m, v, t, scratch, scratch2, pool } = self;
+        *t += 1;
+        match *kind {
             OptimKind::Sgd { momentum, weight_decay } => {
                 for (pi, (p, g)) in params.iter().zip(grads).enumerate() {
-                    let buf = &mut self.m[pi];
+                    let n = p.numel();
                     if momentum > 0.0 {
                         // v = mu*v + g ; p -= lr * (v + wd*p)
-                        self.scratch.resize(p.numel(), 0.0);
-                        p.load_into(&mut self.scratch);
-                        for k in 0..buf.len() {
-                            buf[k] = momentum * buf[k] + g.data[k];
-                            self.scratch[k] = buf[k] + weight_decay * self.scratch[k];
+                        if scratch.len() < n {
+                            scratch.resize(n, 0.0);
                         }
-                        write(pi, p, lr, &self.scratch);
+                        let mdm = DisjointMut::new(&mut m[pi]);
+                        let sdm = DisjointMut::new(&mut scratch[..n]);
+                        pool.run(n, |r| {
+                            // SAFETY: pool shards are disjoint ranges
+                            let (buf, sc) =
+                                unsafe { (mdm.slice(r.clone()), sdm.slice(r.clone())) };
+                            p.load_range(r.clone(), sc);
+                            for (k, b) in buf.iter_mut().enumerate() {
+                                *b = momentum * *b + g.data[r.start + k];
+                                sc[k] = *b + weight_decay * sc[k];
+                            }
+                            write(pi, p, lr, sc, r);
+                        });
                     } else if weight_decay > 0.0 {
-                        self.scratch.resize(p.numel(), 0.0);
-                        p.load_into(&mut self.scratch);
-                        for k in 0..g.data.len() {
-                            self.scratch[k] = g.data[k] + weight_decay * self.scratch[k];
+                        if scratch.len() < n {
+                            scratch.resize(n, 0.0);
                         }
-                        write(pi, p, lr, &self.scratch);
+                        let sdm = DisjointMut::new(&mut scratch[..n]);
+                        pool.run(n, |r| {
+                            // SAFETY: pool shards are disjoint ranges
+                            let sc = unsafe { sdm.slice(r.clone()) };
+                            p.load_range(r.clone(), sc);
+                            for (k, x) in sc.iter_mut().enumerate() {
+                                *x = g.data[r.start + k] + weight_decay * *x;
+                            }
+                            write(pi, p, lr, sc, r);
+                        });
                     } else {
-                        write(pi, p, lr, &g.data);
+                        pool.run(n, |r| write(pi, p, lr, &g.data[r.clone()], r));
                     }
                 }
             }
             OptimKind::AdamW { beta1, beta2, eps, weight_decay } => {
-                let bc1 = 1.0 - beta1.powi(self.t as i32);
-                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                let bc1 = 1.0 - beta1.powi(*t as i32);
+                let bc2 = 1.0 - beta2.powi(*t as i32);
                 for (pi, (p, g)) in params.iter().zip(grads).enumerate() {
-                    let m = &mut self.m[pi];
-                    let v = &mut self.v[pi];
-                    self.scratch.resize(p.numel(), 0.0);
-                    p.load_into(&mut self.scratch);
-                    self.scratch2.resize(m.len(), 0.0);
-                    for k in 0..m.len() {
-                        m[k] = beta1 * m[k] + (1.0 - beta1) * g.data[k];
-                        v[k] = beta2 * v[k] + (1.0 - beta2) * g.data[k] * g.data[k];
-                        let mhat = m[k] / bc1;
-                        let vhat = v[k] / bc2;
-                        self.scratch2[k] = mhat / (vhat.sqrt() + eps) + weight_decay * self.scratch[k];
+                    let n = p.numel();
+                    if scratch.len() < n {
+                        scratch.resize(n, 0.0);
                     }
-                    write(pi, p, lr, &self.scratch2);
+                    if scratch2.len() < n {
+                        scratch2.resize(n, 0.0);
+                    }
+                    let mdm = DisjointMut::new(&mut m[pi]);
+                    let vdm = DisjointMut::new(&mut v[pi]);
+                    let sdm = DisjointMut::new(&mut scratch[..n]);
+                    let s2dm = DisjointMut::new(&mut scratch2[..n]);
+                    pool.run(n, |r| {
+                        // SAFETY: pool shards are disjoint ranges
+                        let (mb, vb) = unsafe { (mdm.slice(r.clone()), vdm.slice(r.clone())) };
+                        let (sc, sc2) =
+                            unsafe { (sdm.slice(r.clone()), s2dm.slice(r.clone())) };
+                        p.load_range(r.clone(), sc);
+                        for k in 0..mb.len() {
+                            let gk = g.data[r.start + k];
+                            mb[k] = beta1 * mb[k] + (1.0 - beta1) * gk;
+                            vb[k] = beta2 * vb[k] + (1.0 - beta2) * gk * gk;
+                            let mhat = mb[k] / bc1;
+                            let vhat = vb[k] / bc2;
+                            sc2[k] = mhat / (vhat.sqrt() + eps) + weight_decay * sc[k];
+                        }
+                        write(pi, p, lr, sc2, r);
+                    });
                 }
             }
         }
@@ -419,6 +488,66 @@ mod tests {
         for k in 0..3 {
             let want = unchanged[k] + lambda * unchanged[k] * unchanged[k] * (x_now[k] - 0.0);
             assert!((g[0].data[k] - want).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    /// The pooled optimizer paths must be **bit-identical** to the serial
+    /// ones for every optimizer family — plain step, fused step_mix, and DC
+    /// compensation — at a prime size above threads·chunk so the last shard
+    /// is ragged.
+    #[test]
+    fn pooled_optimizer_matches_serial_bit_for_bit() {
+        let n = 5003;
+        let mk = |seed: u32| -> Vec<f32> {
+            let mut s = seed;
+            (0..n)
+                .map(|_| {
+                    s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+                    (s >> 8) as f32 / (1 << 24) as f32 - 0.5
+                })
+                .collect()
+        };
+        let init = mk(1);
+        let peer_init = mk(2);
+        let g = Tensor::from_vec(&[n], mk(3));
+        for kind in [
+            OptimKind::sgd(0.0, 0.0),
+            OptimKind::sgd(0.9, 0.0),
+            OptimKind::sgd(0.9, 5e-4),
+            OptimKind::sgd(0.0, 1e-2),
+            OptimKind::adamw(0.01),
+        ] {
+            let run = |pool: Arc<ShardPool>| {
+                let p = store(&init);
+                let peer = store(&peer_init);
+                let mut opt = LayerOptimizer::with_pool(kind.clone(), &[n], pool);
+                let mut gc = [g.clone()];
+                opt.compensate(
+                    std::slice::from_ref(&p),
+                    &mut gc,
+                    0.04,
+                    &[Tensor::zeros(&[n])],
+                );
+                for _ in 0..2 {
+                    opt.step_mix(
+                        std::slice::from_ref(&p),
+                        &gc,
+                        0.1,
+                        std::slice::from_ref(&peer),
+                        0.6,
+                        0.4,
+                    );
+                }
+                opt.step(std::slice::from_ref(&p), &gc, 0.05);
+                let bits =
+                    |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+                (
+                    bits(&p.state_dict()),
+                    bits(&peer.state_dict()),
+                    bits(&gc[0].data),
+                )
+            };
+            assert_eq!(run(ShardPool::serial()), run(ShardPool::new(4)), "{kind:?}");
         }
     }
 

@@ -99,6 +99,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Shard-pool lanes for the parameter hot path (§Perf): optimizer
+    /// steps, gossip mixes and collective write-backs split their store
+    /// traversals across `n` threads. `1` (the default) keeps the serial
+    /// path, bit-identical to the unsharded behavior; validation rejects 0.
+    pub fn update_threads(mut self, n: usize) -> SessionBuilder {
+        self.cfg.update_threads = n;
+        self
+    }
+
     /// Write a `resilience::checkpoint` every `every` steps (0 disables).
     /// Snapshots land in `step-XXXXXX` subdirectories of the checkpoint dir
     /// (see [`SessionBuilder::checkpoint_dir`]); resume one with

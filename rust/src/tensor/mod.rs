@@ -21,12 +21,24 @@
 //! the observed per-layer delay τ from clock snapshots — see
 //! [`clock`] for the contract. (The seed-era per-tensor `version` counter
 //! was folded into the layer clock.)
+//!
+//! **§Perf** — every [`AtomicTensor`] traversal is structured as
+//! chunk-into-scratch → plain-f32 kernel → store-back (LLVM autovectorizes
+//! the arithmetic on the stack scratch; it never vectorizes per-element
+//! atomic ops), and each op has a `*_sharded` twin that splits the traversal
+//! into disjoint index ranges on a [`shard::ShardPool`]. Disjoint shards over
+//! lock-free stores are race-free by construction; with a serial pool (or
+//! below the engage threshold) the sharded twins are bit-identical to the
+//! scalar ops.
 
 pub mod clock;
+pub mod shard;
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use clock::LayerClock;
+use shard::{DisjointMut, ShardPool, CHUNK};
 
 /// Plain host tensor: row-major f32 data plus shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -121,28 +133,76 @@ impl AtomicTensor {
         self.data.len()
     }
 
+    /// Relaxed-read `range` of the tensor into `out` (`out[j]` gets element
+    /// `range.start + j`). The copy stays per-element atomic loads; the
+    /// arithmetic kernels below do their math on the plain-f32 copy.
+    pub(crate) fn load_range(&self, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        for (o, a) in out.iter_mut().zip(&self.data[range]) {
+            *o = f32::from_bits(a.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Relaxed-write `src` over `range` of the tensor (inverse of
+    /// [`AtomicTensor::load_range`]).
+    pub(crate) fn store_range(&self, range: Range<usize>, src: &[f32]) {
+        debug_assert_eq!(src.len(), range.len());
+        for (a, &s) in self.data[range].iter().zip(src.iter()) {
+            a.store(s.to_bits(), Ordering::Relaxed);
+        }
+    }
+
     /// Relaxed-read the whole tensor into `out`. A concurrent writer may be
     /// interleaved — the result can mix old and new elements. That tearing is
     /// the *intended* semantics (the forward pass "might use those updates
     /// directly", Section 3).
     pub fn load_into(&self, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.data.len());
-        for (o, a) in out.iter_mut().zip(self.data.iter()) {
-            *o = f32::from_bits(a.load(Ordering::Relaxed));
-        }
+        self.load_range(0..self.data.len(), out);
+    }
+
+    /// [`AtomicTensor::load_into`] with the copy sharded across `pool`.
+    pub fn load_into_sharded(&self, out: &mut [f32], pool: &ShardPool) {
+        debug_assert_eq!(out.len(), self.data.len());
+        let dst = DisjointMut::new(out);
+        pool.run(self.data.len(), |r| {
+            // SAFETY: pool shards are disjoint ranges
+            self.load_range(r.clone(), unsafe { dst.slice(r) });
+        });
     }
 
     pub fn snapshot(&self) -> Tensor {
-        let mut t = Tensor::zeros(&self.shape);
-        self.load_into(&mut t.data);
-        t
+        Tensor { shape: self.shape.clone(), data: self.state_dict() }
     }
 
     /// Relaxed-overwrite the whole tensor from `src`.
     pub fn store_from(&self, src: &[f32]) {
         debug_assert_eq!(src.len(), self.data.len());
-        for (a, &s) in self.data.iter().zip(src.iter()) {
-            a.store(s.to_bits(), Ordering::Relaxed);
+        self.store_range(0..self.data.len(), src);
+    }
+
+    /// [`AtomicTensor::store_from`] with the copy sharded across `pool`.
+    pub fn store_from_sharded(&self, src: &[f32], pool: &ShardPool) {
+        debug_assert_eq!(src.len(), self.data.len());
+        pool.run(self.data.len(), |r| self.store_range(r.clone(), &src[r]));
+    }
+
+    /// `p -= lr * g` over `range`; `grad` is range-aligned
+    /// (`grad[j]` pairs with element `range.start + j`).
+    pub(crate) fn sub_scaled_range(&self, range: Range<usize>, lr: f32, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), range.len());
+        let mut buf = [0.0f32; CHUNK];
+        let (start, end) = (range.start, range.end);
+        let mut i = start;
+        while i < end {
+            let len = CHUNK.min(end - i);
+            let b = &mut buf[..len];
+            self.load_range(i..i + len, b);
+            for (x, &g) in b.iter_mut().zip(&grad[i - start..i - start + len]) {
+                *x -= lr * g;
+            }
+            self.store_range(i..i + len, b);
+            i += len;
         }
     }
 
@@ -151,9 +211,37 @@ impl AtomicTensor {
     /// other (the paper's explicit design choice).
     pub fn sub_scaled(&self, lr: f32, grad: &[f32]) {
         debug_assert_eq!(grad.len(), self.data.len());
-        for (a, &g) in self.data.iter().zip(grad.iter()) {
-            let cur = f32::from_bits(a.load(Ordering::Relaxed));
-            a.store((cur - lr * g).to_bits(), Ordering::Relaxed);
+        self.sub_scaled_range(0..self.data.len(), lr, grad);
+    }
+
+    /// [`AtomicTensor::sub_scaled`] with the traversal sharded across `pool`.
+    pub fn sub_scaled_sharded(&self, lr: f32, grad: &[f32], pool: &ShardPool) {
+        debug_assert_eq!(grad.len(), self.data.len());
+        pool.run(self.data.len(), |r| self.sub_scaled_range(r.clone(), lr, &grad[r]));
+    }
+
+    /// `p = self_frac * p + peer_frac * incoming` over `range`; `incoming`
+    /// is range-aligned.
+    pub(crate) fn mix_range(
+        &self,
+        range: Range<usize>,
+        self_frac: f32,
+        peer_frac: f32,
+        incoming: &[f32],
+    ) {
+        debug_assert_eq!(incoming.len(), range.len());
+        let mut buf = [0.0f32; CHUNK];
+        let (start, end) = (range.start, range.end);
+        let mut i = start;
+        while i < end {
+            let len = CHUNK.min(end - i);
+            let b = &mut buf[..len];
+            self.load_range(i..i + len, b);
+            for (x, &inc) in b.iter_mut().zip(&incoming[i - start..i - start + len]) {
+                *x = self_frac * *x + peer_frac * inc;
+            }
+            self.store_range(i..i + len, b);
+            i += len;
         }
     }
 
@@ -161,9 +249,55 @@ impl AtomicTensor {
     /// `p = self_frac * p + peer_frac * incoming` elementwise.
     pub fn mix_from(&self, self_frac: f32, peer_frac: f32, incoming: &[f32]) {
         debug_assert_eq!(incoming.len(), self.data.len());
-        for (a, &inc) in self.data.iter().zip(incoming.iter()) {
-            let cur = f32::from_bits(a.load(Ordering::Relaxed));
-            a.store((self_frac * cur + peer_frac * inc).to_bits(), Ordering::Relaxed);
+        self.mix_range(0..self.data.len(), self_frac, peer_frac, incoming);
+    }
+
+    /// [`AtomicTensor::mix_from`] with the traversal sharded across `pool`.
+    pub fn mix_from_sharded(
+        &self,
+        self_frac: f32,
+        peer_frac: f32,
+        incoming: &[f32],
+        pool: &ShardPool,
+    ) {
+        debug_assert_eq!(incoming.len(), self.data.len());
+        pool.run(self.data.len(), |r| {
+            self.mix_range(r.clone(), self_frac, peer_frac, &incoming[r]);
+        });
+    }
+
+    /// Fused update+mix over `range` (see
+    /// [`AtomicTensor::sub_scaled_then_mix_into`]); `update` is
+    /// range-aligned.
+    pub(crate) fn sub_scaled_then_mix_range(
+        &self,
+        range: Range<usize>,
+        lr: f32,
+        update: &[f32],
+        peer: &AtomicTensor,
+        keep_frac: f32,
+        push_frac: f32,
+    ) {
+        debug_assert_eq!(update.len(), range.len());
+        debug_assert_eq!(peer.data.len(), self.data.len());
+        let mut buf = [0.0f32; CHUNK];
+        let mut pbuf = [0.0f32; CHUNK];
+        let (start, end) = (range.start, range.end);
+        let mut i = start;
+        while i < end {
+            let len = CHUNK.min(end - i);
+            let (b, pb) = (&mut buf[..len], &mut pbuf[..len]);
+            self.load_range(i..i + len, b);
+            for (x, &u) in b.iter_mut().zip(&update[i - start..i - start + len]) {
+                *x -= lr * u;
+            }
+            self.store_range(i..i + len, b);
+            peer.load_range(i..i + len, pb);
+            for (p, &new) in pb.iter_mut().zip(b.iter()) {
+                *p = keep_frac * *p + push_frac * new;
+            }
+            peer.store_range(i..i + len, pb);
+            i += len;
         }
     }
 
@@ -184,22 +318,46 @@ impl AtomicTensor {
         push_frac: f32,
     ) {
         debug_assert_eq!(update.len(), self.data.len());
-        debug_assert_eq!(peer.data.len(), self.data.len());
-        for ((a, &u), pa) in self.data.iter().zip(update.iter()).zip(peer.data.iter()) {
-            let new = f32::from_bits(a.load(Ordering::Relaxed)) - lr * u;
-            a.store(new.to_bits(), Ordering::Relaxed);
-            let pcur = f32::from_bits(pa.load(Ordering::Relaxed));
-            pa.store((keep_frac * pcur + push_frac * new).to_bits(), Ordering::Relaxed);
-        }
+        self.sub_scaled_then_mix_range(
+            0..self.data.len(),
+            lr,
+            update,
+            peer,
+            keep_frac,
+            push_frac,
+        );
+    }
+
+    /// [`AtomicTensor::sub_scaled_then_mix_into`] with the traversal sharded
+    /// across `pool`.
+    pub fn sub_scaled_then_mix_sharded(
+        &self,
+        lr: f32,
+        update: &[f32],
+        peer: &AtomicTensor,
+        keep_frac: f32,
+        push_frac: f32,
+        pool: &ShardPool,
+    ) {
+        debug_assert_eq!(update.len(), self.data.len());
+        pool.run(self.data.len(), |r| {
+            self.sub_scaled_then_mix_range(
+                r.clone(),
+                lr,
+                &update[r],
+                peer,
+                keep_frac,
+                push_frac,
+            );
+        });
     }
 
     /// Checkpoint view of the store: the current values as a plain host
     /// vector (a relaxed snapshot, like [`AtomicTensor::snapshot`] without
-    /// the shape).
+    /// the shape). Collected directly from the relaxed loads — no
+    /// zero-fill-then-overwrite double write.
     pub fn state_dict(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.data.len()];
-        self.load_into(&mut out);
-        out
+        self.data.iter().map(|a| f32::from_bits(a.load(Ordering::Relaxed))).collect()
     }
 
     /// Restore from a [`AtomicTensor::state_dict`] snapshot. Like every
@@ -209,18 +367,43 @@ impl AtomicTensor {
         self.store_from(values);
     }
 
+    /// Element-wise average with the other stores over `range`.
+    pub(crate) fn average_range(&self, range: Range<usize>, others: &[&AtomicTensor]) {
+        let denom = (others.len() + 1) as f32;
+        let mut acc = [0.0f32; CHUNK];
+        let mut tmp = [0.0f32; CHUNK];
+        let (start, end) = (range.start, range.end);
+        let mut i = start;
+        while i < end {
+            let len = CHUNK.min(end - i);
+            let (a, t) = (&mut acc[..len], &mut tmp[..len]);
+            self.load_range(i..i + len, a);
+            for o in others {
+                o.load_range(i..i + len, t);
+                for (x, &y) in a.iter_mut().zip(t.iter()) {
+                    *x += y;
+                }
+            }
+            for x in a.iter_mut() {
+                *x /= denom;
+            }
+            self.store_range(i..i + len, a);
+            i += len;
+        }
+    }
+
     /// Element-wise average with `k` other parameter stores (DDP all-reduce
     /// endpoint; AD-PSGD pairwise averaging uses the 2-way case).
     pub fn average_with(&self, others: &[&AtomicTensor]) {
-        let n = self.data.len();
-        let denom = (others.len() + 1) as f32;
-        for i in 0..n {
-            let mut acc = f32::from_bits(self.data[i].load(Ordering::Relaxed));
-            for o in others {
-                acc += f32::from_bits(o.data[i].load(Ordering::Relaxed));
-            }
-            self.data[i].store((acc / denom).to_bits(), Ordering::Relaxed);
-        }
+        debug_assert!(others.iter().all(|o| o.data.len() == self.data.len()));
+        self.average_range(0..self.data.len(), others);
+    }
+
+    /// [`AtomicTensor::average_with`] with the traversal sharded across
+    /// `pool`.
+    pub fn average_with_sharded(&self, others: &[&AtomicTensor], pool: &ShardPool) {
+        debug_assert!(others.iter().all(|o| o.data.len() == self.data.len()));
+        pool.run(self.data.len(), |r| self.average_range(r, others));
     }
 }
 
@@ -344,6 +527,108 @@ mod tests {
         let c = AtomicTensor::from_tensor(&Tensor::from_vec(&[2], vec![3.0, 3.0]));
         a.average_with(&[&b, &c]);
         assert_eq!(a.snapshot().data, vec![3.0, 3.0]);
+    }
+
+    /// Deterministic pseudo-random fill (no rand crate in the offline set).
+    fn lcg_data(n: usize, mut seed: u32) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+                (seed >> 8) as f32 / (1 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    /// The sharded twins must be **bit-identical** to the scalar ops for
+    /// every traversal, exercised at the chunk boundaries: below one chunk,
+    /// exactly one chunk, and a prime above threads·chunk (so the last shard
+    /// is ragged). Elementwise math is independent per element, so chunking
+    /// and sharding may not change a single bit.
+    #[test]
+    fn sharded_ops_bit_identical_to_scalar_at_chunk_boundaries() {
+        let pool = shard::ShardPool::new(4);
+        for n in [shard::CHUNK - 3, shard::CHUNK, 5003] {
+            let init = lcg_data(n, 1);
+            let grad = lcg_data(n, 2);
+            let peer_init = lcg_data(n, 3);
+            let pair = || {
+                (
+                    AtomicTensor::from_tensor(&Tensor::from_vec(&[n], init.clone())),
+                    AtomicTensor::from_tensor(&Tensor::from_vec(&[n], init.clone())),
+                )
+            };
+            let bits = |t: &AtomicTensor| -> Vec<u32> {
+                t.state_dict().iter().map(|v| v.to_bits()).collect()
+            };
+
+            let (a, b) = pair();
+            a.sub_scaled(0.1, &grad);
+            b.sub_scaled_sharded(0.1, &grad, &pool);
+            assert_eq!(bits(&a), bits(&b), "sub_scaled n={n}");
+
+            let (a, b) = pair();
+            a.mix_from(0.75, 0.25, &grad);
+            b.mix_from_sharded(0.75, 0.25, &grad, &pool);
+            assert_eq!(bits(&a), bits(&b), "mix_from n={n}");
+
+            let (a, b) = pair();
+            let pa = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], peer_init.clone()));
+            let pb = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], peer_init.clone()));
+            a.sub_scaled_then_mix_into(0.1, &grad, &pa, 0.6, 0.4);
+            b.sub_scaled_then_mix_sharded(0.1, &grad, &pb, 0.6, 0.4, &pool);
+            assert_eq!(bits(&a), bits(&b), "fused self n={n}");
+            assert_eq!(bits(&pa), bits(&pb), "fused peer n={n}");
+
+            let (a, b) = pair();
+            let o1 = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], grad.clone()));
+            let o2 = AtomicTensor::from_tensor(&Tensor::from_vec(&[n], peer_init.clone()));
+            a.average_with(&[&o1, &o2]);
+            b.average_with_sharded(&[&o1, &o2], &pool);
+            assert_eq!(bits(&a), bits(&b), "average_with n={n}");
+
+            let (a, b) = pair();
+            a.store_from(&grad);
+            b.store_from_sharded(&grad, &pool);
+            assert_eq!(bits(&a), bits(&b), "store_from n={n}");
+
+            let mut out_a = vec![0.0f32; n];
+            let mut out_b = vec![0.0f32; n];
+            a.load_into(&mut out_a);
+            b.load_into_sharded(&mut out_b, &pool);
+            assert_eq!(out_a, out_b, "load_into n={n}");
+        }
+    }
+
+    /// Sharding lives strictly *below* the clock protocol: concurrent
+    /// writers driving sharded stores still stamp the layer clock exactly
+    /// once per logical write, so the version count equals the write count.
+    #[test]
+    fn sharded_concurrent_writers_stamp_clock_once_per_write() {
+        let n = 4 * shard::CHUNK + 7;
+        let lp = Arc::new(LayerParams::new(vec![AtomicTensor::zeros(&[n])]));
+        let pool = shard::ShardPool::new(3);
+        let writes_per_thread = 25;
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let lp = Arc::clone(&lp);
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let vals = vec![w as f32 + 1.0; n];
+                    for step in 0..writes_per_thread {
+                        lp.tensors[0].store_from_sharded(&vals, &pool);
+                        lp.clock.record(w, step);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            lp.version(),
+            4 * writes_per_thread as u64,
+            "one stamp per logical write, no extra stamps from sharding"
+        );
+        for v in lp.tensors[0].state_dict() {
+            assert!((1.0..=4.0).contains(&v), "v={v}");
+        }
     }
 
     #[test]

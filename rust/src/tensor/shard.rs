@@ -1,0 +1,304 @@
+//! **§Perf** — the shard pool behind the sharded parameter hot path.
+//!
+//! Every parameter-store traversal ([`AtomicTensor`](super::AtomicTensor)
+//! update/mix/average kernels, `LayerOptimizer::step_with`/`compensate`) used
+//! to be one sequential scalar loop over per-element relaxed atomics. The
+//! [`ShardPool`] splits any traversal above a size threshold into disjoint
+//! index ranges and runs them on a small set of persistent helper threads —
+//! race-free *by construction*: the shards never overlap, and the underlying
+//! stores are already lock-free `AtomicU32` slices, so concurrent writers
+//! from other pools keep the usual Hogwild overwrite semantics.
+//!
+//! The pool is hand-rolled on `std::thread` + `std::sync::mpsc` (the repo's
+//! zero-dependency style — no rayon): one persistent helper thread per extra
+//! `update_threads`, a channel per helper, and a per-call ack channel the
+//! caller blocks on. Shard 0 always runs on the calling thread, so
+//! `update_threads = 1` (the default) is *exactly* the old single-threaded
+//! behavior — same arithmetic per element in the same order, bit-identical.
+//!
+//! Sizing: work is split at [`CHUNK`]-element granularity (the same chunk the
+//! kernels copy through stack scratch so LLVM can autovectorize the f32
+//! arithmetic), and the pool only engages once a traversal spans at least two
+//! chunks — below that the dispatch overhead dwarfs the loop.
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Elements per shard-kernel chunk: 4 KiB of f32 stack scratch, small enough
+/// to stay cache-hot, large enough for the autovectorized inner loops to
+/// amortize the copy in/out of the atomic store.
+pub const CHUNK: usize = 1024;
+
+/// A unit of sharded work shipped to a helper thread: an erased closure
+/// (`call` reconstructs the concrete `&F` from `ctx`) plus the index range it
+/// owns and the ack channel the dispatching caller blocks on.
+struct Job {
+    call: unsafe fn(*const (), Range<usize>),
+    ctx: *const (),
+    range: Range<usize>,
+    done: Sender<()>,
+}
+
+// SAFETY: `ctx` points at an `F: Sync` on the dispatching caller's stack
+// (enforced by the `ShardPool::run` bound), and the caller blocks until every
+// job acked or died — the pointee outlives every use and may be shared.
+unsafe impl Send for Job {}
+
+/// Reconstruct the concrete closure behind a [`Job`]'s erased context pointer
+/// and run it over the job's range.
+///
+/// # Safety
+/// `ctx` must point at a live `F` (guaranteed by `run` blocking on the acks).
+unsafe fn call_thunk<F: Fn(Range<usize>) + Sync>(ctx: *const (), range: Range<usize>) {
+    (*ctx.cast::<F>())(range);
+}
+
+/// Persistent shard pool (see module docs). One pool is shared per
+/// [`Shared`](crate::coordinator::Shared) coordinator — concurrent `run`
+/// calls from different worker/updater threads interleave their jobs on the
+/// helpers; each call only waits for its own acks.
+pub struct ShardPool {
+    /// one channel per persistent helper thread (empty ⇒ serial pool)
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// A pool with `update_threads` total lanes: the calling thread plus
+    /// `update_threads − 1` persistent helpers. `new(1)` spawns nothing and
+    /// behaves exactly like [`ShardPool::serial`].
+    pub fn new(update_threads: usize) -> Arc<ShardPool> {
+        let helpers = update_threads.saturating_sub(1);
+        let mut senders = Vec::with_capacity(helpers);
+        let mut handles = Vec::with_capacity(helpers);
+        for i in 0..helpers {
+            let (tx, rx) = channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("shard-{i}"))
+                .spawn(move || {
+                    while let Ok(Job { call, ctx, range, done }) = rx.recv() {
+                        // SAFETY: the dispatching caller blocks until this
+                        // job acks (or its sender drops on panic), so `ctx`
+                        // is live for the duration of the call.
+                        unsafe { call(ctx, range) };
+                        let _ = done.send(());
+                    }
+                })
+                .expect("spawn shard-pool helper thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Arc::new(ShardPool { senders, handles })
+    }
+
+    /// The zero-helper pool: every `run` executes inline on the caller.
+    /// Used wherever sharding is not wired up (tests, default constructors).
+    pub fn serial() -> Arc<ShardPool> {
+        ShardPool::new(1)
+    }
+
+    /// Total lanes (caller + helpers) — the effective `update_threads`.
+    pub fn threads(&self) -> usize {
+        self.senders.len() + 1
+    }
+
+    /// How many shards an `n`-element traversal splits into: 1 below the
+    /// 2·[`CHUNK`] engage threshold, otherwise capped by both the lane count
+    /// and the number of whole chunks (so no shard is smaller than a chunk).
+    fn shards_for(&self, n: usize) -> usize {
+        if self.senders.is_empty() || n < 2 * CHUNK {
+            return 1;
+        }
+        self.threads().min(n / CHUNK)
+    }
+
+    /// Run `f` over `0..n`, split into disjoint contiguous ranges across the
+    /// pool's lanes. Shard 0 runs on the calling thread; the call returns
+    /// only after every shard finished, so `f` may borrow from the caller's
+    /// stack. Serial pools (and traversals below the engage threshold) run
+    /// `f(0..n)` inline — bit-identical to the unsharded loop.
+    ///
+    /// Panics if a helper died mid-job (a shard closure panicked): the
+    /// traversal may be partially applied, which is indistinguishable from a
+    /// lost lock-free update but must not pass silently.
+    pub fn run<F: Fn(Range<usize>) + Sync>(&self, n: usize, f: F) {
+        let shards = self.shards_for(n);
+        if shards <= 1 {
+            f(0..n);
+            return;
+        }
+        let per = n.div_ceil(shards);
+        let (ack_tx, ack_rx) = channel();
+        let ctx: *const () = (&f as *const F).cast();
+        let mut pending = 0usize;
+        for s in 1..shards {
+            let range = (s * per)..((s + 1) * per).min(n);
+            let job = Job { call: call_thunk::<F>, ctx, range, done: ack_tx.clone() };
+            match self.senders[(s - 1) % self.senders.len()].send(job) {
+                Ok(()) => pending += 1,
+                // helper already gone (its receiver dropped): its shard must
+                // still execute exactly once — run it inline
+                Err(dead) => f(dead.0.range),
+            }
+        }
+        drop(ack_tx);
+        f(0..per.min(n));
+        for _ in 0..pending {
+            if ack_rx.recv().is_err() {
+                panic!("shard-pool helper died mid-traversal (shard closure panicked)");
+            }
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // closing the channels ends each helper's recv loop
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A `&mut [T]` that can be carved into **disjoint** sub-slices from inside
+/// the `Fn` shard closures (a plain `&mut` capture would make the closure
+/// `FnMut` and un-sharable). The shard ranges handed out by
+/// [`ShardPool::run`] never overlap, which is exactly the aliasing guarantee
+/// [`DisjointMut::slice`] needs — see its safety contract.
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: shard closures on different threads only ever touch disjoint
+// ranges (the `slice` contract), so sharing the wrapper is as safe as
+// handing each thread its own split_at_mut half.
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    /// Wrap a mutable slice for disjoint-range access from shard closures.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// The wrapped slice's length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the wrapped slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `range` of the wrapped slice as `&mut`.
+    ///
+    /// # Safety
+    /// Concurrent callers must pass **non-overlapping** in-bounds ranges —
+    /// the pool's shard ranges satisfy this by construction. Two overlapping
+    /// `slice` calls alias a `&mut` and are undefined behavior.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.end <= self.len, "shard range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Collect the ranges a run hands out and check they tile 0..n exactly.
+    fn cover(pool: &ShardPool, n: usize) -> Vec<Range<usize>> {
+        let ranges = std::sync::Mutex::new(Vec::new());
+        pool.run(n, |r| ranges.lock().unwrap().push(r));
+        let mut out = ranges.into_inner().unwrap();
+        out.sort_by_key(|r| r.start);
+        out
+    }
+
+    #[test]
+    fn serial_pool_runs_inline_in_one_range() {
+        let pool = ShardPool::serial();
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(cover(&pool, 5000), vec![0..5000]);
+    }
+
+    #[test]
+    fn shards_tile_the_range_exactly_once() {
+        let pool = ShardPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for n in [0, 1, CHUNK - 1, CHUNK, 2 * CHUNK - 1, 2 * CHUNK, 5003, 4 * CHUNK + 7] {
+            let ranges = cover(&pool, n);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap/overlap at n={n}");
+                assert!(r.end > r.start, "empty shard at n={n}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..{n}");
+            if n < 2 * CHUNK {
+                assert_eq!(ranges.len(), 1, "below threshold must stay serial (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn every_element_visited_exactly_once() {
+        let pool = ShardPool::new(3);
+        let n = 3 * CHUNK + 41;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(n, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_mut_writes_land_per_shard() {
+        let pool = ShardPool::new(4);
+        let n = 4 * CHUNK;
+        let mut data = vec![0u32; n];
+        let dm = DisjointMut::new(&mut data);
+        pool.run(n, |r| {
+            // SAFETY: pool shards are disjoint
+            let chunk = unsafe { dm.slice(r.clone()) };
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (r.start + j) as u32;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn pool_survives_many_concurrent_callers() {
+        // several "updater threads" share one pool, like Shared does
+        let pool = ShardPool::new(2);
+        let n = 4 * CHUNK;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let total = AtomicUsize::new(0);
+                        pool.run(n, |r| {
+                            total.fetch_add(r.len(), Ordering::Relaxed);
+                        });
+                        assert_eq!(total.load(Ordering::Relaxed), n);
+                    }
+                });
+            }
+        });
+    }
+}
