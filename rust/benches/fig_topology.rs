@@ -1,0 +1,197 @@
+//! **Topology protocol** — flat gossip vs the sharded parameter-server
+//! family vs hierarchical two-tier gossip, swept over the same simulated
+//! link-latency grid as `fig_delay_robustness`.
+//!
+//! Four configurations share one workload and budget:
+//!
+//! * `flat`    — LayUp on the flat topology (the repo's default path);
+//! * `ps:N`    — ASGD-PS: trainers push per-layer grads to N server shards;
+//! * `ps:N+dc` — DC-ASGD-PS: the shards delay-compensate stale gradients
+//!               with `λ·g⊙g⊙(x_now − x_then)` before applying;
+//! * `hier:G`  — HierGossip: instant intra-group push-sum, leader-to-leader
+//!               fabric exchange every `sync_period` steps.
+//!
+//! Each also runs once on the instant (shared-memory) fabric — the
+//! zero-delay reference proving the budget completes on both transports.
+//! The table reports wall time, loss at budget, delivered staleness and the
+//! PS counters; the paper-relevant separation is DC-ASGD-PS beating ASGD-PS
+//! on loss-at-budget once the links carry non-zero delay.
+//!
+//! Exit is non-zero when any parameter-server run reports `stalled = true`
+//! (a shard died and trainers waited out the stall timeout) — the CI
+//! topology-smoke job relies on this.
+//!
+//! Environment knobs:
+//!   LAYUP_LATENCIES  one-way seconds (default 0,0.001,0.005)
+//!   LAYUP_SHARDS     PS server shards (default 1)
+//!   LAYUP_GROUPS     hier groups (default 2)
+//!   LAYUP_STEPS / LAYUP_WORKERS / LAYUP_SEEDS as usual
+
+#[path = "common.rs"]
+mod common;
+
+use layup::comm::{FabricSpec, LatencyDist};
+use layup::config::{Algorithm, TrainConfig};
+use layup::metrics::RunSummary;
+use layup::topology::roles::TopologySpec;
+use layup::util::json::{arr, num, obj, s, Json};
+
+/// One swept configuration: algorithm + topology, labeled for the tables.
+struct TopoCase {
+    label: &'static str,
+    algorithm: Algorithm,
+    cluster: TopologySpec,
+}
+
+fn cases(shards: usize, groups: usize) -> Vec<TopoCase> {
+    vec![
+        TopoCase { label: "flat", algorithm: Algorithm::LayUp, cluster: TopologySpec::Flat },
+        TopoCase {
+            label: "asgd-ps",
+            algorithm: Algorithm::AsgdPs,
+            cluster: TopologySpec::Ps { shards },
+        },
+        TopoCase {
+            label: "dcasgd-ps",
+            algorithm: Algorithm::DcAsgdPs,
+            cluster: TopologySpec::Ps { shards },
+        },
+        TopoCase {
+            label: "hier-gossip",
+            algorithm: Algorithm::HierGossip,
+            cluster: TopologySpec::Hier { groups },
+        },
+    ]
+}
+
+/// The topology row: the stable `summary_row` vocabulary plus the PS/role
+/// counters this bench exists to track (append-only, like the base row).
+fn topo_row(label: &str, sum: &RunSummary) -> Json {
+    let mut row = match common::summary_row(label, sum) {
+        Json::Obj(m) => m,
+        _ => unreachable!("summary_row returns an object"),
+    };
+    let ps = &sum.stats.ps;
+    row.insert("ps_shards".into(), num(ps.shards as f64));
+    row.insert("ps_grad_pushes".into(), num(ps.grad_pushes as f64));
+    row.insert("ps_param_pulls".into(), num(ps.param_pulls as f64));
+    row.insert("stalled".into(), Json::Bool(sum.stats.recovery.stalled));
+    Json::Obj(row)
+}
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 48);
+    let workers = common::workers();
+    let shards = common::env_usize("LAYUP_SHARDS", 1).max(1);
+    let groups = common::env_usize("LAYUP_GROUPS", 2).clamp(2, workers);
+    let latencies = common::env_latencies("0,0.001,0.005");
+    assert!(
+        workers > shards + 1,
+        "need at least 2 trainers: LAYUP_WORKERS={workers} LAYUP_SHARDS={shards}"
+    );
+
+    println!(
+        "fig: topology protocol — mlpnet18, {workers} workers, {steps} steps, \
+         ps:{shards}, hier:{groups}"
+    );
+    common::hr();
+    println!(
+        "{:<12} {:>8} {:>9} {:>10} {:>10} {:>9} {:>8}",
+        "topology", "lat (ms)", "wall (s)", "loss@bud", "staleness", "pushes", "stalled"
+    );
+
+    let mut summary_rows: Vec<Json> = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut any_stalled = false;
+    // loss-at-budget per (case, latency) for the DC vs plain comparison
+    let mut loss_at: Vec<(String, f64, f64)> = Vec::new();
+
+    for case in cases(shards, groups) {
+        for (li, fabric) in std::iter::once(None)
+            .chain(latencies.iter().copied().map(Some))
+            .enumerate()
+        {
+            let mut cfg: TrainConfig = common::vision_cfg("mlpnet18", case.algorithm, steps);
+            cfg.cluster = case.cluster;
+            cfg.eval_every = (steps / 6).max(1);
+            let (fab_label, lat) = match fabric {
+                // the instant fabric run: both-transports acceptance proof
+                None => (String::from("instant"), -1.0),
+                Some(lat) => {
+                    cfg.fabric = FabricSpec::Sim {
+                        latency: LatencyDist::Constant(lat),
+                        bandwidth_bytes_per_s: 0.0,
+                        drop_prob: 0.0,
+                    };
+                    (format!("{}ms", (1e3 * lat) as u64), lat)
+                }
+            };
+            let sum = common::run_one(&cfg, &man);
+            let final_loss = sum.curve.points.last().map(|p| p.loss).unwrap_or(f64::NAN);
+            let stalled = sum.stats.recovery.stalled;
+            any_stalled |= stalled && case.cluster.n_shards() > 0;
+            println!(
+                "{:<12} {:>8} {:>9.2} {:>10.4} {:>10.2} {:>9} {:>8}",
+                case.label,
+                if lat < 0.0 { "inst".into() } else { format!("{:.1}", 1e3 * lat) },
+                sum.total_time_s,
+                final_loss,
+                sum.stats.comm.mean_delivered_staleness(),
+                sum.stats.ps.grad_pushes,
+                stalled,
+            );
+            let label = format!("{}-{}", case.label, fab_label);
+            rows.push(obj(vec![
+                ("topology", s(case.label)),
+                ("algorithm", s(&sum.algorithm)),
+                ("latency_s", num(lat.max(0.0))),
+                ("instant", Json::Bool(lat < 0.0)),
+                ("wall_s", num(sum.total_time_s)),
+                ("final_loss", num(final_loss)),
+                ("mean_staleness", num(sum.stats.comm.mean_delivered_staleness())),
+                ("ps_grad_pushes", num(sum.stats.ps.grad_pushes as f64)),
+                ("ps_param_pulls", num(sum.stats.ps.param_pulls as f64)),
+                ("ps_queue_depth_max", num(sum.stats.ps.queue_depth_max as f64)),
+                ("stalled", Json::Bool(stalled)),
+            ]));
+            summary_rows.push(topo_row(&label, &sum));
+            if li > 0 {
+                loss_at.push((case.label.to_string(), lat, final_loss));
+            }
+        }
+        common::hr();
+    }
+
+    // the paper-relevant separation: shard-side delay compensation recovers
+    // loss once the links are slow (DC-ASGD, Zheng et al. 2017)
+    for &lat in &latencies {
+        if lat <= 0.0 {
+            continue;
+        }
+        let find = |name: &str| {
+            loss_at
+                .iter()
+                .find(|(l, t, _)| l == name && *t == lat)
+                .map(|&(_, _, v)| v)
+        };
+        if let (Some(plain), Some(dc)) = (find("asgd-ps"), find("dcasgd-ps")) {
+            println!(
+                "delay {:.1} ms: dcasgd-ps loss {:.4} vs asgd-ps {:.4} ({})",
+                1e3 * lat,
+                dc,
+                plain,
+                if dc < plain { "compensation wins" } else { "no separation at this budget" }
+            );
+        }
+    }
+
+    let dir = common::results_dir();
+    std::fs::write(dir.join("fig_topology.json"), arr(rows).dump()).expect("write json");
+    common::write_bench_summary("fig_topology", summary_rows);
+    println!("wrote results/fig_topology.json");
+    if any_stalled {
+        eprintln!("FAIL: a parameter-server run stalled (dead shard waited out the timeout)");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,165 @@
+//! **ASGD-PS** / **DC-ASGD-PS**: asynchronous SGD against sharded parameter
+//! servers (the `ps:N` role topology).
+//!
+//! The last `N` worker ids of the cluster run no model at all — they are
+//! server shards, each owning a contiguous partition of the layers (see
+//! [`crate::topology::roles`]). Trainers never step an optimizer: the moment
+//! a layer's gradient exists, [`AsgdPs::on_layer_grads`] ships it to the
+//! layer's owning shard as a [`Payload::GradPush`], layer-wise and
+//! overlapping the rest of the backward pass exactly like LayUp's updater
+//! dispatch. The shard applies it with its own optimizer stack
+//! ([`crate::coordinator::PsState`]) and replies with the fresh layer values
+//! (`Payload::ParamPull`), which land in the trainer's replica at its next
+//! step boundary (instantly on the shared-memory transport).
+//!
+//! **DC-ASGD-PS** additionally ships the trainer's forward-time parameter
+//! values `x_then` inside the push, and the *shard* compensates the stale
+//! gradient with `λ·g⊙g⊙(x_now − x_then)` (Zheng et al., 2017) before
+//! applying — the staleness provenance is the [`ClockStamp`] the trainer
+//! captured when its forward pass read the layer.
+//!
+//! The gradient-apply and reply logic lives in `crate::comm`'s `GradPush` /
+//! `ParamPull` arms so both transports share it; this file holds only the
+//! trainer-side sender and the shard-side checkpoint proxy.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::{StepState, WorkerAlgo};
+use crate::comm::{Fabric, Payload};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
+use crate::tensor::Tensor;
+
+/// Trainer side of the PS protocol: push gradients, pull parameters.
+pub struct AsgdPs {
+    wid: usize,
+    shared: Arc<Shared>,
+    /// ship `x_then` so the shard can delay-compensate (DC-ASGD-PS)
+    dc: bool,
+}
+
+impl AsgdPs {
+    pub fn new(
+        _cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        _manifest: &ModelManifest,
+        dc: bool,
+    ) -> AsgdPs {
+        AsgdPs { wid, shared, dc }
+    }
+}
+
+impl WorkerAlgo for AsgdPs {
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        let owner = loop {
+            match self.shared.fabric.core().route_layer(&self.shared, layer) {
+                Some(o) => break o,
+                None => {
+                    // the layer's shard is down under the Stall policy: the
+                    // trainer cannot make progress without it, so it genuinely
+                    // stalls here until the supervisor times the run out
+                    // (under Shrink, route_layer re-partitions and heals)
+                    if self.shared.should_stop() {
+                        return Ok(());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        };
+        let flats: Vec<Vec<f32>> = grads.into_iter().map(|t| t.data).collect();
+        let x_then = if self.dc {
+            ctx.take_x_then(layer)
+                .map(|xt| Arc::new(xt.into_iter().map(|t| t.data).collect::<Vec<Vec<f32>>>()))
+        } else {
+            None
+        };
+        // provenance: the clock snapshot the forward pass read — the shard
+        // measures τ against its own clock version at apply time
+        let stamp = ctx
+            .stamp(layer)
+            .unwrap_or_else(|| self.shared.params[self.wid].layers[layer].clock.stamp());
+        // GradPush is reliable (never dropped, never Busy): the outcome is
+        // Queued or Delivered, nothing to reclaim
+        let _ = self.shared.fabric.push(
+            &self.shared,
+            self.wid,
+            owner,
+            ctx.step(),
+            Payload::GradPush { layer, grads: Arc::new(flats), x_then, stamp },
+        );
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, _ctx: StepState) -> Result<()> {
+        // nothing local to apply: parameters arrive as ParamPull replies at
+        // the engine's per-step deliver_due (synchronously on the instant
+        // transport). No trainer-side optimizer, no trainer-side state.
+        Ok(())
+    }
+}
+
+/// Shard side: the apply path lives in the fabric (`GradPush` arm); this
+/// proxy only exposes the shard's optimizer moments to the checkpoint
+/// machinery through the standard [`WorkerAlgo`] state hooks.
+pub struct PsShardAlgo {
+    wid: usize,
+    shared: Arc<Shared>,
+}
+
+impl PsShardAlgo {
+    pub fn new(wid: usize, shared: Arc<Shared>) -> PsShardAlgo {
+        PsShardAlgo { wid, shared }
+    }
+}
+
+impl WorkerAlgo for PsShardAlgo {
+    fn on_layer_grads(
+        &mut self,
+        _ctx: &mut StepState,
+        _layer: usize,
+        _grads: Vec<Tensor>,
+    ) -> Result<()> {
+        bail!("a PS shard runs no backward pass (worker {})", self.wid)
+    }
+
+    fn on_step_end(&mut self, _ctx: StepState) -> Result<()> {
+        bail!("a PS shard runs no training steps (worker {})", self.wid)
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        let Some(ps) = self.shared.ps.as_ref() else {
+            bail!("PsShardAlgo on a run without a PS topology");
+        };
+        let Some(k) = ps.shard_of(self.wid) else {
+            bail!("worker {} is not a PS shard", self.wid);
+        };
+        Ok(AlgoState {
+            opt: Some(ps.shards[k].lock().unwrap().state_dict()),
+            rng: None,
+            outer: None,
+        })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        let Some(ps) = self.shared.ps.as_ref() else {
+            bail!("PsShardAlgo on a run without a PS topology");
+        };
+        let Some(k) = ps.shard_of(self.wid) else {
+            bail!("worker {} is not a PS shard", self.wid);
+        };
+        if let Some(opt) = &state.opt {
+            ps.shards[k].lock().unwrap().load_state_dict(opt)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,212 @@
+//! **HierGossip**: hierarchical two-tier push-sum gossip (the `hier:G` role
+//! topology).
+//!
+//! The cluster is split into `G` contiguous groups (the same ceil-split as
+//! [`crate::topology::group_bounds`], so every group is non-empty). Two
+//! tiers of mixing:
+//!
+//! * **intra-group, every step**: LayUp-style push-sum to a uniformly random
+//!   peer *within the worker's own group*, applied through the in-place
+//!   shared-memory path regardless of the run's fabric — group members model
+//!   co-located devices (one node, NVLink-class links), so their exchanges
+//!   are instant and free of the simulated WAN latency;
+//! * **inter-group, every `sync_period` steps**: the group's *leader* (its
+//!   lowest live wid) ships its full model to the next group's leader as a
+//!   [`Payload::ModelPush`] over the fabric — this is the only traffic that
+//!   pays the configured link latency/bandwidth, exactly the hierarchy that
+//!   makes gossip viable across slow inter-node links.
+//!
+//! Push-sum weight bookkeeping is identical to GoSGD/LayUp: halve on send,
+//! reclaim on any drop/contention — mass is delayed, never destroyed.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algorithms::{maybe_compensate, observe_apply, PerLayerOpt, StepState, WorkerAlgo};
+use crate::comm::{wire_bytes, Fabric, Payload, PushOutcome};
+use crate::config::TrainConfig;
+use crate::coordinator::Shared;
+use crate::manifest::ModelManifest;
+use crate::resilience::AlgoState;
+use crate::session::events::TrainEvent;
+use crate::tensor::Tensor;
+use crate::topology::roles::TopologySpec;
+use crate::topology::{group_bounds, group_of};
+use crate::util::rng::Pcg32;
+
+pub struct HierGossip {
+    wid: usize,
+    shared: Arc<Shared>,
+    opt: PerLayerOpt,
+    /// number of groups (validated `2..=workers`)
+    groups: usize,
+    /// inter-group leader exchange period (steps)
+    sync_period: usize,
+    rng: Pcg32,
+}
+
+impl HierGossip {
+    pub fn new(
+        cfg: &TrainConfig,
+        wid: usize,
+        shared: Arc<Shared>,
+        manifest: &ModelManifest,
+    ) -> HierGossip {
+        let groups = match cfg.cluster {
+            TopologySpec::Hier { groups } => groups,
+            // degenerate fallback (unit tests building the algo directly):
+            // one group = plain intra-group gossip, no leader tier
+            _ => 1,
+        };
+        let pool = Arc::clone(&shared.update_pool);
+        HierGossip {
+            wid,
+            shared,
+            opt: PerLayerOpt::new(&cfg.optim, &cfg.schedule, manifest, wid, pool),
+            groups,
+            sync_period: cfg.sync_period.max(1),
+            rng: Pcg32::new(cfg.seed ^ 0x41e72a ^ ((wid as u64) << 32)),
+        }
+    }
+
+    /// Lowest live wid of group `k` (the group's leader), if any survive.
+    fn leader_of(&self, k: usize) -> Option<usize> {
+        let (lo, hi) = group_bounds(k, self.shared.m, self.groups);
+        (lo..hi).find(|&w| self.shared.membership.alive(w))
+    }
+
+    fn skip(&self, peer: usize, step: usize) {
+        self.shared.weights[self.wid].skipped.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .events
+            .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
+    }
+}
+
+impl WorkerAlgo for HierGossip {
+    fn on_layer_grads(
+        &mut self,
+        ctx: &mut StepState,
+        layer: usize,
+        grads: Vec<Tensor>,
+    ) -> Result<()> {
+        ctx.stash(layer, grads);
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, mut ctx: StepState) -> Result<()> {
+        let step = ctx.step();
+        let mut grads = ctx.take_grads();
+        for (li, g) in grads.iter_mut().enumerate() {
+            observe_apply(&self.shared, self.wid, ctx.stamp(li), li, step);
+            let xt = ctx.take_x_then(li);
+            maybe_compensate(&mut self.opt, &self.shared, self.wid, li, g, xt.as_ref());
+            self.opt.step_layer(&self.shared.params[self.wid], li, g, step);
+        }
+        let m = self.shared.m;
+        let mine = group_of(self.wid, m, self.groups);
+        let (lo, hi) = group_bounds(mine, m, self.groups);
+
+        // tier 1: intra-group push-sum, in place (instant semantics — the
+        // group models one node, whatever the run's fabric)
+        if hi - lo > 1 {
+            let span = (hi - lo - 1) as u64;
+            let mut peer = lo + (self.rng.next_u64() % span) as usize;
+            if peer >= self.wid {
+                peer += 1; // uniform over the group minus self
+            }
+            if !self.shared.membership.alive(peer) {
+                self.skip(peer, step);
+            } else {
+                let shipped = self.shared.weights[self.wid].halve();
+                match self.shared.weights[peer].try_accept(shipped) {
+                    None => {
+                        self.shared.weights[self.wid].reclaim(shipped);
+                        self.skip(peer, step);
+                    }
+                    Some(frac) => {
+                        let my = &self.shared.params[self.wid];
+                        let peer_params = &self.shared.params[peer];
+                        let pool = &self.shared.update_pool;
+                        for (li, layer) in my.layers.iter().enumerate() {
+                            for (ti, t) in layer.tensors.iter().enumerate() {
+                                let snap = t.snapshot();
+                                peer_params.layers[li].tensors[ti].mix_from_sharded(
+                                    1.0 - frac,
+                                    frac,
+                                    &snap.data,
+                                    pool,
+                                );
+                            }
+                            peer_params.layers[li].clock.record(self.wid, step);
+                        }
+                        self.shared.weights[peer].release();
+                        self.shared.fabric.core().record_instant(
+                            &self.shared,
+                            self.wid,
+                            peer,
+                            step,
+                            wire_bytes(my.numel()),
+                        );
+                        self.shared
+                            .events
+                            .emit(TrainEvent::GossipApplied { worker: self.wid, peer, step });
+                    }
+                }
+            }
+        }
+
+        // tier 2: the group leader ships its model to the next group's
+        // leader over the fabric (the only traffic paying link latency)
+        if self.groups > 1
+            && step % self.sync_period == self.sync_period - 1
+            && self.leader_of(mine) == Some(self.wid)
+        {
+            let Some(peer) = self.leader_of((mine + 1) % self.groups) else {
+                return Ok(()); // the whole next group is down
+            };
+            if peer == self.wid {
+                return Ok(());
+            }
+            let my = &self.shared.params[self.wid];
+            let shipped = self.shared.weights[self.wid].halve();
+            let values: Vec<Vec<Vec<f32>>> = my
+                .layers
+                .iter()
+                .map(|layer| layer.tensors.iter().map(|t| t.snapshot().data).collect())
+                .collect();
+            let outcome = self.shared.fabric.push(
+                &self.shared,
+                self.wid,
+                peer,
+                step,
+                Payload::ModelPush { w_in: shipped, values: Arc::new(values) },
+            );
+            if matches!(outcome, PushOutcome::Dropped | PushOutcome::Busy) {
+                self.shared.weights[self.wid].reclaim(shipped);
+                self.skip(peer, step);
+            }
+        }
+        Ok(())
+    }
+
+    fn state_dict(&mut self) -> Result<AlgoState> {
+        Ok(AlgoState {
+            opt: Some(self.opt.state_dict()),
+            rng: Some(self.rng.state()),
+            outer: None,
+        })
+    }
+
+    fn load_state_dict(&mut self, state: AlgoState) -> Result<()> {
+        if let Some(opt) = &state.opt {
+            self.opt.load_state_dict(opt)?;
+        }
+        if let Some(rng) = state.rng {
+            self.rng = Pcg32::from_state(rng);
+        }
+        Ok(())
+    }
+}

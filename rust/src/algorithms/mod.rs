@@ -44,9 +44,11 @@
 //!   `TrainConfig::validate`.
 
 pub mod adpsgd;
+pub mod asgd_ps;
 pub mod co2;
 pub mod ddp;
 pub mod gosgd;
+pub mod hier;
 pub mod layup;
 pub mod localsgd;
 pub mod slowmo;
@@ -207,7 +209,7 @@ pub struct AlgoSpec {
     pub sim: Option<fn(usize) -> SimAlgo>,
 }
 
-static REGISTRY: [AlgoSpec; 8] = [
+static REGISTRY: [AlgoSpec; 11] = [
     AlgoSpec {
         algo: Algorithm::Ddp,
         name: "DDP",
@@ -264,6 +266,27 @@ static REGISTRY: [AlgoSpec; 8] = [
         build: |c, w, s, m| Box::new(layup::LayUp::new(c, w, s, m, true)),
         sim: None,
     },
+    AlgoSpec {
+        algo: Algorithm::AsgdPs,
+        name: "ASGD-PS",
+        aliases: &["asgd-ps", "asgd_ps"],
+        build: |c, w, s, m| Box::new(asgd_ps::AsgdPs::new(c, w, s, m, false)),
+        sim: None,
+    },
+    AlgoSpec {
+        algo: Algorithm::DcAsgdPs,
+        name: "DC-ASGD-PS",
+        aliases: &["dcasgd-ps", "dc-asgd-ps"],
+        build: |c, w, s, m| Box::new(asgd_ps::AsgdPs::new(c, w, s, m, true)),
+        sim: None,
+    },
+    AlgoSpec {
+        algo: Algorithm::HierGossip,
+        name: "HierGossip",
+        aliases: &["hier-gossip", "hiergossip"],
+        build: |c, w, s, m| Box::new(hier::HierGossip::new(c, w, s, m)),
+        sim: None,
+    },
 ];
 
 /// The full algorithm registry (paper set + ablations).
@@ -298,6 +321,11 @@ pub fn build(
     shared: Arc<Shared>,
     manifest: &ModelManifest,
 ) -> Result<Box<dyn WorkerAlgo>> {
+    if cfg.cluster.is_shard(wid, cfg.workers) {
+        // role topologies: the last wids are parameter-server shards — no
+        // training hooks, just the checkpoint proxy onto `Shared::ps`
+        return Ok(Box::new(asgd_ps::PsShardAlgo::new(wid, shared)));
+    }
     Ok((spec(cfg.algorithm).build)(cfg, wid, shared, manifest))
 }
 
@@ -567,6 +595,9 @@ mod tests {
             Algorithm::Co2,
             Algorithm::LocalSgd,
             Algorithm::LayUpModelGranularity,
+            Algorithm::AsgdPs,
+            Algorithm::DcAsgdPs,
+            Algorithm::HierGossip,
         ] {
             let s = spec(algo);
             assert_eq!(s.algo, algo);

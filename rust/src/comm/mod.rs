@@ -40,7 +40,7 @@ pub mod sim;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -50,8 +50,10 @@ use crate::config::Mixing;
 use crate::coordinator::Shared;
 use crate::metrics::{CommStats, LinkTraffic};
 use crate::tensor::clock::ClockStamp;
+use crate::tensor::Tensor;
 use crate::resilience::membership::{Membership, RecoveryPolicy};
 use crate::session::events::TrainEvent;
+use crate::topology::roles::RoleTable;
 use crate::util::rng::Pcg32;
 
 pub use instant::InstantFabric;
@@ -117,6 +119,37 @@ pub enum Payload {
         /// the sender's flattened parameters
         flat: Arc<Vec<f32>>,
     },
+    /// ASGD-PS (`ps:N` topology): one layer's gradient pushed from a trainer
+    /// to the parameter-server shard owning that layer. The shard applies it
+    /// with its own optimizer and replies with a [`Payload::ParamPull`].
+    /// Reliable (never dropped) — a lost gradient would silently skip an
+    /// optimizer step.
+    GradPush {
+        /// model layer the gradient belongs to
+        layer: usize,
+        /// the layer's gradient tensors, flattened per parameter
+        grads: Arc<Vec<Vec<f32>>>,
+        /// the trainer's forward-time parameter values (dcasgd-ps only):
+        /// the `x_then` of the DC-ASGD correction
+        /// `g + λ·g⊙g⊙(x_now − x_then)` the shard applies before stepping
+        x_then: Option<Arc<Vec<Vec<f32>>>>,
+        /// the trainer's forward-time clock stamp of this layer — mirrors
+        /// the shard's clock as of the trainer's last pull, so the shard's
+        /// observed τ counts exactly the shard writes the gradient missed
+        stamp: ClockStamp,
+    },
+    /// ASGD-PS: fresh layer parameters a shard sends back to a trainer in
+    /// response to a [`Payload::GradPush`]. Reliable.
+    ParamPull {
+        /// model layer the parameters belong to
+        layer: usize,
+        /// the layer's parameter tensors, flattened per parameter
+        values: Arc<Vec<Vec<f32>>>,
+        /// the shard's layer-clock stamp after the apply; the trainer loads
+        /// it into its replica clock so the next push carries exact
+        /// shard-version provenance
+        stamp: ClockStamp,
+    },
 }
 
 impl Payload {
@@ -133,13 +166,22 @@ impl Payload {
                 .iter()
                 .map(|l| l.iter().map(|t| t.data.len()).sum::<usize>())
                 .sum(),
+            Payload::GradPush { grads, x_then, .. } => {
+                grads.iter().map(|v| v.len()).sum::<usize>()
+                    + x_then
+                        .as_ref()
+                        .map(|x| x.iter().map(|v| v.len()).sum::<usize>())
+                        .unwrap_or(0)
+            }
+            Payload::ParamPull { values, .. } => values.iter().map(|v| v.len()).sum(),
         };
         wire_bytes(floats)
     }
 
     /// May the transport drop this message? Gossip traffic tolerates loss
     /// (the information is delayed to a later exchange); collective shares
-    /// are modeled as reliable so barrier rounds cannot deadlock.
+    /// and parameter-server traffic are modeled as reliable so barrier
+    /// rounds cannot deadlock and optimizer steps are never silently lost.
     pub fn droppable(&self) -> bool {
         matches!(
             self,
@@ -402,6 +444,14 @@ pub trait Fabric: Send + Sync {
     /// delay, instant transports apply them on the spot. Send-time dice
     /// (drop, latency) were already rolled — restoring must not re-roll.
     fn restore(&self, shared: &Shared, msgs: Vec<InFlight>);
+
+    /// Messages currently queued toward `wid` (due or not). Instant
+    /// transports queue nothing. Parameter-server shards poll this to know
+    /// when the trainers' last gradients have all drained.
+    fn pending_to(&self, wid: usize) -> usize {
+        let _ = wid;
+        0
+    }
 }
 
 /// Per-link traffic counters (lock-free; snapshot via [`FabricCore::snapshot`]).
@@ -436,6 +486,9 @@ pub struct FabricCore {
     /// elastic worker membership (shared with `Shared` so transports and
     /// algorithms agree on liveness; see `crate::resilience::membership`)
     membership: Arc<Membership>,
+    /// layer→shard routing table for role topologies (`ps:N`); absent on
+    /// flat clusters — installed once by the coordinator at session build
+    roles: OnceLock<RoleTable>,
 }
 
 impl FabricCore {
@@ -447,6 +500,7 @@ impl FabricCore {
             shares: (0..m * m).map(|_| Mutex::new(ShareSlot::default())).collect(),
             pending_frac: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
             membership: Arc::new(Membership::new(m)),
+            roles: OnceLock::new(),
         }
     }
 
@@ -459,6 +513,52 @@ impl FabricCore {
     /// `Shared` state).
     pub fn membership(&self) -> &Arc<Membership> {
         &self.membership
+    }
+
+    /// Install the role/routing table of a role topology (`ps:N`). Called
+    /// once by the coordinator at session build; a second install is a no-op.
+    pub fn install_roles(&self, table: RoleTable) {
+        let _ = self.roles.set(table);
+    }
+
+    /// The installed role table, if this is a role-topology run.
+    pub fn role_table(&self) -> Option<&RoleTable> {
+        self.roles.get()
+    }
+
+    /// Worker id of the parameter-server shard owning `layer` under the
+    /// current membership epoch, or `None` when the run is flat or the
+    /// owner is dead under the Stall policy (the trainer freezes the layer).
+    ///
+    /// Elastic path: on an epoch change under the Shrink policy the role
+    /// table re-partitions layers across surviving shards and reports
+    /// handovers, which are applied here — the dead shard's replica still
+    /// holds the freshest values, so they are copied (parameters, clock and
+    /// per-layer optimizer moments) into the new owner before routing
+    /// resumes. Trainer pushes racing the handover land on whichever owner
+    /// their route call resolved — acceptable on this non-deterministic
+    /// crash-recovery path, and mass-free (PS traffic ships no weight).
+    pub fn route_layer(&self, shared: &Shared, layer: usize) -> Option<usize> {
+        let table = self.roles.get()?;
+        let epoch = self.membership.epoch();
+        let alive = self.membership.alive_flags();
+        let shrink = self.membership.policy() == RecoveryPolicy::Shrink;
+        let (owner, handovers) = table.route(epoch, &alive, shrink, layer);
+        for h in handovers {
+            let src = &shared.params[h.from_wid].layers[h.layer];
+            let dst = &shared.params[h.to_wid].layers[h.layer];
+            for (ti, t) in src.tensors.iter().enumerate() {
+                dst.tensors[ti].store_from_sharded(&t.state_dict(), &shared.update_pool);
+            }
+            dst.clock.load(src.clock.stamp());
+            if let Some(ps) = shared.ps.as_ref() {
+                if let (Some(a), Some(b)) = (ps.shard_of(h.from_wid), ps.shard_of(h.to_wid)) {
+                    let st = ps.shards[a].lock().unwrap().opts[h.layer].state_dict();
+                    let _ = ps.shards[b].lock().unwrap().opts[h.layer].load_state_dict(&st);
+                }
+            }
+        }
+        owner
     }
 
     fn link(&self, from: usize, to: usize) -> &LinkCounters {
@@ -639,6 +739,23 @@ fn payload_shape_ok(shared: &Shared, wid: usize, payload: &Payload) -> bool {
                         && lv.iter().zip(&lp.tensors).all(|(g, t)| g.data.len() == t.numel())
                 })
         }
+        Payload::GradPush { layer, grads, x_then, .. } => {
+            let Some(lp) = model.layers.get(*layer) else {
+                return false;
+            };
+            let fits = |vals: &Vec<Vec<f32>>| {
+                vals.len() == lp.tensors.len()
+                    && vals.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
+            };
+            fits(grads) && x_then.as_ref().map(|x| fits(x)).unwrap_or(true)
+        }
+        Payload::ParamPull { layer, values, .. } => {
+            let Some(lp) = model.layers.get(*layer) else {
+                return false;
+            };
+            values.len() == lp.tensors.len()
+                && values.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
+        }
     }
 }
 
@@ -757,6 +874,62 @@ pub(crate) fn apply(
         }
         Payload::ParamShare { flat } => {
             core.put_params(wid, from, step, Arc::clone(flat));
+            ApplyResult::Applied { reply: None }
+        }
+        Payload::GradPush { layer, grads, x_then, stamp } => {
+            // only a parameter-server shard may receive gradient pushes; a
+            // GradPush routed to a trainer is a corrupt/misrouted message
+            let Some(ps) = shared.ps.as_ref() else {
+                return ApplyResult::Malformed;
+            };
+            let Some(shard) = ps.shard_of(wid) else {
+                return ApplyResult::Malformed;
+            };
+            // τ: shard writes this gradient missed (the trainer's stamp
+            // mirrors the shard clock as of its last pull)
+            crate::algorithms::observe_apply(shared, wid, Some(*stamp), *layer, step);
+            let store = &shared.params[wid].layers[*layer];
+            let mut gt: Vec<Tensor> = grads
+                .iter()
+                .zip(&store.tensors)
+                .map(|(g, t)| Tensor::from_vec(t.shape(), g.clone()))
+                .collect();
+            let mut opt = ps.shards[shard].lock().unwrap();
+            if let Some(xt) = x_then {
+                let xt: Vec<Tensor> = xt
+                    .iter()
+                    .zip(&store.tensors)
+                    .map(|(v, t)| Tensor::from_vec(t.shape(), v.clone()))
+                    .collect();
+                opt.compensate_layer(
+                    &shared.params[wid],
+                    *layer,
+                    &mut gt,
+                    shared.staleness_cfg.dc_lambda,
+                    &xt,
+                );
+            }
+            // the sender's step drives the LR schedule, as in flat async SGD
+            opt.step_layer(&shared.params[wid], *layer, &gt, step);
+            drop(opt);
+            ps.grad_pushes.fetch_add(1, Ordering::Relaxed);
+            ps.param_pulls.fetch_add(1, Ordering::Relaxed);
+            let values: Vec<Vec<f32>> = store.tensors.iter().map(|t| t.state_dict()).collect();
+            let reply = Payload::ParamPull {
+                layer: *layer,
+                values: Arc::new(values),
+                stamp: store.clock.stamp(),
+            };
+            ApplyResult::Applied { reply: Some((from, reply)) }
+        }
+        Payload::ParamPull { layer, values, stamp } => {
+            let store = &shared.params[wid].layers[*layer];
+            for (ti, vals) in values.iter().enumerate() {
+                store.tensors[ti].store_from_sharded(vals, &shared.update_pool);
+            }
+            // mirror the shard's clock: the next GradPush from this replica
+            // carries exact shard-version provenance
+            store.clock.load(*stamp);
             ApplyResult::Applied { reply: None }
         }
     }
@@ -920,6 +1093,25 @@ mod tests {
         assert_eq!(share.bytes(), wire_bytes(7));
         assert!(!share.droppable(), "collective shares are reliable");
         assert_eq!(share.shipped_weight(), 0.0);
+
+        let push = Payload::GradPush {
+            layer: 1,
+            grads: Arc::new(vec![vec![0.0; 5], vec![0.0; 3]]),
+            x_then: Some(Arc::new(vec![vec![0.0; 5], vec![0.0; 3]])),
+            stamp: crate::tensor::clock::ClockStamp::default(),
+        };
+        assert_eq!(push.bytes(), wire_bytes(16), "x_then rides the wire too");
+        assert!(!push.droppable(), "a lost gradient would skip an optimizer step");
+        assert_eq!(push.shipped_weight(), 0.0, "PS traffic carries no push-sum mass");
+
+        let pull = Payload::ParamPull {
+            layer: 1,
+            values: Arc::new(vec![vec![0.0; 5], vec![0.0; 3]]),
+            stamp: crate::tensor::clock::ClockStamp::default(),
+        };
+        assert_eq!(pull.bytes(), wire_bytes(8));
+        assert!(!pull.droppable());
+        assert_eq!(pull.shipped_weight(), 0.0);
     }
 
     #[test]

@@ -248,6 +248,10 @@ impl Fabric for SimFabric {
         applied
     }
 
+    fn pending_to(&self, wid: usize) -> usize {
+        self.inboxes[wid].lock().unwrap().len()
+    }
+
     fn drain(&self, wid: usize) -> Vec<InFlight> {
         let now = self.now();
         let mut queued: Vec<Queued> = self.inboxes[wid].lock().unwrap().drain(..).collect();
@@ -421,6 +425,56 @@ mod tests {
         assert_eq!(fabric.deliver_due(&shared, 1, 5), 1);
         let total = shared.weights[0].get() + shared.weights[1].get();
         assert!((total - 1.0).abs() < 1e-6, "total mass conserved end-to-end");
+    }
+
+    /// PS payloads ride the drain/restore checkpoint path like any other
+    /// traffic: a queued `GradPush` and `ParamPull` survive the round trip
+    /// with gradients, `x_then` provenance and remaining delay intact. They
+    /// carry no push-sum weight, so the in-flight mass ledger stays empty.
+    #[test]
+    fn ps_payloads_survive_drain_restore() {
+        let sim = Arc::new(SimFabric::new(LatencyDist::Constant(10.0), 0.0, 0.0, 2, 6));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = two_worker_shared(Arc::clone(&fabric));
+
+        let stamp = shared.params[0].layers[0].clock.stamp();
+        let _ = fabric.push(
+            &shared,
+            0,
+            1,
+            2,
+            Payload::GradPush {
+                layer: 0,
+                grads: Arc::new(vec![vec![0.5, -0.5]]),
+                x_then: Some(Arc::new(vec![vec![1.0, 1.0]])),
+                stamp,
+            },
+        );
+        let _ = fabric.push(
+            &shared,
+            1,
+            0,
+            2,
+            Payload::ParamPull { layer: 0, values: Arc::new(vec![vec![4.0, 4.0]]), stamp },
+        );
+        let (mass, _) = sim.in_flight_push_sum_mass();
+        assert_eq!(mass, 0.0, "PS traffic carries no push-sum weight");
+
+        let to1 = fabric.drain(1);
+        let to0 = fabric.drain(0);
+        assert_eq!((to1.len(), to0.len()), (1, 1));
+        assert!(matches!(
+            &to1[0].payload,
+            Payload::GradPush { layer: 0, x_then: Some(_), .. }
+        ));
+        assert!(matches!(&to0[0].payload, Payload::ParamPull { layer: 0, .. }));
+        assert!(to1[0].remaining_s > 5.0, "remaining {}", to1[0].remaining_s);
+
+        fabric.restore(&shared, to1);
+        fabric.restore(&shared, to0);
+        assert_eq!(sim.pending_count(), 2);
+        // the restored delay still gates delivery, exactly as before drain
+        assert_eq!(fabric.deliver_due(&shared, 1, 10), 0);
     }
 
     /// Drained messages carry their remaining delay: restoring a not-yet-due

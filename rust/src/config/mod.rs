@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use crate::comm::{FabricSpec, LatencyDist};
 use crate::optim::{OptimKind, Schedule};
 use crate::resilience::{FaultPlan, RecoveryPolicy};
+use crate::topology::roles::TopologySpec;
 use crate::topology::Topology;
 
 /// Parsed TOML-subset document: section -> key -> value.
@@ -249,6 +250,17 @@ pub enum Algorithm {
     LocalSgd,
     /// Ablation: LayUp with model-granularity (whole-model) updates.
     LayUpModelGranularity,
+    /// Classic asynchronous SGD against a sharded parameter server
+    /// (`ps:N` topology): trainers push per-layer gradients, shards apply
+    /// and reply with fresh parameters.
+    AsgdPs,
+    /// DC-ASGD (Zheng et al.): ASGD-PS where shards compensate each stale
+    /// gradient with `λ·g⊙g⊙(x_now − x_then)` against the trainer's
+    /// push-time parameter snapshot.
+    DcAsgdPs,
+    /// Hierarchical two-tier gossip (`hier:G` topology): LayUp push-sum
+    /// inside groups, periodic leader-level model exchange across groups.
+    HierGossip,
 }
 
 impl Algorithm {
@@ -299,6 +311,10 @@ pub struct TrainConfig {
     pub optim: OptimKind,
     pub schedule: Schedule,
     pub topology: Topology,
+    /// cluster role/routing topology (`--topology {flat,ps:N,hier:G}`):
+    /// flat peer-to-peer (default, seed-era behavior), star/parameter-server
+    /// with N layer-partitioning shards, or hierarchical two-tier groups
+    pub cluster: TopologySpec,
     /// outer-loop period for LocalSGD/SlowMo/CO2 (paper's `out_freq`)
     pub sync_period: usize,
     /// outer (slow) momentum for SlowMo/CO2
@@ -364,6 +380,7 @@ impl TrainConfig {
             optim: OptimKind::sgd(0.9, 0.0),
             schedule: Schedule::Cosine { lr: 0.05, t_max: steps, warmup_steps: 0, warmup_lr: 0.0 },
             topology: Topology::Random,
+            cluster: TopologySpec::Flat,
             sync_period: 12,
             outer_momentum: 0.5,
             outer_lr: 1.0,
@@ -418,6 +435,64 @@ impl TrainConfig {
                  decoupled (backward passes complete out of order); set decoupled = false",
                 self.algorithm.name()
             );
+        }
+        if let Topology::Groups(g) = self.topology {
+            if g == 0 {
+                bail!("gossip topology groups must be >= 1");
+            }
+            if g > self.workers {
+                bail!(
+                    "gossip topology has {g} groups but only {} workers — groups \
+                     cannot exceed the worker count",
+                    self.workers
+                );
+            }
+        }
+        self.cluster.validate(self.workers)?;
+        let ps_algo = matches!(self.algorithm, Algorithm::AsgdPs | Algorithm::DcAsgdPs);
+        match self.cluster {
+            TopologySpec::Ps { .. } if !ps_algo => bail!(
+                "a ps:N topology routes gradients to parameter-server shards, which \
+                 only asgd-ps/dcasgd-ps speak; {} is peer-to-peer",
+                self.algorithm.name()
+            ),
+            TopologySpec::Hier { .. } if self.algorithm != Algorithm::HierGossip => bail!(
+                "a hier:G topology needs the hier-gossip algorithm (intra-group \
+                 push-sum + leader exchange); {} ignores groups",
+                self.algorithm.name()
+            ),
+            TopologySpec::Flat if ps_algo => bail!(
+                "{} needs parameter-server shards; pick a ps:N topology \
+                 (e.g. --topology ps:1)",
+                self.algorithm.name()
+            ),
+            TopologySpec::Flat if self.algorithm == Algorithm::HierGossip => bail!(
+                "hier-gossip needs trainer groups; pick a hier:G topology \
+                 (e.g. --topology hier:2)"
+            ),
+            _ => {}
+        }
+        if self.cluster != TopologySpec::Flat {
+            if self.decoupled {
+                bail!(
+                    "role topologies drive the serial per-worker loop; decoupled \
+                     forward/backward pools are flat-only (set decoupled = false)"
+                );
+            }
+            if self.checkpoint_every > 0 && !self.lockstep {
+                bail!(
+                    "threaded checkpoint rendezvous counts every live worker at a step \
+                     boundary, which parameter-server shards never reach; checkpoint \
+                     role topologies under lockstep = true"
+                );
+            }
+            if self.faults.faults.iter().any(|f| f.restart_after_s.is_some()) {
+                bail!(
+                    "crash/restart faults are flat-only for now: a respawned worker's \
+                     gossip rejoin (donor copy + weight halving) does not describe a \
+                     parameter-server shard or group leader; make the fault permanent"
+                );
+            }
         }
         self.fabric.validate()?;
         self.staleness.validate(self.algorithm)?;
@@ -529,6 +604,9 @@ impl TrainConfig {
             }
             other => bail!("fabric.kind: expected \"instant\" or \"sim\", got {other:?}"),
         };
+
+        // [topology]: cluster roles/routing (flat | ps:N | hier:G)
+        cfg.cluster = TopologySpec::parse(doc.str_or("topology", "kind", "flat"))?;
 
         let lr = doc.f64_or("optim", "lr", 0.05) as f32;
         let wd = doc.f64_or("optim", "weight_decay", 0.0) as f32;
@@ -921,6 +999,94 @@ mod tests {
         let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
         cfg.staleness.mix_beta = -1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn topology_section_parses_and_validates() {
+        // default is flat — bit-identical to the pre-topology era
+        let d = TrainConfig::new("mlpnet18", Algorithm::LayUp, 2, 10);
+        assert_eq!(d.cluster, TopologySpec::Flat);
+        d.validate().unwrap();
+
+        let doc = Toml::parse(
+            r#"
+            [run]
+            algorithm = "asgd-ps"
+            workers = 4
+            steps = 20
+            [topology]
+            kind = "ps:2"
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::AsgdPs);
+        assert_eq!(cfg.cluster, TopologySpec::Ps { shards: 2 });
+
+        let doc = Toml::parse(
+            "[run]\nalgorithm = \"hier-gossip\"\nworkers = 6\n[topology]\nkind = \"hier:3\"\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.cluster, TopologySpec::Hier { groups: 3 });
+
+        // algorithm/topology pairing is enforced in both directions
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 4, 10);
+        assert!(cfg.validate().is_err(), "asgd-ps needs ps:N");
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        cfg.validate().unwrap();
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::DcAsgdPs, 4, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 2 };
+        cfg.validate().unwrap();
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 4, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        assert!(cfg.validate().is_err(), "layup does not speak PS");
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::HierGossip, 4, 10);
+        assert!(cfg.validate().is_err(), "hier-gossip needs hier:G");
+        cfg.cluster = TopologySpec::Hier { groups: 2 };
+        cfg.validate().unwrap();
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        assert!(cfg.validate().is_err(), "hier-gossip is not a PS algorithm");
+
+        // shard/group bounds
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 2, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 2 };
+        assert!(cfg.validate().is_err(), "no trainers left");
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::HierGossip, 3, 10);
+        cfg.cluster = TopologySpec::Hier { groups: 4 };
+        assert!(cfg.validate().is_err(), "groups > workers");
+
+        // gossip Groups(g) with g > workers is rejected (exact-bounds rule)
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 3, 10);
+        cfg.topology = Topology::Groups(5);
+        assert!(cfg.validate().is_err());
+        cfg.topology = Topology::Groups(0);
+        assert!(cfg.validate().is_err());
+        cfg.topology = Topology::Groups(3);
+        cfg.validate().unwrap();
+
+        // decoupled pools, threaded checkpoints and restart faults are
+        // flat-only; lockstep checkpoints are the supported PS combination
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 4, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        cfg.decoupled = true;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 4, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        cfg.checkpoint_every = 4;
+        assert!(cfg.validate().is_err(), "threaded rendezvous never counts shards");
+        cfg.lockstep = true;
+        cfg.validate().unwrap();
+        let mut cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 4, 10);
+        cfg.cluster = TopologySpec::Ps { shards: 1 };
+        cfg.faults = FaultPlan::default().crash_restart(3, 5, 0.1);
+        assert!(cfg.validate().is_err(), "restart faults are flat-only");
+        cfg.faults = FaultPlan::default().crash(3, 5);
+        cfg.validate().unwrap();
+
+        // bad spellings are rejected at parse time
+        let doc = Toml::parse("[topology]\nkind = \"star:2\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -76,7 +76,12 @@ pub(crate) fn execute(
             let shared = Arc::clone(shared);
             let cfg = cfg.clone();
             scope.spawn(move || {
-                let r = if cfg.decoupled {
+                let r = if cfg.cluster.is_shard(wid, cfg.workers) {
+                    // role topology: the last wids run the PS shard pump, no
+                    // model execution (config validation keeps shards out of
+                    // decoupled mode)
+                    worker::shard_main(&cfg, wid, &shared)
+                } else if cfg.decoupled {
                     worker::worker_decoupled(&cfg, wid, &shared, manifest)
                         .map(WorkerExit::Completed)
                 } else {
@@ -95,6 +100,7 @@ pub(crate) fn execute(
         let mut stats: Vec<WorkerStats> = vec![WorkerStats::default(); cfg.workers];
         let mut first_err: Option<anyhow::Error> = None;
         let mut permanent_crash_at: Option<Instant> = None;
+        let mut permanent_shard_dead = false;
 
         loop {
             let mut all_done = true;
@@ -130,6 +136,9 @@ pub(crate) fn execute(
                                     }
                                     None => {
                                         permanent_crash_at.get_or_insert_with(Instant::now);
+                                        if cfg.cluster.is_shard(wid, cfg.workers) {
+                                            permanent_shard_dead = true;
+                                        }
                                     }
                                 }
                             }
@@ -164,9 +173,13 @@ pub(crate) fn execute(
             }
             // Stall detection: a permanently lost worker under the Stall
             // policy leaves barrier collectives waiting for a peer that is
-            // never coming back. Report and stop instead of hanging.
+            // never coming back — and a permanently lost PS shard leaves its
+            // layer partition frozen (route_layer yields None, trainers make
+            // no progress on those layers). Report and stop instead of
+            // hanging; under Shrink, route_layer re-partitions on the bumped
+            // membership epoch instead and the run continues.
             if let Some(t0) = permanent_crash_at {
-                if cfg.algorithm.uses_barrier()
+                if (cfg.algorithm.uses_barrier() || permanent_shard_dead)
                     && shared.membership.policy() == RecoveryPolicy::Stall
                     && !shared.membership.stalled()
                     && t0.elapsed().as_secs_f64() > cfg.stall_timeout_s

@@ -63,10 +63,15 @@ pub(crate) fn run(
     let model = manifest.model(&cfg.model)?;
     let n_layers = model.layers.len();
     let m = cfg.workers;
+    // role topologies: only the trainer wids compute; the shard wids are
+    // driven implicitly — a GradPush on the instant fabric (the only one
+    // lockstep allows) applies at the trainer's push and replies
+    // synchronously, so the schedule stays single-threaded deterministic
+    let trainers = cfg.cluster.n_trainers(m);
     let start_step = resume.map(|c| c.step).unwrap_or(0);
 
-    let mut ctxs: Vec<Wctx> = Vec::with_capacity(m);
-    for wid in 0..m {
+    let mut ctxs: Vec<Wctx> = Vec::with_capacity(trainers);
+    for wid in 0..trainers {
         let boot = match resume {
             Some(ck) => WorkerBoot {
                 start_step,
@@ -97,12 +102,23 @@ pub(crate) fn run(
             bwd_s: 0.0,
         });
     }
+    // shard wids get only their checkpoint proxy (`algorithms::build`
+    // returns the PS shard algo for them): no runtime, no dataset
+    let mut shard_algos: Vec<Box<dyn WorkerAlgo>> = Vec::with_capacity(m - trainers);
+    for wid in trainers..m {
+        let mut algo = algorithms::build(cfg, wid, Arc::clone(shared), model)?;
+        if let Some(ck) = resume {
+            algo.load_state_dict(ck.workers_state[wid].algo.clone())
+                .with_context(|| format!("lockstep shard {wid}: restoring state"))?;
+        }
+        shard_algos.push(algo);
+    }
 
     let mut drift_scratch = DriftScratch::new(m);
-    let mut states: Vec<Option<(StepState, f64)>> = (0..m).map(|_| None).collect();
+    let mut states: Vec<Option<(StepState, f64)>> = (0..trainers).map(|_| None).collect();
     'steps: for step in start_step..cfg.steps {
         // phase A: compute, serialized in worker-id order — THE schedule
-        for wid in 0..m {
+        for wid in 0..trainers {
             if shared.should_stop() {
                 break 'steps;
             }
@@ -140,7 +156,7 @@ pub(crate) fn run(
             states[wid] = Some((ctx, pass.loss as f64));
         }
         // phase B: step ends, same order
-        for wid in 0..m {
+        for wid in 0..trainers {
             let Some((ctx, loss)) = states[wid].take() else {
                 break 'steps; // stopped mid-phase-A
             };
@@ -189,6 +205,13 @@ pub(crate) fn run(
                         algo: c.algo.state_dict()?,
                     });
                 }
+                // shard slots: no data cursor, just the optimizer moments
+                for (k, algo) in shard_algos.iter_mut().enumerate() {
+                    ck.slots.lock().unwrap()[trainers + k] = Some(WorkerSlot {
+                        cursor: 0,
+                        algo: algo.state_dict()?,
+                    });
+                }
                 worker::write_checkpoint(cfg, shared, ck, step + 1)?;
             }
         }
@@ -207,6 +230,10 @@ pub(crate) fn run(
             upload_misses: c.exec.upload_misses,
             queue: QueueStats::default(),
         });
+    }
+    for mut algo in shard_algos {
+        algo.finish()?;
+        stats.push(WorkerStats::default()); // shards run no compute
     }
     Ok(stats)
 }

@@ -185,6 +185,32 @@ impl CheckpointRendezvous {
     }
 }
 
+/// Parameter-server runtime of a `ps:N` role topology (`None` on flat and
+/// hierarchical clusters): the per-shard optimizer stacks plus the PS
+/// traffic counters surfaced in `RunStats`. Each shard's stack is locked
+/// per gradient delivery — shards own disjoint layer ranges, so contention
+/// exists only between deliveries to the *same* shard, never across shards.
+pub struct PsState {
+    /// worker id of shard 0 (shards are the last `shards.len()` ids)
+    pub first_shard_wid: usize,
+    /// one [`crate::algorithms::PerLayerOpt`] per shard, stamping the
+    /// shard's own wid into every applied layer's staleness clock
+    pub shards: Vec<Mutex<crate::algorithms::PerLayerOpt>>,
+    /// gradient pushes applied by shards
+    pub grad_pushes: AtomicU64,
+    /// parameter replies shipped back to trainers
+    pub param_pulls: AtomicU64,
+    /// deepest per-pump delivery batch any shard observed (queue pressure)
+    pub queue_depth_max: AtomicU64,
+}
+
+impl PsState {
+    /// Shard index of worker `wid` (`None` for trainers).
+    pub fn shard_of(&self, wid: usize) -> Option<usize> {
+        wid.checked_sub(self.first_shard_wid).filter(|&k| k < self.shards.len())
+    }
+}
+
 /// State shared by all worker + updater threads of one run.
 pub struct Shared {
     pub m: usize,
@@ -228,6 +254,8 @@ pub struct Shared {
     /// apply site of this run. `update_threads = 1` ⇒ serial, bit-identical
     /// to the unsharded path.
     pub update_pool: Arc<crate::tensor::shard::ShardPool>,
+    /// parameter-server runtime (`Some` only under a `ps:N` topology)
+    pub ps: Option<PsState>,
 }
 
 impl Shared {
@@ -301,6 +329,44 @@ impl Shared {
             None
         };
         let n_layers = model.layers.len();
+        let update_pool = crate::tensor::shard::ShardPool::new(cfg.update_threads);
+        let ps = if cfg.cluster.n_shards() > 0 {
+            // Role topology: install the routing table on the fabric core and
+            // stand up one optimizer stack per server shard. Shard wids come
+            // after every trainer wid, so shard k's stack stamps wid
+            // `trainers + k` into the clocks of the layers it owns.
+            fabric
+                .core()
+                .install_roles(crate::topology::roles::RoleTable::new(cfg.cluster, m, n_layers));
+            let trainers = cfg.cluster.n_trainers(m);
+            Some(PsState {
+                first_shard_wid: trainers,
+                shards: (0..cfg.cluster.n_shards())
+                    .map(|k| {
+                        Mutex::new(crate::algorithms::PerLayerOpt::new(
+                            &cfg.optim,
+                            &cfg.schedule,
+                            model,
+                            trainers + k,
+                            Arc::clone(&update_pool),
+                        ))
+                    })
+                    .collect(),
+                grad_pushes: AtomicU64::new(0),
+                param_pulls: AtomicU64::new(0),
+                queue_depth_max: AtomicU64::new(0),
+            })
+        } else {
+            None
+        };
+        if let Some((ps, ck)) = ps.as_ref().zip(resume) {
+            // shard optimizer moments ride in the shard wid's worker slot
+            for (k, slot) in ps.shards.iter().enumerate() {
+                if let Some(opt) = &ck.workers_state[ps.first_shard_wid + k].algo.opt {
+                    slot.lock().unwrap().load_state_dict(opt)?;
+                }
+            }
+        }
         let shared = Arc::new(Shared {
             m,
             params,
@@ -319,7 +385,8 @@ impl Shared {
             staleness_cfg: cfg.staleness,
             start: Instant::now(),
             start_offset_s,
-            update_pool: crate::tensor::shard::ShardPool::new(cfg.update_threads),
+            update_pool,
+            ps,
         });
         if let Some(ck) = resume {
             // put the snapshot's in-flight messages back on the links
@@ -354,6 +421,7 @@ impl Shared {
             start: Instant::now(),
             start_offset_s: 0.0,
             update_pool: crate::tensor::shard::ShardPool::serial(),
+            ps: None,
         })
     }
 

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::algorithms::{self, StepState, WorkerAlgo};
 use crate::comm::Fabric;
-use crate::config::{Compensation, TrainConfig};
+use crate::config::{Algorithm, Compensation, TrainConfig};
 use crate::coordinator::queue::{BoundedQueue, PassPool};
 use crate::coordinator::{CheckpointRendezvous, Shared, WorkerSlot, WorkerStats};
 use crate::data::{self, Dataset};
@@ -483,10 +483,17 @@ pub(crate) fn open_step(
     n_layers: usize,
 ) -> StepState {
     let mut ctx = StepState::new(step, n_layers).with_clocks(params.clock_snapshot());
-    if cfg.staleness.compensation == Compensation::Dc {
+    if wants_x_then(cfg) {
         ctx = ctx.with_x_then(params.layers.iter().map(|l| l.snapshot()).collect());
     }
     ctx
+}
+
+/// Whether passes must carry forward-time parameter values: local DC
+/// compensation, or DC-ASGD-PS (the *shard* compensates with the trainer's
+/// forward-time values shipped inside the gradient push).
+fn wants_x_then(cfg: &TrainConfig) -> bool {
+    cfg.staleness.compensation == Compensation::Dc || cfg.algorithm == Algorithm::DcAsgdPs
 }
 
 /// Decoupled-mode counterpart of [`open_step`]: fill the pooled
@@ -496,9 +503,58 @@ fn capture_pass_provenance(cfg: &TrainConfig, params: &ModelParams, pass: &mut H
     pass.clocks.clear();
     pass.clocks.extend(params.clock_snapshot());
     pass.x_then.clear();
-    if cfg.staleness.compensation == Compensation::Dc {
+    if wants_x_then(cfg) {
         pass.x_then = params.layers.iter().map(|l| l.snapshot()).collect();
     }
+}
+
+/// Driver of a parameter-server shard (role topologies): no model execution
+/// at all — the shard pumps its fabric inbox, applying trainer gradient
+/// pushes to the layers it owns (via [`crate::comm`]'s `GradPush` arm) and
+/// replying with fresh parameters. Exits when every trainer has finished (or
+/// died) and the inbox is dry, so late in-flight pushes are never stranded.
+pub(crate) fn shard_main(
+    cfg: &TrainConfig,
+    wid: usize,
+    shared: &Arc<Shared>,
+) -> Result<WorkerExit> {
+    let trainers = cfg.cluster.n_trainers(cfg.workers);
+    loop {
+        // a shard has no step counter of its own: chaos faults and delivery
+        // stamps run on the fastest trainer's clock
+        let global = (0..trainers)
+            .map(|w| shared.steps_done[w].load(Ordering::Relaxed) as usize)
+            .max()
+            .unwrap_or(0);
+        if shared.chaos.as_ref().is_some_and(|c| c.due(wid, global)) {
+            return Ok(WorkerExit::Crashed {
+                next_step: global,
+                cursor: 0,
+                stats: WorkerStats::default(),
+            });
+        }
+        if shared.should_stop() {
+            break;
+        }
+        let pending = shared.fabric.pending_to(wid);
+        if pending > 0 {
+            if let Some(ps) = shared.ps.as_ref() {
+                ps.queue_depth_max.fetch_max(pending as u64, Ordering::Relaxed);
+            }
+        }
+        let applied = shared.fabric.deliver_due(shared, wid, global);
+        let trainers_done = (0..trainers).all(|w| {
+            shared.steps_done[w].load(Ordering::Relaxed) >= cfg.steps as u64
+                || !shared.membership.alive(w)
+        });
+        if trainers_done && shared.fabric.pending_to(wid) == 0 {
+            break;
+        }
+        if applied == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    Ok(WorkerExit::Completed(WorkerStats::default()))
 }
 
 /// Periodic checkpoint rendezvous, called at the end of every step body.

@@ -31,6 +31,7 @@ use layup::resilience::{FaultPlan, RecoveryPolicy};
 use layup::session::events::JsonlSink;
 use layup::session::SessionBuilder;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
+use layup::topology::roles::TopologySpec;
 
 fn main() {
     if let Err(e) = run() {
@@ -56,6 +57,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "bwd-threads",
     "update-threads",
     "queue-depth",
+    "topology",
     "fabric",
     "link-latency",
     "link-drop",
@@ -77,7 +79,8 @@ const TRAIN_FLAGS: &[&str] = &[
 ];
 
 /// Flags accepted by `layup sim`.
-const SIM_FLAGS: &[&str] = &["cluster", "workload", "algorithm", "sync-period", "straggler", "seed"];
+const SIM_FLAGS: &[&str] =
+    &["cluster", "workload", "algorithm", "topology", "sync-period", "straggler", "seed"];
 
 /// Flags accepted by `layup bench-peak`.
 const BENCH_PEAK_FLAGS: &[&str] = &["model", "steps"];
@@ -172,7 +175,7 @@ fn print_usage() {
          \x20               [--steps S] [--eval-every K] [--lr F] [--seed K]\n\
          \x20               [--straggler W:D] [--drift-every K] [--decoupled true]\n\
          \x20               [--fwd-threads N] [--bwd-threads N] [--update-threads N]\n\
-         \x20               [--queue-depth N]\n\
+         \x20               [--queue-depth N] [--topology flat|ps:N|hier:G]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
          \x20               [--link-bandwidth MBPS]\n\
          \x20               [--compensation none|dc] [--dc-lambda F]\n\
@@ -187,7 +190,8 @@ fn print_usage() {
          \x20               checkpoint dir or its latest step-XXXXXX snapshot)\n\
          \x20 layup sim     [--cluster c1|c2|c3] [--workload resnet18_cifar|resnet50_cifar|\n\
          \x20               resnet50_imagenet|gpt2_medium|gpt2_xl] [--algorithm A|all]\n\
-         \x20               [--sync-period K] [--straggler W:D] [--seed K]\n\
+         \x20               [--topology flat|ps:N|hier:G] [--sync-period K]\n\
+         \x20               [--straggler W:D] [--seed K]\n\
          \x20 layup inspect\n\
          \x20 layup bench-peak [--model M] [--steps S]\n\n\
          algorithms: {}",
@@ -227,6 +231,9 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     cfg.bwd_threads = args.usize_or("bwd-threads", cfg.bwd_threads)?;
     cfg.update_threads = args.usize_or("update-threads", cfg.update_threads)?;
     cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth)?;
+    if let Some(v) = args.get("topology") {
+        cfg.cluster = TopologySpec::parse(v).with_context(|| format!("--topology {v:?}"))?;
+    }
     if let Some(v) = args.get("lr") {
         let lr: f32 = v
             .parse()
@@ -431,15 +438,53 @@ fn cmd_sim(args: &Args) -> Result<()> {
         other => bail!("unknown workload {other:?}"),
     };
     let period = args.usize_or("sync-period", 12)?;
-    let algos: Vec<SimAlgo> = match args.get("algorithm").unwrap_or("all") {
-        "all" => SimAlgo::paper_set(period),
-        name => {
-            // one registry lookup instead of a divergent name match
-            let spec = layup::algorithms::spec(Algorithm::parse(name)?);
-            let Some(sim) = spec.sim else {
-                bail!("{} has no discrete-event-simulator model", spec.name);
-            };
-            vec![sim(period)]
+    let topo = match args.get("topology") {
+        Some(v) => {
+            let t = TopologySpec::parse(v).with_context(|| format!("--topology {v:?}"))?;
+            t.validate(cluster.m)
+                .with_context(|| format!("--topology {v:?} on {} devices", cluster.m))?;
+            t
+        }
+        None => TopologySpec::Flat,
+    };
+    let algos: Vec<SimAlgo> = match (args.get("algorithm").unwrap_or("all"), topo) {
+        // the topology picks the schedule family when no algorithm is named
+        ("all", TopologySpec::Flat) => SimAlgo::paper_set(period),
+        ("all", TopologySpec::Ps { shards }) => vec![
+            SimAlgo::AsgdPs { shards, dc: false },
+            SimAlgo::AsgdPs { shards, dc: true },
+        ],
+        ("all", TopologySpec::Hier { groups }) => {
+            vec![SimAlgo::HierGossip { groups, period }]
+        }
+        (name, topo) => {
+            let algo = Algorithm::parse(name)?;
+            match (algo, topo) {
+                (Algorithm::AsgdPs, TopologySpec::Ps { shards }) => {
+                    vec![SimAlgo::AsgdPs { shards, dc: false }]
+                }
+                (Algorithm::DcAsgdPs, TopologySpec::Ps { shards }) => {
+                    vec![SimAlgo::AsgdPs { shards, dc: true }]
+                }
+                (Algorithm::HierGossip, TopologySpec::Hier { groups }) => {
+                    vec![SimAlgo::HierGossip { groups, period }]
+                }
+                (Algorithm::AsgdPs | Algorithm::DcAsgdPs, _) => {
+                    bail!("{name} needs --topology ps:N (server shards)")
+                }
+                (Algorithm::HierGossip, _) => bail!("{name} needs --topology hier:G (groups)"),
+                (_, TopologySpec::Ps { .. } | TopologySpec::Hier { .. }) => {
+                    bail!("{name} runs the flat topology; drop --topology or use all")
+                }
+                (_, TopologySpec::Flat) => {
+                    // one registry lookup instead of a divergent name match
+                    let spec = layup::algorithms::spec(algo);
+                    let Some(sim) = spec.sim else {
+                        bail!("{} has no discrete-event-simulator model", spec.name);
+                    };
+                    vec![sim(period)]
+                }
+            }
         }
     };
     println!(

@@ -484,6 +484,22 @@ pub struct RecoveryStats {
     pub stalled: bool,
 }
 
+/// Parameter-server counters of one run (role topologies): zeros for flat
+/// gossip runs, where no worker is a shard.
+#[derive(Clone, Debug, Default)]
+pub struct PsStats {
+    /// server shards in the topology (`ps:N` → N; 0 when flat/hier)
+    pub shards: u64,
+    /// gradient pushes applied by the shards
+    pub grad_pushes: u64,
+    /// parameter replies shipped back to trainers
+    pub param_pulls: u64,
+    /// layer-partition reassignments after shard loss (Shrink policy)
+    pub repartitions: u64,
+    /// peak shard inbox depth observed by the shard drivers
+    pub queue_depth_max: u64,
+}
+
 /// Typed per-run statistics — the replacement for the seed-era stringly
 /// `extras: BTreeMap<String, f64>` map. Every field is still emitted under
 /// its old key in the summary JSON, so downstream result files keep parsing.
@@ -509,6 +525,8 @@ pub struct RunStats {
     pub staleness: StalenessStats,
     /// fault-tolerance counters (crashes, joins, checkpoints, stall flag)
     pub recovery: RecoveryStats,
+    /// parameter-server counters (zeros outside `ps:N` topologies)
+    pub ps: PsStats,
 }
 
 impl RunStats {
@@ -537,6 +555,11 @@ impl RunStats {
             ("checkpoints_saved", self.recovery.checkpoints_saved as f64),
             ("membership_epoch", self.recovery.membership_epoch as f64),
             ("stalled", if self.recovery.stalled { 1.0 } else { 0.0 }),
+            ("ps_shards", self.ps.shards as f64),
+            ("ps_grad_pushes", self.ps.grad_pushes as f64),
+            ("ps_param_pulls", self.ps.param_pulls as f64),
+            ("ps_repartitions", self.ps.repartitions as f64),
+            ("ps_queue_depth_max", self.ps.queue_depth_max as f64),
         ]
     }
 }
@@ -849,6 +872,11 @@ mod tests {
             "checkpoints_saved",
             "membership_epoch",
             "stalled",
+            "ps_shards",
+            "ps_grad_pushes",
+            "ps_param_pulls",
+            "ps_repartitions",
+            "ps_queue_depth_max",
             "links",
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");

@@ -33,7 +33,10 @@ use crate::util::json::{num, obj, s, Json};
 /// Bump on any layout change; `load` rejects unknown versions.
 /// v2: per-layer staleness clocks (`Checkpoint::clocks`) + provenance
 /// headers (`stamp`, `tau`) on `Payload::LayerPush`.
-pub const FORMAT_VERSION: u32 = 2;
+/// v3: parameter-server payload tags (`Payload::GradPush` = 5,
+/// `Payload::ParamPull` = 6) so a `ps:N` run's in-flight traffic survives
+/// the drain/restore round trip.
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Format name written to `meta.json` (self-description).
 pub const FORMAT_NAME: &str = "layup-checkpoint";
@@ -664,6 +667,34 @@ fn encode_payload(p: &Payload, e: &mut Enc) {
             e.u8(4);
             e.f32s(flat);
         }
+        Payload::GradPush { layer, grads, x_then, stamp } => {
+            e.u8(5);
+            e.u64(*layer as u64);
+            e.u64(grads.len() as u64);
+            for g in grads.iter() {
+                e.f32s(g);
+            }
+            match x_then {
+                None => e.bool(false),
+                Some(xt) => {
+                    e.bool(true);
+                    e.u64(xt.len() as u64);
+                    for v in xt.iter() {
+                        e.f32s(v);
+                    }
+                }
+            }
+            encode_stamp(stamp, e);
+        }
+        Payload::ParamPull { layer, values, stamp } => {
+            e.u8(6);
+            e.u64(*layer as u64);
+            e.u64(values.len() as u64);
+            for v in values.iter() {
+                e.f32s(v);
+            }
+            encode_stamp(stamp, e);
+        }
     }
 }
 
@@ -718,6 +749,36 @@ fn decode_payload(d: &mut Dec) -> Result<Payload> {
             Payload::GradShare { set: Arc::new(set) }
         }
         4 => Payload::ParamShare { flat: Arc::new(d.f32s()?) },
+        5 => {
+            let layer = d.u64()? as usize;
+            let n = d.len()?;
+            let mut grads = Vec::with_capacity(n);
+            for _ in 0..n {
+                grads.push(d.f32s()?);
+            }
+            let x_then = if d.bool()? {
+                let n = d.len()?;
+                let mut xt = Vec::with_capacity(n);
+                for _ in 0..n {
+                    xt.push(d.f32s()?);
+                }
+                Some(Arc::new(xt))
+            } else {
+                None
+            };
+            let stamp = decode_stamp(d)?;
+            Payload::GradPush { layer, grads: Arc::new(grads), x_then, stamp }
+        }
+        6 => {
+            let layer = d.u64()? as usize;
+            let n = d.len()?;
+            let mut values = Vec::with_capacity(n);
+            for _ in 0..n {
+                values.push(d.f32s()?);
+            }
+            let stamp = decode_stamp(d)?;
+            Payload::ParamPull { layer, values: Arc::new(values), stamp }
+        }
         tag => bail!("unknown checkpoint payload tag {tag}"),
     })
 }
@@ -803,6 +864,29 @@ mod tests {
                         set: Arc::new(vec![vec![Tensor::from_vec(&[2, 1], vec![1.0, 2.0])]]),
                     },
                 },
+                InFlight {
+                    from: 0,
+                    to: 1,
+                    step: 9,
+                    remaining_s: 0.001,
+                    payload: Payload::GradPush {
+                        layer: 0,
+                        grads: Arc::new(vec![vec![0.5, -0.5], vec![2.0]]),
+                        x_then: Some(Arc::new(vec![vec![1.0, 1.0], vec![-1.0]])),
+                        stamp: ClockStamp { worker: 0, step: 9, version: 40 },
+                    },
+                },
+                InFlight {
+                    from: 1,
+                    to: 0,
+                    step: 9,
+                    remaining_s: 0.002,
+                    payload: Payload::ParamPull {
+                        layer: 1,
+                        values: Arc::new(vec![vec![4.0]]),
+                        stamp: ClockStamp { worker: 1, step: 9, version: 44 },
+                    },
+                },
             ],
             curve: vec![CurvePoint { step: 5, time_s: 0.7, loss: 1.25, accuracy: 0.5 }],
             drift: vec![(4, 0.125)],
@@ -825,6 +909,14 @@ mod tests {
             ) => fa == fb && ra == rb,
             (Payload::GradShare { set: sa }, Payload::GradShare { set: sb }) => sa == sb,
             (Payload::ParamShare { flat: fa }, Payload::ParamShare { flat: fb }) => fa == fb,
+            (
+                Payload::GradPush { layer: la, grads: ga, x_then: xa, stamp: sa },
+                Payload::GradPush { layer: lb, grads: gb, x_then: xb, stamp: sb },
+            ) => la == lb && ga == gb && xa == xb && sa == sb,
+            (
+                Payload::ParamPull { layer: la, values: va, stamp: sa },
+                Payload::ParamPull { layer: lb, values: vb, stamp: sb },
+            ) => la == lb && va == vb && sa == sb,
             _ => false,
         }
     }

@@ -99,6 +99,35 @@ impl SessionBuilder {
         self
     }
 
+    /// Select the cluster topology (`[topology]` config section
+    /// equivalent): `TopologySpec::Flat` (default) for homogeneous gossip,
+    /// `TopologySpec::Ps { shards }` to turn the last `shards` worker ids
+    /// into parameter-server shards, `TopologySpec::Hier { groups }` for
+    /// two-tier gossip. Validation pairs the topology with the algorithm.
+    ///
+    /// ```no_run
+    /// use layup::config::{Algorithm, TrainConfig};
+    /// use layup::manifest::Manifest;
+    /// use layup::session::SessionBuilder;
+    /// use layup::topology::roles::TopologySpec;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let manifest = Manifest::load(&layup::artifacts_dir())?;
+    /// // 6 workers: 4 trainers pushing gradients to 2 server shards
+    /// let cfg = TrainConfig::new("mlpnet18", Algorithm::AsgdPs, 6, 60);
+    /// let summary = SessionBuilder::new(cfg)
+    ///     .topology(TopologySpec::Ps { shards: 2 })
+    ///     .build(&manifest)?
+    ///     .run()?;
+    /// println!("grad pushes: {}", summary.stats.ps.grad_pushes);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn topology(mut self, spec: crate::topology::roles::TopologySpec) -> SessionBuilder {
+        self.cfg.cluster = spec;
+        self
+    }
+
     /// Shard-pool lanes for the parameter hot path (§Perf): optimizer
     /// steps, gossip mixes and collective write-backs split their store
     /// traversals across `n` threads. `1` (the default) keeps the serial
@@ -256,7 +285,10 @@ impl Session<'_> {
             (1, 1)
         };
         let threads = if cfg.decoupled { fwd_pool + bwd_pool } else { 1 };
-        let occupancy = (total_compute / (wall * (cfg.workers * threads) as f64)).min(1.0);
+        // Role topologies: PS shards run no compute, so occupancy counts
+        // trainer wids only (n_trainers == workers for flat/hier).
+        let trainers = cfg.cluster.n_trainers(cfg.workers);
+        let occupancy = (total_compute / (wall * (trainers * threads) as f64)).min(1.0);
         let (applied, skipped) = shared.gossip_counts();
 
         let model = manifest.model(&cfg.model)?;
@@ -280,10 +312,10 @@ impl Session<'_> {
             upload_hit_rate: upload_hits as f64 / (upload_total as f64).max(1.0),
             // Per-pool occupancy split (§Perf): fwd- or bwd-bound pipeline?
             fwd_occupancy: (stats.iter().map(|s| s.fwd_compute_s).sum::<f64>()
-                / (wall * (cfg.workers * fwd_pool) as f64))
+                / (wall * (trainers * fwd_pool) as f64))
                 .min(1.0),
             bwd_occupancy: (stats.iter().map(|s| s.bwd_compute_s).sum::<f64>()
-                / (wall * (cfg.workers * bwd_pool) as f64))
+                / (wall * (trainers * bwd_pool) as f64))
                 .min(1.0),
             queue,
             comm: shared.fabric.core().snapshot(),
@@ -298,6 +330,25 @@ impl Session<'_> {
                     .unwrap_or(0),
                 membership_epoch: shared.membership.epoch(),
                 stalled: shared.membership.stalled(),
+            },
+            ps: {
+                use std::sync::atomic::Ordering::Relaxed;
+                crate::metrics::PsStats {
+                    shards: cfg.cluster.n_shards() as u64,
+                    grad_pushes: shared.ps.as_ref().map(|p| p.grad_pushes.load(Relaxed)).unwrap_or(0),
+                    param_pulls: shared.ps.as_ref().map(|p| p.param_pulls.load(Relaxed)).unwrap_or(0),
+                    repartitions: shared
+                        .fabric
+                        .core()
+                        .role_table()
+                        .map(|t| t.repartitions.load(Relaxed))
+                        .unwrap_or(0),
+                    queue_depth_max: shared
+                        .ps
+                        .as_ref()
+                        .map(|p| p.queue_depth_max.load(Relaxed))
+                        .unwrap_or(0),
+                }
             },
         };
 

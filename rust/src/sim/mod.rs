@@ -27,6 +27,7 @@
 //!
 //! Everything is deterministic given the seed.
 
+use crate::topology::group_bounds;
 use crate::util::rng::Pcg32;
 
 /// Per-layer compute/communication cost on the reference device.
@@ -193,6 +194,14 @@ pub enum SimAlgo {
     LocalSgd { period: usize },
     SlowMo { period: usize },
     Co2 { period: usize },
+    /// Star/PS topology (`--topology ps:N`): the last `shards` devices are
+    /// parameter-server shards (no compute), trainers push per-layer grads
+    /// and pull fresh params. `dc` ships `x_then` alongside (DC-ASGD).
+    AsgdPs { shards: usize, dc: bool },
+    /// Two-tier topology (`--topology hier:G`): intra-group gossip rides
+    /// NVLink-class links (free), only leader-to-leader syncs every `period`
+    /// steps pay the configured link.
+    HierGossip { groups: usize, period: usize },
 }
 
 impl SimAlgo {
@@ -205,6 +214,9 @@ impl SimAlgo {
             SimAlgo::LocalSgd { .. } => "LocalSGD",
             SimAlgo::SlowMo { .. } => "SlowMo",
             SimAlgo::Co2 { .. } => "CO2",
+            SimAlgo::AsgdPs { dc: false, .. } => "ASGD-PS",
+            SimAlgo::AsgdPs { dc: true, .. } => "DC-ASGD-PS",
+            SimAlgo::HierGossip { .. } => "HierGossip",
         }
     }
 
@@ -242,6 +254,8 @@ pub fn simulate(cluster: &Cluster, w: &Workload, algo: SimAlgo, seed: u64) -> Si
         SimAlgo::GoSgd | SimAlgo::AdPsgd | SimAlgo::LayUp => {
             sim_async_gossip(cluster, w, algo, seed)
         }
+        SimAlgo::AsgdPs { shards, dc } => sim_ps(cluster, w, shards, dc, seed),
+        SimAlgo::HierGossip { groups, period } => sim_hier(cluster, w, groups, period, seed),
     }
 }
 
@@ -418,6 +432,166 @@ fn sim_async_gossip(cluster: &Cluster, w: &Workload, algo: SimAlgo, seed: u64) -
     }
 }
 
+/// Star/PS schedule (`asgd-ps` / `dcasgd-ps`): the last `shards` devices run
+/// no compute — they own a layer partition each and serialize the trainers'
+/// round trips on their links. A trainer's push is issued layer-wise as the
+/// backward produces gradients (LayUp-style overlap) and the parameter pull
+/// lands asynchronously; only shard-link backlog beyond a full step leaks
+/// into the trainer's timeline. `dc` doubles the push volume (`x_then`
+/// rides along for the shard-side delay compensation).
+fn sim_ps(cluster: &Cluster, w: &Workload, shards: usize, dc: bool, seed: u64) -> SimResult {
+    let m = cluster.m;
+    let shards = shards.clamp(1, m - 1);
+    let trainers = m - shards;
+    let quota = w.total_batches() / trainers;
+    let mut rng = Pcg32::new(seed ^ 0x9057);
+    let mut free = vec![0.0f64; trainers];
+    let mut remaining = vec![quota; trainers];
+    let mut busy = vec![0.0f64; trainers];
+    let mut shard_free = vec![0.0f64; shards];
+    let mut comm_bytes = 0u64;
+    let mut batches_done = 0usize;
+
+    // per trainer-step traffic through ONE shard: its slice of the grads
+    // (x2 when x_then rides along) out, its slice of the params back
+    let push_bytes = w.model_bytes() * if dc { 2 } else { 1 };
+    let slice_xfer =
+        |bytes: u64| cluster.link_lat + (bytes / shards as u64) as f64 / cluster.link_bw;
+    let per_shard_rt = slice_xfer(push_bytes) + slice_xfer(w.model_bytes());
+
+    loop {
+        let healthy_done = (0..trainers)
+            .filter(|&d| cluster.idle_iters[d] == 0.0)
+            .all(|d| remaining[d] == 0);
+        if healthy_done {
+            break;
+        }
+        let Some(dev) = (0..trainers)
+            .filter(|&d| remaining[d] > 0)
+            .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+        else {
+            break;
+        };
+        let t0 = free[dev];
+        let compute = jittered(cluster, busy_time(cluster, w, dev), &mut rng);
+        let idle = compute * cluster.idle_iters[dev];
+        let mut t_end = t0 + idle + compute;
+        busy[dev] += compute;
+        comm_bytes += push_bytes + w.model_bytes();
+
+        // the first grads exist once the backward starts producing; every
+        // shard serializes the round trips of all trainers on its link
+        let first_grad_at = t_end - w.bwd_s() / cluster.speed[dev];
+        let mut slowest_shard = 0.0f64;
+        for sf in shard_free.iter_mut() {
+            *sf = sf.max(first_grad_at) + per_shard_rt;
+            slowest_shard = slowest_shard.max(*sf);
+        }
+        // backlog beyond one fully-overlapped step throttles the trainer
+        let backlog = slowest_shard - (t_end + compute);
+        if backlog > 0.0 {
+            t_end += backlog;
+        }
+        free[dev] = t_end;
+        remaining[dev] -= 1;
+        batches_done += 1;
+    }
+
+    let wall = (0..trainers)
+        .filter(|&d| cluster.idle_iters[d] == 0.0)
+        .map(|d| free[d])
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    let total_busy: f64 = (0..trainers)
+        .filter(|&d| cluster.idle_iters[d] == 0.0)
+        .map(|d| busy[d].min(wall))
+        .sum();
+    let healthy = (0..trainers).filter(|&d| cluster.idle_iters[d] == 0.0).count();
+    // occupancy over the trainer devices only — the shards run no compute,
+    // mirroring the thread cluster's per-role denominators
+    let occupancy = total_busy / (wall * healthy.max(1) as f64);
+    SimResult {
+        algo: if dc { "DC-ASGD-PS" } else { "ASGD-PS" },
+        wall_s: wall,
+        occupancy,
+        mfu: occupancy * cluster.kernel_mfu,
+        comm_gbytes: comm_bytes as f64 / 1e9,
+        batches: batches_done,
+    }
+}
+
+/// Two-tier schedule (`hier-gossip`): intra-group push-sum rides the
+/// intra-node links (instant, free — the group models one NVLink domain);
+/// only the group leaders' whole-model exchanges every `period` steps pay
+/// the configured inter-node link, GoSGD-style (half-overlapped send).
+fn sim_hier(cluster: &Cluster, w: &Workload, groups: usize, period: usize, seed: u64) -> SimResult {
+    let m = cluster.m;
+    let groups = groups.clamp(1, m);
+    let period = period.max(1);
+    let quota = w.total_batches() / m;
+    let mut rng = Pcg32::new(seed ^ 0x416e);
+    let mut free = vec![0.0f64; m];
+    let mut remaining = vec![quota; m];
+    let mut busy = vec![0.0f64; m];
+    let mut comm_bytes = 0u64;
+    let mut batches_done = 0usize;
+    let leader: Vec<bool> = (0..m)
+        .map(|d| (0..groups).any(|k| group_bounds(k, m, groups).0 == d))
+        .collect();
+
+    loop {
+        let healthy_done = (0..m)
+            .filter(|&d| cluster.idle_iters[d] == 0.0)
+            .all(|d| remaining[d] == 0);
+        if healthy_done {
+            break;
+        }
+        let Some(dev) = (0..m)
+            .filter(|&d| remaining[d] > 0)
+            .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+        else {
+            break;
+        };
+        let t0 = free[dev];
+        let compute = jittered(cluster, busy_time(cluster, w, dev), &mut rng);
+        let idle = compute * cluster.idle_iters[dev];
+        let mut t_end = t0 + idle + compute;
+        busy[dev] += compute;
+
+        // tier 2 only: the leader ships its model to the next group's
+        // leader at the period boundary (tier-1 intra-group mixes are free)
+        let step_done = quota - remaining[dev];
+        if groups > 1 && leader[dev] && (step_done + 1) % period == 0 {
+            let send = cluster.xfer(w.model_bytes());
+            comm_bytes += w.model_bytes();
+            t_end += 0.5 * send; // half-overlapped, like GoSGD's push
+        }
+        free[dev] = t_end;
+        remaining[dev] -= 1;
+        batches_done += 1;
+    }
+
+    let wall = (0..m)
+        .filter(|&d| cluster.idle_iters[d] == 0.0)
+        .map(|d| free[d])
+        .fold(0.0, f64::max)
+        .max(1e-9);
+    let total_busy: f64 = (0..m)
+        .filter(|&d| cluster.idle_iters[d] == 0.0)
+        .map(|d| busy[d].min(wall))
+        .sum();
+    let healthy = (0..m).filter(|&d| cluster.idle_iters[d] == 0.0).count();
+    let occupancy = total_busy / (wall * healthy.max(1) as f64);
+    SimResult {
+        algo: "HierGossip",
+        wall_s: wall,
+        occupancy,
+        mfu: occupancy * cluster.kernel_mfu,
+        comm_gbytes: comm_bytes as f64 / 1e9,
+        batches: batches_done,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -493,6 +667,31 @@ mod tests {
         let co2 = simulate(&c, &w, SimAlgo::Co2 { period: 12 }, 1);
         let slowmo = simulate(&c, &w, SimAlgo::SlowMo { period: 12 }, 1);
         assert!(co2.wall_s <= slowmo.wall_s);
+    }
+
+    #[test]
+    fn dc_asgd_ps_ships_more_and_hier_ships_less() {
+        let c = Cluster::c2();
+        let w = Workload::resnet50_cifar(c.m);
+        let ps = simulate(&c, &w, SimAlgo::AsgdPs { shards: 2, dc: false }, 1);
+        let dc = simulate(&c, &w, SimAlgo::AsgdPs { shards: 2, dc: true }, 1);
+        // x_then rides along: (2+1)/(1+1) = 1.5x the PS volume
+        assert!((dc.comm_gbytes / ps.comm_gbytes - 1.5).abs() < 0.01, "{} vs {}", dc.comm_gbytes, ps.comm_gbytes);
+        // only leader syncs pay the link: far below whole-model gossip
+        let go = simulate(&c, &w, SimAlgo::GoSgd, 1);
+        let hier = simulate(&c, &w, SimAlgo::HierGossip { groups: 2, period: 12 }, 1);
+        assert!(hier.comm_gbytes < 0.5 * go.comm_gbytes, "{} vs {}", hier.comm_gbytes, go.comm_gbytes);
+        assert!(hier.occupancy > 0.9, "occupancy {}", hier.occupancy);
+    }
+
+    #[test]
+    fn ps_trainer_occupancy_counts_trainers_only() {
+        let c = Cluster::c1();
+        let w = Workload::resnet18_cifar(c.m);
+        let r = simulate(&c, &w, SimAlgo::AsgdPs { shards: 1, dc: false }, 1);
+        // 2 trainers push through a fat intra-node link: near-full overlap
+        assert!(r.occupancy > 0.8, "occupancy {}", r.occupancy);
+        assert!(r.batches > 0);
     }
 
     #[test]

@@ -23,6 +23,8 @@
 //! delivery (a dropped message reclaims at the sender; a busy slot
 //! re-queues) — the same conservation invariant either way.
 
+pub mod roles;
+
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use crate::util::rng::Pcg32;
@@ -59,12 +61,18 @@ impl PushSumWeight {
     }
 
     /// Sender side: halve own weight, return the half being shipped.
+    ///
+    /// CAS loop on the bits: a plain `get`/`set` pair would silently
+    /// overwrite a concurrent `try_accept`/`reclaim` deposit landing in
+    /// between, destroying push-sum mass.
     pub fn halve(&self) -> f32 {
-        // lock-free read-modify-write; a racing reader may see either value
-        let cur = self.get();
-        let half = cur * 0.5;
-        self.set(half);
-        half
+        let prev = self
+            .w
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f32::from_bits(bits) * 0.5).to_bits())
+            })
+            .unwrap();
+        f32::from_bits(prev) * 0.5
     }
 
     /// Receiver side: try to accept `w_in`; returns the mixing fraction
@@ -79,9 +87,17 @@ impl PushSumWeight {
             self.skipped.fetch_add(1, Ordering::Relaxed);
             return None;
         }
-        let w_self = self.get();
+        // the busy flag serializes accepts against each other and against
+        // drains, but NOT against the owner's own `halve`/`reclaim` — the
+        // deposit must be a CAS add so a concurrent halving never erases it
+        let prev = self
+            .w
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f32::from_bits(bits) + w_in).to_bits())
+            })
+            .unwrap();
+        let w_self = f32::from_bits(prev);
         let frac = w_in / (w_self + w_in);
-        self.set(w_self + w_in);
         self.applied.fetch_add(1, Ordering::Relaxed);
         Some(frac)
     }
@@ -92,10 +108,13 @@ impl PushSumWeight {
     }
 
     /// Undo a `halve()` whose push was skipped: reclaim the shipped weight so
-    /// total mass is conserved.
+    /// total mass is conserved (CAS add, same reasoning as [`Self::halve`]).
     pub fn reclaim(&self, w_half: f32) {
-        let cur = self.get();
-        self.set(cur + w_half);
+        self.w
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f32::from_bits(bits) + w_half).to_bits())
+            })
+            .unwrap();
     }
 
     /// Atomically (w.r.t. the accept slot) drain the whole weight: claims
@@ -111,8 +130,9 @@ impl PushSumWeight {
         {
             return None;
         }
-        let w = self.get();
-        self.set(0.0);
+        // atomic swap-to-zero: a concurrent `halve` between a get/set pair
+        // would let the drained mass AND the shipped half both survive
+        let w = f32::from_bits(self.w.swap(0f32.to_bits(), Ordering::Relaxed));
         self.release();
         Some(w)
     }
@@ -130,6 +150,26 @@ pub enum Topology {
     Groups(usize),
 }
 
+/// The group that member `i` belongs to when `m` workers are split into `g`
+/// contiguous groups: `⌊i·g/m⌋`. Consistent with [`group_bounds`] — member
+/// `i` always falls inside its own group's range.
+pub fn group_of(i: usize, m: usize, g: usize) -> usize {
+    debug_assert!(g >= 1 && g <= m && i < m);
+    i * g / m
+}
+
+/// Exact half-open bounds `[lo, hi)` of group `k` under the [`group_of`]
+/// partition: `lo = ⌈k·m/g⌉`, `hi = ⌈(k+1)·m/g⌉`. For `g <= m` the ranges
+/// partition `0..m` exactly and every group is non-empty — floor-based
+/// bounds (the seed-era arithmetic) disagree with `⌊i·g/m⌋` membership and
+/// can produce empty groups when `g ∤ m`.
+pub fn group_bounds(k: usize, m: usize, g: usize) -> (usize, usize) {
+    debug_assert!(g >= 1 && g <= m && k < g);
+    let lo = (k * m + g - 1) / g;
+    let hi = ((k + 1) * m + g - 1) / g;
+    (lo, hi)
+}
+
 impl Topology {
     /// Choose the receiver for worker `me` at iteration `iter`.
     pub fn peer(&self, me: usize, m: usize, iter: u64, rng: &mut Pcg32) -> usize {
@@ -138,16 +178,17 @@ impl Topology {
             Topology::Ring => (me + 1) % m,
             Topology::Groups(g) => {
                 let g = (*g).max(1).min(m);
-                let group_of = me * g / m;
-                let next_group = (group_of + 1 + (iter as usize % (g - 1).max(1))) % g;
-                // uniform member of the next group, avoiding self
-                let lo = next_group * m / g;
-                let hi = ((next_group + 1) * m / g).max(lo + 1);
-                let mut j = lo + rng.below_usize(hi - lo);
-                if j == me {
-                    j = (j + 1) % m;
+                if g == 1 {
+                    // a single group degenerates to uniform random gossip
+                    return rng.peer(me, m);
                 }
-                j
+                let mine = group_of(me, m, g);
+                // cascade: cycle through every *other* group over iterations
+                let next_group = (mine + 1 + (iter as usize % (g - 1))) % g;
+                let (lo, hi) = group_bounds(next_group, m, g);
+                // uniform member of the next group; `me` is never inside it
+                // because next_group != mine and the bounds are exact
+                lo + rng.below_usize(hi - lo)
             }
         }
     }
@@ -241,6 +282,81 @@ mod tests {
         let mut rng = Pcg32::new(1);
         assert_eq!(t.peer(0, 4, 0, &mut rng), 1);
         assert_eq!(t.peer(3, 4, 0, &mut rng), 0);
+    }
+
+    /// Satellite stress for the CAS weight ops: one thread gossips a→b while
+    /// another gossips b→a, so halvings race accepts on both cells. With the
+    /// seed-era plain get/set read-modify-writes a deposit landing between
+    /// the two halves of a halve (or vice versa) was silently overwritten,
+    /// destroying ~0.1-scale chunks of push-sum mass; with `fetch_update`
+    /// loops only f32 rounding (≪1e-3 over 40k ops) remains.
+    #[test]
+    fn concurrent_halve_vs_accept_conserves_mass() {
+        use std::sync::Arc;
+        let a = Arc::new(PushSumWeight::new(0.5));
+        let b = Arc::new(PushSumWeight::new(0.5));
+        let iters = 20_000usize;
+        let gossip = |src: Arc<PushSumWeight>, dst: Arc<PushSumWeight>| {
+            std::thread::spawn(move || {
+                for _ in 0..iters {
+                    let shipped = src.halve();
+                    match dst.try_accept(shipped) {
+                        Some(_) => dst.release(),
+                        None => src.reclaim(shipped),
+                    }
+                }
+            })
+        };
+        let t1 = gossip(a.clone(), b.clone());
+        let t2 = gossip(b.clone(), a.clone());
+        t1.join().unwrap();
+        t2.join().unwrap();
+        let total = a.get() as f64 + b.get() as f64;
+        assert!(
+            (total - 1.0).abs() < 1e-3,
+            "push-sum mass not conserved under halve-vs-accept races: {total}"
+        );
+    }
+
+    /// Property test over all (m, g) in 2..=16: the group bounds partition
+    /// `0..m` exactly, every group is non-empty, membership agrees with the
+    /// bounds, and `peer` always lands inside the cascade's next group
+    /// (never on `me`). `g > m` clamps to `m` singleton groups.
+    #[test]
+    fn groups_partition_exactly_for_all_m_g() {
+        for m in 2usize..=16 {
+            for g in 2usize..=16 {
+                let ge = g.min(m); // peer() clamps; config validation rejects
+                let mut covered = 0usize;
+                for k in 0..ge {
+                    let (lo, hi) = group_bounds(k, m, ge);
+                    assert!(lo < hi, "empty group k={k} m={m} g={ge}");
+                    assert_eq!(lo, covered, "gap/overlap at k={k} m={m} g={ge}");
+                    for i in lo..hi {
+                        assert_eq!(group_of(i, m, ge), k, "member {i} m={m} g={ge}");
+                    }
+                    covered = hi;
+                }
+                assert_eq!(covered, m, "bounds must partition 0..{m} (g={ge})");
+
+                let t = Topology::Groups(g);
+                let mut rng = Pcg32::new((m * 31 + g) as u64);
+                for me in 0..m {
+                    for it in 0..64u64 {
+                        let j = t.peer(me, m, it, &mut rng);
+                        assert!(j < m);
+                        assert_ne!(j, me, "m={m} g={g} me={me} it={it}");
+                        let mine = group_of(me, m, ge);
+                        let expected = (mine + 1 + (it as usize % (ge - 1))) % ge;
+                        assert_eq!(
+                            group_of(j, m, ge),
+                            expected,
+                            "peer left the cascade group: m={m} g={g} me={me}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Heterogeneous worker roles and declarative traffic topologies.
+//!
+//! The seed-era cluster is *flat*: every worker is a trainer and traffic is
+//! peer-to-peer gossip or a collective. This module adds a declarative
+//! [`TopologySpec`] on top:
+//!
+//! * [`TopologySpec::Flat`] — every worker trains, gossip/collective traffic
+//!   exactly as before (the default; bit-identical to the flat-era runs).
+//! * [`TopologySpec::Ps`] — star/parameter-server: the **last** `shards`
+//!   worker ids become server shards that partition the model's layers
+//!   contiguously; the remaining ids stay trainers (worker 0 keeps its
+//!   eval/drift duties). Trainers push per-layer gradients
+//!   (`Payload::GradPush`) to the owning shard and receive fresh parameters
+//!   back (`Payload::ParamPull`).
+//! * [`TopologySpec::Hier`] — hierarchical two-tier: all workers train, but
+//!   they are split into `groups` contiguous groups (exact
+//!   [`super::group_bounds`] partition). Push-sum gossip stays *inside* the
+//!   group on instant shared-memory semantics; once per sync period each
+//!   group's leader exchanges whole models with the next group's leader over
+//!   the configured fabric — on `SimFabric` that inter-group hop pays the
+//!   link's latency/bandwidth model while intra-group traffic stays free,
+//!   the classic intra-node/inter-node split.
+//!
+//! Layer→shard routing is elastic: [`RoleTable`] caches the owner map per
+//! membership epoch, so a crashed shard (under `RecoveryPolicy::Shrink`)
+//! re-partitions its layers across the survivors, with a handover record per
+//! moved layer so the fabric can copy the freshest parameter values across.
+//! Under `RecoveryPolicy::Stall` the static owner map is kept and routing to
+//! a dead shard returns `None` — trainers freeze that layer until the shard
+//! rejoins (or the engine declares the run stalled).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// What a worker id *is* under a [`TopologySpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Runs forward/backward passes and pushes gradients.
+    Trainer,
+    /// Parameter-server shard `shard` (0-based), owning a contiguous slice
+    /// of the model's layers. Never computes passes.
+    PsShard {
+        /// 0-based shard index (`wid = m - n_shards + shard`)
+        shard: usize,
+    },
+}
+
+/// Declarative cluster topology: how roles are assigned and traffic routed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// Flat peer-to-peer cluster (seed-era behavior; the default).
+    Flat,
+    /// Star/parameter-server with `shards` server shards (the last `shards`
+    /// worker ids) partitioning the model's layers.
+    Ps {
+        /// number of parameter-server shards (>= 1, < workers)
+        shards: usize,
+    },
+    /// Hierarchical two-tier cluster: `groups` contiguous trainer groups,
+    /// instant push-sum inside a group, leader-to-leader fabric exchange
+    /// across groups.
+    Hier {
+        /// number of intra-node groups (>= 2, <= workers)
+        groups: usize,
+    },
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec::Flat
+    }
+}
+
+impl TopologySpec {
+    /// Parse the CLI/TOML spelling: `flat`, `ps:N`, `hier:G`.
+    pub fn parse(text: &str) -> Result<TopologySpec> {
+        let t = text.trim();
+        if t.eq_ignore_ascii_case("flat") {
+            return Ok(TopologySpec::Flat);
+        }
+        if let Some(n) = t.strip_prefix("ps:") {
+            let shards: usize = n
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("topology: bad shard count in {t:?}"))?;
+            return Ok(TopologySpec::Ps { shards });
+        }
+        if let Some(g) = t.strip_prefix("hier:") {
+            let groups: usize = g
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("topology: bad group count in {t:?}"))?;
+            return Ok(TopologySpec::Hier { groups });
+        }
+        bail!("unknown topology {t:?} (expected flat, ps:N or hier:G)")
+    }
+
+    /// Canonical spelling (round-trips through [`TopologySpec::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            TopologySpec::Flat => "flat".into(),
+            TopologySpec::Ps { shards } => format!("ps:{shards}"),
+            TopologySpec::Hier { groups } => format!("hier:{groups}"),
+        }
+    }
+
+    /// Structural validation against the worker count.
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        match *self {
+            TopologySpec::Flat => Ok(()),
+            TopologySpec::Ps { shards } => {
+                if shards == 0 {
+                    bail!("topology ps:N needs at least one shard");
+                }
+                if shards >= workers {
+                    bail!(
+                        "topology ps:{shards} leaves no trainers with {workers} workers \
+                         (need shards < workers)"
+                    );
+                }
+                Ok(())
+            }
+            TopologySpec::Hier { groups } => {
+                if groups < 2 {
+                    bail!("topology hier:G needs at least 2 groups (1 group is flat)");
+                }
+                if groups > workers {
+                    bail!(
+                        "topology hier:{groups} cannot split {workers} workers into \
+                         more groups than workers"
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Number of parameter-server shards (0 for non-PS topologies).
+    pub fn n_shards(&self) -> usize {
+        match *self {
+            TopologySpec::Ps { shards } => shards,
+            _ => 0,
+        }
+    }
+
+    /// Number of workers that run training passes.
+    pub fn n_trainers(&self, m: usize) -> usize {
+        m - self.n_shards().min(m)
+    }
+
+    /// The role of worker `wid` in an `m`-worker cluster.
+    pub fn role_of(&self, wid: usize, m: usize) -> Role {
+        let trainers = self.n_trainers(m);
+        if wid >= trainers {
+            Role::PsShard { shard: wid - trainers }
+        } else {
+            Role::Trainer
+        }
+    }
+
+    /// True when `wid` is a parameter-server shard.
+    pub fn is_shard(&self, wid: usize, m: usize) -> bool {
+        matches!(self.role_of(wid, m), Role::PsShard { .. })
+    }
+
+    /// Worker id of shard `k` (panics when `k` is out of range).
+    pub fn shard_wid(&self, k: usize, m: usize) -> usize {
+        assert!(k < self.n_shards(), "shard {k} out of range");
+        self.n_trainers(m) + k
+    }
+}
+
+/// One layer handed from a (dead) shard to a surviving one during an elastic
+/// re-partition: the fabric copies `layer`'s parameters from `from_wid`'s
+/// replica (which holds the freshest values even after the crash) into
+/// `to_wid`'s before routing resumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handover {
+    /// model layer being re-homed
+    pub layer: usize,
+    /// previous owner's worker id
+    pub from_wid: usize,
+    /// new owner's worker id
+    pub to_wid: usize,
+}
+
+/// Owner (worker id, picked from `live`) of `layer` when `n_layers` layers
+/// are partitioned contiguously across the `live` shard ids. With more live
+/// shards than layers the tail shards own nothing.
+pub fn layer_owner(layer: usize, n_layers: usize, live: &[usize]) -> Option<usize> {
+    if live.is_empty() || layer >= n_layers {
+        return None;
+    }
+    let g = live.len().min(n_layers);
+    Some(live[super::group_of(layer, n_layers, g)])
+}
+
+/// Epoch-cached layer→shard owner map for a PS topology. `route` is called
+/// on every gradient push; the owner map is only recomputed when the
+/// membership epoch moves (crash/rejoin), and each recompute reports the
+/// parameter handovers the caller must perform.
+pub struct RoleTable {
+    spec: TopologySpec,
+    m: usize,
+    n_layers: usize,
+    cache: Mutex<RouteCache>,
+    /// elastic re-partitions performed (shard crash/rejoin epochs)
+    pub repartitions: AtomicU64,
+}
+
+struct RouteCache {
+    /// membership epoch the owner map was computed at (`None` = never)
+    epoch: Option<u64>,
+    /// per-layer owner wid (`None` = owner dead under Stall policy)
+    owners: Vec<Option<usize>>,
+}
+
+impl RoleTable {
+    /// A routing table for `m` workers over `n_layers` model layers.
+    pub fn new(spec: TopologySpec, m: usize, n_layers: usize) -> RoleTable {
+        RoleTable {
+            spec,
+            m,
+            n_layers,
+            cache: Mutex::new(RouteCache { epoch: None, owners: vec![None; n_layers] }),
+            repartitions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &TopologySpec {
+        &self.spec
+    }
+
+    /// Owner of `layer` at membership `epoch`, where `alive[wid]` flags the
+    /// live workers and `shrink` selects the elastic policy: `true`
+    /// re-partitions layers across the surviving shards (returning the
+    /// parameter handovers to apply), `false` keeps the static map and
+    /// returns `None` for layers whose owner is dead.
+    pub fn route(
+        &self,
+        epoch: u64,
+        alive: &[bool],
+        shrink: bool,
+        layer: usize,
+    ) -> (Option<usize>, Vec<Handover>) {
+        let mut cache = self.cache.lock().unwrap();
+        let mut handovers = Vec::new();
+        if cache.epoch != Some(epoch) {
+            let all: Vec<usize> =
+                (0..self.spec.n_shards()).map(|k| self.spec.shard_wid(k, self.m)).collect();
+            let live: Vec<usize> =
+                all.iter().copied().filter(|&w| alive.get(w).copied().unwrap_or(false)).collect();
+            let fresh: Vec<Option<usize>> = (0..self.n_layers)
+                .map(|l| {
+                    if shrink {
+                        layer_owner(l, self.n_layers, &live)
+                    } else {
+                        // static map; dead owner routes to None (stall)
+                        layer_owner(l, self.n_layers, &all)
+                            .filter(|&w| alive.get(w).copied().unwrap_or(false))
+                    }
+                })
+                .collect();
+            let first = cache.epoch.is_none();
+            let mut moved = false;
+            for (l, (&old, &new)) in cache.owners.iter().zip(fresh.iter()).enumerate() {
+                if let (Some(old), Some(new)) = (old, new) {
+                    if old != new {
+                        moved = true;
+                        handovers.push(Handover { layer: l, from_wid: old, to_wid: new });
+                    }
+                }
+            }
+            if !first && moved {
+                self.repartitions.fetch_add(1, Ordering::Relaxed);
+            }
+            cache.owners = fresh;
+            cache.epoch = Some(epoch);
+        }
+        (cache.owners.get(layer).copied().flatten(), handovers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects_garbage() {
+        for text in ["flat", "ps:1", "ps:3", "hier:2", "hier:8"] {
+            let spec = TopologySpec::parse(text).unwrap();
+            assert_eq!(spec.name(), text);
+            assert_eq!(TopologySpec::parse(&spec.name()).unwrap(), spec);
+        }
+        assert_eq!(TopologySpec::parse(" Flat ").unwrap(), TopologySpec::Flat);
+        for bad in ["star", "ps:", "ps:x", "hier:", "ring:3", ""] {
+            assert!(TopologySpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn validation_bounds_shards_and_groups() {
+        assert!(TopologySpec::Flat.validate(1).is_ok());
+        assert!(TopologySpec::Ps { shards: 1 }.validate(2).is_ok());
+        assert!(TopologySpec::Ps { shards: 0 }.validate(4).is_err());
+        assert!(TopologySpec::Ps { shards: 4 }.validate(4).is_err(), "no trainers left");
+        assert!(TopologySpec::Hier { groups: 2 }.validate(4).is_ok());
+        assert!(TopologySpec::Hier { groups: 1 }.validate(4).is_err());
+        assert!(TopologySpec::Hier { groups: 5 }.validate(4).is_err(), "groups > workers");
+    }
+
+    #[test]
+    fn roles_put_shards_at_the_tail() {
+        let spec = TopologySpec::Ps { shards: 2 };
+        let m = 5;
+        assert_eq!(spec.n_trainers(m), 3);
+        for wid in 0..3 {
+            assert_eq!(spec.role_of(wid, m), Role::Trainer);
+        }
+        assert_eq!(spec.role_of(3, m), Role::PsShard { shard: 0 });
+        assert_eq!(spec.role_of(4, m), Role::PsShard { shard: 1 });
+        assert_eq!(spec.shard_wid(0, m), 3);
+        assert_eq!(spec.shard_wid(1, m), 4);
+        assert!(spec.is_shard(4, m) && !spec.is_shard(0, m));
+        // flat and hier topologies have no shards
+        assert_eq!(TopologySpec::Flat.role_of(4, m), Role::Trainer);
+        assert_eq!(TopologySpec::Hier { groups: 2 }.role_of(4, m), Role::Trainer);
+    }
+
+    #[test]
+    fn layer_owner_partitions_and_handles_edge_counts() {
+        // 7 layers over live shards {3, 4}: contiguous non-empty halves
+        let live = [3usize, 4];
+        let owners: Vec<usize> = (0..7).map(|l| layer_owner(l, 7, &live).unwrap()).collect();
+        assert_eq!(owners, vec![3, 3, 3, 3, 4, 4, 4]);
+        // more shards than layers: tail shard owns nothing but lookups work
+        let live = [2usize, 3, 4];
+        for l in 0..2 {
+            assert!(layer_owner(l, 2, &live).is_some());
+        }
+        assert_eq!(layer_owner(5, 2, &live), None, "out-of-range layer");
+        assert_eq!(layer_owner(0, 2, &[]), None, "no survivors");
+    }
+
+    #[test]
+    fn role_table_repartitions_on_epoch_change_with_handover() {
+        let spec = TopologySpec::Ps { shards: 2 };
+        let (m, n_layers) = (4usize, 4usize);
+        let rt = RoleTable::new(spec, m, n_layers);
+        let alive = vec![true; m];
+        // epoch 0: layers 0-1 on shard wid 2, layers 2-3 on shard wid 3
+        let (owner, hand) = rt.route(0, &alive, true, 0);
+        assert_eq!(owner, Some(2));
+        assert!(hand.is_empty(), "first map is not a repartition");
+        assert_eq!(rt.route(0, &alive, true, 3).0, Some(3));
+        assert_eq!(rt.repartitions.load(Ordering::Relaxed), 0);
+
+        // shard wid 3 dies; shrink moves its layers onto wid 2 with handover
+        let mut alive2 = alive.clone();
+        alive2[3] = false;
+        let (owner, hand) = rt.route(1, &alive2, true, 2);
+        assert_eq!(owner, Some(2));
+        assert_eq!(
+            hand,
+            vec![
+                Handover { layer: 2, from_wid: 3, to_wid: 2 },
+                Handover { layer: 3, from_wid: 3, to_wid: 2 }
+            ]
+        );
+        assert_eq!(rt.repartitions.load(Ordering::Relaxed), 1);
+
+        // stall policy instead: static map, dead owner routes to None
+        let rt = RoleTable::new(spec, m, n_layers);
+        rt.route(0, &alive, false, 0);
+        let (owner, hand) = rt.route(1, &alive2, false, 3);
+        assert_eq!(owner, None, "dead owner must stall the layer");
+        assert!(hand.is_empty());
+        assert_eq!(rt.route(1, &alive2, false, 0).0, Some(2), "live shard keeps its layers");
+    }
+}

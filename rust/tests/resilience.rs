@@ -14,6 +14,7 @@ use layup::optim::Schedule;
 use layup::resilience::{checkpoint, FaultPlan, RecoveryPolicy};
 use layup::session::events::TrainEvent;
 use layup::session::SessionBuilder;
+use layup::topology::roles::TopologySpec;
 
 fn manifest() -> Option<Manifest> {
     let dir = layup::artifacts_dir();
@@ -142,6 +143,115 @@ fn resume_parity_bit_identical_for_layup_gosgd_adpsgd_and_ddp() {
         std::fs::remove_dir_all(&dir).ok();
         std::fs::remove_dir_all(&resumed_dir).ok();
     }
+}
+
+/// PS determinism (topology satellite): `asgd-ps` and `dcasgd-ps`
+/// checkpoint at step 8 and resume bit-identically under the lockstep
+/// driver — the shard's optimizer moments ride the shard wid's checkpoint
+/// slot, and the instant fabric's synchronous GradPush/ParamPull round
+/// trips replay exactly. `hier-gossip` rides along as the third role
+/// topology (leader pushes replay through the same path).
+#[test]
+fn resume_parity_bit_identical_for_ps_and_hier_topologies() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let cases = [
+        (Algorithm::AsgdPs, TopologySpec::Ps { shards: 1 }),
+        (Algorithm::DcAsgdPs, TopologySpec::Ps { shards: 1 }),
+        (Algorithm::HierGossip, TopologySpec::Hier { groups: 2 }),
+    ];
+    for (algo, cluster) in cases {
+        let dir = tmp_dir(&format!("parity-{algo:?}"));
+        let steps = 12;
+        let every = 4;
+        let workers = 3; // ps:1 → 2 trainers + 1 shard; hier:2 → groups {0,1}, {2}
+
+        let mut cfg = quick_cfg(&model_name, algo, workers, steps);
+        cfg.cluster = cluster;
+        cfg.lockstep = true;
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = dir.clone();
+        let full = run(&cfg, &man);
+        assert_eq!(
+            full.stats.recovery.checkpoints_saved, 2,
+            "{algo:?}: expected snapshots at steps 4 and 8"
+        );
+        if cluster.n_shards() > 0 {
+            assert!(full.stats.ps.grad_pushes > 0, "{algo:?}: shards applied no gradients");
+            assert!(full.stats.ps.param_pulls > 0, "{algo:?}: shards replied no parameters");
+            assert!(!full.stats.recovery.stalled, "{algo:?}: PS run stalled");
+            // the shard wid's slot must carry its optimizer moments
+            let ck = checkpoint::load(&checkpoint::step_dir(&dir, every)).unwrap();
+            assert!(
+                ck.workers_state[workers - 1].algo.opt.is_some(),
+                "{algo:?}: shard slot missing optimizer state"
+            );
+        }
+
+        let resumed_dir = tmp_dir(&format!("parity-resumed-{algo:?}"));
+        let mut resume_cfg = quick_cfg(&model_name, algo, workers, steps);
+        resume_cfg.cluster = cluster;
+        resume_cfg.lockstep = true;
+        resume_cfg.checkpoint_every = every;
+        resume_cfg.checkpoint_dir = resumed_dir.clone();
+        let resumed = SessionBuilder::new(resume_cfg)
+            .build(&man)
+            .unwrap()
+            .resume_from(checkpoint::step_dir(&dir, every))
+            .unwrap_or_else(|e| panic!("{algo:?}: resume failed: {e:#}"))
+            .run()
+            .unwrap_or_else(|e| panic!("{algo:?}: resumed run failed: {e:#}"));
+
+        assert_curves_identical(&full, &resumed, &format!("{algo:?} resume parity"));
+
+        // the step-8 snapshots — trainer replicas, shard parameter stacks,
+        // staleness clocks — must agree bit-for-bit across the resume
+        let ck_full = checkpoint::load(&checkpoint::step_dir(&dir, 2 * every))
+            .unwrap_or_else(|e| panic!("{algo:?}: loading full-run step-8 snapshot: {e:#}"));
+        let ck_resumed = checkpoint::load(&checkpoint::step_dir(&resumed_dir, 2 * every))
+            .unwrap_or_else(|e| panic!("{algo:?}: loading resumed-run step-8 snapshot: {e:#}"));
+        assert_eq!(ck_full.params, ck_resumed.params, "{algo:?}: replica values diverged");
+        assert_eq!(
+            ck_full.clocks, ck_resumed.clocks,
+            "{algo:?}: staleness clocks diverged across resume"
+        );
+
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&resumed_dir).ok();
+    }
+}
+
+/// A dead PS shard under the Stall policy stalls the trainers (its layer
+/// partition is frozen and the supervisor reports the stall), exactly like
+/// a dead barrier peer; under Shrink the surviving shard inherits the whole
+/// partition and the run completes.
+#[test]
+fn dead_shard_stalls_or_repartitions_by_policy() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let steps = 10;
+
+    // Stall (default): shard wid 3 dies at step 3 → trainers freeze its
+    // layers, the supervisor waits out the timeout and stops the run
+    let mut cfg = quick_cfg(&model_name, Algorithm::AsgdPs, 4, steps);
+    cfg.cluster = TopologySpec::Ps { shards: 2 };
+    cfg.faults = FaultPlan::default().crash(3, 3);
+    cfg.stall_timeout_s = 1.0;
+    let summary = run(&cfg, &man);
+    assert!(summary.stats.recovery.stalled, "a dead shard must stall the PS run");
+    assert_eq!(summary.stats.recovery.crashes, 1);
+
+    // Shrink: the surviving shard takes over the dead shard's layers (the
+    // membership epoch bumps the route cache) and every trainer finishes
+    let mut cfg = quick_cfg(&model_name, Algorithm::AsgdPs, 4, steps);
+    cfg.cluster = TopologySpec::Ps { shards: 2 };
+    cfg.faults = FaultPlan::default().crash(3, 3);
+    cfg.recovery = RecoveryPolicy::Shrink;
+    let summary = run(&cfg, &man);
+    assert!(!summary.stats.recovery.stalled, "shrink re-partitions instead of stalling");
+    assert_eq!(summary.total_steps, 2 * steps, "both trainers finish their budgets");
+    assert!(summary.stats.ps.repartitions > 0, "route cache never re-partitioned");
+    assert!(summary.curve.best_loss().is_finite());
 }
 
 /// `resolve` picks the latest snapshot when handed the parent directory, and
