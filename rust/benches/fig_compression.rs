@@ -1,0 +1,164 @@
+//! **Compression protocol** — the codec sweep: LayUp vs GoSGD vs ASGD-PS
+//! under `dense`, `topk:K` and `int8` wire codecs, crossed with a
+//! bandwidth-constrained simulated fabric.
+//!
+//! Every run shares one workload and step budget; the fabric meters
+//! **encoded** wire bytes (`Payload::encoded_len`), so a sparsifying codec
+//! shows up twice: directly in `comm_bytes`, and indirectly as wall-clock
+//! wins once the link bandwidth makes serialization delay the bottleneck.
+//! The paper-relevant row is `bytes_reduction_vs_dense` — top-k with
+//! error feedback holds the loss curve while cutting wire traffic by
+//! roughly `4K/8` (sparse coords cost 8 bytes against 4 dense).
+//!
+//! Exit is non-zero when any non-dense run fails to reduce bytes at all —
+//! the CI compression-smoke job relies on this (and separately asserts the
+//! ≥4x top-k floor from bench_summary.json).
+//!
+//! Environment knobs:
+//!   LAYUP_CODECS           comma-separated specs (default dense,topk:16,int8)
+//!   LAYUP_BANDWIDTHS_MBPS  link bandwidth sweep (default 40,400)
+//!   LAYUP_STEPS / LAYUP_WORKERS / LAYUP_ALGOS as usual
+
+#[path = "common.rs"]
+mod common;
+
+use layup::comm::{CodecSpec, FabricSpec, LatencyDist};
+use layup::config::{Algorithm, TrainConfig};
+use layup::metrics::RunSummary;
+use layup::topology::roles::TopologySpec;
+use layup::util::json::{arr, num, obj, s, Json};
+
+/// The compression row: the stable `summary_row` vocabulary plus the wire
+/// accounting this bench exists to track (append-only, like the base row).
+fn codec_row(label: &str, codec: &CodecSpec, mbps: f64, reduction: f64, sum: &RunSummary) -> Json {
+    let mut row = match common::summary_row(label, sum) {
+        Json::Obj(m) => m,
+        _ => unreachable!("summary_row returns an object"),
+    };
+    row.insert("codec".into(), s(&codec.name()));
+    row.insert("bandwidth_mbps".into(), num(mbps));
+    row.insert("comm_bytes".into(), num(sum.stats.comm.bytes_sent as f64));
+    row.insert("bytes_reduction_vs_dense".into(), num(reduction));
+    Json::Obj(row)
+}
+
+fn env_codecs() -> Vec<CodecSpec> {
+    std::env::var("LAYUP_CODECS")
+        .unwrap_or_else(|_| "dense,topk:16,int8".into())
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| CodecSpec::parse(t.trim()).unwrap_or_else(|e| panic!("LAYUP_CODECS: {e:#}")))
+        .collect()
+}
+
+fn env_bandwidths() -> Vec<f64> {
+    std::env::var("LAYUP_BANDWIDTHS_MBPS")
+        .unwrap_or_else(|_| "40,400".into())
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse().expect("LAYUP_BANDWIDTHS_MBPS: bad Mbit/s value"))
+        .collect()
+}
+
+fn main() {
+    let man = common::manifest();
+    let steps = common::env_usize("LAYUP_STEPS", 48);
+    let workers = common::workers();
+    let codecs = env_codecs();
+    let bandwidths = env_bandwidths();
+    assert!(workers > 2, "asgd-ps needs at least 2 trainers: LAYUP_WORKERS={workers}");
+
+    let cases: Vec<(&str, Algorithm, TopologySpec)> = vec![
+        ("layup", Algorithm::LayUp, TopologySpec::Flat),
+        ("gosgd", Algorithm::GoSgd, TopologySpec::Flat),
+        ("asgd-ps", Algorithm::AsgdPs, TopologySpec::Ps { shards: 1 }),
+    ];
+
+    println!("fig: compression protocol — mlpnet18, {workers} workers, {steps} steps");
+    common::hr();
+    println!(
+        "{:<10} {:<8} {:>8} {:>9} {:>10} {:>12} {:>9}",
+        "algorithm", "codec", "bw Mb/s", "wall (s)", "loss@bud", "comm bytes", "vs dense"
+    );
+
+    let mut summary_rows: Vec<Json> = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut csv = String::from("algorithm,codec,bandwidth_mbps,wall_s,final_loss,comm_bytes\n");
+    let mut no_reduction = false;
+
+    for (label, algorithm, cluster) in cases {
+        // dense baseline bytes per bandwidth point, set by the first codec
+        // of each bandwidth loop when the sweep includes "dense"
+        let mut dense_bytes: Vec<(u64, u64)> = Vec::new();
+        for &mbps in &bandwidths {
+            for codec in &codecs {
+                let mut cfg: TrainConfig = common::vision_cfg("mlpnet18", algorithm, steps);
+                cfg.cluster = cluster;
+                cfg.codec = codec.clone();
+                cfg.eval_every = (steps / 6).max(1);
+                cfg.fabric = FabricSpec::Sim {
+                    latency: LatencyDist::Constant(0.002),
+                    bandwidth_bytes_per_s: mbps * 125_000.0,
+                    drop_prob: 0.01,
+                };
+                let sum = common::run_one(&cfg, &man);
+                let final_loss = sum.curve.points.last().map(|p| p.loss).unwrap_or(f64::NAN);
+                let bytes = sum.stats.comm.bytes_sent;
+                if codec.is_dense() {
+                    dense_bytes.push((mbps.to_bits(), bytes));
+                }
+                let baseline = dense_bytes
+                    .iter()
+                    .find(|(b, _)| *b == mbps.to_bits())
+                    .map(|&(_, v)| v);
+                let reduction = match baseline {
+                    Some(d) if bytes > 0 => d as f64 / bytes as f64,
+                    _ => f64::NAN,
+                };
+                if !codec.is_dense() && reduction.is_finite() && reduction < 1.0 {
+                    no_reduction = true;
+                }
+                println!(
+                    "{:<10} {:<8} {:>8} {:>9.2} {:>10.4} {:>12} {:>9}",
+                    label,
+                    codec.name(),
+                    mbps,
+                    sum.total_time_s,
+                    final_loss,
+                    bytes,
+                    if reduction.is_finite() { format!("{reduction:.2}x") } else { "-".into() },
+                );
+                csv.push_str(&format!(
+                    "{label},{},{mbps},{:.3},{final_loss:.5},{bytes}\n",
+                    codec.name(),
+                    sum.total_time_s,
+                ));
+                rows.push(obj(vec![
+                    ("algorithm", s(label)),
+                    ("codec", s(&codec.name())),
+                    ("bandwidth_mbps", num(mbps)),
+                    ("wall_s", num(sum.total_time_s)),
+                    ("final_loss", num(final_loss)),
+                    ("comm_bytes", num(bytes as f64)),
+                    (
+                        "bytes_reduction_vs_dense",
+                        if reduction.is_finite() { num(reduction) } else { Json::Null },
+                    ),
+                ]));
+                let row_label = format!("{label}-{}-bw{mbps}", codec.name().replace(':', ""));
+                summary_rows.push(codec_row(&row_label, codec, mbps, reduction, &sum));
+            }
+        }
+        common::hr();
+    }
+
+    let dir = common::results_dir();
+    std::fs::write(dir.join("fig_compression.json"), arr(rows).dump()).expect("write json");
+    std::fs::write(dir.join("fig_compression.csv"), csv).expect("write csv");
+    common::write_bench_summary("fig_compression", summary_rows);
+    println!("wrote results/fig_compression.json");
+    if no_reduction {
+        eprintln!("FAIL: a non-dense codec inflated wire bytes over the dense baseline");
+        std::process::exit(1);
+    }
+}

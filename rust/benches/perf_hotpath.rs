@@ -18,13 +18,14 @@ mod common;
 use std::hint::black_box;
 use std::time::Instant;
 
+use layup::comm::codec::kernels;
 use layup::config::{Algorithm, TrainConfig};
 use layup::coordinator::Shared;
 use layup::data;
 use layup::model::ModelExec;
 use layup::optim::{LayerOptimizer, OptimKind};
 use layup::runtime::Runtime;
-use layup::tensor::shard::ShardPool;
+use layup::tensor::shard::{ShardPool, CHUNK};
 use layup::tensor::{AtomicTensor, Tensor};
 use layup::util::json::{num, obj, s, Json};
 
@@ -109,7 +110,57 @@ fn kernel_section(reps: usize) -> Vec<Json> {
         ));
         rows.push(kernel_row(&format!("average_t{threads}"), avg, (n * 12) as f64));
         rows.push(kernel_row(&format!("compensate_t{threads}"), comp, (n * 16) as f64));
+
+        // codec wire kernels (§Compression): int8 quantize/dequantize and
+        // the error-feedback re-add ride the same shard lanes as the
+        // parameter kernels, so they regress together
+        let mut scales = vec![0.0f32; n.div_ceil(CHUNK)];
+        let mut q = vec![0u8; n];
+        let enc = time(reps, || {
+            kernels::int8_encode(&pool, &src, 0xC0DEC, &mut scales, &mut q);
+            black_box(&mut q);
+        });
+        let mut out = vec![0.0f32; n];
+        let dec = time(reps, || {
+            kernels::int8_decode(&pool, &scales, &q, &mut out);
+            black_box(&mut out);
+        });
+        let mut y = vec![0.0f32; n];
+        let ef = time(reps, || {
+            kernels::add_residual(&pool, &src, &dst, &mut y);
+            black_box(&mut y);
+        });
+        println!(
+            "t{threads}: int8_encode {:.2} GB/s   int8_decode {:.2} GB/s   ef_add {:.2} GB/s",
+            (n * 5) as f64 / enc / 1e9,
+            (n * 5) as f64 / dec / 1e9,
+            (n * 12) as f64 / ef / 1e9,
+        );
+        rows.push(kernel_row(&format!("int8_encode_t{threads}"), enc, (n * 5) as f64));
+        rows.push(kernel_row(&format!("int8_decode_t{threads}"), dec, (n * 5) as f64));
+        rows.push(kernel_row(&format!("ef_add_residual_t{threads}"), ef, (n * 12) as f64));
     }
+
+    // top-k selection is pool-independent (a pure function of the values):
+    // one row, not one per thread count
+    let grad = {
+        let mut seed = 0x70_70u64;
+        (0..n)
+            .map(|_| {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect::<Vec<f32>>()
+    };
+    let topk = time(reps, || {
+        black_box(kernels::top_k_indices(&grad, n / 16));
+    });
+    println!(
+        "top_k select (k = n/16): {:.2} ms = {:.2} GB/s",
+        1e3 * topk,
+        (n * 4) as f64 / topk / 1e9
+    );
+    rows.push(kernel_row("topk_select_k16", topk, (n * 4) as f64));
 
     // the pre-shard-pool framing kept for continuity: fused vs the
     // three-pass step + load + mix sequence it replaced

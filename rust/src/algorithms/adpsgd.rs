@@ -92,7 +92,7 @@ impl WorkerAlgo for AdPsgd {
                 .emit(TrainEvent::GossipSkipped { worker: self.wid, peer, step });
             return Ok(());
         }
-        if self.shared.fabric.is_instant() {
+        if self.shared.fabric.fused_gossip() {
             // shared-memory fast path: the seed-era synchronous swap
             let peer_params = &self.shared.params[peer];
             comm_delay(2.0 * self.comm_latency_s);

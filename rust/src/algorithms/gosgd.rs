@@ -100,7 +100,7 @@ impl WorkerAlgo for GoSgd {
             return Ok(());
         }
         let shipped = self.shared.weights[self.wid].halve();
-        if self.shared.fabric.is_instant() {
+        if self.shared.fabric.fused_gossip() {
             // shared-memory fast path: the seed-era in-place push-sum mix
             match self.shared.weights[peer].try_accept(shipped) {
                 None => {

@@ -221,7 +221,7 @@ impl UpdaterThread {
         // the seed-era in-place handshake + fused mix (bit-for-bit), a
         // queued fabric ships each layer as a message the peer applies at
         // its own step boundaries.
-        if self.shared.fabric.is_instant() {
+        if self.shared.fabric.fused_gossip() {
             self.run_instant(rx)
         } else {
             self.run_sim(rx)

@@ -1,0 +1,252 @@
+//! Codec hot loops, sharded across the update lanes (§Perf, PR 6 pattern).
+//!
+//! Every kernel here is **bit-identical at any `update_threads`**: the shard
+//! ranges [`ShardPool::run`] hands out are contiguous but *not* chunk-
+//! aligned, so the int8 kernels key their per-chunk scales to **absolute**
+//! chunk indices — a shard that starts mid-chunk recomputes that chunk's
+//! scale from the full chunk (reads of the shared input are free) and only
+//! *writes* the scale slot when it owns the chunk's first element. Element
+//! outputs are a pure function of `(x[i], scale[i/CHUNK], seed, i)`, so the
+//! thread count can never leak into the wire bytes.
+
+use crate::tensor::shard::{DisjointMut, ShardPool, CHUNK};
+
+/// Quantized values are scaled into `[-QMAX, QMAX]` (symmetric, no zero
+/// point): `i8::MIN` is never emitted, so negation round-trips.
+pub const QMAX: f32 = 127.0;
+
+/// splitmix64 finalizer — the stateless per-element hash behind stochastic
+/// rounding and rand-k index draws. Counter-based (no sequential RNG state),
+/// so element `i`'s randomness is independent of which shard visits it.
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in `[0, 1)` for element `i` under `seed` (24 explicit bits, the
+/// f32 mantissa width — every representable outcome is exact).
+pub fn unit_f32(seed: u64, i: usize) -> f32 {
+    let h = mix64(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    ((h >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+}
+
+/// Error-feedback re-add: `y[i] = x[i] + r[i]`, sharded. One plain f32 add
+/// per element — the same float the serial loop would produce, so the
+/// conservation property (`sent + residual == x + old residual`) stays
+/// bit-exact at any thread count.
+pub fn add_residual(pool: &ShardPool, x: &[f32], r: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), r.len());
+    assert_eq!(x.len(), y.len());
+    let yd = DisjointMut::new(y);
+    pool.run(x.len(), |range| {
+        let ys = unsafe { yd.slice(range.clone()) };
+        for (i, yi) in range.zip(ys.iter_mut()) {
+            *yi = x[i] + r[i];
+        }
+    });
+}
+
+/// Int8 stochastic quantization with per-chunk (`CHUNK` = 1024 element)
+/// max-abs scales. `scales` must hold `x.len().div_ceil(CHUNK)` slots and
+/// `q` one byte per element (two's-complement i8 in `[-127, 127]`).
+///
+/// Rounding is stochastic and *unbiased*: `v = x/scale·127` rounds up with
+/// probability `frac(v)`, drawn from the counter-based hash — never from a
+/// link RNG, so quantization noise cannot perturb drop dice or latency
+/// draws.
+pub fn int8_encode(pool: &ShardPool, x: &[f32], seed: u64, scales: &mut [f32], q: &mut [u8]) {
+    let n = x.len();
+    assert_eq!(scales.len(), n.div_ceil(CHUNK));
+    assert_eq!(q.len(), n);
+    let sd = DisjointMut::new(scales);
+    let qd = DisjointMut::new(q);
+    pool.run(n, |range| {
+        let first_chunk = range.start / CHUNK;
+        let last_chunk = range.end.div_ceil(CHUNK);
+        for c in first_chunk..last_chunk {
+            let cs = c * CHUNK;
+            let ce = (cs + CHUNK).min(n);
+            // scale over the FULL chunk, even when this shard only covers a
+            // tail of it — reading the shared input outside the shard range
+            // is free, and it keeps the scale independent of the sharding
+            let mut m = 0.0f32;
+            for &v in &x[cs..ce] {
+                m = m.max(v.abs());
+            }
+            // the shard that owns the chunk's first element writes the slot
+            if cs >= range.start {
+                unsafe { sd.slice(c..c + 1) }[0] = m;
+            }
+            let lo = cs.max(range.start);
+            let hi = ce.min(range.end);
+            let qs = unsafe { qd.slice(lo..hi) };
+            if m == 0.0 || !m.is_finite() {
+                // an all-zero (or non-finite) chunk quantizes to zeros; the
+                // decoder multiplies by the stored scale, reproducing zeros
+                // (resp. leaving the poisoned chunk zeroed rather than
+                // spraying NaN into every coordinate)
+                qs.fill(0);
+                continue;
+            }
+            for (i, qi) in (lo..hi).zip(qs.iter_mut()) {
+                let v = (x[i] / m * QMAX).clamp(-QMAX, QMAX);
+                let f = v.floor();
+                let up = unit_f32(seed, i) < (v - f);
+                let quantized = (f as i32 + i32::from(up)).clamp(-127, 127);
+                *qi = quantized as i8 as u8;
+            }
+        }
+    });
+}
+
+/// Dequantize: `out[i] = q[i]/127 · scales[i/CHUNK]`, sharded. Pure per-
+/// element arithmetic — bit-identical at any thread count.
+pub fn int8_decode(pool: &ShardPool, scales: &[f32], q: &[u8], out: &mut [f32]) {
+    let n = q.len();
+    assert_eq!(scales.len(), n.div_ceil(CHUNK));
+    assert_eq!(out.len(), n);
+    let od = DisjointMut::new(out);
+    pool.run(n, |range| {
+        let os = unsafe { od.slice(range.clone()) };
+        for (i, oi) in range.zip(os.iter_mut()) {
+            *oi = (q[i] as i8 as f32) * (1.0 / QMAX) * scales[i / CHUNK];
+        }
+    });
+}
+
+/// The `k` indices of largest `|y|`, deterministically tie-broken by the
+/// lower index, returned in ascending index order. Selection is
+/// `O(n + k log k)` (quickselect, then a sort of the kept prefix) and
+/// independent of the shard pool — the comparator is a total order (NaN
+/// sorts above every magnitude via `total_cmp`), so the result is a pure
+/// function of `y` and `k`.
+pub fn top_k_indices(y: &[f32], k: usize) -> Vec<u32> {
+    let n = y.len();
+    let k = k.min(n);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let by_magnitude = |&a: &u32, &b: &u32| {
+        y[b as usize]
+            .abs()
+            .total_cmp(&y[a as usize].abs())
+            .then_with(|| a.cmp(&b))
+    };
+    if k > 0 && k < n {
+        idx.select_nth_unstable_by(k - 1, by_magnitude);
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-data (the LCG pattern the tensor tests use).
+    fn lcg_data(n: usize, mut seed: u64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+                ((seed >> 8) as u32 % (1 << 24)) as f32 / (1 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    /// §Small fix acceptance: the codec kernels must be bit-identical across
+    /// thread counts on sizes that straddle chunk boundaries — one chunk
+    /// minus a remainder, exactly one chunk, and a prime well past 4 chunks
+    /// (5003 = 4·CHUNK + 907, so shard ranges split chunks mid-way).
+    #[test]
+    fn kernels_bit_identical_across_thread_counts_at_chunk_boundaries() {
+        let serial = ShardPool::serial();
+        for n in [CHUNK - 3, CHUNK, 5003] {
+            let x = lcg_data(n, 7 + n as u64);
+            let r = lcg_data(n, 99 + n as u64);
+            let mut scales0 = vec![0.0f32; n.div_ceil(CHUNK)];
+            let mut q0 = vec![0u8; n];
+            int8_encode(&serial, &x, 0xC0DEC, &mut scales0, &mut q0);
+            let mut out0 = vec![0.0f32; n];
+            int8_decode(&serial, &scales0, &q0, &mut out0);
+            let mut y0 = vec![0.0f32; n];
+            add_residual(&serial, &x, &r, &mut y0);
+            for threads in [2, 3, 4] {
+                let pool = ShardPool::new(threads);
+                let mut scales = vec![0.0f32; n.div_ceil(CHUNK)];
+                let mut q = vec![0u8; n];
+                int8_encode(&pool, &x, 0xC0DEC, &mut scales, &mut q);
+                assert_eq!(q, q0, "n={n} t={threads}: quantized bytes drifted");
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&scales), bits(&scales0), "n={n} t={threads}: scales drifted");
+                let mut out = vec![0.0f32; n];
+                int8_decode(&pool, &scales, &q, &mut out);
+                assert_eq!(bits(&out), bits(&out0), "n={n} t={threads}: decode drifted");
+                let mut y = vec![0.0f32; n];
+                add_residual(&pool, &x, &r, &mut y);
+                assert_eq!(bits(&y), bits(&y0), "n={n} t={threads}: EF re-add drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_is_within_one_scale_step() {
+        let pool = ShardPool::serial();
+        let x = lcg_data(3000, 3);
+        let mut scales = vec![0.0f32; x.len().div_ceil(CHUNK)];
+        let mut q = vec![0u8; x.len()];
+        int8_encode(&pool, &x, 1, &mut scales, &mut q);
+        let mut out = vec![0.0f32; x.len()];
+        int8_decode(&pool, &scales, &q, &mut out);
+        for (i, (&a, &b)) in x.iter().zip(&out).enumerate() {
+            let tol = scales[i / CHUNK] / QMAX + 1e-7;
+            assert!((a - b).abs() <= tol, "elem {i}: |{a} - {b}| > {tol}");
+        }
+    }
+
+    #[test]
+    fn int8_stochastic_rounding_is_unbiased() {
+        // a constant 0.5 between two quantization steps must round up about
+        // half the time under the counter-based hash
+        let pool = ShardPool::serial();
+        let n = 4096;
+        // a 1.0 anchor at each chunk head pins every scale to exactly 1.0;
+        // the probe value then maps to exactly 63.5 quantization steps
+        let mut x = vec![63.5f32 / QMAX; n];
+        for c in 0..n.div_ceil(CHUNK) {
+            x[c * CHUNK] = 1.0;
+        }
+        let mut scales = vec![0.0f32; n.div_ceil(CHUNK)];
+        let mut q = vec![0u8; n];
+        int8_encode(&pool, &x, 42, &mut scales, &mut q);
+        let probes: Vec<i8> = (0..n).filter(|i| i % CHUNK != 0).map(|i| q[i] as i8).collect();
+        let ups = probes.iter().filter(|&&v| v == 64).count();
+        let downs = probes.iter().filter(|&&v| v == 63).count();
+        assert_eq!(ups + downs, probes.len(), "probe must land on one of the two steps");
+        let frac = ups as f64 / probes.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "rounding bias: up-fraction {frac}");
+    }
+
+    #[test]
+    fn zero_and_nonfinite_chunks_quantize_to_zeros() {
+        let pool = ShardPool::serial();
+        let mut x = vec![0.0f32; CHUNK + 10];
+        for v in x.iter_mut().skip(CHUNK) {
+            *v = f32::INFINITY;
+        }
+        let mut scales = vec![0.0f32; 2];
+        let mut q = vec![1u8; x.len()];
+        int8_encode(&pool, &x, 5, &mut scales, &mut q);
+        assert!(q.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn top_k_selects_largest_magnitudes_with_index_tiebreak() {
+        let y = [0.5, -3.0, 0.25, 3.0, -0.5, 0.0];
+        assert_eq!(top_k_indices(&y, 2), vec![1, 3]);
+        // |0.5| ties at indices 0 and 4: the lower index wins the last slot
+        assert_eq!(top_k_indices(&y, 3), vec![0, 1, 3]);
+        assert_eq!(top_k_indices(&y, 0), Vec::<u32>::new());
+        assert_eq!(top_k_indices(&y, 99), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(top_k_indices(&[], 3), Vec::<u32>::new());
+    }
+}

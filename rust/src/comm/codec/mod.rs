@@ -1,0 +1,874 @@
+//! `comm::codec` — pluggable gradient/parameter compression at the fabric
+//! boundary (ROADMAP item 3).
+//!
+//! Every message a worker pushes crosses one chokepoint
+//! ([`crate::comm::FabricCore`]), so compression installs there once and
+//! every payload kind — `LayerPush`, `ModelPush`, `PairAverage`,
+//! `GradShare`/`ParamShare`, `GradPush`/`ParamPull` — and every registry
+//! algorithm inherits it without per-algorithm changes. The fabric encodes
+//! at `push` time (before the link's drop dice and bandwidth accounting, so
+//! serialization delay and [`crate::metrics::CommStats`] meter the **encoded
+//! wire size**) and decodes at apply time (a malformed blob is
+//! `ApplyResult::Malformed`: rejected with a push-sum weight refund, never a
+//! partial write).
+//!
+//! Codecs:
+//!
+//! * **`dense`** (default) — the identity. Payloads are passed through
+//!   untouched, so default runs stay bit-identical to a build without the
+//!   codec subsystem: same floats, same link-RNG draws, same byte counts.
+//! * **`topk:K` / `randk:K`** — sparsification. `K` is the *divisor*: each
+//!   tensor ships its `ceil(n/K)` largest-magnitude (resp. uniformly drawn)
+//!   coordinates as `(u32 index, f32 value)` pairs, an `8/4K` compression of
+//!   the dense 4-byte/coordinate stream (`topk:16` ≈ 8× fewer bytes).
+//!   **Gradient** streams (`GradShare`, `GradPush.grads`) carry per-link
+//!   [error-feedback] residuals: dropped coordinates accumulate sender-side
+//!   and are re-added before the next encode, and a message the link loses
+//!   folds its shipped coordinates back into the residual — composing with
+//!   push-sum weight reclaim, so no gradient mass is ever silently
+//!   destroyed. **State** streams (parameter pushes) sparsify without a
+//!   residual (stale parameter corrections would diverge); the receiver
+//!   fills unsent coordinates from its *own* current values, making a
+//!   sparse push a partial mix rather than a zero-smearing overwrite.
+//! * **`int8`** — stochastic quantization with per-chunk
+//!   ([`crate::tensor::shard::CHUNK`]-element) max-abs scales, ~4× fewer
+//!   bytes. Rounding is unbiased and drawn from a counter-based hash (never
+//!   a link RNG), keyed by a per-link message sequence number.
+//!
+//! Determinism: `dense` and `topk` are RNG-free, so same seeds → same
+//! curves, and a `topk` checkpoint resumes bit-identically (residuals ride
+//! `FORMAT_VERSION` 4 snapshots). `randk`/`int8` draw from the codec seed
+//! and per-link sequence counters, which are deterministic within a run but
+//! not checkpointed — resume bit-parity is promised for `dense`/`topk`.
+//!
+//! [error-feedback]: https://arxiv.org/abs/1809.07599
+
+pub mod kernels;
+pub mod wire;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::Payload;
+use crate::coordinator::Shared;
+use crate::tensor::clock::ClockStamp;
+use crate::tensor::shard::{ShardPool, CHUNK};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+use self::kernels::{add_residual, int8_decode, int8_encode, mix64, top_k_indices};
+use self::wire::{Reader, Writer};
+
+/// Which codec a run installs at the fabric boundary
+/// (`[fabric] codec = "dense|topk:K|randk:K|int8"`, `--codec`,
+/// [`crate::session::SessionBuilder::codec`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecSpec {
+    /// Identity (the default): dense f32 payloads, bit-identical to a build
+    /// without the codec subsystem.
+    Dense,
+    /// Keep each tensor's `ceil(n/k)` largest-magnitude coordinates
+    /// (deterministic, index-tie-broken), with error feedback on gradients.
+    TopK { k: u32 },
+    /// Keep `ceil(n/k)` uniformly drawn coordinates, with error feedback on
+    /// gradients (the unbiased sparsifier baseline).
+    RandK { k: u32 },
+    /// Stochastic 8-bit quantization with per-chunk max-abs scales.
+    Int8,
+}
+
+impl Default for CodecSpec {
+    fn default() -> Self {
+        CodecSpec::Dense
+    }
+}
+
+impl CodecSpec {
+    /// Parse a config/CLI spelling: `dense`, `topk:K`, `randk:K`, `int8`.
+    pub fn parse(spec: &str) -> Result<CodecSpec> {
+        let t = spec.trim();
+        if t == "dense" {
+            return Ok(CodecSpec::Dense);
+        }
+        if t == "int8" {
+            return Ok(CodecSpec::Int8);
+        }
+        for (prefix, rand) in [("topk:", false), ("randk:", true)] {
+            if let Some(rest) = t.strip_prefix(prefix) {
+                let k: u32 = rest
+                    .parse()
+                    .with_context(|| format!("codec {spec:?}: K must be an integer"))?;
+                let out = if rand { CodecSpec::RandK { k } } else { CodecSpec::TopK { k } };
+                out.validate()?;
+                return Ok(out);
+            }
+        }
+        bail!("codec: expected \"dense\", \"topk:K\", \"randk:K\" or \"int8\", got {spec:?}")
+    }
+
+    /// Canonical spelling (round-trips through [`CodecSpec::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            CodecSpec::Dense => "dense".into(),
+            CodecSpec::TopK { k } => format!("topk:{k}"),
+            CodecSpec::RandK { k } => format!("randk:{k}"),
+            CodecSpec::Int8 => "int8".into(),
+        }
+    }
+
+    /// Reject nonsensical knobs. `K` is the sparsification *divisor* (keep
+    /// `ceil(n/K)` coordinates), and each kept coordinate costs 8 wire bytes
+    /// vs 4 dense — `K = 1` would *grow* every message.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            CodecSpec::TopK { k } | CodecSpec::RandK { k } if *k < 2 => bail!(
+                "codec {}: K is the sparsification divisor (keep ~n/K coordinates at \
+                 8 bytes each); K must be >= 2 — use \"dense\" for no compression",
+                self.name()
+            ),
+            _ => Ok(()),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, CodecSpec::Dense)
+    }
+
+    /// Build the runtime codec for an `m`-slot cluster. `seed` feeds the
+    /// rand-k index draws and int8 stochastic rounding only — dense and
+    /// top-k are RNG-free.
+    pub fn build(&self, m: usize, seed: u64) -> Arc<dyn Codec> {
+        match self {
+            CodecSpec::Dense => Arc::new(DenseCodec),
+            CodecSpec::TopK { k } => Arc::new(SparsifyCodec::new(*k, false, m, seed)),
+            CodecSpec::RandK { k } => Arc::new(SparsifyCodec::new(*k, true, m, seed)),
+            CodecSpec::Int8 => Arc::new(Int8Codec { seed }),
+        }
+    }
+
+    /// Stable `(tag, k)` pair for the checkpoint codec (payload tag 7).
+    pub fn wire_tag(&self) -> (u8, u32) {
+        match self {
+            CodecSpec::Dense => (0, 0),
+            CodecSpec::TopK { k } => (1, *k),
+            CodecSpec::RandK { k } => (2, *k),
+            CodecSpec::Int8 => (3, 0),
+        }
+    }
+
+    /// Inverse of [`CodecSpec::wire_tag`].
+    pub fn from_wire(tag: u8, k: u32) -> Result<CodecSpec> {
+        let spec = match tag {
+            0 => CodecSpec::Dense,
+            1 => CodecSpec::TopK { k },
+            2 => CodecSpec::RandK { k },
+            3 => CodecSpec::Int8,
+            other => bail!("unknown codec wire tag {other}"),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Identity of one compressed stream within a directed link: the payload
+/// tag plus the (layer, tensor) coordinates. Error-feedback residuals are
+/// keyed by this, so e.g. layer-3 gradients never contaminate layer-5's
+/// residual.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamKey {
+    /// payload wire tag (0..=6, the checkpoint numbering)
+    pub tag: u8,
+    pub layer: u32,
+    pub tensor: u32,
+}
+
+/// One directed link's error-feedback residuals, in checkpointable form
+/// (`FORMAT_VERSION` 4). Streams are ordered by [`StreamKey`], so snapshots
+/// are deterministic byte-for-byte.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidualState {
+    pub from: usize,
+    pub to: usize,
+    pub streams: Vec<(StreamKey, Vec<f32>)>,
+}
+
+/// A codec-encoded message riding a link. The push-sum metadata
+/// (`shipped_w`, `droppable`) travels in the clear so the fabric can meter,
+/// drop-dice and refund without decoding; everything else lives in the
+/// codec's wire blob.
+#[derive(Clone)]
+pub struct Compressed {
+    /// the codec that produced `blob` (decode dispatches on it)
+    pub spec: CodecSpec,
+    /// push-sum weight riding the message (refunded on drop/reject)
+    pub shipped_w: f32,
+    /// whether the inner payload tolerates link loss
+    pub droppable: bool,
+    /// the encoded wire stream ([`wire`] framing)
+    pub blob: Arc<Vec<u8>>,
+}
+
+/// Pluggable compression at the fabric boundary. One codec instance is
+/// shared by every link of a fabric; implementations hold their own
+/// per-link state (error-feedback residuals, message sequence counters).
+pub trait Codec: Send + Sync {
+    /// The spec this codec was built from.
+    fn spec(&self) -> &CodecSpec;
+
+    /// Encode one outgoing message for the directed link `from → to`.
+    /// Identity for `dense`; already-compressed payloads (the checkpoint
+    /// restore path) pass through unchanged.
+    fn encode(&self, pool: &ShardPool, from: usize, to: usize, payload: Payload) -> Payload;
+
+    /// The link lost `payload` (drop dice): fold its shipped gradient
+    /// coordinates back into the sender-side residual, so lossy links shed
+    /// latency, not gradient mass. No-op for codecs without residuals.
+    fn on_drop(&self, _from: usize, _to: usize, _payload: &Payload) {}
+
+    /// Snapshot per-link error-feedback residuals (checkpoint capture).
+    fn residual_state(&self) -> Vec<ResidualState> {
+        Vec::new()
+    }
+
+    /// Restore residuals from a checkpoint snapshot (resume).
+    fn load_residual_state(&self, _states: &[ResidualState]) {}
+}
+
+/// The identity codec: `encode` returns the payload untouched, so default
+/// runs carry dense f32 payloads with seed-era byte accounting.
+pub struct DenseCodec;
+
+impl Codec for DenseCodec {
+    fn spec(&self) -> &CodecSpec {
+        &CodecSpec::Dense
+    }
+
+    fn encode(&self, _pool: &ShardPool, _from: usize, _to: usize, payload: Payload) -> Payload {
+        payload
+    }
+}
+
+// ---------------------------------------------------------------------------
+// payload structure walk (shared by every compressing codec)
+// ---------------------------------------------------------------------------
+
+/// Whether a stream carries gradient mass (error-feedback eligible,
+/// zero-filled at decode) or parameter state (no residual, receiver-filled
+/// at decode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StreamClass {
+    Grad,
+    State,
+}
+
+/// Per-stream context handed to a codec's stream encoder.
+struct StreamCtx {
+    link: usize,
+    key: StreamKey,
+    /// per-stream seed (rand-k draws, int8 stochastic rounding)
+    seed: u64,
+}
+
+/// Serialize `payload`'s header fields and hand each f32 stream to
+/// `stream` in a fixed walk order (the decode side mirrors it exactly).
+/// `GradPush.x_then` ships dense inside the blob: it is a *parameter
+/// snapshot for delay compensation* — sparsifying it would corrupt the
+/// DC-ASGD correction term, and it is absent unless compensation is on.
+fn build_blob(
+    payload: &Payload,
+    mut stream: impl FnMut(&mut Writer, StreamKey, StreamClass, &[f32]),
+) -> Vec<u8> {
+    let mut w = Writer::with_capacity(256);
+    let write_stamp = |w: &mut Writer, st: &ClockStamp| {
+        w.u32(st.worker);
+        w.u64(st.step);
+        w.u64(st.version);
+    };
+    match payload {
+        Payload::LayerPush { layer, open, values, stamp, tau } => {
+            w.u8(0);
+            w.u32(*layer as u32);
+            match open {
+                None => w.bool(false),
+                Some(f) => {
+                    w.bool(true);
+                    w.f32(*f);
+                }
+            }
+            write_stamp(&mut w, stamp);
+            w.u64(*tau);
+            w.u32(values.len() as u32);
+            for (ti, v) in values.iter().enumerate() {
+                let key = StreamKey { tag: 0, layer: *layer as u32, tensor: ti as u32 };
+                stream(&mut w, key, StreamClass::State, v);
+            }
+        }
+        Payload::ModelPush { w_in, values } => {
+            w.u8(1);
+            w.f32(*w_in);
+            w.u32(values.len() as u32);
+            for (li, layer) in values.iter().enumerate() {
+                w.u32(layer.len() as u32);
+                for (ti, v) in layer.iter().enumerate() {
+                    let key = StreamKey { tag: 1, layer: li as u32, tensor: ti as u32 };
+                    stream(&mut w, key, StreamClass::State, v);
+                }
+            }
+        }
+        Payload::PairAverage { flat, reply } => {
+            w.u8(2);
+            w.bool(*reply);
+            stream(&mut w, StreamKey { tag: 2, layer: 0, tensor: 0 }, StreamClass::State, flat);
+        }
+        Payload::GradShare { set } => {
+            w.u8(3);
+            w.u32(set.len() as u32);
+            for (li, layer) in set.iter().enumerate() {
+                w.u32(layer.len() as u32);
+                for (ti, t) in layer.iter().enumerate() {
+                    let key = StreamKey { tag: 3, layer: li as u32, tensor: ti as u32 };
+                    stream(&mut w, key, StreamClass::Grad, &t.data);
+                }
+            }
+        }
+        Payload::ParamShare { flat } => {
+            w.u8(4);
+            stream(&mut w, StreamKey { tag: 4, layer: 0, tensor: 0 }, StreamClass::State, flat);
+        }
+        Payload::GradPush { layer, grads, x_then, stamp } => {
+            w.u8(5);
+            w.u32(*layer as u32);
+            write_stamp(&mut w, stamp);
+            w.u32(grads.len() as u32);
+            for (ti, g) in grads.iter().enumerate() {
+                let key = StreamKey { tag: 5, layer: *layer as u32, tensor: ti as u32 };
+                stream(&mut w, key, StreamClass::Grad, g);
+            }
+            match x_then {
+                None => w.bool(false),
+                Some(xt) => {
+                    w.bool(true);
+                    for v in xt.iter() {
+                        w.u32(v.len() as u32);
+                        w.f32s(v);
+                    }
+                }
+            }
+        }
+        Payload::ParamPull { layer, values, stamp } => {
+            w.u8(6);
+            w.u32(*layer as u32);
+            write_stamp(&mut w, stamp);
+            w.u32(values.len() as u32);
+            for (ti, v) in values.iter().enumerate() {
+                let key = StreamKey { tag: 6, layer: *layer as u32, tensor: ti as u32 };
+                stream(&mut w, key, StreamClass::State, v);
+            }
+        }
+        // the restore path short-circuits in `Codec::encode`; a nested
+        // Compressed here is a framing bug
+        Payload::Compressed(_) => unreachable!("cannot re-encode a compressed payload"),
+    }
+    w.finish()
+}
+
+fn read_stamp(r: &mut Reader) -> Result<ClockStamp> {
+    Ok(ClockStamp { worker: r.u32()?, step: r.u64()?, version: r.u64()? })
+}
+
+/// What a decoded stream's unsent coordinates reconstruct to.
+enum Base<'a> {
+    /// gradient streams: unsent mass is zero here (it lives in the sender's
+    /// residual and arrives with a later message)
+    Zeros,
+    /// state streams: unsent coordinates keep the receiver's current value,
+    /// so a sparse parameter push is a partial mix, not a zero overwrite
+    Fill(&'a [f32]),
+}
+
+/// Decode one stream written by a compressing codec. Validates the declared
+/// length against the receiver's tensor (`expected`) and every index bound
+/// *before* any value lands — malformed input errors out with nothing
+/// written.
+fn read_stream(
+    r: &mut Reader,
+    spec: &CodecSpec,
+    pool: &ShardPool,
+    expected: usize,
+    base: Base,
+) -> Result<Vec<f32>> {
+    let n = r.u32()? as usize;
+    if n != expected {
+        bail!("stream declares {n} coordinates, the receiver tensor holds {expected}");
+    }
+    match spec {
+        CodecSpec::TopK { .. } | CodecSpec::RandK { .. } => {
+            let k = r.u32()? as usize;
+            if k > n {
+                bail!("sparse stream keeps {k} of {n} coordinates");
+            }
+            let idxs = r.u32s(k)?;
+            let vals = r.f32s(k)?;
+            let mut out = match base {
+                Base::Zeros => vec![0.0; n],
+                Base::Fill(b) => b.to_vec(),
+            };
+            let mut prev = None;
+            for (&i, &v) in idxs.iter().zip(&vals) {
+                if i as usize >= n || prev.is_some_and(|p| i <= p) {
+                    bail!("sparse indices must be strictly ascending and < {n}");
+                }
+                prev = Some(i);
+                out[i as usize] = v;
+            }
+            Ok(out)
+        }
+        CodecSpec::Int8 => {
+            let scales = r.f32s(n.div_ceil(CHUNK))?;
+            let q = r.take(n)?;
+            let mut out = vec![0.0; n];
+            int8_decode(pool, &scales, q, &mut out);
+            Ok(out)
+        }
+        CodecSpec::Dense => bail!("dense payloads ride uncompressed"),
+    }
+}
+
+impl Compressed {
+    /// Wire size of this message: the fixed header the dense payloads also
+    /// pay, plus the codec blob.
+    pub fn encoded_len(&self) -> u64 {
+        crate::comm::wire_bytes(0) + self.blob.len() as u64
+    }
+
+    /// Decode at the receiver (`wid`) into the dense payload `apply`
+    /// dispatches on. Validation is all-or-nothing: any framing, bound or
+    /// shape violation errors out before a single coordinate is
+    /// constructed, so a truncated blob can never partially apply.
+    pub fn decode(&self, shared: &Shared, wid: usize) -> Result<Payload> {
+        let pool = &shared.update_pool;
+        let params = shared.params.get(wid).context("receiver id out of range")?;
+        let spec = &self.spec;
+        let mut r = Reader::new(&self.blob);
+        let payload = match r.u8()? {
+            0 => {
+                let layer = r.u32()? as usize;
+                let open = if r.bool()? { Some(r.f32()?) } else { None };
+                let stamp = read_stamp(&mut r)?;
+                let tau = r.u64()?;
+                let nt = r.u32()? as usize;
+                let lp = params.layers.get(layer).context("LayerPush layer out of range")?;
+                let held = lp.tensors.len();
+                if nt != held {
+                    bail!("LayerPush carries {nt} tensors, layer {layer} holds {held}");
+                }
+                let mut values = Vec::with_capacity(nt);
+                for t in &lp.tensors {
+                    let b = t.state_dict();
+                    values.push(read_stream(&mut r, spec, pool, b.len(), Base::Fill(&b))?);
+                }
+                Payload::LayerPush { layer, open, values: Arc::new(values), stamp, tau }
+            }
+            1 => {
+                let w_in = r.f32()?;
+                let nl = r.u32()? as usize;
+                if nl != params.layers.len() {
+                    bail!("ModelPush carries {nl} layers, the model holds {}", params.layers.len());
+                }
+                let mut values = Vec::with_capacity(nl);
+                for lp in &params.layers {
+                    let nt = r.u32()? as usize;
+                    if nt != lp.tensors.len() {
+                        bail!("ModelPush layer tensor count mismatch");
+                    }
+                    let mut layer = Vec::with_capacity(nt);
+                    for t in &lp.tensors {
+                        let b = t.state_dict();
+                        layer.push(read_stream(&mut r, spec, pool, b.len(), Base::Fill(&b))?);
+                    }
+                    values.push(layer);
+                }
+                Payload::ModelPush { w_in, values: Arc::new(values) }
+            }
+            2 => {
+                let reply = r.bool()?;
+                let b = params.flatten();
+                let flat = read_stream(&mut r, spec, pool, b.len(), Base::Fill(&b))?;
+                Payload::PairAverage { flat: Arc::new(flat), reply }
+            }
+            3 => {
+                let nl = r.u32()? as usize;
+                if nl != params.layers.len() {
+                    bail!("GradShare carries {nl} layers, the model holds {}", params.layers.len());
+                }
+                let mut set = Vec::with_capacity(nl);
+                for lp in &params.layers {
+                    let nt = r.u32()? as usize;
+                    if nt != lp.tensors.len() {
+                        bail!("GradShare layer tensor count mismatch");
+                    }
+                    let mut layer = Vec::with_capacity(nt);
+                    for t in &lp.tensors {
+                        let data = read_stream(&mut r, spec, pool, t.numel(), Base::Zeros)?;
+                        layer.push(Tensor::from_vec(t.shape(), data));
+                    }
+                    set.push(layer);
+                }
+                Payload::GradShare { set: Arc::new(set) }
+            }
+            4 => {
+                let b = params.flatten();
+                let flat = read_stream(&mut r, spec, pool, b.len(), Base::Fill(&b))?;
+                Payload::ParamShare { flat: Arc::new(flat) }
+            }
+            5 => {
+                let layer = r.u32()? as usize;
+                let stamp = read_stamp(&mut r)?;
+                let ng = r.u32()? as usize;
+                let lp = params.layers.get(layer).context("GradPush layer out of range")?;
+                let held = lp.tensors.len();
+                if ng != held {
+                    bail!("GradPush carries {ng} tensors, layer {layer} holds {held}");
+                }
+                let mut grads = Vec::with_capacity(ng);
+                for t in &lp.tensors {
+                    grads.push(read_stream(&mut r, spec, pool, t.numel(), Base::Zeros)?);
+                }
+                let x_then = if r.bool()? {
+                    let mut xt = Vec::with_capacity(ng);
+                    for t in &lp.tensors {
+                        let n = r.u32()? as usize;
+                        if n != t.numel() {
+                            bail!("GradPush x_then length mismatch");
+                        }
+                        xt.push(r.f32s(n)?);
+                    }
+                    Some(Arc::new(xt))
+                } else {
+                    None
+                };
+                Payload::GradPush { layer, grads: Arc::new(grads), x_then, stamp }
+            }
+            6 => {
+                let layer = r.u32()? as usize;
+                let stamp = read_stamp(&mut r)?;
+                let nt = r.u32()? as usize;
+                let lp = params.layers.get(layer).context("ParamPull layer out of range")?;
+                let held = lp.tensors.len();
+                if nt != held {
+                    bail!("ParamPull carries {nt} tensors, layer {layer} holds {held}");
+                }
+                let mut values = Vec::with_capacity(nt);
+                for t in &lp.tensors {
+                    let b = t.state_dict();
+                    values.push(read_stream(&mut r, spec, pool, b.len(), Base::Fill(&b))?);
+                }
+                Payload::ParamPull { layer, values: Arc::new(values), stamp }
+            }
+            tag => bail!("unknown compressed payload tag {tag}"),
+        };
+        r.done()?;
+        Ok(payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-k / rand-k sparsification with error feedback
+// ---------------------------------------------------------------------------
+
+/// `topk:K` / `randk:K`: ship `ceil(n/K)` coordinates per tensor, with
+/// per-link per-stream error-feedback residuals on gradient streams.
+pub struct SparsifyCodec {
+    spec: CodecSpec,
+    rand: bool,
+    k: u32,
+    m: usize,
+    seed: u64,
+    /// per directed link (`from * m + to`): residual per gradient stream,
+    /// ordered by key so snapshots are deterministic
+    residuals: Vec<Mutex<BTreeMap<StreamKey, Vec<f32>>>>,
+    /// per-link message counters (rand-k index draws)
+    seqs: Vec<AtomicU64>,
+}
+
+impl SparsifyCodec {
+    pub fn new(k: u32, rand: bool, m: usize, seed: u64) -> SparsifyCodec {
+        let spec = if rand { CodecSpec::RandK { k } } else { CodecSpec::TopK { k } };
+        SparsifyCodec {
+            spec,
+            rand,
+            k: k.max(2),
+            m,
+            seed,
+            residuals: (0..m * m).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            seqs: (0..m * m).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Coordinates kept for an `n`-element tensor (at least one, so every
+    /// stream makes progress).
+    fn keep(&self, n: usize) -> usize {
+        n.div_ceil(self.k as usize).clamp(1, n)
+    }
+
+    fn select(&self, y: &[f32], k: usize, seed: u64) -> Vec<u32> {
+        if !self.rand {
+            return top_k_indices(y, k);
+        }
+        // Floyd's k-of-n sample: deterministic under the stream seed, and
+        // drawn from the codec's own RNG — link dice are untouched
+        let n = y.len();
+        let mut rng = Pcg32::new(seed);
+        let mut picked = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = rng.below_usize(j + 1) as u32;
+            if !picked.insert(t) {
+                picked.insert(j as u32);
+            }
+        }
+        picked.into_iter().collect()
+    }
+
+    /// Encode one stream. Gradient streams run error feedback: the residual
+    /// is re-added (`y = x + r`), the kept coordinates of `y` ship exactly
+    /// and leave the residual, everything else *is* the new residual —
+    /// `sent + residual == x + old residual`, coordinate-wise bit-exact.
+    fn stream(
+        &self,
+        w: &mut Writer,
+        pool: &ShardPool,
+        ctx: &StreamCtx,
+        class: StreamClass,
+        x: &[f32],
+    ) {
+        let n = x.len();
+        if n == 0 {
+            w.u32(0);
+            w.u32(0);
+            return;
+        }
+        let k = self.keep(n);
+        match class {
+            StreamClass::Grad => {
+                let mut link = self.residuals[ctx.link].lock().unwrap();
+                let r = link.entry(ctx.key).or_default();
+                if r.len() != n {
+                    // a shape change (new run phase) invalidates the residual
+                    r.clear();
+                    r.resize(n, 0.0);
+                }
+                let mut y = vec![0.0f32; n];
+                add_residual(pool, x, r, &mut y);
+                let idxs = self.select(&y, k, ctx.seed);
+                w.u32(n as u32);
+                w.u32(idxs.len() as u32);
+                w.u32s(&idxs);
+                r.copy_from_slice(&y);
+                for &i in &idxs {
+                    w.f32(y[i as usize]);
+                    r[i as usize] = 0.0;
+                }
+            }
+            StreamClass::State => {
+                let idxs = self.select(x, k, ctx.seed);
+                w.u32(n as u32);
+                w.u32(idxs.len() as u32);
+                w.u32s(&idxs);
+                for &i in &idxs {
+                    w.f32(x[i as usize]);
+                }
+            }
+        }
+    }
+
+    /// Walk a blob this codec produced and fold every gradient stream's
+    /// shipped coordinates back into the link residual (the kept slots were
+    /// zeroed at encode, so the residual returns to the full accumulated
+    /// gradient — drop-composable with push-sum weight reclaim).
+    fn reclaim_from_blob(&self, link: usize, blob: &[u8]) -> Result<()> {
+        let mut r = Reader::new(blob);
+        let mut sparse = |r: &mut Reader, key: Option<StreamKey>| -> Result<()> {
+            let n = r.u32()? as usize;
+            let k = r.u32()? as usize;
+            if k > n {
+                bail!("bad sparse framing");
+            }
+            let idxs = r.u32s(k)?;
+            let vals = r.f32s(k)?;
+            if let Some(key) = key {
+                let mut map = self.residuals[link].lock().unwrap();
+                let res = map.entry(key).or_default();
+                if res.len() != n {
+                    res.clear();
+                    res.resize(n, 0.0);
+                }
+                for (&i, &v) in idxs.iter().zip(&vals) {
+                    if (i as usize) < n {
+                        res[i as usize] += v;
+                    }
+                }
+            }
+            Ok(())
+        };
+        match r.u8()? {
+            3 => {
+                let nl = r.u32()? as usize;
+                for li in 0..nl {
+                    let nt = r.u32()? as usize;
+                    for ti in 0..nt {
+                        let key = StreamKey { tag: 3, layer: li as u32, tensor: ti as u32 };
+                        sparse(&mut r, Some(key))?;
+                    }
+                }
+            }
+            5 => {
+                let layer = r.u32()?;
+                read_stamp(&mut r)?;
+                let ng = r.u32()? as usize;
+                for ti in 0..ng {
+                    let key = StreamKey { tag: 5, layer, tensor: ti as u32 };
+                    sparse(&mut r, Some(key))?;
+                }
+                // x_then (dense) carries no gradient mass — nothing to reclaim
+            }
+            // state-only payloads carry no gradient mass
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn msg_seed(&self, link: usize) -> u64 {
+        let seq = self.seqs[link].fetch_add(1, Ordering::Relaxed);
+        mix64(
+            self.seed
+                ^ (link as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ seq.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        )
+    }
+}
+
+impl Codec for SparsifyCodec {
+    fn spec(&self) -> &CodecSpec {
+        &self.spec
+    }
+
+    fn encode(&self, pool: &ShardPool, from: usize, to: usize, payload: Payload) -> Payload {
+        if matches!(payload, Payload::Compressed(_)) {
+            return payload; // checkpoint restore: already on the wire
+        }
+        let link = from * self.m + to;
+        let msg_seed = self.msg_seed(link);
+        let shipped_w = payload.shipped_weight();
+        let droppable = payload.droppable();
+        let mut ix = 0u64;
+        let blob = build_blob(&payload, |w, key, class, x| {
+            let ctx = StreamCtx { link, key, seed: mix64(msg_seed ^ (ix + 1)) };
+            ix += 1;
+            self.stream(w, pool, &ctx, class, x);
+        });
+        Payload::Compressed(Compressed {
+            spec: self.spec.clone(),
+            shipped_w,
+            droppable,
+            blob: Arc::new(blob),
+        })
+    }
+
+    fn on_drop(&self, from: usize, to: usize, payload: &Payload) {
+        let Payload::Compressed(c) = payload else { return };
+        if c.spec != self.spec {
+            return;
+        }
+        // a blob this codec produced always parses; a restore-path blob from
+        // a different run shape at worst reclaims nothing
+        let reclaimed = self.reclaim_from_blob(from * self.m + to, &c.blob);
+        debug_assert!(reclaimed.is_ok(), "residual reclaim failed: {reclaimed:?}");
+    }
+
+    fn residual_state(&self) -> Vec<ResidualState> {
+        let mut out = Vec::new();
+        for (link, slot) in self.residuals.iter().enumerate() {
+            let map = slot.lock().unwrap();
+            if map.is_empty() {
+                continue;
+            }
+            out.push(ResidualState {
+                from: link / self.m,
+                to: link % self.m,
+                streams: map.iter().map(|(k, v)| (*k, v.clone())).collect(),
+            });
+        }
+        out
+    }
+
+    fn load_residual_state(&self, states: &[ResidualState]) {
+        for slot in &self.residuals {
+            slot.lock().unwrap().clear();
+        }
+        for rs in states {
+            let link = rs.from * self.m + rs.to;
+            if let Some(slot) = self.residuals.get(link) {
+                let mut map = slot.lock().unwrap();
+                for (key, vals) in &rs.streams {
+                    map.insert(*key, vals.clone());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 stochastic quantization
+// ---------------------------------------------------------------------------
+
+/// `int8`: per-chunk max-abs scales + unbiased stochastic rounding (~4×
+/// fewer wire bytes). Lossy but dense — every coordinate arrives, so no
+/// error feedback is needed; the quantization error is zero-mean and
+/// bounded by one scale step per element.
+pub struct Int8Codec {
+    seed: u64,
+}
+
+impl Codec for Int8Codec {
+    fn spec(&self) -> &CodecSpec {
+        &CodecSpec::Int8
+    }
+
+    fn encode(&self, pool: &ShardPool, from: usize, to: usize, payload: Payload) -> Payload {
+        if matches!(payload, Payload::Compressed(_)) {
+            return payload;
+        }
+        let shipped_w = payload.shipped_weight();
+        let droppable = payload.droppable();
+        // stateless per-message seed: both endpoints of a link share the
+        // stream, keyed off a global counter so repeated pushes of the same
+        // tensor draw fresh rounding noise
+        static MSG: AtomicU64 = AtomicU64::new(0);
+        let msg_seed = mix64(
+            self.seed
+                ^ ((from * 31 + to) as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ MSG.fetch_add(1, Ordering::Relaxed).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let mut ix = 0u64;
+        let blob = build_blob(&payload, |w, _key, _class, x| {
+            let seed = mix64(msg_seed ^ (ix + 1));
+            ix += 1;
+            let n = x.len();
+            w.u32(n as u32);
+            let mut scales = vec![0.0f32; n.div_ceil(CHUNK)];
+            let mut q = vec![0u8; n];
+            int8_encode(pool, x, seed, &mut scales, &mut q);
+            w.f32s(&scales);
+            w.bytes(&q);
+        });
+        Payload::Compressed(Compressed {
+            spec: CodecSpec::Int8,
+            shipped_w,
+            droppable,
+            blob: Arc::new(blob),
+        })
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal little-endian reader/writer for compressed payload blobs.
+//!
+//! The same framing discipline as the checkpoint codec (exact f32 bits, no
+//! decimal round-tripping), but scoped to one message: a blob is built once
+//! at encode time and parsed once at apply time. Every `Reader` accessor
+//! bounds-checks before it allocates, so a truncated or hostile blob can
+//! never partially apply or OOM the process — decode errors surface as
+//! `ApplyResult::Malformed` at the fabric boundary.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn with_capacity(cap: usize) -> Writer {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw values, no length prefix (the caller frames counts explicitly).
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(4 * vs.len());
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    /// Raw index values, no length prefix.
+    pub fn u32s(&mut self, vs: &[u32]) {
+        self.buf.reserve(4 * vs.len());
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian cursor over an encoded blob.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("compressed blob truncated at byte {} (wanted {n} more)", self.i);
+        }
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// `n` values, validated against the remaining length *before* the
+    /// allocation (a corrupt count must error, not OOM).
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// `n` index values, same bounds discipline as [`Reader::f32s`].
+    pub fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// The blob must be fully consumed — trailing bytes mean a framing bug
+    /// or tampering, and either way the message is malformed.
+    pub fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!("compressed blob has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut w = Writer::with_capacity(64);
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.f32(f32::MIN_POSITIVE);
+        w.f32s(&[1.5, -0.0, f32::NAN]);
+        w.u32s(&[0, 3, u32::MAX]);
+        w.bytes(&[9, 8]);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), f32::MIN_POSITIVE.to_bits());
+        let fs = r.f32s(3).unwrap();
+        assert_eq!(fs[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(fs[1].to_bits(), (-0.0f32).to_bits());
+        assert!(fs[2].is_nan());
+        assert_eq!(r.u32s(3).unwrap(), vec![0, 3, u32::MAX]);
+        assert_eq!(r.take(2).unwrap(), &[9, 8]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_error() {
+        let mut w = Writer::default();
+        w.u32(5);
+        let buf = w.finish();
+        let mut r = Reader::new(&buf[..3]);
+        assert!(r.u32().is_err());
+        // a huge declared count must error before allocating
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s(usize::MAX / 2).is_err());
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        r.done().unwrap();
+        let mut r = Reader::new(&buf);
+        r.u8().unwrap();
+        assert!(r.done().is_err(), "3 unread bytes must be rejected");
+    }
+}

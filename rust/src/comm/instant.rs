@@ -8,7 +8,9 @@
 //! traffic through `FabricCore::record_instant`; only the collective shares
 //! (DDP gradients, LocalSGD/SlowMo/CO2 snapshots) route through `push`.
 
-use crate::comm::{apply, ApplyResult, Fabric, FabricCore, InFlight, Payload, PushOutcome};
+use std::sync::Arc;
+
+use crate::comm::{apply, ApplyResult, Codec, Fabric, FabricCore, InFlight, Payload, PushOutcome};
 use crate::coordinator::Shared;
 
 /// See the module docs: zero-delay, loss-free, in-process links.
@@ -17,9 +19,17 @@ pub struct InstantFabric {
 }
 
 impl InstantFabric {
-    /// An instant fabric connecting `m` workers.
+    /// An instant fabric connecting `m` workers (dense codec).
     pub fn new(m: usize) -> InstantFabric {
         InstantFabric { core: FabricCore::new(m) }
+    }
+
+    /// An instant fabric with a compression codec installed: the links are
+    /// free, but byte metering still reports encoded sizes (and the
+    /// encode/decode numerics apply), so codec behavior is testable without
+    /// a simulated clock.
+    pub fn with_codec(m: usize, codec: Arc<dyn Codec>) -> InstantFabric {
+        InstantFabric { core: FabricCore::with_codec(m, codec) }
     }
 }
 
@@ -40,7 +50,10 @@ impl Fabric for InstantFabric {
         step: usize,
         payload: Payload,
     ) -> PushOutcome {
-        self.core.record_send(shared, from, to, step, payload.bytes());
+        // codec boundary: meter and apply the encoded message (identity for
+        // the default dense codec — bit-for-bit the seed-era path)
+        let payload = self.core.codec().encode(&shared.update_pool, from, to, payload);
+        self.core.record_send(shared, from, to, step, payload.encoded_len());
         match apply(&self.core, shared, to, from, step, &payload) {
             ApplyResult::Busy => PushOutcome::Busy,
             ApplyResult::Malformed => {

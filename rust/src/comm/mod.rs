@@ -35,6 +35,7 @@
 //!   [`Payload::ParamShare`] are never dropped (TCP-like), only delayed —
 //!   barrier rounds slow down under latency but cannot deadlock.
 
+pub mod codec;
 pub mod instant;
 pub mod sim;
 
@@ -56,6 +57,7 @@ use crate::session::events::TrainEvent;
 use crate::topology::roles::RoleTable;
 use crate::util::rng::Pcg32;
 
+pub use codec::{Codec, CodecSpec, Compressed};
 pub use instant::InstantFabric;
 pub use sim::SimFabric;
 
@@ -150,11 +152,21 @@ pub enum Payload {
         /// shard-version provenance
         stamp: ClockStamp,
     },
+    /// A codec-encoded message (`[fabric] codec != "dense"`): the installed
+    /// [`codec::Codec`] wraps every outgoing payload at the fabric boundary,
+    /// and `apply` decodes it back before dispatching. Push-sum metadata
+    /// rides in the clear so drop/refund accounting never needs a decode.
+    Compressed(Compressed),
 }
 
 impl Payload {
-    /// Serialized wire size of this message.
-    pub fn bytes(&self) -> u64 {
+    /// Serialized wire size of this message — the single source of truth for
+    /// byte accounting: [`CommStats`] meters it, [`SimFabric`] derives
+    /// serialization delay from it, and the checkpoint codec sizes in-flight
+    /// buffers with it. A compressed payload reports its **encoded** size,
+    /// which is how compression shows up as wall-clock wins on
+    /// bandwidth-constrained links.
+    pub fn encoded_len(&self) -> u64 {
         let floats: usize = match self {
             Payload::LayerPush { values, .. } => values.iter().map(|v| v.len()).sum(),
             Payload::ModelPush { values, .. } => values
@@ -174,6 +186,7 @@ impl Payload {
                         .unwrap_or(0)
             }
             Payload::ParamPull { values, .. } => values.iter().map(|v| v.len()).sum(),
+            Payload::Compressed(c) => return c.encoded_len(),
         };
         wire_bytes(floats)
     }
@@ -182,11 +195,16 @@ impl Payload {
     /// (the information is delayed to a later exchange); collective shares
     /// and parameter-server traffic are modeled as reliable so barrier
     /// rounds cannot deadlock and optimizer steps are never silently lost.
+    /// A compressed payload inherits its inner payload's answer (captured at
+    /// encode time).
     pub fn droppable(&self) -> bool {
-        matches!(
-            self,
-            Payload::LayerPush { .. } | Payload::ModelPush { .. } | Payload::PairAverage { .. }
-        )
+        match self {
+            Payload::LayerPush { .. } | Payload::ModelPush { .. } | Payload::PairAverage { .. } => {
+                true
+            }
+            Payload::Compressed(c) => c.droppable,
+            _ => false,
+        }
     }
 
     /// Push-sum weight mass this message carries while in flight.
@@ -194,6 +212,7 @@ impl Payload {
         match self {
             Payload::LayerPush { open, .. } => open.unwrap_or(0.0),
             Payload::ModelPush { w_in, .. } => *w_in,
+            Payload::Compressed(c) => c.shipped_w,
             _ => 0.0,
         }
     }
@@ -391,17 +410,29 @@ impl FabricSpec {
     }
 }
 
-/// Construct the configured transport for an `m`-worker run.
-pub fn build_fabric(spec: &FabricSpec, m: usize, seed: u64) -> Arc<dyn Fabric> {
+/// Construct the configured transport for an `m`-worker run, with `codec`
+/// installed at the boundary (identity for [`CodecSpec::Dense`]).
+pub fn build_fabric(
+    spec: &FabricSpec,
+    codec_spec: &CodecSpec,
+    m: usize,
+    seed: u64,
+) -> Arc<dyn Fabric> {
+    // the codec draws from its own seed lane: installing `randk`/`int8`
+    // must not perturb the link dice (latency, drops) of the run
+    let codec = codec_spec.build(m, seed ^ 0xc0dec);
     match spec {
-        FabricSpec::Instant => Arc::new(InstantFabric::new(m)),
-        FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => Arc::new(SimFabric::new(
-            latency.clone(),
-            *bandwidth_bytes_per_s,
-            *drop_prob,
-            m,
-            seed,
-        )),
+        FabricSpec::Instant => Arc::new(InstantFabric::with_codec(m, codec)),
+        FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => {
+            Arc::new(SimFabric::with_codec(
+                latency.clone(),
+                *bandwidth_bytes_per_s,
+                *drop_prob,
+                m,
+                seed,
+                codec,
+            ))
+        }
     }
 }
 
@@ -416,6 +447,16 @@ pub trait Fabric: Send + Sync {
     /// Gossip algorithms then keep their fused in-place hot paths and account
     /// the traffic through [`FabricCore::record_instant`].
     fn is_instant(&self) -> bool;
+
+    /// True when gossip algorithms may take their fused in-place hot paths:
+    /// the transport is instant AND the codec is the dense identity. A
+    /// non-dense codec must see every payload at the push boundary, so it
+    /// forces even instant runs onto the generic payload path (intra-node
+    /// shared-memory traffic — hierarchical tier 1 — stays fused: it models
+    /// one node's internal bus, which no wire codec touches).
+    fn fused_gossip(&self) -> bool {
+        self.is_instant() && self.core().codec().spec().is_dense()
+    }
 
     /// Ship one message from worker `from` to worker `to`. `step` is the
     /// sender's current step (staleness accounting).
@@ -489,11 +530,19 @@ pub struct FabricCore {
     /// layer→shard routing table for role topologies (`ps:N`); absent on
     /// flat clusters — installed once by the coordinator at session build
     roles: OnceLock<RoleTable>,
+    /// the compression codec every push crosses ([`codec::DenseCodec`] is
+    /// the identity default)
+    codec: Arc<dyn Codec>,
 }
 
 impl FabricCore {
-    /// Fresh core for an `m`-worker fabric (all slots alive).
+    /// Fresh core for an `m`-worker fabric (all slots alive, dense codec).
     pub fn new(m: usize) -> FabricCore {
+        FabricCore::with_codec(m, Arc::new(codec::DenseCodec))
+    }
+
+    /// Fresh core with a compression codec installed at the boundary.
+    pub fn with_codec(m: usize, codec: Arc<dyn Codec>) -> FabricCore {
         FabricCore {
             m,
             links: (0..m * m).map(|_| LinkCounters::default()).collect(),
@@ -501,7 +550,13 @@ impl FabricCore {
             pending_frac: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
             membership: Arc::new(Membership::new(m)),
             roles: OnceLock::new(),
+            codec,
         }
+    }
+
+    /// The installed compression codec.
+    pub fn codec(&self) -> &Arc<dyn Codec> {
+        &self.codec
     }
 
     /// Number of workers this fabric connects.
@@ -756,6 +811,9 @@ fn payload_shape_ok(shared: &Shared, wid: usize, payload: &Payload) -> bool {
             values.len() == lp.tensors.len()
                 && values.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
         }
+        // compressed payloads decode (with their own all-or-nothing
+        // validation) before this gate; one reaching it is a framing bug
+        Payload::Compressed(_) => false,
     }
 }
 
@@ -772,6 +830,22 @@ pub(crate) fn apply(
     step: usize,
     payload: &Payload,
 ) -> ApplyResult {
+    // codec boundary: a compressed message decodes to its dense payload
+    // first. Decode is all-or-nothing — a truncated or corrupt blob returns
+    // Malformed here (reject + push-sum weight refund), never a partial
+    // write. A Busy outcome re-queues the original compressed message, so
+    // the retry decodes again against the then-current receiver state.
+    let decoded;
+    let payload = match payload {
+        Payload::Compressed(c) => match c.decode(shared, wid) {
+            Ok(p) => {
+                decoded = p;
+                &decoded
+            }
+            Err(_) => return ApplyResult::Malformed,
+        },
+        p => p,
+    };
     if !payload_shape_ok(shared, wid, payload) {
         return ApplyResult::Malformed;
     }
@@ -1085,14 +1159,26 @@ mod tests {
             stamp: crate::tensor::clock::ClockStamp::default(),
             tau: 0,
         };
-        assert_eq!(layer.bytes(), wire_bytes(12));
+        assert_eq!(layer.encoded_len(), wire_bytes(12));
         assert!(layer.droppable());
         assert_eq!(layer.shipped_weight(), 0.25);
 
         let share = Payload::ParamShare { flat: Arc::new(vec![0.0; 7]) };
-        assert_eq!(share.bytes(), wire_bytes(7));
+        assert_eq!(share.encoded_len(), wire_bytes(7));
         assert!(!share.droppable(), "collective shares are reliable");
         assert_eq!(share.shipped_weight(), 0.0);
+
+        // a compressed payload meters its encoded size and carries the
+        // inner payload's drop/weight metadata in the clear
+        let packed = Payload::Compressed(Compressed {
+            spec: CodecSpec::TopK { k: 8 },
+            shipped_w: 0.25,
+            droppable: true,
+            blob: Arc::new(vec![0u8; 11]),
+        });
+        assert_eq!(packed.encoded_len(), wire_bytes(0) + 11);
+        assert!(packed.droppable());
+        assert_eq!(packed.shipped_weight(), 0.25);
 
         let push = Payload::GradPush {
             layer: 1,
@@ -1100,7 +1186,7 @@ mod tests {
             x_then: Some(Arc::new(vec![vec![0.0; 5], vec![0.0; 3]])),
             stamp: crate::tensor::clock::ClockStamp::default(),
         };
-        assert_eq!(push.bytes(), wire_bytes(16), "x_then rides the wire too");
+        assert_eq!(push.encoded_len(), wire_bytes(16), "x_then rides the wire too");
         assert!(!push.droppable(), "a lost gradient would skip an optimizer step");
         assert_eq!(push.shipped_weight(), 0.0, "PS traffic carries no push-sum mass");
 
@@ -1109,7 +1195,7 @@ mod tests {
             values: Arc::new(vec![vec![0.0; 5], vec![0.0; 3]]),
             stamp: crate::tensor::clock::ClockStamp::default(),
         };
-        assert_eq!(pull.bytes(), wire_bytes(8));
+        assert_eq!(pull.encoded_len(), wire_bytes(8));
         assert!(!pull.droppable());
         assert_eq!(pull.shipped_weight(), 0.0);
     }

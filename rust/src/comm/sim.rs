@@ -17,8 +17,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use std::sync::Arc;
+
 use crate::comm::{
-    apply, ApplyResult, Fabric, FabricCore, InFlight, LatencyDist, Payload, PushOutcome,
+    apply, ApplyResult, Codec, Fabric, FabricCore, InFlight, LatencyDist, Payload, PushOutcome,
 };
 use crate::coordinator::Shared;
 use crate::util::rng::Pcg32;
@@ -59,7 +61,7 @@ pub struct SimFabric {
 
 impl SimFabric {
     /// A simulated fabric connecting `m` workers; all link randomness is
-    /// derived from `seed`.
+    /// derived from `seed`. Dense (identity) codec.
     pub fn new(
         latency: LatencyDist,
         bandwidth_bytes_per_s: f64,
@@ -67,8 +69,28 @@ impl SimFabric {
         m: usize,
         seed: u64,
     ) -> SimFabric {
+        SimFabric::with_codec(
+            latency,
+            bandwidth_bytes_per_s,
+            drop_prob,
+            m,
+            seed,
+            Arc::new(crate::comm::codec::DenseCodec),
+        )
+    }
+
+    /// A simulated fabric with a compression codec installed at the push
+    /// boundary: serialization delay and byte metering see encoded sizes.
+    pub fn with_codec(
+        latency: LatencyDist,
+        bandwidth_bytes_per_s: f64,
+        drop_prob: f64,
+        m: usize,
+        seed: u64,
+        codec: Arc<dyn Codec>,
+    ) -> SimFabric {
         SimFabric {
-            core: FabricCore::new(m),
+            core: FabricCore::with_codec(m, codec),
             latency,
             bandwidth_bytes_per_s,
             drop_prob,
@@ -101,7 +123,10 @@ impl SimFabric {
     /// Push-sum mass currently riding the links, as `(weight, weighted
     /// parameter vector)` — whole-model pushes contribute `w_in * x`
     /// flattened. Diagnostic accessor for the conservation property: mass in
-    /// flight is delayed, never destroyed.
+    /// flight is delayed, never destroyed. Compressed messages contribute
+    /// their shipped weight (carried in the clear); the `w·x` ledger skips
+    /// them — it would need a receiver-context decode — so codec-enabled
+    /// property tests assert on the weight column only.
     pub fn in_flight_push_sum_mass(&self) -> (f64, Vec<f64>) {
         let mut w_total = 0.0f64;
         let mut wx: Vec<f64> = Vec::new();
@@ -145,13 +170,20 @@ impl Fabric for SimFabric {
         step: usize,
         payload: Payload,
     ) -> PushOutcome {
-        let bytes = payload.bytes();
+        // codec boundary: everything downstream — serialization delay, drop
+        // dice, byte metering, the queue — sees the encoded message
+        let payload = self.core.codec().encode(&shared.update_pool, from, to, payload);
+        let bytes = payload.encoded_len();
         let m = self.core.workers();
         let ready_at = {
             let mut link = self.links[from * m + to].lock().unwrap();
             if payload.droppable() && self.drop_prob > 0.0 && link.rng.next_f64() < self.drop_prob
             {
                 drop(link);
+                // the link lost the message: shipped gradient coordinates
+                // fold back into the sender-side error-feedback residual
+                // (composing with the caller's push-sum weight reclaim)
+                self.core.codec().on_drop(from, to, &payload);
                 self.core.record_drop(shared, from, to, step, bytes);
                 return PushOutcome::Dropped;
             }

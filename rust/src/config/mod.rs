@@ -347,6 +347,11 @@ pub struct TrainConfig {
     /// default) or `Sim` (per-link latency, bandwidth and loss — the
     /// delay-robustness experiments)
     pub fabric: FabricSpec,
+    /// fabric-boundary compression codec: `Dense` (identity, default),
+    /// `TopK`/`RandK` sparsification with error feedback, or `Int8`
+    /// stochastic quantization — every payload kind and every algorithm
+    /// inherits it without per-algorithm changes
+    pub codec: crate::comm::CodecSpec,
     /// write a `resilience::checkpoint` every k steps (0 = off)
     pub checkpoint_every: usize,
     /// parent directory for periodic checkpoints (`step-XXXXXX` subdirs)
@@ -393,6 +398,7 @@ impl TrainConfig {
             update_threads: 1,
             queue_depth: 2,
             fabric: FabricSpec::Instant,
+            codec: crate::comm::CodecSpec::Dense,
             checkpoint_every: 0,
             checkpoint_dir: std::path::PathBuf::from("checkpoints"),
             faults: FaultPlan::default(),
@@ -495,6 +501,7 @@ impl TrainConfig {
             }
         }
         self.fabric.validate()?;
+        self.codec.validate()?;
         self.staleness.validate(self.algorithm)?;
         self.faults.validate(self.workers, self.steps)?;
         if !self.faults.is_empty() && self.decoupled {
@@ -604,6 +611,8 @@ impl TrainConfig {
             }
             other => bail!("fabric.kind: expected \"instant\" or \"sim\", got {other:?}"),
         };
+        // fabric-boundary compression: "dense" | "topk:K" | "randk:K" | "int8"
+        cfg.codec = crate::comm::CodecSpec::parse(doc.str_or("fabric", "codec", "dense"))?;
 
         // [topology]: cluster roles/routing (flat | ps:N | hier:G)
         cfg.cluster = TopologySpec::parse(doc.str_or("topology", "kind", "flat"))?;
@@ -832,6 +841,22 @@ mod tests {
         let doc = Toml::parse("[fabric]\nkind = \"sim\"\ndrop_prob = 1.5\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Toml::parse("[fabric]\nkind = \"carrier-pigeon\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+
+        // codec knob: default dense, spec strings parse, junk is rejected
+        assert_eq!(d.codec, crate::comm::CodecSpec::Dense);
+        let doc = Toml::parse("[fabric]\ncodec = \"topk:8\"\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.codec, crate::comm::CodecSpec::TopK { k: 8 });
+        let doc = Toml::parse("[fabric]\ncodec = \"int8\"\n").unwrap();
+        assert_eq!(
+            TrainConfig::from_toml(&doc).unwrap().codec,
+            crate::comm::CodecSpec::Int8
+        );
+        // K = 1 would grow every message; rejected at parse time
+        let doc = Toml::parse("[fabric]\ncodec = \"topk:1\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[fabric]\ncodec = \"gzip\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
     }
 

@@ -283,7 +283,7 @@ impl Shared {
         let params: Vec<Arc<ModelParams>> = std::iter::once(Arc::clone(&proto))
             .chain((1..m).map(|_| proto.replica()))
             .collect();
-        let fabric = crate::comm::build_fabric(&cfg.fabric, m, cfg.seed ^ 0xfab41c);
+        let fabric = crate::comm::build_fabric(&cfg.fabric, &cfg.codec, m, cfg.seed ^ 0xfab41c);
         let membership = Arc::clone(fabric.core().membership());
         membership.set_policy(cfg.recovery);
         let weights: Vec<PushSumWeight> =
@@ -389,7 +389,10 @@ impl Shared {
             ps,
         });
         if let Some(ck) = resume {
-            // put the snapshot's in-flight messages back on the links
+            // codec error-feedback residuals first (a restored compressed
+            // message that drops must reclaim into the restored state, not
+            // an empty one), then the in-flight messages back on the links
+            shared.fabric.core().codec().load_residual_state(&ck.residuals);
             shared.fabric.restore(&shared, ck.in_flight.clone());
         }
         Ok(shared)

@@ -669,6 +669,9 @@ pub(crate) fn write_checkpoint(
         clocks,
         workers_state,
         in_flight,
+        // codec error-feedback residuals: gradient mass the sparsifier is
+        // still holding sender-side belongs to the snapshot too
+        residuals: shared.fabric.core().codec().residual_state(),
         curve: curve.points,
         drift: drift.samples.iter().map(|&(s, v)| (s as u64, v)).collect(),
     };

@@ -59,6 +59,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "queue-depth",
     "topology",
     "fabric",
+    "codec",
     "link-latency",
     "link-drop",
     "link-bandwidth",
@@ -177,7 +178,7 @@ fn print_usage() {
          \x20               [--fwd-threads N] [--bwd-threads N] [--update-threads N]\n\
          \x20               [--queue-depth N] [--topology flat|ps:N|hier:G]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
-         \x20               [--link-bandwidth MBPS]\n\
+         \x20               [--link-bandwidth MBPS] [--codec dense|topk:K|randk:K|int8]\n\
          \x20               [--compensation none|dc] [--dc-lambda F]\n\
          \x20               [--adaptive-mix true] [--mix-beta F]\n\
          \x20               [--ckpt-every K] [--ckpt-dir DIR] [--resume DIR]\n\
@@ -332,6 +333,10 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
                 .with_context(|| format!("--link-drop: expected a probability, got {v:?}"))?;
         }
         cfg.fabric = FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob };
+    }
+    // Fabric-boundary compression (works on both transports).
+    if let Some(v) = args.get("codec") {
+        cfg.codec = layup::comm::CodecSpec::parse(v)?;
     }
     Ok(cfg)
 }

@@ -221,7 +221,8 @@ pub struct LinkTraffic {
     pub to: usize,
     /// messages sent (including dropped ones)
     pub msgs: u64,
-    /// bytes sent
+    /// encoded wire bytes sent (`Payload::encoded_len` after the fabric's
+    /// codec ran — a sparsifying codec shrinks this, not the payload count)
     pub bytes: u64,
     /// messages the link dropped
     pub drops: u64,
@@ -235,7 +236,8 @@ pub struct LinkTraffic {
 pub struct CommStats {
     /// messages pushed onto the fabric (including dropped ones)
     pub msgs_sent: u64,
-    /// bytes pushed onto the fabric
+    /// encoded wire bytes pushed onto the fabric (post-codec
+    /// `Payload::encoded_len` — the number `fig_compression` compares)
     pub bytes_sent: u64,
     /// messages the links dropped
     pub msgs_dropped: u64,

@@ -11,7 +11,9 @@
 //!   replica ([`crate::model::ModelParams::state_dict`]), optimizer moments
 //!   and gossip RNG streams ([`AlgoState`]), data-loader cursors, push-sum
 //!   weights, membership flags, the quiesced in-flight fabric messages
-//!   ([`crate::comm::InFlight`]) and the learning curve so far.
+//!   ([`crate::comm::InFlight`]), the codec's sender-side error-feedback
+//!   residuals ([`crate::comm::codec::ResidualState`]) and the learning
+//!   curve so far.
 //!
 //! The invariant the round-trip tests pin: **save → load → continue is
 //! bit-identical to an uninterrupted run** (on the instant fabric, under a
@@ -23,6 +25,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::codec::{CodecSpec, Compressed, ResidualState, StreamKey};
 use crate::comm::{InFlight, Payload};
 use crate::metrics::CurvePoint;
 use crate::optim::{LayerOptState, OptState};
@@ -36,7 +39,11 @@ use crate::util::json::{num, obj, s, Json};
 /// v3: parameter-server payload tags (`Payload::GradPush` = 5,
 /// `Payload::ParamPull` = 6) so a `ps:N` run's in-flight traffic survives
 /// the drain/restore round trip.
-pub const FORMAT_VERSION: u32 = 3;
+/// v4: fabric codec state — `Payload::Compressed` in-flight messages
+/// (tag 7) and per-link error-feedback residuals
+/// (`Checkpoint::residuals`), so a `topk`/`randk` run resumes without
+/// destroying the gradient mass the sparsifier was still holding.
+pub const FORMAT_VERSION: u32 = 4;
 
 /// Format name written to `meta.json` (self-description).
 pub const FORMAT_NAME: &str = "layup-checkpoint";
@@ -109,6 +116,10 @@ pub struct Checkpoint {
     pub workers_state: Vec<WorkerState>,
     /// quiesced fabric messages still riding the links
     pub in_flight: Vec<InFlight>,
+    /// codec error-feedback residuals per directed link (empty for the
+    /// dense codec) — the gradient mass the sparsifier still holds
+    /// sender-side, without which a resume would silently destroy it
+    pub residuals: Vec<ResidualState>,
     /// eval curve recorded before the snapshot
     pub curve: Vec<CurvePoint>,
     /// drift samples recorded before the snapshot
@@ -218,6 +229,14 @@ pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<()> {
         ("elapsed_s", num(ckpt.elapsed_s)),
         ("membership_epoch", num(ckpt.epoch as f64)),
         ("in_flight_msgs", num(ckpt.in_flight.len() as f64)),
+        // wire bytes of the quiesced traffic, through the same
+        // Payload::encoded_len() that CommStats meters and SimFabric
+        // serializes against — one byte-accounting source of truth
+        (
+            "in_flight_bytes",
+            num(ckpt.in_flight.iter().map(|m| m.payload.encoded_len() as f64).sum()),
+        ),
+        ("codec_residual_links", num(ckpt.residuals.len() as f64)),
         ("curve_points", num(ckpt.curve.len() as f64)),
         ("drift_samples", num(ckpt.drift.len() as f64)),
     ]);
@@ -404,6 +423,18 @@ fn encode(ckpt: &Checkpoint, e: &mut Enc) {
         e.f64(m.remaining_s);
         encode_payload(&m.payload, e);
     }
+    e.u64(ckpt.residuals.len() as u64);
+    for r in &ckpt.residuals {
+        e.u64(r.from as u64);
+        e.u64(r.to as u64);
+        e.u64(r.streams.len() as u64);
+        for (key, vals) in &r.streams {
+            e.u8(key.tag);
+            e.u32(key.layer);
+            e.u32(key.tensor);
+            e.f32s(vals);
+        }
+    }
     e.u64(ckpt.curve.len() as u64);
     for p in &ckpt.curve {
         e.u64(p.step as u64);
@@ -481,6 +512,19 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
             payload: decode_payload(&mut d)?,
         });
     }
+    let n_residuals = d.len()?;
+    let mut residuals = Vec::with_capacity(n_residuals);
+    for _ in 0..n_residuals {
+        let from = d.u64()? as usize;
+        let to = d.u64()? as usize;
+        let n_streams = d.len()?;
+        let mut streams = Vec::with_capacity(n_streams);
+        for _ in 0..n_streams {
+            let key = StreamKey { tag: d.u8()?, layer: d.u32()?, tensor: d.u32()? };
+            streams.push((key, d.f32s()?));
+        }
+        residuals.push(ResidualState { from, to, streams });
+    }
     let n_curve = d.len()?;
     let mut curve = Vec::with_capacity(n_curve);
     for _ in 0..n_curve {
@@ -535,6 +579,7 @@ fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         clocks,
         workers_state,
         in_flight,
+        residuals,
         curve,
         drift,
     })
@@ -695,6 +740,16 @@ fn encode_payload(p: &Payload, e: &mut Enc) {
             }
             encode_stamp(stamp, e);
         }
+        Payload::Compressed(c) => {
+            e.u8(7);
+            let (tag, k) = c.spec.wire_tag();
+            e.u8(tag);
+            e.u32(k);
+            e.f32(c.shipped_w);
+            e.bool(c.droppable);
+            e.u64(c.blob.len() as u64);
+            e.buf.extend_from_slice(&c.blob);
+        }
     }
 }
 
@@ -778,6 +833,14 @@ fn decode_payload(d: &mut Dec) -> Result<Payload> {
             }
             let stamp = decode_stamp(d)?;
             Payload::ParamPull { layer, values: Arc::new(values), stamp }
+        }
+        7 => {
+            let spec = CodecSpec::from_wire(d.u8()?, d.u32()?)?;
+            let shipped_w = d.f32()?;
+            let droppable = d.bool()?;
+            let n = d.len()?;
+            let blob = Arc::new(d.take(n)?.to_vec());
+            Payload::Compressed(Compressed { spec, shipped_w, droppable, blob })
         }
         tag => bail!("unknown checkpoint payload tag {tag}"),
     })
@@ -887,7 +950,27 @@ mod tests {
                         stamp: ClockStamp { worker: 1, step: 9, version: 44 },
                     },
                 },
+                InFlight {
+                    from: 0,
+                    to: 1,
+                    step: 10,
+                    remaining_s: 0.003,
+                    payload: Payload::Compressed(Compressed {
+                        spec: CodecSpec::TopK { k: 4 },
+                        shipped_w: 0.125,
+                        droppable: true,
+                        blob: Arc::new(vec![3, 0, 0, 0, 0, 7, 255]),
+                    }),
+                },
             ],
+            residuals: vec![ResidualState {
+                from: 0,
+                to: 1,
+                streams: vec![
+                    (StreamKey { tag: 3, layer: 0, tensor: 0 }, vec![0.5, -0.25]),
+                    (StreamKey { tag: 5, layer: 1, tensor: 0 }, vec![1.5]),
+                ],
+            }],
             curve: vec![CurvePoint { step: 5, time_s: 0.7, loss: 1.25, accuracy: 0.5 }],
             drift: vec![(4, 0.125)],
         }
@@ -917,6 +1000,12 @@ mod tests {
                 Payload::ParamPull { layer: la, values: va, stamp: sa },
                 Payload::ParamPull { layer: lb, values: vb, stamp: sb },
             ) => la == lb && va == vb && sa == sb,
+            (Payload::Compressed(ca), Payload::Compressed(cb)) => {
+                ca.spec == cb.spec
+                    && ca.shipped_w.to_bits() == cb.shipped_w.to_bits()
+                    && ca.droppable == cb.droppable
+                    && ca.blob == cb.blob
+            }
             _ => false,
         }
     }
@@ -943,6 +1032,7 @@ mod tests {
             assert_eq!(a.remaining_s.to_bits(), b.remaining_s.to_bits());
             assert!(payloads_eq(&a.payload, &b.payload));
         }
+        assert_eq!(back.residuals, ckpt.residuals, "codec residuals survive bit-identically");
         assert_eq!(back.curve.len(), 1);
         assert_eq!(back.curve[0].loss.to_bits(), ckpt.curve[0].loss.to_bits());
         assert_eq!(back.drift, ckpt.drift);

@@ -99,6 +99,33 @@ impl SessionBuilder {
         self
     }
 
+    /// Install a compression codec at the fabric boundary (`[fabric] codec`
+    /// equivalent). Every payload kind and every algorithm inherits it; the
+    /// default `CodecSpec::Dense` is bit-identical to no codec at all.
+    ///
+    /// ```no_run
+    /// use layup::comm::{CodecSpec, FabricSpec};
+    /// use layup::config::{Algorithm, TrainConfig};
+    /// use layup::manifest::Manifest;
+    /// use layup::session::SessionBuilder;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let manifest = Manifest::load(&layup::artifacts_dir())?;
+    /// let cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 8, 500);
+    /// let summary = SessionBuilder::new(cfg)
+    ///     .fabric(FabricSpec::sim_default())
+    ///     .codec(CodecSpec::parse("topk:16")?)
+    ///     .build(&manifest)?
+    ///     .run()?;
+    /// println!("wire bytes: {}", summary.stats.comm.bytes_sent);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn codec(mut self, spec: crate::comm::CodecSpec) -> SessionBuilder {
+        self.cfg.codec = spec;
+        self
+    }
+
     /// Select the cluster topology (`[topology]` config section
     /// equivalent): `TopologySpec::Flat` (default) for homogeneous gossip,
     /// `TopologySpec::Ps { shards }` to turn the last `shards` worker ids

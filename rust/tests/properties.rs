@@ -5,13 +5,15 @@
 
 use std::sync::Arc;
 
-use layup::comm::{Fabric, LatencyDist, Payload, PushOutcome, SimFabric};
+use layup::comm::{
+    Codec, CodecSpec, Compressed, Fabric, LatencyDist, Payload, PushOutcome, SimFabric,
+};
 use layup::coordinator::Shared;
 use layup::metrics::{Curve, CurvePoint};
 use layup::model::ModelParams;
 use layup::optim::Schedule;
 use layup::sim::{simulate, Cluster, SimAlgo, Workload};
-use layup::tensor::clock::LayerClock;
+use layup::tensor::clock::{ClockStamp, LayerClock};
 use layup::tensor::{AtomicTensor, LayerParams, Tensor};
 use layup::topology::{PushSumWeight, Topology};
 use layup::util::rng::Pcg32;
@@ -480,5 +482,298 @@ fn prop_drain_restore_conserves_clock_provenance() {
         assert_eq!(got.version, receiver_before + 1, "exactly one stamped write");
         let total = shared.weights[0].get() + shared.weights[1].get();
         assert!((total - 1.0).abs() < 1e-5, "push-sum mass conserved: {total}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// comm::codec properties (PR 8): round-trip, error feedback, truncation,
+// push-sum composition
+// ---------------------------------------------------------------------------
+
+/// A 2-worker Shared with one layer of one `n`-element tensor per replica.
+fn codec_shared(
+    rng: &mut Pcg32,
+    n: usize,
+    fabric: Arc<SimFabric>,
+) -> (Arc<Shared>, Vec<f32>, Vec<f32>) {
+    let mk = |vals: &[f32]| {
+        Arc::new(ModelParams {
+            layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                &[vals.len()],
+                vals.to_vec(),
+            ))])],
+        })
+    };
+    let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let shared = Shared::for_tests(vec![mk(&a), mk(&b)], fabric);
+    (shared, a, b)
+}
+
+fn dense_fabric(rng: &mut Pcg32, m: usize) -> Arc<SimFabric> {
+    Arc::new(SimFabric::new(LatencyDist::Constant(0.0), 0.0, 0.0, m, rng.next_u64()))
+}
+
+/// Codec round-trip: sparsifiers reproduce every kept coordinate bit-exactly
+/// and fill the rest from the receiver's current state; int8 lands within
+/// one per-chunk quantization step of the input; dense is the identity.
+#[test]
+fn prop_codec_roundtrip_within_tolerance() {
+    prop("codec_roundtrip", 25, |rng| {
+        let n = 1 + rng.below_usize(300);
+        let fabric = dense_fabric(rng, 2);
+        let (shared, sent, receiver) = codec_shared(rng, n, fabric);
+        let payload = Payload::LayerPush {
+            layer: 0,
+            open: None,
+            values: Arc::new(vec![sent.clone()]),
+            stamp: ClockStamp { worker: 0, step: 1, version: 1 },
+            tau: 0,
+        };
+
+        // dense: the identity — no Compressed wrapper at all
+        let dense = CodecSpec::Dense.build(2, rng.next_u64());
+        match dense.encode(&shared.update_pool, 0, 1, payload.clone()) {
+            Payload::LayerPush { values, .. } => assert_eq!(values[0], sent),
+            _ => panic!("dense codec must be the identity"),
+        }
+
+        for spec_str in ["topk:4", "randk:4"] {
+            let spec = CodecSpec::parse(spec_str).unwrap();
+            let codec = spec.build(2, rng.next_u64());
+            let Payload::Compressed(c) = codec.encode(&shared.update_pool, 0, 1, payload.clone())
+            else {
+                panic!("{spec_str} must wrap the payload");
+            };
+            let Payload::LayerPush { values, .. } = c.decode(&shared, 1).unwrap() else {
+                panic!("decode changed the payload kind");
+            };
+            let keep = n.div_ceil(4).max(1);
+            let mut from_sender = 0;
+            for i in 0..n {
+                let got = values[0][i].to_bits();
+                if got == sent[i].to_bits() && sent[i].to_bits() != receiver[i].to_bits() {
+                    from_sender += 1;
+                } else {
+                    // unsent state coordinates keep the receiver's value
+                    assert_eq!(
+                        got,
+                        receiver[i].to_bits(),
+                        "{spec_str}: coordinate {i} is neither the sender's nor the receiver's"
+                    );
+                }
+            }
+            assert_eq!(from_sender, keep, "{spec_str} ships exactly ceil(n/K) coordinates");
+        }
+
+        let int8 = CodecSpec::Int8.build(2, rng.next_u64());
+        let Payload::Compressed(c) = int8.encode(&shared.update_pool, 0, 1, payload.clone())
+        else {
+            panic!("int8 must wrap the payload");
+        };
+        let Payload::LayerPush { values, .. } = c.decode(&shared, 1).unwrap() else {
+            panic!("decode changed the payload kind");
+        };
+        // stochastic rounding moves each value by at most one quantization
+        // step of its 1024-element chunk's max-abs scale
+        for (chunk_i, chunk) in sent.chunks(1024).enumerate() {
+            let scale = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let step = scale / 127.0 + 1e-6;
+            for (j, &x) in chunk.iter().enumerate() {
+                let got = values[0][chunk_i * 1024 + j];
+                assert!(
+                    (got - x).abs() <= step,
+                    "int8 moved {x} to {got} (> one step {step})"
+                );
+            }
+        }
+    });
+}
+
+/// Error-feedback conservation, bit-exact for top-k: every round, each
+/// coordinate of the accumulated gradient `y = x + r_before` ends up either
+/// on the wire (kept, residual zeroed) or in the new residual — never both,
+/// never neither, never rounded.
+#[test]
+fn prop_codec_error_feedback_conserves_gradient_mass() {
+    prop("codec_error_feedback", 25, |rng| {
+        let n = 2 + rng.below_usize(200);
+        let fabric = dense_fabric(rng, 2);
+        let (shared, _, _) = codec_shared(rng, n, fabric);
+        for spec_str in ["topk:4", "randk:4"] {
+            let codec = CodecSpec::parse(spec_str).unwrap().build(2, rng.next_u64());
+            let mut r_before = vec![0.0f32; n];
+            for _round in 0..6 {
+                let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let payload = Payload::GradShare {
+                    set: Arc::new(vec![vec![Tensor::from_vec(&[n], x.clone())]]),
+                };
+                let Payload::Compressed(c) =
+                    codec.encode(&shared.update_pool, 0, 1, payload)
+                else {
+                    panic!("{spec_str} must wrap the payload");
+                };
+                let Payload::GradShare { set } = c.decode(&shared, 1).unwrap() else {
+                    panic!("decode changed the payload kind");
+                };
+                let delivered = &set[0][0].data;
+                let state = codec.residual_state();
+                let link = state
+                    .iter()
+                    .find(|s| s.from == 0 && s.to == 1)
+                    .expect("link 0->1 accumulated a residual");
+                let (_, r_after) = &link.streams[0];
+                for i in 0..n {
+                    let y = x[i] + r_before[i];
+                    if delivered[i].to_bits() == 0.0f32.to_bits() && r_after[i] != 0.0 {
+                        assert_eq!(
+                            r_after[i].to_bits(),
+                            y.to_bits(),
+                            "{spec_str}: unsent coordinate {i} must sit in the residual bit-exactly"
+                        );
+                    } else {
+                        assert_eq!(
+                            delivered[i].to_bits(),
+                            y.to_bits(),
+                            "{spec_str}: sent coordinate {i} must ship the accumulated value"
+                        );
+                        assert_eq!(r_after[i], 0.0, "sent coordinate {i} must leave the residual");
+                    }
+                }
+                r_before = r_after.clone();
+            }
+        }
+    });
+}
+
+/// Truncation-safe decode: every strict prefix of a compressed blob fails to
+/// decode (all-or-nothing — no partial apply), and a truncated message on
+/// the fabric surfaces as a rejected delivery with the push-sum weight
+/// refunded to the sender, the receiver's replica untouched.
+#[test]
+fn prop_codec_truncated_blob_is_malformed_and_refunds_weight() {
+    prop("codec_truncation", 10, |rng| {
+        let n = 2 + rng.below_usize(60);
+        let codec = CodecSpec::parse("topk:4").unwrap().build(2, rng.next_u64());
+        let fabric = Arc::new(SimFabric::with_codec(
+            LatencyDist::Constant(0.0),
+            0.0,
+            0.0,
+            2,
+            rng.next_u64(),
+            Arc::clone(&codec),
+        ));
+        let (shared, sent, receiver) = codec_shared(rng, n, fabric);
+        let payload = Payload::ModelPush {
+            w_in: 0.25,
+            values: Arc::new(vec![vec![sent.clone()]]),
+        };
+        let Payload::Compressed(c) = codec.encode(&shared.update_pool, 0, 1, payload) else {
+            panic!("topk must wrap the payload");
+        };
+        // every strict prefix is rejected before any coordinate lands
+        for cut in 0..c.blob.len() {
+            let trunc = Compressed {
+                spec: c.spec.clone(),
+                shipped_w: c.shipped_w,
+                droppable: c.droppable,
+                blob: Arc::new(c.blob[..cut].to_vec()),
+            };
+            assert!(trunc.decode(&shared, 1).is_err(), "prefix of {cut} bytes decoded");
+        }
+
+        // on the fabric: the malformed message is rejected at delivery and
+        // the weight it carried is reclaimed by the sender
+        let shipped = shared.weights[0].halve();
+        let cut = rng.below_usize(c.blob.len());
+        let mangled = Payload::Compressed(Compressed {
+            spec: c.spec.clone(),
+            shipped_w: shipped,
+            droppable: c.droppable,
+            blob: Arc::new(c.blob[..cut].to_vec()),
+        });
+        assert_eq!(shared.fabric.push(&shared, 0, 1, 1, mangled), PushOutcome::Queued);
+        assert_eq!(shared.fabric.deliver_due(&shared, 1, 2), 0, "malformed must not apply");
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-5, "weight not refunded: {total}");
+        assert_eq!(
+            shared.params[1].flatten(),
+            receiver,
+            "a malformed message must never partially write the receiver's replica"
+        );
+    });
+}
+
+/// Push-sum weight mass is conserved with a sparsifying codec on lossy
+/// links: drops reclaim (outcome-driven at the sender, residuals inside the
+/// codec), deliveries fold at the receiver, in-flight compressed messages
+/// carry their weight in the clear.
+#[test]
+fn prop_codec_push_sum_weight_mass_conserved_under_drops() {
+    prop("codec_mass_drops", 15, |rng| {
+        let m = 2 + rng.below_usize(3);
+        let n = 24usize;
+        let codec = CodecSpec::parse("topk:8").unwrap().build(m, rng.next_u64());
+        let fabric = Arc::new(SimFabric::with_codec(
+            LatencyDist::Constant(0.0),
+            0.0,
+            0.3,
+            m,
+            rng.next_u64(),
+            codec,
+        ));
+        let params: Vec<Arc<ModelParams>> = (0..m)
+            .map(|_| {
+                let t = Tensor::from_vec(&[n], (0..n).map(|_| rng.normal()).collect());
+                Arc::new(ModelParams {
+                    layers: vec![LayerParams::new(vec![AtomicTensor::from_tensor(&t)])],
+                })
+            })
+            .collect();
+        let shared = Shared::for_tests(params, fabric.clone());
+
+        let mass = |shared: &Shared, fabric: &SimFabric| -> f64 {
+            let (mut w, _) = fabric.in_flight_push_sum_mass();
+            for i in 0..shared.m {
+                w += shared.weights[i].get() as f64;
+            }
+            w
+        };
+        assert!((mass(&shared, &fabric) - 1.0).abs() < 1e-4);
+
+        for round in 0..80 {
+            let i = rng.below_usize(m);
+            let j = rng.peer(i, m);
+            let shipped = shared.weights[i].halve();
+            let values: Vec<Vec<Vec<f32>>> = shared.params[i]
+                .layers
+                .iter()
+                .map(|l| l.tensors.iter().map(|t| t.snapshot().data).collect())
+                .collect();
+            match shared.fabric.push(
+                &shared,
+                i,
+                j,
+                round,
+                Payload::ModelPush { w_in: shipped, values: Arc::new(values) },
+            ) {
+                PushOutcome::Dropped | PushOutcome::Busy => {
+                    shared.weights[i].reclaim(shipped);
+                }
+                _ => {}
+            }
+            if rng.next_f32() < 0.6 {
+                shared.fabric.deliver_due(&shared, rng.below_usize(m), round);
+            }
+            if round % 16 == 0 {
+                let w = mass(&shared, &fabric);
+                assert!((w - 1.0).abs() < 1e-3, "weight mass drifted mid-flight: {w}");
+            }
+        }
+        for w in 0..m {
+            shared.fabric.deliver_due(&shared, w, 100);
+        }
+        let w = mass(&shared, &fabric);
+        assert!((w - 1.0).abs() < 1e-3, "weight mass destroyed under topk + drops: {w}");
     });
 }

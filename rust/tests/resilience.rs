@@ -6,14 +6,19 @@
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use layup::comm::{Codec, CodecSpec, Fabric, InFlight, LatencyDist, Payload, PushOutcome, SimFabric};
 use layup::config::{Algorithm, TrainConfig};
+use layup::coordinator::Shared;
 use layup::manifest::Manifest;
 use layup::metrics::RunSummary;
+use layup::model::ModelParams;
 use layup::optim::OptimKind;
 use layup::optim::Schedule;
 use layup::resilience::{checkpoint, FaultPlan, RecoveryPolicy};
 use layup::session::events::TrainEvent;
 use layup::session::SessionBuilder;
+use layup::tensor::clock::ClockStamp;
+use layup::tensor::{AtomicTensor, LayerParams, Tensor};
 use layup::topology::roles::TopologySpec;
 
 fn manifest() -> Option<Manifest> {
@@ -408,4 +413,188 @@ fn checkpoint_events_and_directories_are_complete() {
         assert!(PathBuf::from(path).join("meta.json").exists(), "step {step} incomplete");
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------- format v4
+
+/// Fresh two-worker world for the v4 parity test: one layer, two tensors
+/// (5 and 7 coords — both off the top-k keep boundary), a `topk:4` codec on
+/// a SimFabric whose latency sits far beyond the test horizon so every push
+/// stays in flight.
+fn v4_world(params: Vec<Arc<ModelParams>>) -> Arc<Shared> {
+    let codec = CodecSpec::TopK { k: 4 }.build(2, 0x51ab);
+    let fabric = Arc::new(SimFabric::with_codec(
+        LatencyDist::Constant(1e6),
+        0.0,
+        0.0,
+        2,
+        7,
+        codec,
+    ));
+    Shared::for_tests(params, fabric)
+}
+
+fn v4_params(worker: usize) -> Arc<ModelParams> {
+    let t = |n: usize, salt: usize| {
+        let data = (0..n).map(|i| ((worker * 53 + salt * 19 + i * 11) % 89) as f32 * 0.02 - 0.9);
+        AtomicTensor::from_tensor(&Tensor::from_vec(&[n], data.collect()))
+    };
+    Arc::new(ModelParams { layers: vec![LayerParams::new(vec![t(5, 1), t(7, 2)])] })
+}
+
+/// Drive the scripted steps `[a, b)`: each step, each worker applies a
+/// deterministic local update, then ships its gradient set (the
+/// error-feedback stream) and a layer snapshot to its peer. Nothing is ever
+/// delivered — the run's entire comm state lives in the codec residuals and
+/// the queued compressed blobs, exactly what FORMAT_VERSION 4 added to the
+/// snapshot.
+fn v4_segment(shared: &Arc<Shared>, a: usize, b: usize) {
+    let grad = |w: usize, s: usize, t: usize, i: usize| {
+        ((w * 131 + s * 17 + t * 29 + i * 7) % 97) as f32 * 0.013 - 0.6
+    };
+    for s in a..b {
+        for w in 0..2 {
+            let layer = &shared.params[w].layers[0];
+            let mut grads = Vec::new();
+            for (ti, t) in layer.tensors.iter().enumerate() {
+                let g: Vec<f32> = (0..t.numel()).map(|i| grad(w, s, ti, i)).collect();
+                t.sub_scaled(0.05, &g);
+                grads.push(Tensor::from_vec(&[t.numel()], g));
+            }
+            let payloads = [
+                Payload::GradShare { set: Arc::new(vec![grads]) },
+                Payload::LayerPush {
+                    layer: 0,
+                    open: None,
+                    values: Arc::new(layer.tensors.iter().map(|t| t.snapshot().data).collect()),
+                    stamp: ClockStamp { worker: w as u32, step: s as u64, version: s as u64 },
+                    tau: 0,
+                },
+            ];
+            for p in payloads {
+                assert_eq!(
+                    shared.fabric.push(shared, w, 1 - w, s, p),
+                    PushOutcome::Queued,
+                    "scripted pushes never drop (drop_prob 0)"
+                );
+            }
+        }
+    }
+}
+
+/// `(from, to, step, blob)` signature of every queued message — the
+/// wall-clock `remaining_s` is the one field two runs may legitimately
+/// disagree on, so it stays out of the comparison.
+fn v4_signatures(msgs: &[InFlight]) -> Vec<(usize, usize, usize, Vec<u8>)> {
+    msgs.iter()
+        .map(|m| {
+            let Payload::Compressed(c) = &m.payload else {
+                panic!("a non-dense codec wraps every payload");
+            };
+            (m.from, m.to, m.step, c.blob.to_vec())
+        })
+        .collect()
+}
+
+/// FORMAT_VERSION 4 resume parity: a run checkpointed at step 8 with
+/// `topk` messages in flight on a [`SimFabric`] and live error-feedback
+/// residuals, saved and reloaded through the on-disk codec, continues to a
+/// step-16 state bit-identical to an uninterrupted run — parameters,
+/// sender-side residuals, and every queued compressed blob. (The session
+/// driver can't host this: lockstep replay rejects the sim fabric, so the
+/// schedule is scripted by hand. No artifacts needed.)
+#[test]
+fn resume_parity_v4_topk_in_flight_bit_identical() {
+    assert_eq!(checkpoint::FORMAT_VERSION, 4, "test pins the residual-carrying format");
+
+    // reference: uninterrupted 0..16
+    let run_a = v4_world(vec![v4_params(0), v4_params(1)]);
+    v4_segment(&run_a, 0, 16);
+
+    // interrupted: 0..8, snapshot through the on-disk codec, resume, 8..16
+    let run_b = v4_world(vec![v4_params(0), v4_params(1)]);
+    v4_segment(&run_b, 0, 8);
+    let mut in_flight = run_b.fabric.drain(0);
+    in_flight.extend(run_b.fabric.drain(1));
+    assert!(
+        in_flight.iter().all(|m| matches!(m.payload, Payload::Compressed(_))),
+        "topk wraps every queued payload"
+    );
+    let residuals = run_b.fabric.core().codec().residual_state();
+    assert!(!residuals.is_empty(), "8 sparsified gradient pushes must leave residual mass");
+    let ckpt = checkpoint::Checkpoint {
+        version: checkpoint::FORMAT_VERSION,
+        model: "v4-mini".to_string(),
+        algorithm: "Scripted".to_string(),
+        workers: 2,
+        seed: 7,
+        step: 8,
+        elapsed_s: 0.0,
+        epoch: 0,
+        params: vec![run_b.params[0].state_dict(), run_b.params[1].state_dict()],
+        clocks: vec![vec![ClockStamp::default()]; 2],
+        workers_state: vec![
+            checkpoint::WorkerState {
+                alive: true,
+                steps_done: 8,
+                cursor: 0,
+                weight: 0.5,
+                algo: checkpoint::AlgoState::default(),
+            };
+            2
+        ],
+        in_flight,
+        residuals,
+        curve: Vec::new(),
+        drift: Vec::new(),
+    };
+    let dir = tmp_dir("v4-parity");
+    checkpoint::save(&dir, &ckpt).unwrap();
+    let loaded = checkpoint::load(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded.residuals, ckpt.residuals, "residuals survive the disk round-trip");
+    assert_eq!(
+        v4_signatures(&loaded.in_flight),
+        v4_signatures(&ckpt.in_flight),
+        "compressed in-flight blobs survive the disk round-trip"
+    );
+
+    // rebuild everything from the loaded snapshot, as resume does
+    let restore = |w: usize| {
+        let vals: Vec<f32> = loaded.params[w].iter().flatten().flatten().copied().collect();
+        let p = v4_params(w);
+        let mut at = vals.iter();
+        for l in &p.layers {
+            for t in &l.tensors {
+                let chunk: Vec<f32> = at.by_ref().take(t.numel()).copied().collect();
+                t.store_from(&chunk);
+            }
+        }
+        p
+    };
+    let resumed = v4_world(vec![restore(0), restore(1)]);
+    resumed.fabric.core().codec().load_residual_state(&loaded.residuals);
+    resumed.fabric.restore(&resumed, loaded.in_flight);
+    v4_segment(&resumed, 8, 16);
+
+    // step-16 states must agree bit-for-bit
+    let bits = |v: Vec<f32>| v.into_iter().map(f32::to_bits).collect::<Vec<u32>>();
+    for w in 0..2 {
+        assert_eq!(
+            bits(run_a.params[w].flatten()),
+            bits(resumed.params[w].flatten()),
+            "worker {w} parameters diverged after resume"
+        );
+    }
+    assert_eq!(
+        run_a.fabric.core().codec().residual_state(),
+        resumed.fabric.core().codec().residual_state(),
+        "error-feedback residuals diverged after resume"
+    );
+    let drain_all = |s: &Arc<Shared>| {
+        let mut v = s.fabric.drain(0);
+        v.extend(s.fabric.drain(1));
+        v4_signatures(&v)
+    };
+    assert_eq!(drain_all(&run_a), drain_all(&resumed), "in-flight wire bytes diverged");
 }
