@@ -3,7 +3,8 @@
 //!      1/2/4): mix, sub_scaled, the fused update+mix, average_with and
 //!      delay-compensation — every row lands in
 //!      `results/bench_summary.json` and feeds the CI perf gate
-//!      (`cargo bench --bench perf_gate` vs the committed `BENCH_6.json`),
+//!      (`cargo bench --bench perf_gate` vs the committed `BENCH_9.json`),
+//!      alongside the codec wire kernels and the telemetry span recorder,
 //!   2. per-layer fwd/bwd executable latency (L2/L1 compute path),
 //!   3. parameter-upload cost with vs without the version cache,
 //!   4. full train-step latency per algorithm.
@@ -27,6 +28,7 @@ use layup::optim::{LayerOptimizer, OptimKind};
 use layup::runtime::Runtime;
 use layup::tensor::shard::{ShardPool, CHUNK};
 use layup::tensor::{AtomicTensor, Tensor};
+use layup::telemetry::{Phase, Telemetry, TelemetryConfig};
 use layup::util::json::{num, obj, s, Json};
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -161,6 +163,24 @@ fn kernel_section(reps: usize) -> Vec<Json> {
         (n * 4) as f64 / topk / 1e9
     );
     rows.push(kernel_row("topk_select_k16", topk, (n * 4) as f64));
+
+    // telemetry span recorder (§Telemetry): guard open + close, two clock
+    // reads and one ring-slot publish per span — the full per-span cost an
+    // *enabled* run pays at every instrumented site. Logical bytes are the
+    // 24-byte ring slot (phase + start + duration + sequence bump).
+    let tel = Telemetry::from_config(&TelemetryConfig {
+        enabled: true,
+        ..TelemetryConfig::default()
+    });
+    tel.register_thread("bench");
+    let spans = 1usize << 17;
+    let span_wall = time(reps, || {
+        for _ in 0..spans {
+            drop(black_box(tel.span(Phase::OptStep)));
+        }
+    });
+    println!("telemetry span record: {:.0} ns/span", 1e9 * span_wall / spans as f64);
+    rows.push(kernel_row("span_record", span_wall, (spans * 24) as f64));
 
     // the pre-shard-pool framing kept for continuity: fused vs the
     // three-pass step + load + mix sequence it replaced

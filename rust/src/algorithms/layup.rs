@@ -49,6 +49,7 @@ use crate::manifest::ModelManifest;
 use crate::optim::OptState;
 use crate::resilience::AlgoState;
 use crate::session::events::TrainEvent;
+use crate::telemetry::Phase as TelPhase;
 use crate::tensor::clock::ClockStamp;
 use crate::tensor::Tensor;
 use crate::topology::Topology;
@@ -217,6 +218,7 @@ struct SimPush {
 
 impl UpdaterThread {
     fn run(self, rx: Receiver<Msg>) -> Result<()> {
+        self.shared.telemetry.register_thread(&format!("updater-{}", self.wid));
         // The transport decides the push mechanics: the instant fabric keeps
         // the seed-era in-place handshake + fused mix (bit-for-bit), a
         // queued fabric ships each layer as a message the peer applies at
@@ -293,6 +295,7 @@ impl UpdaterThread {
                         // ONE traversal of the layer's data (the step + load
                         // + mix sequence walked it three times).
                         Some(frac) if self.comm_latency_s <= 0.0 => {
+                            let _sp = self.shared.telemetry.span(TelPhase::Gossip);
                             let frac = eff(frac);
                             let peer_params = &self.shared.params[peer];
                             self.opt.step_layer_mix(
@@ -317,7 +320,11 @@ impl UpdaterThread {
                         // on the network), so the push stays a separate pass.
                         Some(frac) => {
                             let frac = eff(frac);
-                            self.opt.step_layer(my, layer, &grads, step);
+                            {
+                                let _sp = self.shared.telemetry.span(TelPhase::OptStep);
+                                self.opt.step_layer(my, layer, &grads, step);
+                            }
+                            let _sp = self.shared.telemetry.span(TelPhase::Gossip);
                             comm_delay(self.comm_latency_s);
                             let peer_params = &self.shared.params[peer];
                             let pool = &self.shared.update_pool;
@@ -341,7 +348,10 @@ impl UpdaterThread {
                             );
                         }
                         // Skipped push (contention): local update only.
-                        None => self.opt.step_layer(my, layer, &grads, step),
+                        None => {
+                            let _sp = self.shared.telemetry.span(TelPhase::OptStep);
+                            self.opt.step_layer(my, layer, &grads, step);
+                        }
                     }
 
                     // layer 0 is the last gradient of the backward pass
@@ -426,11 +436,15 @@ impl UpdaterThread {
                     );
                     // local update first — Algorithm 1's
                     // `x^{i,l} <- x̃^{i,l} - η ∇L` never waits on a link
-                    self.opt
-                        .step_layer(&self.shared.params[self.wid], layer, &grads, step);
+                    {
+                        let _sp = self.shared.telemetry.span(TelPhase::OptStep);
+                        self.opt
+                            .step_layer(&self.shared.params[self.wid], layer, &grads, step);
+                    }
 
                     let p = pushes.get_mut(&step).expect("push state opened above");
                     if !p.skipped {
+                        let _sp = self.shared.telemetry.span(TelPhase::Gossip);
                         let tensors = &self.shared.params[self.wid].layers[layer].tensors;
                         let mut vals: Vec<Vec<f32>> = Vec::with_capacity(tensors.len());
                         for t in tensors {

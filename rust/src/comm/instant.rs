@@ -50,9 +50,14 @@ impl Fabric for InstantFabric {
         step: usize,
         payload: Payload,
     ) -> PushOutcome {
+        let _sp = shared.telemetry.span(crate::telemetry::Phase::FabricPush);
         // codec boundary: meter and apply the encoded message (identity for
         // the default dense codec — bit-for-bit the seed-era path)
-        let payload = self.core.codec().encode(&shared.update_pool, from, to, payload);
+        let payload = {
+            let _enc = (!self.core.codec().spec().is_dense())
+                .then(|| shared.telemetry.span(crate::telemetry::Phase::CodecEncode));
+            self.core.codec().encode(&shared.update_pool, from, to, payload)
+        };
         self.core.record_send(shared, from, to, step, payload.encoded_len());
         match apply(&self.core, shared, to, from, step, &payload) {
             ApplyResult::Busy => PushOutcome::Busy,

@@ -837,13 +837,16 @@ pub(crate) fn apply(
     // the retry decodes again against the then-current receiver state.
     let decoded;
     let payload = match payload {
-        Payload::Compressed(c) => match c.decode(shared, wid) {
-            Ok(p) => {
-                decoded = p;
-                &decoded
+        Payload::Compressed(c) => {
+            let _dec = shared.telemetry.span(crate::telemetry::Phase::CodecDecode);
+            match c.decode(shared, wid) {
+                Ok(p) => {
+                    decoded = p;
+                    &decoded
+                }
+                Err(_) => return ApplyResult::Malformed,
             }
-            Err(_) => return ApplyResult::Malformed,
-        },
+        }
         p => p,
     };
     if !payload_shape_ok(shared, wid, payload) {
@@ -962,6 +965,7 @@ pub(crate) fn apply(
             // τ: shard writes this gradient missed (the trainer's stamp
             // mirrors the shard clock as of its last pull)
             crate::algorithms::observe_apply(shared, wid, Some(*stamp), *layer, step);
+            let _sp = shared.telemetry.span(crate::telemetry::Phase::OptStep);
             let store = &shared.params[wid].layers[*layer];
             let mut gt: Vec<Tensor> = grads
                 .iter()

@@ -170,9 +170,14 @@ impl Fabric for SimFabric {
         step: usize,
         payload: Payload,
     ) -> PushOutcome {
+        let _sp = shared.telemetry.span(crate::telemetry::Phase::FabricPush);
         // codec boundary: everything downstream — serialization delay, drop
         // dice, byte metering, the queue — sees the encoded message
-        let payload = self.core.codec().encode(&shared.update_pool, from, to, payload);
+        let payload = {
+            let _enc = (!self.core.codec().spec().is_dense())
+                .then(|| shared.telemetry.span(crate::telemetry::Phase::CodecEncode));
+            self.core.codec().encode(&shared.update_pool, from, to, payload)
+        };
         let bytes = payload.encoded_len();
         let m = self.core.workers();
         let ready_at = {
@@ -230,6 +235,7 @@ impl Fabric for SimFabric {
         if due.is_empty() {
             return 0;
         }
+        let _sp = shared.telemetry.span(crate::telemetry::Phase::FabricDeliver);
         // total_cmp: a NaN ready time (impossible by construction, but this
         // is the same class of bug as the simulator's device pick) must not
         // scramble FIFO order silently

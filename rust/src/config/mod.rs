@@ -371,6 +371,9 @@ pub struct TrainConfig {
     /// staleness update policies: delay compensation and adaptive mixing
     /// (defaults off — numerics-neutral)
     pub staleness: StalenessConfig,
+    /// telemetry: span tracing, time-series sampling and trace export
+    /// (default off — bit-identical, zero hot-path allocations)
+    pub telemetry: crate::telemetry::TelemetryConfig,
 }
 
 impl TrainConfig {
@@ -406,6 +409,7 @@ impl TrainConfig {
             stall_timeout_s: 60.0,
             lockstep: false,
             staleness: StalenessConfig::default(),
+            telemetry: crate::telemetry::TelemetryConfig::default(),
         }
     }
 
@@ -541,6 +545,7 @@ impl TrainConfig {
         if self.stall_timeout_s <= 0.0 || !self.stall_timeout_s.is_finite() {
             bail!("stall_timeout_s must be a finite positive number of seconds");
         }
+        self.telemetry.validate()?;
         if self.lockstep {
             if self.algorithm.uses_barrier() {
                 bail!(
@@ -667,6 +672,19 @@ impl TrainConfig {
         };
         cfg.staleness.mix_beta =
             doc.f64_or("staleness", "beta", cfg.staleness.mix_beta as f64) as f32;
+
+        // [telemetry]: span tracing + sampler; setting a trace path implies
+        // enabled (a trace you asked for should never come back empty)
+        cfg.telemetry.enabled = doc.bool_or("telemetry", "enabled", false);
+        if let Some(path) = doc.get("telemetry", "trace").and_then(|v| v.as_str()) {
+            cfg.telemetry.trace_path = Some(std::path::PathBuf::from(path));
+            cfg.telemetry.enabled = true;
+        }
+        cfg.telemetry.sample_every_ms =
+            doc.usize_or("telemetry", "sample_every_ms", cfg.telemetry.sample_every_ms as usize)
+                as u64;
+        cfg.telemetry.ring_capacity =
+            doc.usize_or("telemetry", "ring_capacity", cfg.telemetry.ring_capacity);
 
         cfg.validate()?;
         Ok(cfg)

@@ -40,6 +40,7 @@ use crate::model::ModelExec;
 use crate::resilience::Checkpoint;
 use crate::runtime::Runtime;
 use crate::session::events::TrainEvent;
+use crate::telemetry::Phase;
 
 /// Per-worker execution context owned by the driving thread. The runtime
 /// must outlive its executables, so it rides along.
@@ -114,6 +115,7 @@ pub(crate) fn run(
         shard_algos.push(algo);
     }
 
+    shared.telemetry.register_thread("lockstep");
     let mut drift_scratch = DriftScratch::new(m);
     let mut states: Vec<Option<(StepState, f64)>> = (0..trainers).map(|_| None).collect();
     'steps: for step in start_step..cfg.steps {
@@ -127,13 +129,17 @@ pub(crate) fn run(
             let fwd_before = c.exec.compute_s;
             // clock snapshot (and DC x_then) before the forward reads
             let mut ctx = worker::open_step(cfg, &shared.params[wid], step, n_layers);
-            let pass = c.exec.forward(&shared.params[wid], &batch)?;
+            let pass = {
+                let _sp = shared.telemetry.span(Phase::Forward);
+                c.exec.forward(&shared.params[wid], &batch)?
+            };
             if !pass.loss.is_finite() {
                 anyhow::bail!("lockstep worker {wid}: loss diverged (step {step})");
             }
             let fwd_after = c.exec.compute_s;
             c.fwd_s += fwd_after - fwd_before;
             {
+                let _sp = shared.telemetry.span(Phase::Backward);
                 let exec = &mut c.exec;
                 let algo = &mut c.algo;
                 let mut err: Option<anyhow::Error> = None;

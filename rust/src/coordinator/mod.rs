@@ -256,6 +256,9 @@ pub struct Shared {
     pub update_pool: Arc<crate::tensor::shard::ShardPool>,
     /// parameter-server runtime (`Some` only under a `ps:N` topology)
     pub ps: Option<PsState>,
+    /// run telemetry recorder (span rings, gauges, sampled series);
+    /// disabled by default — every span site then pays one relaxed load
+    pub telemetry: Arc<crate::telemetry::Telemetry>,
 }
 
 impl Shared {
@@ -330,6 +333,8 @@ impl Shared {
         };
         let n_layers = model.layers.len();
         let update_pool = crate::tensor::shard::ShardPool::new(cfg.update_threads);
+        let telemetry = crate::telemetry::Telemetry::from_config(&cfg.telemetry);
+        update_pool.install_telemetry(&telemetry);
         let ps = if cfg.cluster.n_shards() > 0 {
             // Role topology: install the routing table on the fabric core and
             // stand up one optimizer stack per server shard. Shard wids come
@@ -387,6 +392,7 @@ impl Shared {
             start_offset_s,
             update_pool,
             ps,
+            telemetry,
         });
         if let Some(ck) = resume {
             // codec error-feedback residuals first (a restored compressed
@@ -425,6 +431,7 @@ impl Shared {
             start_offset_s: 0.0,
             update_pool: crate::tensor::shard::ShardPool::serial(),
             ps: None,
+            telemetry: crate::telemetry::Telemetry::disabled(),
         })
     }
 

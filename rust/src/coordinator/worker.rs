@@ -24,6 +24,7 @@ use crate::resilience::checkpoint::{self, Checkpoint, WorkerState, FORMAT_VERSIO
 use crate::resilience::AlgoState;
 use crate::runtime::Runtime;
 use crate::session::events::TrainEvent;
+use crate::telemetry::Phase;
 
 /// Where a (re)spawned worker starts: the first step it runs, its
 /// data-loader cursor, and optionally a checkpointed algorithm state. A
@@ -74,11 +75,13 @@ pub(crate) fn worker_main(
     }
 
     let my_params = Arc::clone(&shared.params[wid]);
+    shared.telemetry.register_thread(&format!("worker-{wid}"));
     let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
     let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
     let mut baseline_step_s = 0.0f64;
     let mut drift_scratch = DriftScratch::new(shared.m);
     let mut completed = 0usize;
+    let mut flops_seen = 0u64;
     let mut fwd_s = 0.0f64;
     let mut bwd_s = 0.0f64;
 
@@ -124,13 +127,17 @@ pub(crate) fn worker_main(
         // read: snapshot the staleness clocks (and, under DC compensation,
         // the parameter values) BEFORE the first upload
         let mut ctx = open_step(cfg, &my_params, step, n_layers);
-        let pass = exec.forward(&my_params, &batch)?;
+        let pass = {
+            let _sp = shared.telemetry.span(Phase::Forward);
+            exec.forward(&my_params, &batch)?
+        };
         if !pass.loss.is_finite() {
             anyhow::bail!("worker {wid}: loss diverged (step {step})");
         }
         let compute_after_fwd = exec.compute_s;
         fwd_s += compute_after_fwd - compute_before_fwd;
         {
+            let _sp = shared.telemetry.span(Phase::Backward);
             let mut err: Option<anyhow::Error> = None;
             let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
                 if err.is_none() {
@@ -148,12 +155,25 @@ pub(crate) fn worker_main(
         algo.on_step_end(ctx)?;
         completed += 1;
         shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        if shared.telemetry.enabled() {
+            shared.telemetry.add_flops(exec.flops_retired - flops_seen);
+            flops_seen = exec.flops_retired;
+        }
         // step boundary: apply queued fabric traffic addressed to this
         // worker (no-op on the instant shared-memory transport)
         shared.fabric.deliver_due(shared, wid, step);
         shared
             .events
             .emit(TrainEvent::StepCompleted { worker: wid, step, loss: pass.loss as f64 });
+        if shared.events.has_observers() && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+            shared.events.emit(TrainEvent::Utilization {
+                worker: wid,
+                lane: 0,
+                step,
+                compute_s: exec.compute_s,
+                flops: exec.flops_retired,
+            });
+        }
 
         if completed <= 3 {
             // calibrate the straggler delay unit on undelayed steps
@@ -302,11 +322,13 @@ fn forward_pool_main(
     let seed = cfg.seed ^ ((ft as u64) << 32);
     let mut dataset = data::build(model, wid, cfg.workers, seed)?;
     let my_params = Arc::clone(&shared.params[wid]);
+    shared.telemetry.register_thread(&format!("fwd-{wid}-{ft}"));
 
     let is_straggler = cfg.straggler.map(|(w, _)| w == wid).unwrap_or(false);
     let delay_iters = cfg.straggler.map(|(_, d)| d).unwrap_or(0.0);
     let mut baseline_fwd_s = 0.0f64;
     let mut produced = 0usize;
+    let mut flops_seen = 0u64;
 
     loop {
         if shared.should_stop() {
@@ -332,9 +354,16 @@ fn forward_pool_main(
         let mut pass = pool.take();
         pass.step = step;
         capture_pass_provenance(cfg, &my_params, &mut pass);
-        exec.forward_host(&my_params, &batch, &mut pass)?;
+        {
+            let _sp = shared.telemetry.span(Phase::Forward);
+            exec.forward_host(&my_params, &batch, &mut pass)?;
+        }
         if !pass.loss.is_finite() {
             anyhow::bail!("worker {wid}: loss diverged (step {step})");
+        }
+        if shared.telemetry.enabled() {
+            shared.telemetry.add_flops(exec.flops_retired - flops_seen);
+            flops_seen = exec.flops_retired;
         }
         if produced < 3 {
             // calibrate the straggler delay unit on undelayed passes
@@ -342,15 +371,29 @@ fn forward_pool_main(
             baseline_fwd_s = if produced == 0 { dt } else { 0.5 * (baseline_fwd_s + dt) };
         }
         produced += 1;
-        if pass_queue.push(pass, &shared.stop).is_err() {
+        let pushed = {
+            let _sp = shared.telemetry.span(Phase::QueueWait);
+            pass_queue.push(pass, &shared.stop)
+        };
+        if pushed.is_err() {
             break; // run is stopping (or queue closed early)
         }
+        shared.telemetry.queue_push();
         if shared.events.has_observers() {
             // depth right after insertion (len() takes the queue lock, so
             // only pay for it when someone is listening)
             shared
                 .events
                 .emit(TrainEvent::QueueDepth { worker: wid, step, depth: pass_queue.len() });
+            if step % cfg.eval_every == 0 || step + 1 == cfg.steps {
+                shared.events.emit(TrainEvent::Utilization {
+                    worker: wid,
+                    lane: ft,
+                    step,
+                    compute_s: exec.compute_s,
+                    flops: exec.flops_retired,
+                });
+            }
         }
     }
     Ok(WorkerStats {
@@ -400,8 +443,16 @@ fn backward_pool_main(
     };
     let mut drift_scratch = DriftScratch::new(shared.m);
     let mut completed = 0usize;
+    let mut flops_seen = 0u64;
+    shared.telemetry.register_thread(&format!("bwd-{wid}-{bt}"));
 
-    while let Some(mut pass) = pass_queue.pop(&shared.stop) {
+    loop {
+        let popped = {
+            let _sp = shared.telemetry.span(Phase::QueueWait);
+            pass_queue.pop(&shared.stop)
+        };
+        let Some(mut pass) = popped else { break };
+        shared.telemetry.queue_pop();
         let step = pass.step;
         let loss = pass.loss as f64;
         let mut ctx = StepState::new(step, n_layers)
@@ -412,6 +463,7 @@ fn backward_pool_main(
             ctx = ctx.with_x_then(std::mem::take(&mut pass.x_then));
         }
         {
+            let _sp = shared.telemetry.span(Phase::Backward);
             let mut err: Option<anyhow::Error> = None;
             let mut sink = |li: usize, grads: Vec<crate::tensor::Tensor>| {
                 if err.is_none() {
@@ -428,6 +480,10 @@ fn backward_pool_main(
         algo.lock().unwrap().on_step_end(ctx)?;
         completed += 1;
         shared.steps_done[wid].fetch_add(1, Ordering::Relaxed);
+        if shared.telemetry.enabled() {
+            shared.telemetry.add_flops(exec.flops_retired - flops_seen);
+            flops_seen = exec.flops_retired;
+        }
         // step boundary: apply queued fabric traffic (outside the hook
         // mutex — deliveries use the same lock-free stores the updaters do)
         shared.fabric.deliver_due(shared, wid, step);
@@ -435,6 +491,15 @@ fn backward_pool_main(
         shared
             .events
             .emit(TrainEvent::StepCompleted { worker: wid, step, loss });
+        if shared.events.has_observers() && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) {
+            shared.events.emit(TrainEvent::Utilization {
+                worker: wid,
+                lane: cfg.fwd_threads + bt,
+                step,
+                compute_s: exec.compute_s,
+                flops: exec.flops_retired,
+            });
+        }
 
         if let Some(ds) = eval_ds.as_deref() {
             // compute/flop counters are excluded, exactly as in the serial loop
@@ -519,6 +584,7 @@ pub(crate) fn shard_main(
     shared: &Arc<Shared>,
 ) -> Result<WorkerExit> {
     let trainers = cfg.cluster.n_trainers(cfg.workers);
+    shared.telemetry.register_thread(&format!("shard-{wid}"));
     loop {
         // a shard has no step counter of its own: chaos faults and delivery
         // stamps run on the fastest trainer's clock
@@ -617,6 +683,7 @@ pub(crate) fn write_checkpoint(
     ck: &CheckpointRendezvous,
     next_step: usize,
 ) -> Result<()> {
+    let _sp = shared.telemetry.span(Phase::Checkpoint);
     let workers_state: Vec<WorkerState> = {
         let mut slots = ck.slots.lock().unwrap();
         (0..shared.m)

@@ -36,6 +36,7 @@ pub mod resilience;
 pub mod runtime;
 pub mod session;
 pub mod sim;
+pub mod telemetry;
 pub mod tensor;
 pub mod topology;
 pub mod util;

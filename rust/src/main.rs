@@ -77,6 +77,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "events",
     "out",
     "curve",
+    "trace",
+    "sample-every-ms",
 ];
 
 /// Flags accepted by `layup sim`.
@@ -185,6 +187,7 @@ fn print_usage() {
          \x20               [--crash W@STEP[+SECS],..] [--recovery stall|shrink]\n\
          \x20               [--stall-timeout S] [--lockstep true]\n\
          \x20               [--events events.jsonl] [--out results.json] [--curve curve.csv]\n\
+         \x20               [--trace trace.json] [--sample-every-ms MS]\n\
          \x20               (latency SPEC: seconds | constant:S | uniform:LO..HI |\n\
          \x20               pareto:SCALE,ALPHA; --link-* flags imply --fabric sim;\n\
          \x20               --crash schedules chaos faults, --resume continues a\n\
@@ -338,6 +341,13 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("codec") {
         cfg.codec = layup::comm::CodecSpec::parse(v)?;
     }
+    // Telemetry: a trace path implies enabling the recorder.
+    if let Some(path) = args.get("trace") {
+        cfg.telemetry.trace_path = Some(path.into());
+        cfg.telemetry.enabled = true;
+    }
+    cfg.telemetry.sample_every_ms =
+        args.usize_or("sample-every-ms", cfg.telemetry.sample_every_ms as usize)? as u64;
     Ok(cfg)
 }
 
@@ -358,6 +368,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.fabric.name()
     );
     let t0 = std::time::Instant::now();
+    let trace_path = cfg.telemetry.trace_path.clone();
     let mut builder = SessionBuilder::new(cfg);
     if let Some(path) = args.get("events") {
         builder = builder.observer(Arc::new(JsonlSink::create(path)?));
@@ -409,6 +420,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             rec.membership_epoch,
             if rec.stalled { " — RUN STALLED" } else { "" }
         );
+    }
+    let tel = &summary.stats.telemetry;
+    if tel.enabled {
+        println!(
+            "telemetry: {} spans on {} threads ({} dropped), {} samples",
+            tel.spans, tel.threads, tel.dropped, tel.samples
+        );
+        if let Some(path) = trace_path.as_ref() {
+            println!("chrome trace -> {}", path.display());
+        }
     }
     if let Some(path) = args.get("curve") {
         std::fs::write(path, summary.curve.to_csv())?;

@@ -529,6 +529,8 @@ pub struct RunStats {
     pub recovery: RecoveryStats,
     /// parameter-server counters (zeros outside `ps:N` topologies)
     pub ps: PsStats,
+    /// span-tracing summary (all zeros unless `[telemetry]` is enabled)
+    pub telemetry: crate::telemetry::TelemetryStats,
 }
 
 impl RunStats {
@@ -562,6 +564,8 @@ impl RunStats {
             ("ps_param_pulls", self.ps.param_pulls as f64),
             ("ps_repartitions", self.ps.repartitions as f64),
             ("ps_queue_depth_max", self.ps.queue_depth_max as f64),
+            ("telemetry_spans", self.telemetry.spans as f64),
+            ("telemetry_dropped", self.telemetry.dropped as f64),
         ]
     }
 }
@@ -879,6 +883,8 @@ mod tests {
             "ps_param_pulls",
             "ps_repartitions",
             "ps_queue_depth_max",
+            "telemetry_spans",
+            "telemetry_dropped",
             "links",
         ] {
             assert!(j.contains(&format!("\"{key}\":")), "missing {key} in {j}");

@@ -8,6 +8,7 @@
 //! observers cheap (the built-in ones buffer or lock briefly) — a run with
 //! no observers pays one empty-slice iteration per event.
 
+use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -34,6 +35,11 @@ pub enum TrainEvent {
     GossipSkipped { worker: usize, peer: usize, step: usize },
     /// Pass-queue depth right after a forward-pool push (decoupled mode).
     QueueDepth { worker: usize, step: usize, depth: usize },
+    /// Periodic per-lane compute gauge (eval cadence): cumulative busy
+    /// seconds and retired FLOPs for one compute lane — `lane` indexes the
+    /// thread within a worker (always 0 serially; forward threads then
+    /// backward threads decoupled). Feeds live-MFU displays.
+    Utilization { worker: usize, lane: usize, step: usize, compute_s: f64, flops: u64 },
     /// A message left `from` toward `to` on the communication fabric
     /// (emitted only when observers are attached — this is per-message).
     CommSent { from: usize, to: usize, step: usize, bytes: u64 },
@@ -75,6 +81,7 @@ impl TrainEvent {
             TrainEvent::GossipApplied { .. } => "gossip_applied",
             TrainEvent::GossipSkipped { .. } => "gossip_skipped",
             TrainEvent::QueueDepth { .. } => "queue_depth",
+            TrainEvent::Utilization { .. } => "utilization",
             TrainEvent::CommSent { .. } => "comm_sent",
             TrainEvent::CommDropped { .. } => "comm_dropped",
             TrainEvent::CommDelivered { .. } => "comm_delivered",
@@ -119,6 +126,13 @@ impl TrainEvent {
                 fields.push(("worker", num(*worker as f64)));
                 fields.push(("step", num(*step as f64)));
                 fields.push(("depth", num(*depth as f64)));
+            }
+            TrainEvent::Utilization { worker, lane, step, compute_s, flops } => {
+                fields.push(("worker", num(*worker as f64)));
+                fields.push(("lane", num(*lane as f64)));
+                fields.push(("step", num(*step as f64)));
+                fields.push(("compute_s", num(*compute_s)));
+                fields.push(("flops", num(*flops as f64)));
             }
             TrainEvent::CommSent { from, to, step, bytes } => {
                 fields.push(("from", num(*from as f64)));
@@ -216,13 +230,26 @@ impl EventBus {
 }
 
 /// Prints run lifecycle and evaluation points to stdout — the typed
-/// replacement for the ad-hoc `println!` progress lines.
-#[derive(Clone, Copy, Default)]
-pub struct ProgressPrinter;
+/// replacement for the ad-hoc `println!` progress lines. Accumulates the
+/// per-lane [`TrainEvent::Utilization`] gauges and the per-message
+/// [`TrainEvent::CommSent`] bytes so eval lines carry a live MFU estimate
+/// and the cumulative wire traffic.
+#[derive(Default)]
+pub struct ProgressPrinter {
+    state: Mutex<ProgressState>,
+}
+
+#[derive(Default)]
+struct ProgressState {
+    /// (worker, lane) -> latest cumulative (busy seconds, retired FLOPs).
+    lanes: BTreeMap<(usize, usize), (f64, u64)>,
+    /// Cumulative fabric bytes (every `CommSent`).
+    comm_bytes: u64,
+}
 
 impl ProgressPrinter {
     pub fn new() -> ProgressPrinter {
-        ProgressPrinter
+        ProgressPrinter::default()
     }
 }
 
@@ -233,11 +260,31 @@ impl Observer for ProgressPrinter {
                 let mode = if *decoupled { "decoupled" } else { "serial" };
                 println!("[{algorithm}] {workers} workers x {steps} steps ({mode})");
             }
+            TrainEvent::Utilization { worker, lane, compute_s, flops, .. } => {
+                let mut st = self.state.lock().unwrap();
+                st.lanes.insert((*worker, *lane), (*compute_s, *flops));
+            }
+            TrainEvent::CommSent { bytes, .. } => {
+                self.state.lock().unwrap().comm_bytes += bytes;
+            }
             TrainEvent::EvalPoint { step, time_s, loss, accuracy } => {
-                println!(
+                let st = self.state.lock().unwrap();
+                let mut line = format!(
                     "[eval] step {step:>6}  t={time_s:>7.1}s  loss {loss:.4}  acc {:.1}%",
                     100.0 * accuracy
                 );
+                if !st.lanes.is_empty() && *time_s > 0.0 {
+                    let busy: f64 = st.lanes.values().map(|(busy_s, _)| *busy_s).sum();
+                    let mfu = (busy / (time_s * st.lanes.len() as f64)).min(1.0);
+                    line.push_str(&format!("  mfu {:.1}%", 100.0 * mfu));
+                }
+                if st.comm_bytes > 0 {
+                    line.push_str(&format!(
+                        "  comm {:.1} MiB",
+                        st.comm_bytes as f64 / (1024.0 * 1024.0)
+                    ));
+                }
+                println!("{line}");
             }
             TrainEvent::WorkerCrashed { worker, step } => {
                 println!("[chaos] worker {worker} crashed at step {step}");
@@ -300,6 +347,9 @@ impl Drop for JsonlSink {
 
 /// Records [`TrainEvent::EvalPoint`]s into an in-memory [`Curve`] — handy
 /// when a caller wants live curve access without waiting for the summary.
+/// The buffer is step-sorted in place when `RunCompleted` arrives (decoupled
+/// runs evaluate out of order), so post-run [`CurveRecorder::snapshot`]
+/// calls see the final, flushed curve without re-sorting.
 #[derive(Default)]
 pub struct CurveRecorder {
     curve: Mutex<Curve>,
@@ -320,13 +370,20 @@ impl CurveRecorder {
 
 impl Observer for CurveRecorder {
     fn on_event(&self, event: &TrainEvent) {
-        if let TrainEvent::EvalPoint { step, time_s, loss, accuracy } = event {
-            self.curve.lock().unwrap().push(CurvePoint {
-                step: *step,
-                time_s: *time_s,
-                loss: *loss,
-                accuracy: *accuracy,
-            });
+        match event {
+            TrainEvent::EvalPoint { step, time_s, loss, accuracy } => {
+                self.curve.lock().unwrap().push(CurvePoint {
+                    step: *step,
+                    time_s: *time_s,
+                    loss: *loss,
+                    accuracy: *accuracy,
+                });
+            }
+            TrainEvent::RunCompleted { .. } => {
+                // run-end flush: settle the ordering once
+                self.curve.lock().unwrap().sort_by_step();
+            }
+            _ => {}
         }
     }
 }
@@ -342,6 +399,17 @@ mod tests {
         let j = ev.to_json().dump();
         assert!(j.contains("\"event\":\"eval_point\""), "{j}");
         assert!(j.contains("\"accuracy\":0.25"), "{j}");
+    }
+
+    #[test]
+    fn utilization_serializes_lane_and_flops() {
+        let ev =
+            TrainEvent::Utilization { worker: 1, lane: 2, step: 30, compute_s: 0.5, flops: 1000 };
+        assert_eq!(ev.kind(), "utilization");
+        let j = ev.to_json().dump();
+        assert!(j.contains("\"lane\":2"), "{j}");
+        assert!(j.contains("\"compute_s\":0.5"), "{j}");
+        assert!(j.contains("\"flops\":1000"), "{j}");
     }
 
     #[test]

@@ -200,6 +200,37 @@ impl SessionBuilder {
         self
     }
 
+    /// Replace the run's telemetry knobs wholesale (`[telemetry]` config
+    /// section equivalent): span tracing, the background sampler period and
+    /// an optional Chrome-trace output path. The default config keeps
+    /// telemetry off — bit-identical hot paths, zero allocations.
+    ///
+    /// ```no_run
+    /// use layup::config::{Algorithm, TrainConfig};
+    /// use layup::manifest::Manifest;
+    /// use layup::session::SessionBuilder;
+    /// use layup::telemetry::TelemetryConfig;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let manifest = Manifest::load(&layup::artifacts_dir())?;
+    /// let cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 4, 200);
+    /// let summary = SessionBuilder::new(cfg)
+    ///     .telemetry(TelemetryConfig {
+    ///         enabled: true,
+    ///         trace_path: Some("trace.json".into()),
+    ///         ..TelemetryConfig::default()
+    ///     })
+    ///     .build(&manifest)?
+    ///     .run()?;
+    /// println!("spans recorded: {}", summary.stats.telemetry.spans);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn telemetry(mut self, cfg: crate::telemetry::TelemetryConfig) -> SessionBuilder {
+        self.cfg.telemetry = cfg;
+        self
+    }
+
     /// Select the stale-gradient correction policy:
     /// `Compensation::Dc` applies the DC-ASGD `λ·g⊙g⊙(x_now − x_then)`
     /// correction at every asynchronous gradient apply.
@@ -297,7 +328,23 @@ impl Session<'_> {
         });
         let t0 = Instant::now();
 
-        let stats = engine::execute(&cfg, manifest, &shared, resume.as_ref())?;
+        // Compute lanes mirror the occupancy denominator below: one per
+        // trainer serially, fwd + bwd pool threads per trainer decoupled.
+        // The sampler normalises MFU against this count.
+        let lanes = (cfg.cluster.n_trainers(cfg.workers)
+            * if cfg.decoupled { cfg.fwd_threads + cfg.bwd_threads } else { 1 })
+            as f64;
+        let sampler = crate::telemetry::sampler::spawn(
+            &shared.telemetry,
+            &shared,
+            cfg.telemetry.sample_every_ms,
+            lanes,
+        );
+        let result = engine::execute(&cfg, manifest, &shared, resume.as_ref());
+        if let Some(s) = sampler {
+            s.stop(); // joins; takes one final sample so short runs still chart
+        }
+        let stats = result?;
 
         let wall = t0.elapsed().as_secs_f64();
         let total_compute: f64 = stats.iter().map(|s| s.compute_s).sum();
@@ -377,7 +424,12 @@ impl Session<'_> {
                         .unwrap_or(0),
                 }
             },
+            telemetry: shared.telemetry.stats(),
         };
+
+        if let Some(path) = cfg.telemetry.trace_path.as_ref() {
+            crate::telemetry::export::write_chrome_trace(&shared.telemetry, path)?;
+        }
 
         shared.events.emit(TrainEvent::RunCompleted { total_steps, wall_s: wall });
 

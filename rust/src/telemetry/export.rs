@@ -1,0 +1,251 @@
+//! Telemetry export: Chrome-trace JSON (opens in Perfetto /
+//! `chrome://tracing`) and a plain-text metrics exposition dump.
+//!
+//! The trace layout: one `pid 0` process named `layup`, one thread track per
+//! registered [`ThreadTrack`] (metadata `M` events carry the track labels),
+//! every retained span as a complete `X` event (microsecond `ts`/`dur`, the
+//! phase's snake_case name), and the sampler's series as counter `C` events
+//! (`mfu`, `queue_depth`, `flops_per_s`, `wire_bytes_per_s`, `push_weight`,
+//! `tau_mean`) sharing the same time origin as the spans.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::telemetry::Telemetry;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Counter-track names emitted from the sampled series, paired with an
+/// extractor. Split out so the exporter and its invariant tests agree on
+/// the set.
+const COUNTERS: [&str; 6] =
+    ["mfu", "queue_depth", "flops_per_s", "wire_bytes_per_s", "push_weight", "tau_mean"];
+
+fn counter_value(name: &str, smp: &crate::telemetry::sampler::Sample) -> f64 {
+    match name {
+        "mfu" => smp.mfu,
+        "queue_depth" => smp.queue_depth as f64,
+        "flops_per_s" => smp.flops_per_s,
+        "wire_bytes_per_s" => smp.bytes_per_s,
+        "push_weight" => smp.push_weight,
+        _ => smp.tau_mean,
+    }
+}
+
+/// Render the recorder as a Chrome-trace document
+/// (`{"traceEvents": [...]}`).
+pub fn chrome_trace(tel: &Telemetry) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    events.push(obj(vec![
+        ("ph", s("M")),
+        ("name", s("process_name")),
+        ("pid", num(0.0)),
+        ("tid", num(0.0)),
+        ("args", obj(vec![("name", s("layup"))])),
+    ]));
+
+    for track in tel.tracks() {
+        let tid = track.tid() as f64;
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(0.0)),
+            ("tid", num(tid)),
+            ("args", obj(vec![("name", s(track.name()))])),
+        ]));
+        for span in track.spans() {
+            events.push(obj(vec![
+                ("ph", s("X")),
+                ("pid", num(0.0)),
+                ("tid", num(tid)),
+                ("name", s(span.phase.name())),
+                ("cat", s("layup")),
+                ("ts", num(span.start_ns as f64 / 1e3)),
+                ("dur", num(span.dur_ns as f64 / 1e3)),
+            ]));
+        }
+    }
+
+    for smp in tel.samples() {
+        let ts = smp.t_s * 1e6;
+        for name in COUNTERS {
+            events.push(obj(vec![
+                ("ph", s("C")),
+                ("pid", num(0.0)),
+                ("tid", num(0.0)),
+                ("name", s(name)),
+                ("ts", num(ts)),
+                ("args", obj(vec![("value", num(counter_value(name, &smp)))])),
+            ]));
+        }
+        for link in &smp.links {
+            events.push(obj(vec![
+                ("ph", s("C")),
+                ("pid", num(0.0)),
+                ("tid", num(0.0)),
+                ("name", s(&format!("link_{}_{}_bytes_per_s", link.from, link.to))),
+                ("ts", num(ts)),
+                ("args", obj(vec![("value", num(link.bytes_per_s))])),
+            ]));
+        }
+    }
+
+    obj(vec![("traceEvents", arr(events))])
+}
+
+/// Write the Chrome-trace JSON to `path` (parent directories are created).
+pub fn write_chrome_trace(tel: &Telemetry, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace directory {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace(tel).dump())
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+/// Plain-text metrics exposition: one `name value` line per counter, the
+/// per-phase aggregate table, and the last sampled gauge values.
+pub fn metrics_text(tel: &Telemetry) -> String {
+    use std::fmt::Write as _;
+    let st = tel.stats();
+    let mut out = String::new();
+    let _ = writeln!(out, "telemetry_enabled {}", u8::from(st.enabled));
+    let _ = writeln!(out, "telemetry_spans {}", st.spans);
+    let _ = writeln!(out, "telemetry_dropped {}", st.dropped);
+    let _ = writeln!(out, "telemetry_threads {}", st.threads);
+    let _ = writeln!(out, "telemetry_samples {}", st.samples);
+    for p in &st.phases {
+        let _ = writeln!(out, "phase_{}_count {}", p.name, p.count);
+        let _ = writeln!(out, "phase_{}_total_s {:.9}", p.name, p.total_s);
+        let _ = writeln!(out, "phase_{}_self_s {:.9}", p.name, p.self_s);
+    }
+    if let Some(last) = tel.samples().last() {
+        let _ = writeln!(out, "last_sample_t_s {:.6}", last.t_s);
+        for name in COUNTERS {
+            let _ = writeln!(out, "last_{} {:.6}", name, counter_value(name, last));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{sampler::Sample, Phase, TelemetryConfig};
+
+    fn recording_telemetry() -> std::sync::Arc<Telemetry> {
+        let tel = Telemetry::from_config(&TelemetryConfig {
+            enabled: true,
+            ring_capacity: 64,
+            ..TelemetryConfig::default()
+        });
+        tel.register_thread("export-test");
+        {
+            let _outer = tel.span(Phase::Forward);
+            let _inner = tel.span(Phase::CodecEncode);
+        }
+        {
+            let _sp = tel.span(Phase::Backward);
+        }
+        tel.push_sample(Sample { t_s: 0.1, mfu: 0.5, queue_depth: 2, ..Sample::default() });
+        tel
+    }
+
+    /// Satellite: trace-export invariants — the document parses as JSON,
+    /// every span event has a non-negative duration, and every span's `tid`
+    /// belongs to a declared thread track.
+    #[test]
+    fn trace_is_valid_json_with_declared_tracks_and_nonnegative_durations() {
+        let tel = recording_telemetry();
+        let text = chrome_trace(&tel).dump();
+        let doc = Json::parse(&text).expect("trace must parse as JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+
+        let mut declared_tids = Vec::new();
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() == "M"
+                && e.get("name").unwrap().as_str().unwrap() == "thread_name"
+            {
+                declared_tids.push(e.get("tid").unwrap().as_f64().unwrap() as i64);
+            }
+        }
+        assert!(!declared_tids.is_empty(), "at least one thread track declared");
+
+        let mut span_events = 0usize;
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() != "X" {
+                continue;
+            }
+            span_events += 1;
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(dur >= 0.0, "span durations are non-negative");
+            assert!(ts >= 0.0, "span timestamps are non-negative");
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as i64;
+            assert!(
+                declared_tids.contains(&tid),
+                "span tid {tid} nested within a declared thread track"
+            );
+            let name = e.get("name").unwrap().as_str().unwrap();
+            assert!(
+                crate::telemetry::PHASES.iter().any(|p| p.name() == name),
+                "span name {name} is in the phase taxonomy"
+            );
+        }
+        assert_eq!(span_events, 3, "all recorded spans exported");
+    }
+
+    #[test]
+    fn counter_tracks_cover_mfu_and_queue_depth() {
+        let tel = recording_telemetry();
+        let doc = chrome_trace(&tel);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut counters = Vec::new();
+        for e in events {
+            if e.get("ph").unwrap().as_str().unwrap() == "C" {
+                counters.push(e.get("name").unwrap().as_str().unwrap().to_string());
+                // counter payload is a single numeric value
+                let v = e.get("args").unwrap().get("value").unwrap().as_f64().unwrap();
+                assert!(v.is_finite());
+            }
+        }
+        assert!(counters.iter().any(|c| c == "mfu"));
+        assert!(counters.iter().any(|c| c == "queue_depth"));
+    }
+
+    #[test]
+    fn disabled_recorder_exports_an_empty_trace() {
+        let tel = Telemetry::disabled();
+        let doc = chrome_trace(&tel);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // only the process_name metadata event: no tracks, no spans
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+    }
+
+    #[test]
+    fn metrics_text_lists_every_phase() {
+        let tel = recording_telemetry();
+        let text = metrics_text(&tel);
+        assert!(text.contains("telemetry_enabled 1"));
+        assert!(text.contains("telemetry_spans 3"));
+        for p in crate::telemetry::PHASES {
+            assert!(text.contains(&format!("phase_{}_count", p.name())));
+        }
+        assert!(text.contains("last_mfu 0.500000"));
+    }
+
+    #[test]
+    fn trace_file_roundtrips_from_disk() {
+        let tel = recording_telemetry();
+        let dir = std::env::temp_dir().join(format!("layup-trace-{}", std::process::id()));
+        let path = dir.join("trace.json");
+        write_chrome_trace(&tel, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,721 @@
+//! Run telemetry: low-overhead span tracing, a background time-series
+//! sampler and Chrome-trace export (EXPERIMENTS.md §Telemetry).
+//!
+//! The paper's headline claims are throughput claims — higher model flops
+//! utilization from decoupled backprop — and end-of-run aggregates cannot
+//! show *where* a step's time goes (forward vs. queue wait vs. optimizer
+//! apply vs. codec encode vs. fabric delivery). This module makes the
+//! timeline first-class, in three zero-dependency parts:
+//!
+//! * **Span tracing** — every instrumented section records a [`Phase`]-tagged
+//!   span into a per-thread fixed-capacity ring ([`ThreadTrack`]: drop-oldest
+//!   with a dropped counter, lock-free single-writer). Recording costs two
+//!   monotonic-clock reads plus relaxed atomic stores (~tens of ns); when
+//!   telemetry is disabled — the default — every site pays one relaxed
+//!   atomic load, allocates nothing, and runs are bit-identical to
+//!   pre-telemetry builds.
+//! * **Time-series sampler** — [`sampler`] runs a background thread that
+//!   snapshots queue depth, compute occupancy (live MFU), FLOP/s, τ means,
+//!   push-sum weight and wire bytes/s into a bounded in-memory series at a
+//!   configurable period.
+//! * **Export** — [`export`] renders the rings and the sampled series as
+//!   Chrome-trace JSON (one track per OS thread plus counter tracks; opens
+//!   in Perfetto / `chrome://tracing`) or a plain-text metrics dump, and
+//!   [`Telemetry::stats`] summarizes span/drop counts and per-phase
+//!   total/self time into the `telemetry` section of
+//!   [`crate::metrics::RunStats`].
+//!
+//! Wired as `[telemetry]` config, `--trace <path>` / `--sample-every-ms`
+//! CLI flags and `SessionBuilder::telemetry(...)`.
+
+pub mod export;
+pub mod sampler;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+/// The closed phase taxonomy. Every instrumented hot-path section is one of
+/// these; the set is deliberately small and stable so traces from different
+/// runs (and the CI smoke assertions) compare phase-for-phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// Forward pass (serial loop, forward pool, lockstep).
+    Forward = 0,
+    /// Blocking on the bounded pass queue (decoupled push/pop).
+    QueueWait = 1,
+    /// Backward pass (serial loop, backward pool, lockstep).
+    Backward = 2,
+    /// Optimizer apply: LayUp updater `step_layer`, PS shard-side step.
+    OptStep = 3,
+    /// Wire-codec encode at the fabric push boundary (non-dense codecs).
+    CodecEncode = 4,
+    /// Wire-codec decode at the fabric apply boundary.
+    CodecDecode = 5,
+    /// `Fabric::push` — metering, drop dice, queueing or instant apply.
+    FabricPush = 6,
+    /// `Fabric::deliver_due` applying queued messages at a step boundary.
+    FabricDeliver = 7,
+    /// Gossip mixing: LayUp peer push / fused update+mix sections.
+    Gossip = 8,
+    /// Checkpoint rendezvous write.
+    Checkpoint = 9,
+    /// A sharded `ShardPool` tensor traversal (only when actually sharded).
+    ShardKernel = 10,
+}
+
+/// All phases, in `repr` order (index == discriminant).
+pub const PHASES: [Phase; Phase::COUNT] = [
+    Phase::Forward,
+    Phase::QueueWait,
+    Phase::Backward,
+    Phase::OptStep,
+    Phase::CodecEncode,
+    Phase::CodecDecode,
+    Phase::FabricPush,
+    Phase::FabricDeliver,
+    Phase::Gossip,
+    Phase::Checkpoint,
+    Phase::ShardKernel,
+];
+
+impl Phase {
+    /// Number of phases in the taxonomy.
+    pub const COUNT: usize = 11;
+
+    /// Stable snake_case name — used as the Chrome-trace event name and in
+    /// the metrics exposition dump.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::QueueWait => "queue_wait",
+            Phase::Backward => "backward",
+            Phase::OptStep => "opt_step",
+            Phase::CodecEncode => "codec_encode",
+            Phase::CodecDecode => "codec_decode",
+            Phase::FabricPush => "fabric_push",
+            Phase::FabricDeliver => "fabric_deliver",
+            Phase::Gossip => "gossip",
+            Phase::Checkpoint => "checkpoint",
+            Phase::ShardKernel => "shard_kernel",
+        }
+    }
+
+    /// Inverse of the `repr` discriminant (ring slots store it as `u32`).
+    pub fn from_index(i: usize) -> Option<Phase> {
+        PHASES.get(i).copied()
+    }
+}
+
+/// `[telemetry]` section of the train config. Defaults keep telemetry OFF:
+/// no recorder threads, no spans, bit-identical hot paths.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// Master switch. Setting `trace` (config) or `--trace` (CLI) implies it.
+    pub enabled: bool,
+    /// Where to write the Chrome-trace JSON at run end (`None` = don't).
+    pub trace_path: Option<PathBuf>,
+    /// Background sampler period in milliseconds (`0` disables the sampler
+    /// thread while keeping span tracing on).
+    pub sample_every_ms: u64,
+    /// Per-thread span ring capacity (drop-oldest beyond it).
+    pub ring_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: false,
+            trace_path: None,
+            sample_every_ms: 100,
+            ring_capacity: 16384,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Validate the knobs (called from `TrainConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.ring_capacity == 0 {
+            bail!("telemetry: ring_capacity must be >= 1 when telemetry is enabled");
+        }
+        Ok(())
+    }
+}
+
+/// One OS thread's fixed-capacity span ring. Single-writer (the owning
+/// thread), many-reader (export/stats): the writer stores the record columns
+/// relaxed, then publishes by bumping `total` with `Release`; readers load
+/// `total` with `Acquire` and only trust slots at least one full lap old or
+/// below the published count. Capacity overflow drops the *oldest* span —
+/// `total` keeps counting, so the dropped count is exact.
+pub struct ThreadTrack {
+    name: String,
+    tid: usize,
+    cap: usize,
+    /// Spans ever recorded on this track (slot = `total % cap`).
+    total: AtomicUsize,
+    phase: Vec<AtomicU32>,
+    start_ns: Vec<AtomicU64>,
+    dur_ns: Vec<AtomicU64>,
+}
+
+impl ThreadTrack {
+    fn new(name: String, tid: usize, cap: usize) -> ThreadTrack {
+        let cap = cap.max(1);
+        ThreadTrack {
+            name,
+            tid,
+            cap,
+            total: AtomicUsize::new(0),
+            phase: (0..cap).map(|_| AtomicU32::new(0)).collect(),
+            start_ns: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            dur_ns: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Track label (thread name or an explicit driver label).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stable per-run track id (Chrome-trace `tid`).
+    pub fn tid(&self) -> usize {
+        self.tid
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Spans ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.total.load(Ordering::Acquire) as u64
+    }
+
+    /// Spans evicted by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.cap as u64)
+    }
+
+    /// Record one finished span (owning thread only).
+    fn record(&self, phase: Phase, start_ns: u64, dur_ns: u64) {
+        let total = self.total.load(Ordering::Relaxed);
+        let slot = total % self.cap;
+        self.phase[slot].store(phase as u32, Ordering::Relaxed);
+        self.start_ns[slot].store(start_ns, Ordering::Relaxed);
+        self.dur_ns[slot].store(dur_ns, Ordering::Relaxed);
+        self.total.store(total + 1, Ordering::Release);
+    }
+
+    /// Retained spans, oldest first. Exact once the owning thread has
+    /// quiesced (export runs after the engine joins its workers);
+    /// best-effort under concurrent recording.
+    pub fn spans(&self) -> Vec<SpanSnap> {
+        let total = self.total.load(Ordering::Acquire);
+        let kept = total.min(self.cap);
+        let first = total - kept; // oldest retained span's sequence number
+        (first..total)
+            .filter_map(|seq| {
+                let slot = seq % self.cap;
+                let phase = Phase::from_index(self.phase[slot].load(Ordering::Relaxed) as usize)?;
+                Some(SpanSnap {
+                    phase,
+                    start_ns: self.start_ns[slot].load(Ordering::Relaxed),
+                    dur_ns: self.dur_ns[slot].load(Ordering::Relaxed),
+                })
+            })
+            .collect()
+    }
+}
+
+/// One retained span, snapshot out of a [`ThreadTrack`] ring.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanSnap {
+    /// Phase tag.
+    pub phase: Phase,
+    /// Start offset from the recorder's epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Wall duration, nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// Per-phase running aggregates (count / total wall / self wall), updated at
+/// span end with relaxed atomics.
+#[derive(Default)]
+struct PhaseAgg {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    self_ns: AtomicU64,
+}
+
+/// Per-thread recorder state, keyed by the owning [`Telemetry`]'s run id so
+/// a thread reused across sessions re-registers cleanly.
+struct Local {
+    run: u64,
+    track: Arc<ThreadTrack>,
+    /// Child-duration accumulator stack: one slot per open span; a closing
+    /// span folds its duration into its parent's slot, making self time an
+    /// exact subtraction (no extra clock reads).
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+}
+
+static NEXT_RUN: AtomicU64 = AtomicU64::new(1);
+
+/// The per-run telemetry recorder, shared by every worker/pool/updater
+/// thread through `Shared`. Construct with [`Telemetry::from_config`] (or
+/// [`Telemetry::disabled`] for the default-off instance).
+pub struct Telemetry {
+    on: AtomicBool,
+    run: u64,
+    epoch: Instant,
+    ring_capacity: usize,
+    tracks: Mutex<Vec<Arc<ThreadTrack>>>,
+    aggs: [PhaseAgg; Phase::COUNT],
+    queue_depth: AtomicI64,
+    flops: AtomicU64,
+    samples: Mutex<VecDeque<sampler::Sample>>,
+}
+
+/// Cap on the sampler's in-memory series (drop-oldest beyond it): 8192
+/// samples ≈ 13 minutes at the default 100 ms period.
+const MAX_SAMPLES: usize = 8192;
+
+impl Telemetry {
+    /// Build a recorder from config. A disabled config yields a recorder
+    /// whose every call is a single relaxed load + early return.
+    pub fn from_config(cfg: &TelemetryConfig) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            on: AtomicBool::new(cfg.enabled),
+            run: NEXT_RUN.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            ring_capacity: cfg.ring_capacity.max(1),
+            tracks: Mutex::new(Vec::new()),
+            aggs: std::array::from_fn(|_| PhaseAgg::default()),
+            queue_depth: AtomicI64::new(0),
+            flops: AtomicU64::new(0),
+            samples: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    /// The default-off recorder (tests, `Shared::for_tests`).
+    pub fn disabled() -> Arc<Telemetry> {
+        Telemetry::from_config(&TelemetryConfig::default())
+    }
+
+    /// The disabled-path fast check: one relaxed atomic load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.on.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since this recorder's epoch (the trace's time origin).
+    pub fn elapsed_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Label the calling thread's track (worker/pool/updater drivers call
+    /// this once at entry). A later unlabeled [`Telemetry::span`] on a fresh
+    /// thread auto-registers with the OS thread name instead.
+    pub fn register_thread(&self, label: &str) {
+        if !self.enabled() {
+            return;
+        }
+        LOCAL.with(|cell| {
+            let mut cell = cell.borrow_mut();
+            let current = matches!(cell.as_ref(), Some(l) if l.run == self.run);
+            if !current {
+                *cell = Some(Local {
+                    run: self.run,
+                    track: self.new_track(Some(label)),
+                    stack: Vec::new(),
+                });
+            }
+        });
+    }
+
+    fn new_track(&self, label: Option<&str>) -> Arc<ThreadTrack> {
+        let mut reg = self.tracks.lock().unwrap();
+        let tid = reg.len();
+        let name = match label {
+            Some(l) => l.to_string(),
+            None => std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}")),
+        };
+        let track = Arc::new(ThreadTrack::new(name, tid, self.ring_capacity));
+        reg.push(Arc::clone(&track));
+        track
+    }
+
+    /// Open a span; it records into the calling thread's ring when the
+    /// returned guard drops. Disabled: one relaxed load, a `None` guard,
+    /// zero allocations.
+    #[must_use = "the span measures until the guard drops"]
+    pub fn span(&self, phase: Phase) -> SpanGuard<'_> {
+        if !self.enabled() {
+            return SpanGuard { active: None };
+        }
+        let start_ns = self.now_ns();
+        self.with_local(|local| local.stack.push(0));
+        SpanGuard { active: Some(Active { tel: self, phase, start_ns }) }
+    }
+
+    fn with_local(&self, f: impl FnOnce(&mut Local)) {
+        LOCAL.with(|cell| {
+            let mut cell = cell.borrow_mut();
+            let current = matches!(cell.as_ref(), Some(l) if l.run == self.run);
+            if !current {
+                *cell = Some(Local {
+                    run: self.run,
+                    track: self.new_track(None),
+                    stack: Vec::new(),
+                });
+            }
+            f(cell.as_mut().expect("local state installed above"));
+        });
+    }
+
+    fn end_span(&self, phase: Phase, start_ns: u64) {
+        let dur_ns = self.now_ns().saturating_sub(start_ns);
+        let mut child_ns = 0u64;
+        self.with_local(|local| {
+            child_ns = local.stack.pop().unwrap_or(0);
+            if let Some(parent) = local.stack.last_mut() {
+                *parent += dur_ns;
+            }
+            local.track.record(phase, start_ns, dur_ns);
+        });
+        let agg = &self.aggs[phase as usize];
+        agg.count.fetch_add(1, Ordering::Relaxed);
+        agg.total_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        agg.self_ns
+            .fetch_add(dur_ns.saturating_sub(child_ns), Ordering::Relaxed);
+    }
+
+    /// Queue-depth gauge: a pass entered the bounded queue.
+    pub fn queue_push(&self) {
+        if self.enabled() {
+            self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Queue-depth gauge: a pass left the bounded queue.
+    pub fn queue_pop(&self) {
+        if self.enabled() {
+            self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current queue-depth gauge value (sampler / tests).
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// FLOPs gauge: a worker thread retired `flops` more model FLOPs.
+    pub fn add_flops(&self, flops: u64) {
+        if self.enabled() {
+            self.flops.fetch_add(flops, Ordering::Relaxed);
+        }
+    }
+
+    /// Cumulative retired FLOPs across all reporting threads.
+    pub fn flops_total(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    /// Total wall nanoseconds recorded for `phase` so far (sampler reads
+    /// `Forward + Backward` as live compute time).
+    pub fn phase_total_ns(&self, phase: Phase) -> u64 {
+        self.aggs[phase as usize].total_ns.load(Ordering::Relaxed)
+    }
+
+    /// Append one sampler reading (bounded drop-oldest series).
+    pub fn push_sample(&self, s: sampler::Sample) {
+        let mut q = self.samples.lock().unwrap();
+        if q.len() >= MAX_SAMPLES {
+            q.pop_front();
+        }
+        q.push_back(s);
+    }
+
+    /// The sampled time series, oldest first.
+    pub fn samples(&self) -> Vec<sampler::Sample> {
+        self.samples.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Snapshot every registered thread track (export, tests).
+    pub fn tracks(&self) -> Vec<Arc<ThreadTrack>> {
+        self.tracks.lock().unwrap().clone()
+    }
+
+    /// Summarize into the `RunStats.telemetry` section.
+    pub fn stats(&self) -> TelemetryStats {
+        let tracks = self.tracks.lock().unwrap();
+        let mut spans = 0u64;
+        let mut dropped = 0u64;
+        for t in tracks.iter() {
+            spans += t.recorded();
+            dropped += t.dropped();
+        }
+        TelemetryStats {
+            enabled: self.enabled(),
+            spans,
+            dropped,
+            threads: tracks.len(),
+            samples: self.samples.lock().unwrap().len(),
+            phases: PHASES
+                .iter()
+                .map(|&p| {
+                    let agg = &self.aggs[p as usize];
+                    PhaseStat {
+                        name: p.name(),
+                        count: agg.count.load(Ordering::Relaxed),
+                        total_s: agg.total_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                        self_s: agg.self_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+struct Active<'a> {
+    tel: &'a Telemetry,
+    phase: Phase,
+    start_ns: u64,
+}
+
+/// RAII span: records `[open .. drop]` into the calling thread's ring.
+/// Obtained from [`Telemetry::span`]; a disabled recorder hands out inert
+/// guards.
+#[must_use = "the span measures until the guard drops"]
+pub struct SpanGuard<'a> {
+    active: Option<Active<'a>>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            a.tel.end_span(a.phase, a.start_ns);
+        }
+    }
+}
+
+/// One phase's row in [`TelemetryStats`].
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    /// Phase name ([`Phase::name`]).
+    pub name: &'static str,
+    /// Spans recorded for this phase.
+    pub count: u64,
+    /// Total wall time inside the phase, seconds.
+    pub total_s: f64,
+    /// Self time (total minus time inside nested child spans), seconds.
+    pub self_s: f64,
+}
+
+/// The `telemetry` section of [`crate::metrics::RunStats`]: span/drop counts
+/// and per-phase total/self wall time. `Default` is the all-zero disabled
+/// summary.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryStats {
+    /// Whether the recorder was enabled for the run.
+    pub enabled: bool,
+    /// Spans recorded across all threads (retained + dropped).
+    pub spans: u64,
+    /// Spans evicted by ring wraparound.
+    pub dropped: u64,
+    /// Thread tracks registered.
+    pub threads: usize,
+    /// Sampler readings retained.
+    pub samples: usize,
+    /// Per-phase aggregates, in taxonomy order.
+    pub phases: Vec<PhaseStat>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_cfg(cap: usize) -> TelemetryConfig {
+        TelemetryConfig { enabled: true, ring_capacity: cap, ..TelemetryConfig::default() }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let tel = Telemetry::disabled();
+        for _ in 0..100 {
+            let _sp = tel.span(Phase::Forward);
+        }
+        tel.queue_push();
+        tel.add_flops(1_000_000);
+        let st = tel.stats();
+        assert!(!st.enabled);
+        assert_eq!(st.spans, 0);
+        assert_eq!(st.threads, 0, "no track is ever registered when disabled");
+        assert_eq!(tel.queue_depth(), 0);
+        assert_eq!(tel.flops_total(), 0);
+    }
+
+    #[test]
+    fn spans_land_in_the_callers_track() {
+        let tel = Telemetry::from_config(&enabled_cfg(64));
+        tel.register_thread("unit-test");
+        {
+            let _sp = tel.span(Phase::Forward);
+        }
+        {
+            let _sp = tel.span(Phase::Backward);
+        }
+        let tracks = tel.tracks();
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].name(), "unit-test");
+        let spans = tracks[0].spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].phase, Phase::Forward);
+        assert_eq!(spans[1].phase, Phase::Backward);
+        // recorded at end time: the ring keeps chronological end order
+        assert!(spans[0].start_ns <= spans[1].start_ns);
+        let st = tel.stats();
+        assert_eq!(st.spans, 2);
+        assert_eq!(st.dropped, 0);
+    }
+
+    /// Satellite: ring wraparound drops the OLDEST spans and counts them.
+    #[test]
+    fn ring_wraparound_drops_oldest_and_counts() {
+        let tel = Telemetry::from_config(&enabled_cfg(4));
+        tel.register_thread("wrap");
+        for i in 0..7 {
+            let phase = if i < 3 { Phase::Forward } else { Phase::OptStep };
+            let _sp = tel.span(phase);
+        }
+        let tracks = tel.tracks();
+        assert_eq!(tracks[0].recorded(), 7);
+        assert_eq!(tracks[0].dropped(), 3);
+        let spans = tracks[0].spans();
+        assert_eq!(spans.len(), 4, "ring retains exactly its capacity");
+        // the three Forward spans were the oldest: all evicted
+        assert!(spans.iter().all(|s| s.phase == Phase::OptStep));
+        // chronological (end-time) order survives the wrap
+        for w in spans.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+        let st = tel.stats();
+        assert_eq!(st.spans, 7);
+        assert_eq!(st.dropped, 3);
+        // aggregates keep counting past the ring: nothing dropped there
+        let fwd = &st.phases[Phase::Forward as usize];
+        assert_eq!(fwd.count, 3);
+    }
+
+    /// Self time is an exact subtraction of nested child durations.
+    #[test]
+    fn nested_spans_split_self_time_exactly() {
+        let tel = Telemetry::from_config(&enabled_cfg(16));
+        tel.register_thread("nest");
+        {
+            let _outer = tel.span(Phase::Backward);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = tel.span(Phase::OptStep);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let st = tel.stats();
+        let outer = &st.phases[Phase::Backward as usize];
+        let inner = &st.phases[Phase::OptStep as usize];
+        assert_eq!(outer.count, 1);
+        assert_eq!(inner.count, 1);
+        assert!(inner.total_s > 0.0);
+        // child span's full duration was subtracted from the parent's self
+        let expect_self = outer.total_s - inner.total_s;
+        assert!((outer.self_s - expect_self).abs() < 1e-9);
+        assert!(outer.total_s >= inner.total_s);
+        // spans nest within the parent's interval
+        let spans = tel.tracks()[0].spans();
+        let (inner_s, outer_s) = (&spans[0], &spans[1]); // inner ends first
+        assert_eq!(outer_s.phase, Phase::Backward);
+        assert!(inner_s.start_ns >= outer_s.start_ns);
+        assert!(
+            inner_s.start_ns + inner_s.dur_ns <= outer_s.start_ns + outer_s.dur_ns,
+            "child interval contained in parent interval"
+        );
+    }
+
+    #[test]
+    fn each_thread_gets_its_own_track() {
+        let tel = Telemetry::from_config(&enabled_cfg(16));
+        tel.register_thread("main-thread");
+        {
+            let _sp = tel.span(Phase::Forward);
+        }
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                tel.register_thread("helper-thread");
+                let _sp = tel.span(Phase::Backward);
+            });
+        });
+        let tracks = tel.tracks();
+        assert_eq!(tracks.len(), 2);
+        let names: Vec<&str> = tracks.iter().map(|t| t.name()).collect();
+        assert!(names.contains(&"main-thread"));
+        assert!(names.contains(&"helper-thread"));
+    }
+
+    #[test]
+    fn gauges_accumulate_when_enabled() {
+        let tel = Telemetry::from_config(&enabled_cfg(16));
+        tel.queue_push();
+        tel.queue_push();
+        tel.queue_pop();
+        assert_eq!(tel.queue_depth(), 1);
+        tel.add_flops(500);
+        tel.add_flops(1500);
+        assert_eq!(tel.flops_total(), 2000);
+    }
+
+    #[test]
+    fn sample_series_is_bounded_drop_oldest() {
+        let tel = Telemetry::from_config(&enabled_cfg(16));
+        for i in 0..(MAX_SAMPLES + 10) {
+            tel.push_sample(sampler::Sample { t_s: i as f64, ..sampler::Sample::default() });
+        }
+        let samples = tel.samples();
+        assert_eq!(samples.len(), MAX_SAMPLES);
+        assert_eq!(samples[0].t_s, 10.0, "oldest samples were dropped");
+    }
+
+    #[test]
+    fn config_validation_rejects_zero_ring() {
+        assert!(TelemetryConfig::default().validate().is_ok());
+        let bad = TelemetryConfig { enabled: true, ring_capacity: 0, ..TelemetryConfig::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn phase_names_roundtrip_their_index() {
+        for (i, &p) in PHASES.iter().enumerate() {
+            assert_eq!(p as usize, i);
+            assert_eq!(Phase::from_index(i), Some(p));
+        }
+        assert_eq!(Phase::from_index(Phase::COUNT), None);
+    }
+}

@@ -1,0 +1,173 @@
+//! Background time-series sampler: a `telemetry-sampler` thread snapshots
+//! run gauges — queue depth, live compute occupancy (MFU), FLOP/s, τ means,
+//! push-sum weight and per-link wire bytes/s — into the recorder's bounded
+//! in-memory series at a configurable period. Rates are finite differences
+//! between consecutive snapshots, so a sample reads a handful of relaxed
+//! atomics plus one `CommStats` snapshot and never touches a hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::Shared;
+use crate::telemetry::{Phase, Telemetry};
+
+/// One directed link's instantaneous wire rate.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkRate {
+    /// Sending worker.
+    pub from: usize,
+    /// Receiving worker.
+    pub to: usize,
+    /// Encoded wire bytes per second over the last sampler period.
+    pub bytes_per_s: f64,
+}
+
+/// One sampler reading. `t_s` is seconds since the recorder's epoch — the
+/// same time origin the span rings use, so counter tracks line up with the
+/// span tracks in the exported trace.
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    /// Sample time, seconds since the recorder epoch.
+    pub t_s: f64,
+    /// Decoupled pass-queue depth (sum over workers) at sample time.
+    pub queue_depth: i64,
+    /// Live model-flops-utilization proxy: fraction of the period the
+    /// compute lanes spent inside `Forward`/`Backward` spans (the same
+    /// occupancy definition `RunSummary.mfu` reports end-of-run).
+    pub mfu: f64,
+    /// Model FLOPs retired per second over the period.
+    pub flops_per_s: f64,
+    /// Mean observed per-layer staleness τ so far (cumulative).
+    pub tau_mean: f64,
+    /// Total push-sum weight currently held by the workers.
+    pub push_weight: f64,
+    /// Encoded wire bytes per second over the period (all links).
+    pub bytes_per_s: f64,
+    /// Per-link wire rates (links with traffic this period only).
+    pub links: Vec<LinkRate>,
+}
+
+/// Handle to the running sampler thread; [`SamplerHandle::stop`] takes a
+/// final sample, stops the thread and joins it.
+pub struct SamplerHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl SamplerHandle {
+    /// Signal the sampler to finish and wait for it.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SamplerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn the sampler thread. `lanes` is the number of compute lanes the MFU
+/// normalizes over (trainers × threads-per-worker — the denominator
+/// `RunSummary`'s occupancy uses). Returns `None` when telemetry is
+/// disabled or the period is zero.
+pub fn spawn(
+    tel: &Arc<Telemetry>,
+    shared: &Arc<Shared>,
+    period_ms: u64,
+    lanes: f64,
+) -> Option<SamplerHandle> {
+    if !tel.enabled() || period_ms == 0 {
+        return None;
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let join = {
+        let tel = Arc::clone(tel);
+        let shared = Arc::clone(shared);
+        let stop = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("telemetry-sampler".to_string())
+            .spawn(move || run(&tel, &shared, period_ms, lanes.max(1.0), &stop))
+            .expect("spawn telemetry sampler")
+    };
+    Some(SamplerHandle { stop, join: Some(join) })
+}
+
+fn run(tel: &Telemetry, shared: &Shared, period_ms: u64, lanes: f64, stop: &AtomicBool) {
+    let mut cursor = Cursor::default();
+    cursor.t_s = tel.elapsed_s();
+    loop {
+        // chunked sleep: the handle's stop/join stays responsive even with
+        // a long sampling period
+        let mut slept = 0u64;
+        while slept < period_ms && !stop.load(Ordering::Relaxed) {
+            let chunk = (period_ms - slept).min(20);
+            std::thread::sleep(Duration::from_millis(chunk));
+            slept += chunk;
+        }
+        let done = stop.load(Ordering::Relaxed);
+        tel.push_sample(sample(tel, shared, lanes, &mut cursor));
+        if done {
+            break; // one final sample so short runs always have a series
+        }
+    }
+}
+
+/// Finite-difference state carried between samples.
+#[derive(Default)]
+struct Cursor {
+    t_s: f64,
+    compute_ns: u64,
+    flops: u64,
+    bytes: u64,
+    link_bytes: BTreeMap<(usize, usize), u64>,
+}
+
+fn sample(tel: &Telemetry, shared: &Shared, lanes: f64, prev: &mut Cursor) -> Sample {
+    let t_s = tel.elapsed_s();
+    let dt = (t_s - prev.t_s).max(1e-9);
+
+    let compute_ns = tel.phase_total_ns(Phase::Forward) + tel.phase_total_ns(Phase::Backward);
+    let mfu = (compute_ns.saturating_sub(prev.compute_ns)) as f64 * 1e-9 / (dt * lanes);
+
+    let flops = tel.flops_total();
+    let flops_per_s = flops.saturating_sub(prev.flops) as f64 / dt;
+
+    let comm = shared.fabric.core().snapshot();
+    let bytes_per_s = comm.bytes_sent.saturating_sub(prev.bytes) as f64 / dt;
+    let mut links = Vec::new();
+    let mut link_bytes = BTreeMap::new();
+    for l in &comm.links {
+        let key = (l.from, l.to);
+        let before = prev.link_bytes.get(&key).copied().unwrap_or(0);
+        let delta = l.bytes.saturating_sub(before);
+        if delta > 0 {
+            links.push(LinkRate { from: l.from, to: l.to, bytes_per_s: delta as f64 / dt });
+        }
+        link_bytes.insert(key, l.bytes);
+    }
+
+    let push_weight = shared.weights.iter().map(|w| w.get() as f64).sum();
+    let tau_mean = shared.staleness.snapshot().mean_tau();
+
+    *prev = Cursor { t_s, compute_ns, flops, bytes: comm.bytes_sent, link_bytes };
+    Sample {
+        t_s,
+        queue_depth: tel.queue_depth(),
+        mfu,
+        flops_per_s,
+        tau_mean,
+        push_weight,
+        bytes_per_s,
+        links,
+    }
+}

@@ -23,7 +23,7 @@
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 
 /// Elements per shard-kernel chunk: 4 KiB of f32 stack scratch, small enough
@@ -63,6 +63,9 @@ pub struct ShardPool {
     /// one channel per persistent helper thread (empty ⇒ serial pool)
     senders: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    /// run telemetry, installed by `Shared` after construction; sharded
+    /// traversals record a `ShardKernel` span on the dispatching caller
+    telemetry: OnceLock<Arc<crate::telemetry::Telemetry>>,
 }
 
 impl ShardPool {
@@ -90,7 +93,7 @@ impl ShardPool {
             senders.push(tx);
             handles.push(handle);
         }
-        Arc::new(ShardPool { senders, handles })
+        Arc::new(ShardPool { senders, handles, telemetry: OnceLock::new() })
     }
 
     /// The zero-helper pool: every `run` executes inline on the caller.
@@ -102,6 +105,12 @@ impl ShardPool {
     /// Total lanes (caller + helpers) — the effective `update_threads`.
     pub fn threads(&self) -> usize {
         self.senders.len() + 1
+    }
+
+    /// Install the run's telemetry recorder (called once by `Shared` right
+    /// after construction; later calls are no-ops).
+    pub fn install_telemetry(&self, tel: &Arc<crate::telemetry::Telemetry>) {
+        let _ = self.telemetry.set(Arc::clone(tel));
     }
 
     /// How many shards an `n`-element traversal splits into: 1 below the
@@ -129,6 +138,11 @@ impl ShardPool {
             f(0..n);
             return;
         }
+        // actually-sharded traversal: record it on the dispatching caller
+        let _sp = self
+            .telemetry
+            .get()
+            .map(|tel| tel.span(crate::telemetry::Phase::ShardKernel));
         let per = n.div_ceil(shards);
         let (ack_tx, ack_rx) = channel();
         let ctx: *const () = (&f as *const F).cast();

@@ -1,0 +1,180 @@
+//! Telemetry integration tests over the full session stack. These need
+//! `artifacts/` (run `make artifacts` or `make smoke` first) and auto-skip
+//! politely when the manifest is missing, mirroring `integration.rs`.
+
+use layup::config::{Algorithm, TrainConfig};
+use layup::manifest::Manifest;
+use layup::optim::{OptimKind, Schedule};
+use layup::session::SessionBuilder;
+use layup::telemetry::TelemetryConfig;
+use layup::util::json::Json;
+
+fn manifest() -> Option<Manifest> {
+    let dir = layup::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+fn pick_model(man: &Manifest) -> String {
+    if man.models.contains_key("mlpnet18") {
+        "mlpnet18".into()
+    } else {
+        man.models.keys().next().unwrap().clone()
+    }
+}
+
+fn quick_cfg(model: &str, algo: Algorithm, workers: usize, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(model, algo, workers, steps);
+    cfg.optim = OptimKind::sgd(0.9, 0.0);
+    cfg.schedule = Schedule::Constant { lr: 0.03 };
+    cfg.eval_every = (steps / 3).max(1);
+    cfg
+}
+
+/// Satellite (acceptance): telemetry is off by default and, when switched
+/// on, observes without perturbing — a deterministic lockstep run (DDP on
+/// the instant fabric is bit-identical run-to-run) produces the exact same
+/// loss curve with the recorder enabled, while only the enabled run
+/// records spans.
+#[test]
+fn telemetry_off_is_default_and_enabling_keeps_curves_bit_identical() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let cfg = quick_cfg(&model_name, Algorithm::Ddp, 2, 10);
+
+    let off = SessionBuilder::new(cfg.clone()).build(&man).unwrap().run().unwrap();
+    assert!(!off.stats.telemetry.enabled, "telemetry must be opt-in");
+    assert_eq!(off.stats.telemetry.spans, 0, "default run must record nothing");
+    assert_eq!(off.stats.telemetry.threads, 0);
+
+    let on = SessionBuilder::new(cfg)
+        .telemetry(TelemetryConfig {
+            enabled: true,
+            sample_every_ms: 5,
+            ..TelemetryConfig::default()
+        })
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(on.stats.telemetry.enabled);
+    assert!(on.stats.telemetry.spans > 0, "enabled run must record spans");
+    assert!(on.stats.telemetry.threads > 0);
+    assert!(on.stats.telemetry.samples > 0, "sampler must take at least the final sample");
+
+    assert_eq!(off.curve.points.len(), on.curve.points.len());
+    for (a, b) in off.curve.points.iter().zip(on.curve.points.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss, b.loss, "telemetry must observe, not perturb");
+    }
+
+    // the summary JSON carries the new flat keys
+    let j = on.to_json().dump();
+    for key in ["telemetry_spans", "telemetry_dropped"] {
+        assert!(j.contains(&format!("\"{key}\":")), "metrics JSON missing {key}");
+    }
+}
+
+/// A traced decoupled LayUp run covers the pipeline phases end-to-end and
+/// writes a parseable Chrome trace: spans on forward/backward pool tracks,
+/// queue waits, optimizer steps and gossip, every span inside a declared
+/// thread track.
+#[test]
+fn traced_decoupled_run_writes_chrome_trace_with_pipeline_phases() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let dir = std::env::temp_dir().join(format!("layup-telemetry-{}", std::process::id()));
+    let trace_path = dir.join("trace.json");
+
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, 12);
+    cfg.decoupled = true;
+    cfg.fwd_threads = 2;
+    cfg.bwd_threads = 1;
+    cfg.queue_depth = 2;
+    let summary = SessionBuilder::new(cfg)
+        .telemetry(TelemetryConfig {
+            enabled: true,
+            trace_path: Some(trace_path.clone()),
+            sample_every_ms: 5,
+            ..TelemetryConfig::default()
+        })
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(summary.stats.telemetry.spans > 0);
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace file written");
+    let doc = Json::parse(&text).expect("trace parses as JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+
+    let mut declared_tids = Vec::new();
+    let mut phases = Vec::new();
+    let mut counters = Vec::new();
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        match ph {
+            "M" if name == "thread_name" => {
+                declared_tids.push(e.get("tid").unwrap().as_f64().unwrap() as i64);
+            }
+            "X" => {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                // each track's thread_name metadata precedes its spans
+                let tid = e.get("tid").unwrap().as_f64().unwrap() as i64;
+                assert!(declared_tids.contains(&tid), "span tid {tid} has no track label");
+                if !phases.contains(&name) {
+                    phases.push(name);
+                }
+            }
+            "C" => {
+                if !counters.contains(&name) {
+                    counters.push(name);
+                }
+            }
+            _ => {}
+        }
+    }
+    for want in ["forward", "backward", "queue_wait", "opt_step", "gossip"] {
+        assert!(phases.iter().any(|p| p == want), "trace missing {want} spans: {phases:?}");
+    }
+    for want in ["mfu", "queue_depth"] {
+        assert!(counters.iter().any(|c| c == want), "trace missing {want} counter");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A serial checkpointed run covers the checkpoint phase (the decoupled
+/// engine rejects checkpointing, so this is the only route to it
+/// end-to-end) alongside the compute and gossip phases.
+#[test]
+fn serial_checkpointed_run_traces_checkpoint_phase() {
+    let Some(man) = manifest() else { return };
+    let model_name = pick_model(&man);
+    let dir = std::env::temp_dir().join(format!("layup-telemetry-ck-{}", std::process::id()));
+
+    let mut cfg = quick_cfg(&model_name, Algorithm::LayUp, 2, 12);
+    cfg.checkpoint_every = 6;
+    cfg.checkpoint_dir = dir.join("ck");
+    let summary = SessionBuilder::new(cfg)
+        .telemetry(TelemetryConfig { enabled: true, ..TelemetryConfig::default() })
+        .build(&man)
+        .unwrap()
+        .run()
+        .unwrap();
+    let phases: Vec<&str> = summary
+        .stats
+        .telemetry
+        .phases
+        .iter()
+        .filter(|p| p.count > 0)
+        .map(|p| p.name)
+        .collect();
+    for want in ["forward", "backward", "checkpoint", "gossip"] {
+        assert!(phases.contains(&want), "missing {want} in {phases:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
