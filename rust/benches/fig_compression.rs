@@ -10,9 +10,19 @@
 //! error feedback holds the loss curve while cutting wire traffic by
 //! roughly `4K/8` (sparse coords cost 8 bytes against 4 dense).
 //!
-//! Exit is non-zero when any non-dense run fails to reduce bytes at all —
-//! the CI compression-smoke job relies on this (and separately asserts the
-//! ≥4x top-k floor from bench_summary.json).
+//! After the base sweep, the LayUp rows are re-run with **step-frame
+//! coalescing** on (`[fabric] coalesce = true`): one `StepFrame` per step
+//! per link instead of one message per layer, headers amortized, and the
+//! top-k codec ranking the step's coordinates globally across layers
+//! instead of per layer. Those rows carry `coalesce`, `frames_per_step`,
+//! `header_bytes_saved`, `msg_reduction_vs_uncoalesced` and
+//! `loss_delta_vs_uncoalesced` (global-vs-per-layer top-k selection).
+//!
+//! Exit is non-zero when any non-dense run fails to reduce bytes at all,
+//! when a coalesced run reduces wire messages by less than half the mean
+//! frame width (`L/2` for an `L`-layer model), or when coalescing inflates
+//! wire bytes — the CI compression-smoke job relies on this (and
+//! separately asserts the ≥4x top-k floor from bench_summary.json).
 //!
 //! Environment knobs:
 //!   LAYUP_CODECS           comma-separated specs (default dense,topk:16,int8)
@@ -85,6 +95,9 @@ fn main() {
     let mut rows: Vec<Json> = Vec::new();
     let mut csv = String::from("algorithm,codec,bandwidth_mbps,wall_s,final_loss,comm_bytes\n");
     let mut no_reduction = false;
+    // LayUp base-sweep stats keyed (bandwidth bits, codec name): the
+    // uncoalesced side of the coalesce comparison below
+    let mut layup_base: Vec<((u64, String), (u64, u64, f64))> = Vec::new();
 
     for (label, algorithm, cluster) in cases {
         // dense baseline bytes per bandwidth point, set by the first codec
@@ -106,6 +119,12 @@ fn main() {
                 let bytes = sum.stats.comm.bytes_sent;
                 if codec.is_dense() {
                     dense_bytes.push((mbps.to_bits(), bytes));
+                }
+                if label == "layup" {
+                    layup_base.push((
+                        (mbps.to_bits(), codec.name()),
+                        (sum.stats.comm.msgs_sent, bytes, final_loss),
+                    ));
                 }
                 let baseline = dense_bytes
                     .iter()
@@ -152,6 +171,138 @@ fn main() {
         common::hr();
     }
 
+    // --- step-frame coalescing sweep: the LayUp rows again, coalesce on ---
+    // one StepFrame per step per link instead of one message per layer;
+    // compared against the uncoalesced LayUp runs captured above
+    println!("layup + step-frame coalescing ([fabric] coalesce = true)");
+    common::hr();
+    println!(
+        "{:<10} {:<8} {:>8} {:>9} {:>10} {:>12} {:>9} {:>9}",
+        "algorithm", "codec", "bw Mb/s", "wall (s)", "loss@bud", "comm bytes", "msgs cut", "frm/step"
+    );
+    let mut no_coalesce_win = false;
+    for &mbps in &bandwidths {
+        for codec in &codecs {
+            let mut cfg: TrainConfig = common::vision_cfg("mlpnet18", Algorithm::LayUp, steps);
+            cfg.cluster = TopologySpec::Flat;
+            cfg.codec = codec.clone();
+            cfg.coalesce = true;
+            cfg.eval_every = (steps / 6).max(1);
+            cfg.fabric = FabricSpec::Sim {
+                latency: LatencyDist::Constant(0.002),
+                bandwidth_bytes_per_s: mbps * 125_000.0,
+                drop_prob: 0.01,
+            };
+            let sum = common::run_one(&cfg, &man);
+            let final_loss = sum.curve.points.last().map(|p| p.loss).unwrap_or(f64::NAN);
+            let comm = &sum.stats.comm;
+            let frames = comm.frames_sent;
+            let mean_layers =
+                if frames > 0 { comm.frame_layers as f64 / frames as f64 } else { 0.0 };
+            // each frame pays one 32-byte wire header plus a 24-byte entry
+            // per layer instead of a 32-byte header per layer: 8L - 32 saved
+            let header_saved = (8 * comm.frame_layers).saturating_sub(32 * frames);
+            let frames_per_step = frames as f64 / sum.total_steps.max(1) as f64;
+            let base = layup_base
+                .iter()
+                .find(|((b, c), _)| *b == mbps.to_bits() && *c == codec.name())
+                .map(|&(_, v)| v);
+            let (msg_reduction, loss_delta, bytes_ok) = match base {
+                Some((m0, b0, l0)) if comm.msgs_sent > 0 => (
+                    m0 as f64 / comm.msgs_sent as f64,
+                    final_loss - l0,
+                    comm.bytes_sent <= b0,
+                ),
+                _ => (f64::NAN, f64::NAN, false),
+            };
+            // the coalescing contract: a step's L layer pushes collapse to
+            // ~1 frame, so wire messages must shrink by at least L/2, and
+            // the frame encoding must never inflate bytes over standalone
+            // pushes of the same mass
+            if frames == 0
+                || !(msg_reduction.is_finite() && msg_reduction >= mean_layers / 2.0)
+                || !bytes_ok
+            {
+                no_coalesce_win = true;
+            }
+            println!(
+                "{:<10} {:<8} {:>8} {:>9.2} {:>10.4} {:>12} {:>9} {:>9.2}",
+                "layup",
+                codec.name(),
+                mbps,
+                sum.total_time_s,
+                final_loss,
+                comm.bytes_sent,
+                if msg_reduction.is_finite() {
+                    format!("{msg_reduction:.1}x")
+                } else {
+                    "-".into()
+                },
+                frames_per_step,
+            );
+            csv.push_str(&format!(
+                "layup+frames,{},{mbps},{:.3},{final_loss:.5},{}\n",
+                codec.name(),
+                sum.total_time_s,
+                comm.bytes_sent,
+            ));
+            rows.push(obj(vec![
+                ("algorithm", s("layup")),
+                ("codec", s(&codec.name())),
+                ("bandwidth_mbps", num(mbps)),
+                ("coalesce", Json::Bool(true)),
+                ("wall_s", num(sum.total_time_s)),
+                ("final_loss", num(final_loss)),
+                ("comm_bytes", num(comm.bytes_sent as f64)),
+                ("comm_msgs", num(comm.msgs_sent as f64)),
+                ("frames_per_step", num(frames_per_step)),
+                ("mean_frame_layers", num(mean_layers)),
+                ("header_bytes_saved", num(header_saved as f64)),
+                (
+                    "msg_reduction_vs_uncoalesced",
+                    if msg_reduction.is_finite() { num(msg_reduction) } else { Json::Null },
+                ),
+                // global top-k (one ranking across the step) vs the
+                // uncoalesced per-layer selection at the same budget
+                (
+                    "loss_delta_vs_uncoalesced",
+                    if loss_delta.is_finite() { num(loss_delta) } else { Json::Null },
+                ),
+            ]));
+            // vs-dense reduction for the summary row: against the
+            // UNCOALESCED dense LayUp baseline, so the column stays
+            // comparable across the whole sweep
+            let dense_base = layup_base
+                .iter()
+                .find(|((b, c), _)| *b == mbps.to_bits() && c.as_str() == "dense")
+                .map(|&(_, (_, b0, _))| b0);
+            let reduction = match dense_base {
+                Some(d) if comm.bytes_sent > 0 => d as f64 / comm.bytes_sent as f64,
+                _ => f64::NAN,
+            };
+            let row_label = format!("layup-frames-{}-bw{mbps}", codec.name().replace(':', ""));
+            let mut srow = match codec_row(&row_label, codec, mbps, reduction, &sum) {
+                Json::Obj(m) => m,
+                _ => unreachable!("codec_row returns an object"),
+            };
+            srow.insert(
+                "bytes_reduction_vs_dense".into(),
+                if reduction.is_finite() { num(reduction) } else { Json::Null },
+            );
+            srow.insert("coalesce".into(), Json::Bool(true));
+            srow.insert("frames_per_step".into(), num(frames_per_step));
+            srow.insert("mean_frame_layers".into(), num(mean_layers));
+            srow.insert("header_bytes_saved".into(), num(header_saved as f64));
+            srow.insert("comm_msgs".into(), num(comm.msgs_sent as f64));
+            srow.insert(
+                "msg_reduction_vs_uncoalesced".into(),
+                if msg_reduction.is_finite() { num(msg_reduction) } else { Json::Null },
+            );
+            summary_rows.push(Json::Obj(srow));
+        }
+    }
+    common::hr();
+
     let dir = common::results_dir();
     std::fs::write(dir.join("fig_compression.json"), arr(rows).dump()).expect("write json");
     std::fs::write(dir.join("fig_compression.csv"), csv).expect("write csv");
@@ -159,6 +310,13 @@ fn main() {
     println!("wrote results/fig_compression.json");
     if no_reduction {
         eprintln!("FAIL: a non-dense codec inflated wire bytes over the dense baseline");
+        std::process::exit(1);
+    }
+    if no_coalesce_win {
+        eprintln!(
+            "FAIL: step-frame coalescing shipped no frames, cut wire messages by less \
+             than L/2, or inflated wire bytes over the uncoalesced run"
+        );
         std::process::exit(1);
     }
 }

@@ -1,6 +1,6 @@
 //! **§Perf CI gate** — diffs the kernel rows `perf_hotpath` just wrote to
 //! `results/bench_summary.json` against the committed baseline
-//! `BENCH_9.json` at the repo root, and exits non-zero when any kernel
+//! `BENCH_10.json` at the repo root, and exits non-zero when any kernel
 //! regressed past the tolerance.
 //!
 //! The comparison is machine-independent: each kernel's `wall_s` is divided
@@ -11,7 +11,7 @@
 //!
 //! Knobs:
 //!   LAYUP_BENCH_BASELINE  baseline JSON path (default: search for
-//!                         BENCH_9.json upward from the current directory)
+//!                         BENCH_10.json upward from the current directory)
 //!   LAYUP_GATE_TOL        allowed fractional regression (default 0.15)
 
 #[path = "common.rs"]
@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use layup::util::json::Json;
 
-const BASELINE_NAME: &str = "BENCH_9.json";
+const BASELINE_NAME: &str = "BENCH_10.json";
 const CALIBRATION: &str = "calibration_copy";
 
 fn baseline_path() -> PathBuf {

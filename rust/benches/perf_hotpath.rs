@@ -3,7 +3,7 @@
 //!      1/2/4): mix, sub_scaled, the fused update+mix, average_with and
 //!      delay-compensation — every row lands in
 //!      `results/bench_summary.json` and feeds the CI perf gate
-//!      (`cargo bench --bench perf_gate` vs the committed `BENCH_9.json`),
+//!      (`cargo bench --bench perf_gate` vs the committed `BENCH_10.json`),
 //!      alongside the codec wire kernels and the telemetry span recorder,
 //!   2. per-layer fwd/bwd executable latency (L2/L1 compute path),
 //!   3. parameter-upload cost with vs without the version cache,
@@ -143,8 +143,9 @@ fn kernel_section(reps: usize) -> Vec<Json> {
         rows.push(kernel_row(&format!("ef_add_residual_t{threads}"), ef, (n * 12) as f64));
     }
 
-    // top-k selection is pool-independent (a pure function of the values):
-    // one row, not one per thread count
+    // top-k selection: the result is a pure function of the values (identical
+    // at every thread count), so one row — timed on the widest pool, which is
+    // what the sharded quickselect is built to exploit
     let grad = {
         let mut seed = 0x70_70u64;
         (0..n)
@@ -154,8 +155,9 @@ fn kernel_section(reps: usize) -> Vec<Json> {
             })
             .collect::<Vec<f32>>()
     };
+    let topk_pool = ShardPool::new(4);
     let topk = time(reps, || {
-        black_box(kernels::top_k_indices(&grad, n / 16));
+        black_box(kernels::top_k_indices(&topk_pool, &grad, n / 16));
     });
     println!(
         "top_k select (k = n/16): {:.2} ms = {:.2} GB/s",
@@ -163,6 +165,35 @@ fn kernel_section(reps: usize) -> Vec<Json> {
         (n * 4) as f64 / topk / 1e9
     );
     rows.push(kernel_row("topk_select_k16", topk, (n * 4) as f64));
+
+    // step-frame coalescing (§Compression): `frame_build` is the per-flush
+    // assembly cost — concatenating L per-layer gradients into the single
+    // stream a StepFrame ships — and `frame_topk` is the whole-step global
+    // selection over that concatenation (ranks compete across layers, the
+    // coalesced replacement for L per-layer top-k calls)
+    let layers = 16usize;
+    let per_layer = n / layers;
+    let frame_vals: Vec<&[f32]> = grad.chunks(per_layer).collect();
+    let mut concat = vec![0.0f32; n];
+    let fb = time(reps, || {
+        let mut off = 0;
+        for v in &frame_vals {
+            concat[off..off + v.len()].copy_from_slice(v);
+            off += v.len();
+        }
+        black_box(&mut concat);
+    });
+    let ft = time(reps, || {
+        black_box(kernels::top_k_indices(&topk_pool, &concat, n / 16));
+    });
+    println!(
+        "frame build ({layers} layers): {:.2} ms = {:.2} GB/s   frame top-k: {:.2} ms",
+        1e3 * fb,
+        (n * 8) as f64 / fb / 1e9,
+        1e3 * ft
+    );
+    rows.push(kernel_row("frame_build", fb, (n * 8) as f64));
+    rows.push(kernel_row("frame_topk", ft, (n * 4) as f64));
 
     // telemetry span recorder (§Telemetry): guard open + close, two clock
     // reads and one ring-slot publish per span — the full per-span cost an

@@ -179,7 +179,8 @@ impl CodecSpec {
 /// residual.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct StreamKey {
-    /// payload wire tag (0..=6, the checkpoint numbering)
+    /// payload wire tag (0..=7, the blob numbering; 7 is the coalesced
+    /// step frame, whose single concatenated stream uses layer 0/tensor 0)
     pub tag: u8,
     pub layer: u32,
     pub tensor: u32,
@@ -367,6 +368,32 @@ fn build_blob(
                 let key = StreamKey { tag: 6, layer: *layer as u32, tensor: ti as u32 };
                 stream(&mut w, key, StreamClass::State, v);
             }
+        }
+        Payload::StepFrame { open, entries } => {
+            w.u8(7);
+            match open {
+                None => w.bool(false),
+                Some(f) => {
+                    w.bool(true);
+                    w.f32(*f);
+                }
+            }
+            w.u32(entries.len() as u32);
+            let mut concat: Vec<f32> = Vec::new();
+            for e in entries.iter() {
+                w.u32(e.layer as u32);
+                write_stamp(&mut w, &e.stamp);
+                w.u64(e.tau);
+                w.u32(e.values.len() as u32);
+                for v in e.values.iter() {
+                    concat.extend_from_slice(v);
+                }
+            }
+            // ONE stream over the whole step's concatenated gradient mass:
+            // top-k ranks coordinates globally across layers, and the codec
+            // pays its per-message setup once instead of once per layer
+            let key = StreamKey { tag: 7, layer: 0, tensor: 0 };
+            stream(&mut w, key, StreamClass::State, &concat);
         }
         // the restore path short-circuits in `Codec::encode`; a nested
         // Compressed here is a framing bug
@@ -568,6 +595,53 @@ impl Compressed {
                 }
                 Payload::ParamPull { layer, values: Arc::new(values), stamp }
             }
+            7 => {
+                let open = if r.bool()? { Some(r.f32()?) } else { None };
+                let ne = r.u32()? as usize;
+                if ne == 0 {
+                    bail!("StepFrame carries no entries");
+                }
+                // entry index table first (all-or-nothing: every layer id
+                // and tensor count validates before any value decodes)
+                let mut meta = Vec::with_capacity(ne);
+                let mut fill: Vec<f32> = Vec::new();
+                for _ in 0..ne {
+                    let layer = r.u32()? as usize;
+                    let stamp = read_stamp(&mut r)?;
+                    let tau = r.u64()?;
+                    let nt = r.u32()? as usize;
+                    let lp = params.layers.get(layer).context("StepFrame layer out of range")?;
+                    let held = lp.tensors.len();
+                    if nt != held {
+                        bail!("StepFrame entry carries {nt} tensors, layer {layer} holds {held}");
+                    }
+                    for t in &lp.tensors {
+                        fill.extend_from_slice(&t.state_dict());
+                    }
+                    meta.push((layer, stamp, tau));
+                }
+                // one stream over the step's concatenation, unsent
+                // coordinates filled from the receiver's own values
+                let flat = read_stream(&mut r, spec, pool, fill.len(), Base::Fill(&fill))?;
+                let mut off = 0usize;
+                let mut entries = Vec::with_capacity(ne);
+                for (layer, stamp, tau) in meta {
+                    let lp = &params.layers[layer];
+                    let mut values = Vec::with_capacity(lp.tensors.len());
+                    for t in &lp.tensors {
+                        let n = t.numel();
+                        values.push(flat[off..off + n].to_vec());
+                        off += n;
+                    }
+                    entries.push(crate::comm::FrameEntry {
+                        layer,
+                        stamp,
+                        tau,
+                        values: Arc::new(values),
+                    });
+                }
+                Payload::StepFrame { open, entries: Arc::new(entries) }
+            }
             tag => bail!("unknown compressed payload tag {tag}"),
         };
         r.done()?;
@@ -614,9 +688,9 @@ impl SparsifyCodec {
         n.div_ceil(self.k as usize).clamp(1, n)
     }
 
-    fn select(&self, y: &[f32], k: usize, seed: u64) -> Vec<u32> {
+    fn select(&self, pool: &ShardPool, y: &[f32], k: usize, seed: u64) -> Vec<u32> {
         if !self.rand {
-            return top_k_indices(y, k);
+            return top_k_indices(pool, y, k);
         }
         // Floyd's k-of-n sample: deterministic under the stream seed, and
         // drawn from the codec's own RNG — link dice are untouched
@@ -662,7 +736,7 @@ impl SparsifyCodec {
                 }
                 let mut y = vec![0.0f32; n];
                 add_residual(pool, x, r, &mut y);
-                let idxs = self.select(&y, k, ctx.seed);
+                let idxs = self.select(pool, &y, k, ctx.seed);
                 w.u32(n as u32);
                 w.u32(idxs.len() as u32);
                 w.u32s(&idxs);
@@ -673,7 +747,7 @@ impl SparsifyCodec {
                 }
             }
             StreamClass::State => {
-                let idxs = self.select(x, k, ctx.seed);
+                let idxs = self.select(pool, x, k, ctx.seed);
                 w.u32(n as u32);
                 w.u32(idxs.len() as u32);
                 w.u32s(&idxs);

@@ -29,20 +29,21 @@ impl InstantFabric {
     /// encode/decode numerics apply), so codec behavior is testable without
     /// a simulated clock.
     pub fn with_codec(m: usize, codec: Arc<dyn Codec>) -> InstantFabric {
-        InstantFabric { core: FabricCore::with_codec(m, codec) }
-    }
-}
-
-impl Fabric for InstantFabric {
-    fn core(&self) -> &FabricCore {
-        &self.core
+        InstantFabric::with_options(m, codec, false)
     }
 
-    fn is_instant(&self) -> bool {
-        true
+    /// An instant fabric with a codec and step-frame coalescing switch:
+    /// with `coalesce` on, consecutive `LayerPush`es buffer in the per-link
+    /// `FrameBuilder` and apply as one `StepFrame` when layer 0 closes the
+    /// step — the zero-delay way to test coalescing numerics.
+    pub fn with_options(m: usize, codec: Arc<dyn Codec>, coalesce: bool) -> InstantFabric {
+        InstantFabric { core: FabricCore::with_options(m, codec, coalesce) }
     }
 
-    fn push(
+    /// The seed-era synchronous push: encode, meter, apply on the sender's
+    /// thread. Both the public `push` (after coalescing) and `restore` land
+    /// here.
+    fn push_wire(
         &self,
         shared: &Shared,
         from: usize,
@@ -80,13 +81,54 @@ impl Fabric for InstantFabric {
             }
         }
     }
+}
+
+impl Fabric for InstantFabric {
+    fn core(&self) -> &FabricCore {
+        &self.core
+    }
+
+    fn is_instant(&self) -> bool {
+        true
+    }
+
+    fn push(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> PushOutcome {
+        if self.core.coalesce() && matches!(payload, Payload::LayerPush { .. }) {
+            // step-frame coalescing: buffer this layer in the link's frame
+            // builder; an intermediate push reports Queued, the layer-0
+            // close (and any stale-step flush) ships as one StepFrame
+            let mut last = PushOutcome::Queued;
+            for (fstep, frame) in self.core.coalesce_layer_push(from, to, step, payload) {
+                let open = frame.shipped_weight();
+                let out = self.push_wire(shared, from, to, fstep, frame);
+                if matches!(out, PushOutcome::Dropped | PushOutcome::Busy) && open > 0.0 {
+                    // the frame owns the step's opening weight — hoisted out
+                    // of a push the caller already saw Queued for — so the
+                    // fabric must refund it; the caller cannot
+                    shared.weights[from].reclaim(open);
+                }
+                last = out;
+            }
+            return last;
+        }
+        self.push_wire(shared, from, to, step, payload)
+    }
 
     fn deliver_due(&self, _shared: &Shared, _wid: usize, _recv_step: usize) -> usize {
         0 // nothing is ever queued
     }
 
-    fn drain(&self, _wid: usize) -> Vec<InFlight> {
-        Vec::new() // nothing is ever in flight
+    fn drain(&self, wid: usize) -> Vec<InFlight> {
+        // nothing ever queues on the links; only open frame builders hold
+        // not-yet-shipped state (coalescing runs only)
+        self.core.drain_frames_to(wid)
     }
 
     fn restore(&self, shared: &Shared, msgs: Vec<InFlight>) {
@@ -199,6 +241,137 @@ mod tests {
         let out = fabric.push(&shared, 0, 1, 1, Payload::GradShare { set: Arc::new(set) });
         assert_eq!(out, PushOutcome::Dropped);
         assert!(fabric.core().latest_grads(1, 0).is_none());
+    }
+
+    /// A 2-worker Shared with `layers` single-tensor layers of `dim` values
+    /// each (worker w starts at `w`), for the coalescing tests.
+    fn layered_shared(fabric: Arc<dyn Fabric>, layers: usize, dim: usize) -> Arc<Shared> {
+        let params = (0..2)
+            .map(|w| {
+                Arc::new(ModelParams {
+                    layers: (0..layers)
+                        .map(|_| {
+                            LayerParams::new(vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                                &[dim],
+                                vec![w as f32; dim],
+                            ))])
+                        })
+                        .collect(),
+                })
+            })
+            .collect();
+        Shared::for_tests(params, fabric)
+    }
+
+    fn layer_push(layer: usize, open: Option<f32>, dim: usize) -> Payload {
+        Payload::LayerPush {
+            layer,
+            open,
+            values: Arc::new(vec![vec![4.0; dim]]),
+            stamp: crate::tensor::clock::ClockStamp { worker: 0, step: 9, version: 1 },
+            tau: 0,
+        }
+    }
+
+    /// Tentpole semantics on the zero-delay transport: with coalescing on,
+    /// a step's layer pushes buffer (Queued, receiver untouched) until the
+    /// layer-0 close applies them all as ONE wire message whose size is the
+    /// frame arithmetic (one header + 24 bytes per layer), with a single
+    /// push-sum handshake for the step.
+    #[test]
+    fn coalesced_step_applies_as_one_frame() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::with_options(
+            2,
+            Arc::new(crate::comm::codec::DenseCodec),
+            true,
+        ));
+        assert!(!fabric.fused_gossip(), "--coalesce must never be a silent no-op");
+        let shared = layered_shared(Arc::clone(&fabric), 3, 2);
+        let shipped = shared.weights[0].halve(); // 0.5 -> ships 0.25
+        assert_eq!(
+            fabric.push(&shared, 0, 1, 9, layer_push(2, Some(shipped), 2)),
+            PushOutcome::Queued
+        );
+        assert_eq!(fabric.push(&shared, 0, 1, 9, layer_push(1, None, 2)), PushOutcome::Queued);
+        assert_eq!(shared.params[1].flatten(), vec![1.0; 6], "nothing applied while buffering");
+        assert_eq!(fabric.core().snapshot().msgs_sent, 0);
+
+        assert_eq!(fabric.push(&shared, 0, 1, 9, layer_push(0, None, 2)), PushOutcome::Delivered);
+        // one handshake: frac = 0.25 / (0.5 + 0.25), every layer mixed by it
+        let frac = 0.25f32 / 0.75;
+        let want = (1.0 - frac) * 1.0 + frac * 4.0;
+        for v in shared.params[1].flatten() {
+            assert!((v - want).abs() < 1e-6, "{v} vs {want}");
+        }
+        // every layer carries the sender's provenance stamp
+        for l in &shared.params[1].layers {
+            let s = l.clock.stamp();
+            assert_eq!((s.worker, s.step), (0, 9));
+        }
+        let stats = fabric.core().snapshot();
+        assert_eq!(stats.msgs_sent, 1, "three pushes, ONE wire message");
+        assert_eq!(stats.bytes_sent, wire_bytes(6) + 3 * crate::comm::FRAME_ENTRY_BYTES);
+        assert_eq!(fabric.core().frame_counters(), (1, 3));
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-6, "push-sum mass conserved: {total}");
+    }
+
+    /// A busy receiver rejects the frame at its one handshake; the fabric —
+    /// not the caller, who saw only Queued outcomes — must refund the
+    /// opening weight it hoisted into the frame.
+    #[test]
+    fn coalesced_busy_frame_refunds_hoisted_weight() {
+        let fabric: Arc<dyn Fabric> = Arc::new(InstantFabric::with_options(
+            2,
+            Arc::new(crate::comm::codec::DenseCodec),
+            true,
+        ));
+        let shared = layered_shared(Arc::clone(&fabric), 2, 2);
+        // claim worker 1's accept slot so the frame's handshake finds it busy
+        assert!(shared.weights[1].try_accept(0.0).is_some());
+        let shipped = shared.weights[0].halve();
+        assert_eq!(
+            fabric.push(&shared, 0, 1, 3, layer_push(1, Some(shipped), 2)),
+            PushOutcome::Queued
+        );
+        assert_eq!(fabric.push(&shared, 0, 1, 3, layer_push(0, None, 2)), PushOutcome::Busy);
+        shared.weights[1].release();
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-6, "hoisted weight refunded: {total}");
+        assert_eq!(shared.params[1].flatten(), vec![1.0; 4], "busy frame never applies");
+    }
+
+    /// Parity pin for the default: a `coalesce = false` fabric is the seed
+    /// path bit-for-bit — same outcome, same byte accounting, same receiver
+    /// values as the pre-coalescing constructor, frames never engaged, and
+    /// the fused instant gossip fast path stays on.
+    #[test]
+    fn coalesce_off_is_bit_identical_to_the_seed_path() {
+        let old: Arc<dyn Fabric> =
+            Arc::new(InstantFabric::with_codec(2, Arc::new(crate::comm::codec::DenseCodec)));
+        let new: Arc<dyn Fabric> = Arc::new(InstantFabric::with_options(
+            2,
+            Arc::new(crate::comm::codec::DenseCodec),
+            false,
+        ));
+        assert!(old.fused_gossip() && new.fused_gossip());
+        let mut results: Vec<Vec<u32>> = Vec::new();
+        for fabric in [&old, &new] {
+            let shared = layered_shared(Arc::clone(fabric), 2, 2);
+            let shipped = shared.weights[0].halve();
+            assert_eq!(
+                fabric.push(&shared, 0, 1, 2, layer_push(1, Some(shipped), 2)),
+                PushOutcome::Delivered,
+                "without coalescing every push applies immediately"
+            );
+            assert_eq!(fabric.push(&shared, 0, 1, 2, layer_push(0, None, 2)), PushOutcome::Delivered);
+            assert_eq!(fabric.core().frame_counters(), (0, 0), "builders never engaged");
+            let stats = fabric.core().snapshot();
+            assert_eq!(stats.msgs_sent, 2);
+            assert_eq!(stats.bytes_sent, 2 * wire_bytes(2));
+            results.push(shared.params[1].flatten().iter().map(|v| v.to_bits()).collect());
+        }
+        assert_eq!(results[0], results[1], "coalesce=false must be the seed path bit-for-bit");
     }
 
     #[test]

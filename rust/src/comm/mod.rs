@@ -67,6 +67,28 @@ pub fn wire_bytes(floats: usize) -> u64 {
     32 + 4 * floats as u64
 }
 
+/// Per-layer index cost inside a coalesced [`Payload::StepFrame`]: layer id,
+/// provenance stamp and τ packed into 24 bytes. The amortization win of
+/// coalescing is exactly `32 − 24 = 8` bytes per layer plus the `L − 1`
+/// saved headers' worth of per-message fixed costs (codec setup, one
+/// delivery event instead of `L`).
+pub const FRAME_ENTRY_BYTES: u64 = 24;
+
+/// One layer's slot in a coalesced [`Payload::StepFrame`]: the fields a
+/// standalone [`Payload::LayerPush`] would carry, minus the per-message
+/// header (`open` is hoisted to the frame — at most one opening per step).
+#[derive(Clone)]
+pub struct FrameEntry {
+    /// layer index in the receiver's store
+    pub layer: usize,
+    /// the sender's post-update staleness-clock stamp of this layer
+    pub stamp: ClockStamp,
+    /// sender-observed delay τ of the gradient behind this layer's push
+    pub tau: u64,
+    /// the layer's parameter tensors, flattened per parameter
+    pub values: Arc<Vec<Vec<f32>>>,
+}
+
 /// One unit of inter-worker traffic. Gossip payloads mutate the receiver's
 /// parameter store on delivery; share payloads land in per-link mailboxes
 /// read by the collective algorithms.
@@ -152,6 +174,20 @@ pub enum Payload {
         /// shard-version provenance
         stamp: ClockStamp,
     },
+    /// LayUp with `[fabric] coalesce = true`: one worker's **whole step** of
+    /// layer pushes on one link, coalesced by the fabric's per-link
+    /// [`FrameBuilder`](FabricCore) into a single wire message. Pays one
+    /// header plus a 24-byte index slot per layer (instead of one 32-byte
+    /// header per layer), crosses the codec **once** over the concatenated
+    /// gradient mass (so `topk:K` ranks coordinates globally across layers),
+    /// and lands as one delivery event. `open` is the step's push-sum
+    /// opening weight, hoisted out of the first (deepest) entry.
+    StepFrame {
+        /// shipped push-sum weight for the whole step (one handshake)
+        open: Option<f32>,
+        /// per-layer slots in push order (deepest first, layer 0 closes)
+        entries: Arc<Vec<FrameEntry>>,
+    },
     /// A codec-encoded message (`[fabric] codec != "dense"`): the installed
     /// [`codec::Codec`] wraps every outgoing payload at the fabric boundary,
     /// and `apply` decodes it back before dispatching. Push-sum metadata
@@ -186,6 +222,15 @@ impl Payload {
                         .unwrap_or(0)
             }
             Payload::ParamPull { values, .. } => values.iter().map(|v| v.len()).sum(),
+            Payload::StepFrame { entries, .. } => {
+                // one header for the frame + a 24-byte index slot per layer —
+                // the header-amortization arithmetic the coalescing tests pin
+                let floats: usize = entries
+                    .iter()
+                    .map(|e| e.values.iter().map(|v| v.len()).sum::<usize>())
+                    .sum();
+                return wire_bytes(floats) + FRAME_ENTRY_BYTES * entries.len() as u64;
+            }
             Payload::Compressed(c) => return c.encoded_len(),
         };
         wire_bytes(floats)
@@ -199,9 +244,10 @@ impl Payload {
     /// encode time).
     pub fn droppable(&self) -> bool {
         match self {
-            Payload::LayerPush { .. } | Payload::ModelPush { .. } | Payload::PairAverage { .. } => {
-                true
-            }
+            Payload::LayerPush { .. }
+            | Payload::StepFrame { .. }
+            | Payload::ModelPush { .. }
+            | Payload::PairAverage { .. } => true,
             Payload::Compressed(c) => c.droppable,
             _ => false,
         }
@@ -210,7 +256,9 @@ impl Payload {
     /// Push-sum weight mass this message carries while in flight.
     pub fn shipped_weight(&self) -> f32 {
         match self {
-            Payload::LayerPush { open, .. } => open.unwrap_or(0.0),
+            Payload::LayerPush { open, .. } | Payload::StepFrame { open, .. } => {
+                open.unwrap_or(0.0)
+            }
             Payload::ModelPush { w_in, .. } => *w_in,
             Payload::Compressed(c) => c.shipped_w,
             _ => 0.0,
@@ -411,10 +459,12 @@ impl FabricSpec {
 }
 
 /// Construct the configured transport for an `m`-worker run, with `codec`
-/// installed at the boundary (identity for [`CodecSpec::Dense`]).
+/// installed at the boundary (identity for [`CodecSpec::Dense`]) and
+/// step-frame `coalesce`ing on or off (`[fabric] coalesce`, default off).
 pub fn build_fabric(
     spec: &FabricSpec,
     codec_spec: &CodecSpec,
+    coalesce: bool,
     m: usize,
     seed: u64,
 ) -> Arc<dyn Fabric> {
@@ -422,15 +472,16 @@ pub fn build_fabric(
     // must not perturb the link dice (latency, drops) of the run
     let codec = codec_spec.build(m, seed ^ 0xc0dec);
     match spec {
-        FabricSpec::Instant => Arc::new(InstantFabric::with_codec(m, codec)),
+        FabricSpec::Instant => Arc::new(InstantFabric::with_options(m, codec, coalesce)),
         FabricSpec::Sim { latency, bandwidth_bytes_per_s, drop_prob } => {
-            Arc::new(SimFabric::with_codec(
+            Arc::new(SimFabric::with_options(
                 latency.clone(),
                 *bandwidth_bytes_per_s,
                 *drop_prob,
                 m,
                 seed,
                 codec,
+                coalesce,
             ))
         }
     }
@@ -453,9 +504,12 @@ pub trait Fabric: Send + Sync {
     /// non-dense codec must see every payload at the push boundary, so it
     /// forces even instant runs onto the generic payload path (intra-node
     /// shared-memory traffic — hierarchical tier 1 — stays fused: it models
-    /// one node's internal bus, which no wire codec touches).
+    /// one node's internal bus, which no wire codec touches). Step-frame
+    /// coalescing likewise lives at the push boundary, so enabling it also
+    /// routes instant runs through payloads — `--coalesce` is never a
+    /// silent no-op.
     fn fused_gossip(&self) -> bool {
-        self.is_instant() && self.core().codec().spec().is_dense()
+        self.is_instant() && self.core().codec().spec().is_dense() && !self.core().coalesce()
     }
 
     /// Ship one message from worker `from` to worker `to`. `step` is the
@@ -512,6 +566,24 @@ struct ShareSlot {
     params: Option<(usize, Arc<Vec<f32>>)>,
 }
 
+/// One link's open coalescing frame: the [`Payload::LayerPush`]es of one
+/// (sender, step) accumulated at the fabric boundary, waiting for the
+/// step's closing layer-0 push to flush as a single [`Payload::StepFrame`].
+struct FrameBuilder {
+    /// sender step every buffered entry belongs to
+    step: usize,
+    /// push-sum weight taken from the step's opening push
+    open: Option<f32>,
+    /// buffered layers in push order (deepest first)
+    entries: Vec<FrameEntry>,
+}
+
+impl FrameBuilder {
+    fn into_payload(self) -> (usize, Payload) {
+        (self.step, Payload::StepFrame { open: self.open, entries: Arc::new(self.entries) })
+    }
+}
+
 /// State shared by every fabric implementation: per-link traffic counters,
 /// collective-share mailboxes, and the per-receiver mixing-fraction table
 /// that multi-message (layer-wise) pushes key by `(sender, step)`.
@@ -533,6 +605,16 @@ pub struct FabricCore {
     /// the compression codec every push crosses ([`codec::DenseCodec`] is
     /// the identity default)
     codec: Arc<dyn Codec>,
+    /// step-frame coalescing enabled (`[fabric] coalesce = true`)
+    coalesce: bool,
+    /// per-link open frames, indexed `from * m + to`; only engaged when
+    /// `coalesce` is set (the default-off path never touches these locks)
+    frames: Vec<Mutex<Option<FrameBuilder>>>,
+    /// coalesced frames flushed to the wire
+    frames_sent: AtomicU64,
+    /// layer pushes absorbed into those frames (for `frames_per_step` /
+    /// `header_bytes_saved` reporting)
+    frame_layers: AtomicU64,
 }
 
 impl FabricCore {
@@ -543,6 +625,11 @@ impl FabricCore {
 
     /// Fresh core with a compression codec installed at the boundary.
     pub fn with_codec(m: usize, codec: Arc<dyn Codec>) -> FabricCore {
+        FabricCore::with_options(m, codec, false)
+    }
+
+    /// Fresh core with a codec and the step-frame coalescing switch.
+    pub fn with_options(m: usize, codec: Arc<dyn Codec>, coalesce: bool) -> FabricCore {
         FabricCore {
             m,
             links: (0..m * m).map(|_| LinkCounters::default()).collect(),
@@ -551,12 +638,111 @@ impl FabricCore {
             membership: Arc::new(Membership::new(m)),
             roles: OnceLock::new(),
             codec,
+            coalesce,
+            frames: (0..m * m).map(|_| Mutex::new(None)).collect(),
+            frames_sent: AtomicU64::new(0),
+            frame_layers: AtomicU64::new(0),
         }
     }
 
     /// The installed compression codec.
     pub fn codec(&self) -> &Arc<dyn Codec> {
         &self.codec
+    }
+
+    /// Is step-frame coalescing enabled on this fabric?
+    pub fn coalesce(&self) -> bool {
+        self.coalesce
+    }
+
+    /// Feed one [`Payload::LayerPush`] into the link's frame builder and
+    /// return the frames that must ship **now** as `(step, payload)` pairs:
+    /// a stale frame flushed because the sender moved to a new step (crash
+    /// or skip left the old step open), and/or the frame this layer-0 push
+    /// just closed. An absorbed intermediate push returns an empty vec —
+    /// the transport reports [`PushOutcome::Queued`] for it. Non-LayerPush
+    /// payloads are handed back unchanged.
+    pub(crate) fn coalesce_layer_push(
+        &self,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> Vec<(usize, Payload)> {
+        let Payload::LayerPush { layer, open, values, stamp, tau } = payload else {
+            return vec![(step, payload)];
+        };
+        let mut slot = self.frames[from * self.m + to].lock().unwrap();
+        let mut out = Vec::new();
+        if slot.as_ref().is_some_and(|fb| fb.step != step) {
+            out.push(self.flush_frame(slot.take().unwrap()));
+        }
+        let fb = slot.get_or_insert_with(|| FrameBuilder { step, open: None, entries: Vec::new() });
+        if let Some(w) = open {
+            // at most one opening per step in practice; summing is the
+            // mass-conserving answer if a sender ever opens twice
+            fb.open = Some(fb.open.unwrap_or(0.0) + w);
+        }
+        fb.entries.push(FrameEntry { layer, stamp, tau, values });
+        if layer == 0 {
+            out.push(self.flush_frame(slot.take().unwrap()));
+        }
+        out
+    }
+
+    fn flush_frame(&self, fb: FrameBuilder) -> (usize, Payload) {
+        self.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.frame_layers.fetch_add(fb.entries.len() as u64, Ordering::Relaxed);
+        fb.into_payload()
+    }
+
+    /// Flush every open frame headed to `wid` out of the builders (checkpoint
+    /// quiesce / crash reclaim — the companion of [`Fabric::drain`]). The
+    /// partial frames become ordinary in-flight messages with zero remaining
+    /// delay, so drain/restore conserves their clock provenance and push-sum
+    /// mass exactly like queued traffic.
+    pub(crate) fn drain_frames_to(&self, wid: usize) -> Vec<InFlight> {
+        if !self.coalesce {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for from in 0..self.m {
+            let mut slot = self.frames[from * self.m + wid].lock().unwrap();
+            if let Some(fb) = slot.take() {
+                // no counter bump: the frame never reached the wire — it is
+                // checkpoint state, and restore re-injects it as traffic
+                let (step, payload) = fb.into_payload();
+                out.push(InFlight { from, to: wid, step, remaining_s: 0.0, payload });
+            }
+        }
+        out
+    }
+
+    /// Push-sum weight currently held by open (unflushed) frame builders —
+    /// part of the conserved in-flight mass alongside queued messages.
+    pub fn frame_open_mass(&self) -> f64 {
+        if !self.coalesce {
+            return 0.0;
+        }
+        self.frames
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .as_ref()
+                    .and_then(|fb| fb.open)
+                    .unwrap_or(0.0) as f64
+            })
+            .sum()
+    }
+
+    /// `(frames flushed, layer pushes absorbed into them)` so far — feeds
+    /// the `frames_per_step` / `header_bytes_saved` bench columns.
+    pub fn frame_counters(&self) -> (u64, u64) {
+        (
+            self.frames_sent.load(Ordering::Relaxed),
+            self.frame_layers.load(Ordering::Relaxed),
+        )
     }
 
     /// Number of workers this fabric connects.
@@ -721,7 +907,8 @@ impl FabricCore {
 
     /// Aggregate the per-link counters into a [`CommStats`] snapshot.
     pub fn snapshot(&self) -> CommStats {
-        let mut stats = CommStats::default();
+        let (frames_sent, frame_layers) = self.frame_counters();
+        let mut stats = CommStats { frames_sent, frame_layers, ..CommStats::default() };
         for from in 0..self.m {
             for to in 0..self.m {
                 let l = self.link(from, to);
@@ -811,6 +998,15 @@ fn payload_shape_ok(shared: &Shared, wid: usize, payload: &Payload) -> bool {
             values.len() == lp.tensors.len()
                 && values.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
         }
+        Payload::StepFrame { entries, .. } => {
+            !entries.is_empty()
+                && entries.iter().all(|e| {
+                    model.layers.get(e.layer).is_some_and(|lp| {
+                        e.values.len() == lp.tensors.len()
+                            && e.values.iter().zip(&lp.tensors).all(|(v, t)| v.len() == t.numel())
+                    })
+                })
+        }
         // compressed payloads decode (with their own all-or-nothing
         // validation) before this gate; one reaching it is a framing bug
         Payload::Compressed(_) => false,
@@ -894,6 +1090,60 @@ pub(crate) fn apply(
                 .clock
                 .record(stamp.worker as usize, stamp.step as usize);
             if *layer == 0 {
+                core.clear_frac(wid, from, step);
+            }
+            ApplyResult::Applied { reply: None }
+        }
+        Payload::StepFrame { open, entries } => {
+            // one push-sum handshake for the whole step
+            let frac = match open {
+                Some(w_in) => match shared.weights[wid].try_accept(*w_in) {
+                    None => return ApplyResult::Busy,
+                    Some(frac) => {
+                        shared.weights[wid].release();
+                        // a frame normally carries the whole step, but a
+                        // mid-step drain/restore can split one step across
+                        // two frames — record the fraction so the closing
+                        // half still mixes (cleared below when layer 0 lands)
+                        core.set_frac(wid, from, step, frac);
+                        shared
+                            .events
+                            .emit(TrainEvent::GossipApplied { worker: from, peer: wid, step });
+                        frac
+                    }
+                },
+                // a weightless frame (opening mass reclaimed sender-side, or
+                // the closing half of a split step): fall back to an
+                // established fraction, else defer — same semantics as a
+                // follower LayerPush without its opener
+                None => match core.get_frac(wid, from, step) {
+                    Some(f) => f,
+                    None => return ApplyResult::Applied { reply: None },
+                },
+            };
+            for e in entries.iter() {
+                let f = match shared.staleness_cfg.mixing {
+                    Mixing::Adaptive => {
+                        crate::algorithms::attenuate_frac(frac, e.tau, shared.staleness_cfg.mix_beta)
+                    }
+                    Mixing::Fixed => frac,
+                };
+                for (ti, vals) in e.values.iter().enumerate() {
+                    shared.params[wid].layers[e.layer].tensors[ti].mix_from_sharded(
+                        1.0 - f,
+                        f,
+                        vals,
+                        &shared.update_pool,
+                    );
+                }
+                shared.params[wid].layers[e.layer]
+                    .clock
+                    .record(e.stamp.worker as usize, e.stamp.step as usize);
+            }
+            // layer 0 closes the step (exactly like a standalone LayerPush):
+            // only then does the fraction-table entry retire — a split
+            // step's closing frame can still find it
+            if entries.iter().any(|e| e.layer == 0) {
                 core.clear_frac(wid, from, step);
             }
             ApplyResult::Applied { reply: None }
@@ -1172,6 +1422,37 @@ mod tests {
         assert!(!share.droppable(), "collective shares are reliable");
         assert_eq!(share.shipped_weight(), 0.0);
 
+        // a coalesced step frame pays ONE header plus a 24-byte index slot
+        // per layer — not one 32-byte header per layer. Three layers of 12
+        // floats: 32 + 4·36 + 3·24 on the wire, vs 3·(32 + 4·12) uncoalesced.
+        let entry = |layer: usize| FrameEntry {
+            layer,
+            stamp: crate::tensor::clock::ClockStamp::default(),
+            tau: 0,
+            values: Arc::new(vec![vec![0.0; 10], vec![0.0; 2]]),
+        };
+        let frame = Payload::StepFrame {
+            open: Some(0.25),
+            entries: Arc::new(vec![entry(2), entry(1), entry(0)]),
+        };
+        assert_eq!(frame.encoded_len(), wire_bytes(36) + 3 * FRAME_ENTRY_BYTES);
+        // header amortization arithmetic: the saving is 32 − 24 = 8 bytes
+        // per layer minus the frame's own 32-byte header — net positive once
+        // a step spans more than 4 layers (3 layers still pay 8 bytes extra)
+        assert_eq!(frame.encoded_len() - 3 * wire_bytes(12), 32 - 3 * 8);
+        let wide = Payload::StepFrame {
+            open: None,
+            entries: Arc::new((0..8).rev().map(entry).collect()),
+        };
+        assert_eq!(wide.encoded_len(), wire_bytes(96) + 8 * FRAME_ENTRY_BYTES);
+        assert!(
+            wide.encoded_len() < 8 * wire_bytes(12),
+            "an 8-layer frame must beat 8 standalone headers"
+        );
+        assert!(frame.droppable(), "frames inherit LayerPush's droppability");
+        assert_eq!(frame.shipped_weight(), 0.25);
+        assert_eq!(wide.shipped_weight(), 0.0);
+
         // a compressed payload meters its encoded size and carries the
         // inner payload's drop/weight metadata in the clear
         let packed = Payload::Compressed(Compressed {
@@ -1230,5 +1511,88 @@ mod tests {
         assert_eq!(core.get_frac(0, 1, 100), None);
 
         assert_eq!(core.snapshot().msgs_sent, 0);
+    }
+
+    fn lp(layer: usize, step: usize, open: Option<f32>) -> Payload {
+        Payload::LayerPush {
+            layer,
+            open,
+            values: Arc::new(vec![vec![layer as f32; 2]]),
+            stamp: ClockStamp { worker: 0, step: step as u64, version: 1 + layer as u64 },
+            tau: 0,
+        }
+    }
+
+    /// The frame builder's whole lifecycle: intermediate pushes absorb
+    /// (empty flush list), the layer-0 close ships one `StepFrame` holding
+    /// every buffered layer in push order with the opening weight hoisted,
+    /// and the counters meter exactly what reached the wire.
+    #[test]
+    fn frame_builder_buffers_until_layer_zero_closes() {
+        let core = FabricCore::with_options(2, Arc::new(codec::DenseCodec), true);
+        assert!(core.coalesce());
+        assert!(core.coalesce_layer_push(0, 1, 5, lp(2, 5, Some(0.25))).is_empty());
+        assert!(core.coalesce_layer_push(0, 1, 5, lp(1, 5, None)).is_empty());
+        assert!((core.frame_open_mass() - 0.25).abs() < 1e-9, "builder holds the opening mass");
+        assert_eq!(core.frame_counters(), (0, 0), "nothing reached the wire yet");
+        let mut out = core.coalesce_layer_push(0, 1, 5, lp(0, 5, None));
+        assert_eq!(out.len(), 1);
+        let (step, payload) = out.pop().unwrap();
+        assert_eq!(step, 5);
+        let Payload::StepFrame { open, entries } = payload else {
+            panic!("layer 0 must close the frame");
+        };
+        assert_eq!(open, Some(0.25));
+        let layers: Vec<usize> = entries.iter().map(|e| e.layer).collect();
+        assert_eq!(layers, vec![2, 1, 0], "push order (deepest first) preserved");
+        assert_eq!(entries[0].stamp.version, 3, "entry stamps ride unchanged");
+        assert_eq!(core.frame_open_mass(), 0.0);
+        assert_eq!(core.frame_counters(), (1, 3));
+        // non-LayerPush traffic passes through untouched
+        let thru = core.coalesce_layer_push(0, 1, 6, Payload::ParamShare { flat: Arc::new(vec![]) });
+        assert_eq!(thru.len(), 1);
+        assert!(matches!(thru[0].1, Payload::ParamShare { .. }));
+    }
+
+    /// A sender that moved to a new step with the old step's frame still
+    /// open (crash, skip, lost close) flushes the stale frame first — its
+    /// mass and layers ship late rather than leaking in the builder.
+    #[test]
+    fn frame_builder_flushes_stale_step_before_starting_the_next() {
+        let core = FabricCore::with_options(2, Arc::new(codec::DenseCodec), true);
+        assert!(core.coalesce_layer_push(0, 1, 5, lp(2, 5, Some(0.25))).is_empty());
+        let out = core.coalesce_layer_push(0, 1, 6, lp(2, 6, Some(0.125)));
+        assert_eq!(out.len(), 1, "the stale step-5 frame flushes");
+        assert_eq!(out[0].0, 5);
+        assert!((out[0].1.shipped_weight() - 0.25).abs() < 1e-9);
+        assert!((core.frame_open_mass() - 0.125).abs() < 1e-9, "step 6 is building");
+        // closing step 6 ships the second frame
+        let out = core.coalesce_layer_push(0, 1, 6, lp(0, 6, None));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 6);
+        assert_eq!(core.frame_counters(), (2, 3));
+    }
+
+    /// The checkpoint companion: `drain_frames_to` empties every builder
+    /// aimed at the worker into zero-delay in-flight frames (conserving the
+    /// open mass) without bumping the wire counters — builder state is
+    /// checkpoint state, not traffic.
+    #[test]
+    fn drain_frames_to_conserves_builder_state_without_counting_traffic() {
+        let core = FabricCore::with_options(3, Arc::new(codec::DenseCodec), true);
+        assert!(core.coalesce_layer_push(0, 2, 7, lp(1, 7, Some(0.5))).is_empty());
+        assert!(core.coalesce_layer_push(1, 2, 3, lp(2, 3, None)).is_empty());
+        assert!(core.drain_frames_to(0).is_empty(), "no builder aims at worker 0");
+        let drained = core.drain_frames_to(2);
+        assert_eq!(drained.len(), 2);
+        for f in &drained {
+            assert_eq!(f.to, 2);
+            assert_eq!(f.remaining_s, 0.0);
+            assert!(matches!(f.payload, Payload::StepFrame { .. }));
+        }
+        let total: f32 = drained.iter().map(|f| f.payload.shipped_weight()).sum();
+        assert!((total - 0.5).abs() < 1e-9, "drained frames carry the open mass");
+        assert_eq!(core.frame_open_mass(), 0.0, "builders emptied");
+        assert_eq!(core.frame_counters(), (0, 0), "drain is not wire traffic");
     }
 }

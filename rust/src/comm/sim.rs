@@ -89,8 +89,25 @@ impl SimFabric {
         seed: u64,
         codec: Arc<dyn Codec>,
     ) -> SimFabric {
+        SimFabric::with_options(latency, bandwidth_bytes_per_s, drop_prob, m, seed, codec, false)
+    }
+
+    /// A simulated fabric with a codec **and** the step-frame coalescing
+    /// switch: with `coalesce` on, consecutive `LayerPush`es on a link
+    /// buffer in its `FrameBuilder` and hit the wire as one `StepFrame` —
+    /// one header, one codec pass, one serialization/delivery event.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_options(
+        latency: LatencyDist,
+        bandwidth_bytes_per_s: f64,
+        drop_prob: f64,
+        m: usize,
+        seed: u64,
+        codec: Arc<dyn Codec>,
+        coalesce: bool,
+    ) -> SimFabric {
         SimFabric {
-            core: FabricCore::with_codec(m, codec),
+            core: FabricCore::with_options(m, codec, coalesce),
             latency,
             bandwidth_bytes_per_s,
             drop_prob,
@@ -128,7 +145,9 @@ impl SimFabric {
     /// them — it would need a receiver-context decode — so codec-enabled
     /// property tests assert on the weight column only.
     pub fn in_flight_push_sum_mass(&self) -> (f64, Vec<f64>) {
-        let mut w_total = 0.0f64;
+        // weight held by open (unflushed) coalescing frame builders is in
+        // flight too: the sender shipped it, no receiver has folded it in
+        let mut w_total = self.core.frame_open_mass();
         let mut wx: Vec<f64> = Vec::new();
         for inbox in &self.inboxes {
             for q in inbox.lock().unwrap().iter() {
@@ -151,18 +170,11 @@ impl SimFabric {
         }
         (w_total, wx)
     }
-}
 
-impl Fabric for SimFabric {
-    fn core(&self) -> &FabricCore {
-        &self.core
-    }
-
-    fn is_instant(&self) -> bool {
-        false
-    }
-
-    fn push(
+    /// Queue one message on the link: encode, roll the drop dice, schedule
+    /// serialization + latency, enqueue. Both the public `push` (after
+    /// coalescing) and delivery-generated replies land here.
+    fn push_wire(
         &self,
         shared: &Shared,
         from: usize,
@@ -212,6 +224,45 @@ impl Fabric for SimFabric {
             .unwrap()
             .push(Queued { seq, ready_at, from, step, payload });
         PushOutcome::Queued
+    }
+}
+
+impl Fabric for SimFabric {
+    fn core(&self) -> &FabricCore {
+        &self.core
+    }
+
+    fn is_instant(&self) -> bool {
+        false
+    }
+
+    fn push(
+        &self,
+        shared: &Shared,
+        from: usize,
+        to: usize,
+        step: usize,
+        payload: Payload,
+    ) -> PushOutcome {
+        if self.core.coalesce() && matches!(payload, Payload::LayerPush { .. }) {
+            // step-frame coalescing: buffer this layer in the link's frame
+            // builder; an intermediate push reports Queued, the layer-0
+            // close (and any stale-step flush) ships as one StepFrame
+            let mut last = PushOutcome::Queued;
+            for (fstep, frame) in self.core.coalesce_layer_push(from, to, step, payload) {
+                let open = frame.shipped_weight();
+                let out = self.push_wire(shared, from, to, fstep, frame);
+                if matches!(out, PushOutcome::Dropped) && open > 0.0 {
+                    // the frame owns the step's opening weight — hoisted out
+                    // of a push the caller already saw Queued for — so the
+                    // fabric must refund it; the caller cannot
+                    shared.weights[from].reclaim(open);
+                }
+                last = out;
+            }
+            return last;
+        }
+        self.push_wire(shared, from, to, step, payload)
     }
 
     fn deliver_due(&self, shared: &Shared, wid: usize, recv_step: usize) -> usize {
@@ -299,7 +350,7 @@ impl Fabric for SimFabric {
                 .total_cmp(&b.ready_at)
                 .then(a.seq.cmp(&b.seq))
         });
-        queued
+        let mut out: Vec<InFlight> = queued
             .into_iter()
             .map(|q| InFlight {
                 from: q.from,
@@ -308,7 +359,13 @@ impl Fabric for SimFabric {
                 remaining_s: (q.ready_at - now).max(0.0),
                 payload: q.payload,
             })
-            .collect()
+            .collect();
+        // open frame builders hold not-yet-wired pushes (coalescing runs):
+        // flush them as zero-delay in-flight frames so checkpoints conserve
+        // their clock provenance and push-sum mass. They were buffered after
+        // everything already queued, so they restore last.
+        out.extend(self.core.drain_frames_to(wid));
+        out
     }
 
     fn restore(&self, _shared: &Shared, msgs: Vec<InFlight>) {
@@ -618,5 +675,115 @@ mod tests {
         assert_eq!(fabric.deliver_due(&shared, 1, 0), 0, "30s latency: not due yet");
         assert_eq!(sim.pending_count(), 1);
         assert!(fabric.core().latest_params(1, 0).is_none());
+    }
+
+    /// A 2-worker Shared with `layers` single-tensor layers of `dim` values
+    /// each (worker w starts at `w`), for the coalescing tests.
+    fn layered_shared(fabric: Arc<dyn Fabric>, layers: usize, dim: usize) -> Arc<Shared> {
+        let params = (0..2)
+            .map(|w| {
+                Arc::new(ModelParams {
+                    layers: (0..layers)
+                        .map(|_| {
+                            LayerParams::new(vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                                &[dim],
+                                vec![w as f32; dim],
+                            ))])
+                        })
+                        .collect(),
+                })
+            })
+            .collect();
+        Shared::for_tests(params, fabric)
+    }
+
+    fn lp(layer: usize, open: Option<f32>, dim: usize) -> Payload {
+        Payload::LayerPush {
+            layer,
+            open,
+            values: Arc::new(vec![vec![3.0; dim]]),
+            stamp: crate::tensor::clock::ClockStamp { worker: 0, step: 0, version: 1 },
+            tau: 0,
+        }
+    }
+
+    /// Satellite: with coalescing on, an L-layer step hits the link as ONE
+    /// serialization event instead of L — fewer, larger messages, and
+    /// strictly fewer wire bytes (per-push headers amortize into 24-byte
+    /// frame entries, a net win once L > 4).
+    #[test]
+    fn coalescing_ships_fewer_larger_messages() {
+        use crate::comm::{wire_bytes, FRAME_ENTRY_BYTES};
+        const LAYERS: usize = 8;
+        const DIM: usize = 4;
+        let mut queued = Vec::new();
+        let mut stats = Vec::new();
+        for coalesce in [false, true] {
+            let sim = Arc::new(SimFabric::with_options(
+                LatencyDist::Constant(0.0),
+                1e6,
+                0.0,
+                2,
+                11,
+                Arc::new(crate::comm::codec::DenseCodec),
+                coalesce,
+            ));
+            let fabric: Arc<dyn Fabric> = sim.clone();
+            let shared = layered_shared(Arc::clone(&fabric), LAYERS, DIM);
+            let shipped = shared.weights[0].halve();
+            for layer in (0..LAYERS).rev() {
+                let open = (layer == LAYERS - 1).then_some(shipped);
+                let out = fabric.push(&shared, 0, 1, 0, lp(layer, open, DIM));
+                assert_eq!(out, PushOutcome::Queued);
+            }
+            queued.push(sim.pending_count());
+            stats.push(fabric.core().snapshot());
+        }
+        assert_eq!(queued[0], LAYERS, "uncoalesced: one wire event per layer");
+        assert_eq!(queued[1], 1, "coalesced: the whole step is one event");
+        assert_eq!(stats[0].msgs_sent as usize, LAYERS);
+        assert_eq!(stats[1].msgs_sent, 1);
+        assert_eq!(stats[0].bytes_sent, LAYERS as u64 * wire_bytes(DIM));
+        assert_eq!(
+            stats[1].bytes_sent,
+            wire_bytes(LAYERS * DIM) + LAYERS as u64 * FRAME_ENTRY_BYTES
+        );
+        assert!(stats[1].bytes_sent < stats[0].bytes_sent, "headers amortized");
+    }
+
+    /// The step's opening weight is hoisted out of a push the caller
+    /// already saw `Queued` for; when the closing flush then rolls a drop,
+    /// the FABRIC refunds it — the caller cannot, and must not.
+    #[test]
+    fn dropped_frame_refunds_the_hoisted_opening_weight() {
+        let sim = Arc::new(SimFabric::with_options(
+            LatencyDist::Constant(0.0),
+            0.0,
+            2.0, // every drop-dice roll hits, deterministically
+            2,
+            13,
+            Arc::new(crate::comm::codec::DenseCodec),
+            true,
+        ));
+        let fabric: Arc<dyn Fabric> = sim.clone();
+        let shared = layered_shared(Arc::clone(&fabric), 2, 2);
+
+        let shipped = shared.weights[0].halve(); // 0.5 -> ships 0.25
+        let out = fabric.push(&shared, 0, 1, 0, lp(1, Some(shipped), 2));
+        assert_eq!(out, PushOutcome::Queued, "buffered in the frame builder");
+        assert!((sim.core().frame_open_mass() - shipped as f64).abs() < 1e-9);
+        let (mass, _) = sim.in_flight_push_sum_mass();
+        assert!((mass - shipped as f64).abs() < 1e-9, "builder-held weight is in flight");
+
+        // the layer-0 close flushes the frame; the drop dice eat it
+        let out = fabric.push(&shared, 0, 1, 0, lp(0, None, 2));
+        assert_eq!(out, PushOutcome::Dropped);
+        assert_eq!(sim.pending_count(), 0);
+        assert_eq!(fabric.core().snapshot().msgs_dropped, 1);
+        assert_eq!(sim.core().frame_open_mass(), 0.0);
+        // the caller took `open` at the deepest layer and saw Queued: it
+        // holds nothing to reclaim. The fabric refunded the hoisted weight.
+        let total: f32 = shared.weights.iter().map(|w| w.get()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "mass conserved without caller action");
     }
 }

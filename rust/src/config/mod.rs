@@ -352,6 +352,12 @@ pub struct TrainConfig {
     /// stochastic quantization — every payload kind and every algorithm
     /// inherits it without per-algorithm changes
     pub codec: crate::comm::CodecSpec,
+    /// step-frame coalescing at the fabric boundary (`[fabric] coalesce`,
+    /// `--coalesce`): buffer one step's consecutive `LayerPush`es per link
+    /// and ship them as a single `StepFrame` — one wire header, one codec
+    /// pass over the whole step (global top-k), one delivery event. Default
+    /// off: bit-identical seed curves
+    pub coalesce: bool,
     /// write a `resilience::checkpoint` every k steps (0 = off)
     pub checkpoint_every: usize,
     /// parent directory for periodic checkpoints (`step-XXXXXX` subdirs)
@@ -402,6 +408,7 @@ impl TrainConfig {
             queue_depth: 2,
             fabric: FabricSpec::Instant,
             codec: crate::comm::CodecSpec::Dense,
+            coalesce: false,
             checkpoint_every: 0,
             checkpoint_dir: std::path::PathBuf::from("checkpoints"),
             faults: FaultPlan::default(),
@@ -618,6 +625,8 @@ impl TrainConfig {
         };
         // fabric-boundary compression: "dense" | "topk:K" | "randk:K" | "int8"
         cfg.codec = crate::comm::CodecSpec::parse(doc.str_or("fabric", "codec", "dense"))?;
+        // step-frame coalescing of LayUp's per-layer pushes (default off)
+        cfg.coalesce = doc.bool_or("fabric", "coalesce", false);
 
         // [topology]: cluster roles/routing (flat | ps:N | hier:G)
         cfg.cluster = TopologySpec::parse(doc.str_or("topology", "kind", "flat"))?;
@@ -876,6 +885,16 @@ mod tests {
         assert!(TrainConfig::from_toml(&doc).is_err());
         let doc = Toml::parse("[fabric]\ncodec = \"gzip\"\n").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+
+        // coalesce knob: default off (bit-identical seed path), bool parses,
+        // and it composes with a codec in the same [fabric] section
+        assert!(!d.coalesce);
+        let doc = Toml::parse("[fabric]\ncoalesce = true\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).unwrap().coalesce);
+        let doc = Toml::parse("[fabric]\ncodec = \"topk:8\"\ncoalesce = true\n").unwrap();
+        let cfg = TrainConfig::from_toml(&doc).unwrap();
+        assert!(cfg.coalesce);
+        assert_eq!(cfg.codec, crate::comm::CodecSpec::TopK { k: 8 });
     }
 
     #[test]

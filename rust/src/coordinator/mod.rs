@@ -286,7 +286,13 @@ impl Shared {
         let params: Vec<Arc<ModelParams>> = std::iter::once(Arc::clone(&proto))
             .chain((1..m).map(|_| proto.replica()))
             .collect();
-        let fabric = crate::comm::build_fabric(&cfg.fabric, &cfg.codec, m, cfg.seed ^ 0xfab41c);
+        let fabric = crate::comm::build_fabric(
+            &cfg.fabric,
+            &cfg.codec,
+            cfg.coalesce,
+            m,
+            cfg.seed ^ 0xfab41c,
+        );
         let membership = Arc::clone(fabric.core().membership());
         membership.set_policy(cfg.recovery);
         let weights: Vec<PushSumWeight> =

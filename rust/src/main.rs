@@ -60,6 +60,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "topology",
     "fabric",
     "codec",
+    "coalesce",
     "link-latency",
     "link-drop",
     "link-bandwidth",
@@ -181,6 +182,7 @@ fn print_usage() {
          \x20               [--queue-depth N] [--topology flat|ps:N|hier:G]\n\
          \x20               [--fabric instant|sim] [--link-latency SPEC] [--link-drop P]\n\
          \x20               [--link-bandwidth MBPS] [--codec dense|topk:K|randk:K|int8]\n\
+         \x20               [--coalesce true]\n\
          \x20               [--compensation none|dc] [--dc-lambda F]\n\
          \x20               [--adaptive-mix true] [--mix-beta F]\n\
          \x20               [--ckpt-every K] [--ckpt-dir DIR] [--resume DIR]\n\
@@ -341,6 +343,8 @@ fn build_train_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("codec") {
         cfg.codec = layup::comm::CodecSpec::parse(v)?;
     }
+    // Step-frame coalescing of LayUp's per-layer pushes (default off).
+    cfg.coalesce = args.bool_or("coalesce", cfg.coalesce)?;
     // Telemetry: a trace path implies enabling the recorder.
     if let Some(path) = args.get("trace") {
         cfg.telemetry.trace_path = Some(path.into());

@@ -245,6 +245,12 @@ pub struct CommStats {
     pub msgs_delivered: u64,
     /// sum over delivered messages of (receiver step - sender step)
     pub staleness_sum: i64,
+    /// `StepFrame` messages shipped by the coalescing path (0 with
+    /// `coalesce = false`); each one replaces `frame_layers / frames_sent`
+    /// standalone layer pushes on the wire
+    pub frames_sent: u64,
+    /// layer pushes aggregated into those frames
+    pub frame_layers: u64,
     /// per-link breakdown (links with traffic only, ordered by sender then
     /// receiver)
     pub links: Vec<LinkTraffic>,
@@ -551,6 +557,8 @@ impl RunStats {
             ("comm_dropped", self.comm.msgs_dropped as f64),
             ("comm_delivered", self.comm.msgs_delivered as f64),
             ("comm_mean_staleness", self.comm.mean_delivered_staleness()),
+            ("comm_frames_sent", self.comm.frames_sent as f64),
+            ("comm_frame_layers", self.comm.frame_layers as f64),
             ("stale_applies", self.staleness.total_applies() as f64),
             ("stale_tau_mean", self.staleness.mean_tau()),
             ("stale_tau_max", self.staleness.max_tau() as f64),
@@ -829,6 +837,8 @@ mod tests {
                 msgs_dropped: 1,
                 msgs_delivered: 4,
                 staleness_sum: 8,
+                frames_sent: 0,
+                frame_layers: 0,
                 links: vec![LinkTraffic {
                     from: 0,
                     to: 1,

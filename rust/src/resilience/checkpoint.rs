@@ -43,7 +43,11 @@ use crate::util::json::{num, obj, s, Json};
 /// (tag 7) and per-link error-feedback residuals
 /// (`Checkpoint::residuals`), so a `topk`/`randk` run resumes without
 /// destroying the gradient mass the sparsifier was still holding.
-pub const FORMAT_VERSION: u32 = 4;
+/// v5: step-frame coalescing — `Payload::StepFrame` in-flight messages
+/// (tag 8), including partially built frames the fabric's per-link
+/// `FrameBuilder`s still held at the quiesce (drained as zero-delay
+/// in-flight traffic, conserving clock provenance and push-sum mass).
+pub const FORMAT_VERSION: u32 = 5;
 
 /// Format name written to `meta.json` (self-description).
 pub const FORMAT_NAME: &str = "layup-checkpoint";
@@ -750,6 +754,26 @@ fn encode_payload(p: &Payload, e: &mut Enc) {
             e.u64(c.blob.len() as u64);
             e.buf.extend_from_slice(&c.blob);
         }
+        Payload::StepFrame { open, entries } => {
+            e.u8(8);
+            match open {
+                None => e.bool(false),
+                Some(w) => {
+                    e.bool(true);
+                    e.f32(*w);
+                }
+            }
+            e.u64(entries.len() as u64);
+            for entry in entries.iter() {
+                e.u64(entry.layer as u64);
+                encode_stamp(&entry.stamp, e);
+                e.u64(entry.tau);
+                e.u64(entry.values.len() as u64);
+                for v in entry.values.iter() {
+                    e.f32s(v);
+                }
+            }
+        }
     }
 }
 
@@ -841,6 +865,28 @@ fn decode_payload(d: &mut Dec) -> Result<Payload> {
             let n = d.len()?;
             let blob = Arc::new(d.take(n)?.to_vec());
             Payload::Compressed(Compressed { spec, shipped_w, droppable, blob })
+        }
+        8 => {
+            let open = if d.bool()? { Some(d.f32()?) } else { None };
+            let ne = d.len()?;
+            let mut entries = Vec::with_capacity(ne);
+            for _ in 0..ne {
+                let layer = d.u64()? as usize;
+                let stamp = decode_stamp(d)?;
+                let tau = d.u64()?;
+                let nt = d.len()?;
+                let mut values = Vec::with_capacity(nt);
+                for _ in 0..nt {
+                    values.push(d.f32s()?);
+                }
+                entries.push(crate::comm::FrameEntry {
+                    layer,
+                    stamp,
+                    tau,
+                    values: Arc::new(values),
+                });
+            }
+            Payload::StepFrame { open, entries: Arc::new(entries) }
         }
         tag => bail!("unknown checkpoint payload tag {tag}"),
     })
@@ -962,6 +1008,31 @@ mod tests {
                         blob: Arc::new(vec![3, 0, 0, 0, 0, 7, 255]),
                     }),
                 },
+                InFlight {
+                    from: 1,
+                    to: 0,
+                    step: 10,
+                    // a partial frame drained out of a FrameBuilder at the
+                    // quiesce (v5): zero remaining delay, per-entry stamps
+                    remaining_s: 0.0,
+                    payload: Payload::StepFrame {
+                        open: Some(0.0625),
+                        entries: Arc::new(vec![
+                            crate::comm::FrameEntry {
+                                layer: 1,
+                                stamp: ClockStamp { worker: 1, step: 10, version: 45 },
+                                tau: 2,
+                                values: Arc::new(vec![vec![6.0]]),
+                            },
+                            crate::comm::FrameEntry {
+                                layer: 0,
+                                stamp: ClockStamp { worker: 1, step: 10, version: 46 },
+                                tau: 0,
+                                values: Arc::new(vec![vec![1.5, -1.5], vec![0.25]]),
+                            },
+                        ]),
+                    },
+                },
             ],
             residuals: vec![ResidualState {
                 from: 0,
@@ -1005,6 +1076,19 @@ mod tests {
                     && ca.shipped_w.to_bits() == cb.shipped_w.to_bits()
                     && ca.droppable == cb.droppable
                     && ca.blob == cb.blob
+            }
+            (
+                Payload::StepFrame { open: oa, entries: ea },
+                Payload::StepFrame { open: ob, entries: eb },
+            ) => {
+                oa == ob
+                    && ea.len() == eb.len()
+                    && ea.iter().zip(eb.iter()).all(|(a, b)| {
+                        a.layer == b.layer
+                            && a.stamp == b.stamp
+                            && a.tau == b.tau
+                            && a.values == b.values
+                    })
             }
             _ => false,
         }

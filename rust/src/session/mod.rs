@@ -126,6 +126,38 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable step-frame coalescing at the fabric boundary (`[fabric]
+    /// coalesce` / `--coalesce` equivalent): LayUp's consecutive per-layer
+    /// pushes on a link buffer in a `FrameBuilder` and ship as one
+    /// `StepFrame` — one wire header, one codec pass over the whole step's
+    /// gradient mass (so `topk:K` ranks coordinates globally across
+    /// layers), one delivery event. The default (`false`) keeps per-layer
+    /// pushes and is bit-identical to earlier releases.
+    ///
+    /// ```no_run
+    /// use layup::comm::{CodecSpec, FabricSpec};
+    /// use layup::config::{Algorithm, TrainConfig};
+    /// use layup::manifest::Manifest;
+    /// use layup::session::SessionBuilder;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let manifest = Manifest::load(&layup::artifacts_dir())?;
+    /// let cfg = TrainConfig::new("mlpnet18", Algorithm::LayUp, 8, 500);
+    /// let summary = SessionBuilder::new(cfg)
+    ///     .fabric(FabricSpec::sim_default())
+    ///     .codec(CodecSpec::parse("topk:16")?)
+    ///     .coalesce(true)
+    ///     .build(&manifest)?
+    ///     .run()?;
+    /// println!("wire messages: {}", summary.stats.comm.msgs_sent);
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn coalesce(mut self, on: bool) -> SessionBuilder {
+        self.cfg.coalesce = on;
+        self
+    }
+
     /// Select the cluster topology (`[topology]` config section
     /// equivalent): `TopologySpec::Flat` (default) for homogeneous gossip,
     /// `TopologySpec::Ps { shards }` to turn the last `shards` worker ids

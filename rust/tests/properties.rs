@@ -6,7 +6,8 @@
 use std::sync::Arc;
 
 use layup::comm::{
-    Codec, CodecSpec, Compressed, Fabric, LatencyDist, Payload, PushOutcome, SimFabric,
+    Codec, CodecSpec, Compressed, Fabric, FrameEntry, LatencyDist, Payload, PushOutcome,
+    SimFabric,
 };
 use layup::coordinator::Shared;
 use layup::metrics::{Curve, CurvePoint};
@@ -775,5 +776,369 @@ fn prop_codec_push_sum_weight_mass_conserved_under_drops() {
         }
         let w = mass(&shared, &fabric);
         assert!((w - 1.0).abs() < 1e-3, "weight mass destroyed under topk + drops: {w}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// step-frame coalescing properties (PR 10): frame round-trip, truncation,
+// drain/restore provenance, gradient-stream isolation
+// ---------------------------------------------------------------------------
+
+/// A 2-worker Shared with one single-tensor layer per entry of `sizes`;
+/// returns the per-layer sender and receiver values alongside it.
+fn frame_shared(
+    rng: &mut Pcg32,
+    sizes: &[usize],
+    fabric: Arc<SimFabric>,
+) -> (Arc<Shared>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mk = |layers: &[Vec<f32>]| {
+        Arc::new(ModelParams {
+            layers: layers
+                .iter()
+                .map(|vals| {
+                    LayerParams::new(vec![AtomicTensor::from_tensor(&Tensor::from_vec(
+                        &[vals.len()],
+                        vals.clone(),
+                    ))])
+                })
+                .collect(),
+        })
+    };
+    let a: Vec<Vec<f32>> =
+        sizes.iter().map(|&n| (0..n).map(|_| rng.normal()).collect()).collect();
+    let b: Vec<Vec<f32>> =
+        sizes.iter().map(|&n| (0..n).map(|_| rng.normal()).collect()).collect();
+    let shared = Shared::for_tests(vec![mk(&a), mk(&b)], fabric);
+    (shared, a, b)
+}
+
+/// A whole-step frame with one entry per layer, deepest first (the order the
+/// backward pass produces), carrying the sender's values.
+fn step_frame(open: Option<f32>, sent: &[Vec<f32>], step: u64) -> Payload {
+    let entries: Vec<FrameEntry> = (0..sent.len())
+        .rev()
+        .map(|l| FrameEntry {
+            layer: l,
+            stamp: ClockStamp { worker: 0, step, version: 1 + l as u64 },
+            tau: l as u64,
+            values: Arc::new(vec![sent[l].clone()]),
+        })
+        .collect();
+    Payload::StepFrame { open, entries: Arc::new(entries) }
+}
+
+/// StepFrame round-trip through every codec: dense is the identity;
+/// sparsifiers rank the step's coordinates GLOBALLY — exactly
+/// `ceil(total/K)` sender coordinates across all layers, not per layer —
+/// with the rest filled from the receiver; int8 stays within one
+/// quantization step per 1024-chunk of the concatenated mass. Entry
+/// metadata (layer ids, stamps, τ) round-trips exactly.
+#[test]
+fn prop_step_frame_roundtrip_all_codecs() {
+    prop("frame_roundtrip", 20, |rng| {
+        let sizes =
+            vec![1 + rng.below_usize(80), 1 + rng.below_usize(80), 1 + rng.below_usize(80)];
+        let total: usize = sizes.iter().sum();
+        let fabric = dense_fabric(rng, 2);
+        let (shared, sent, receiver) = frame_shared(rng, &sizes, fabric);
+        let payload = step_frame(None, &sent, 1);
+
+        // dense: the identity — no Compressed wrapper at all
+        let dense = CodecSpec::Dense.build(2, rng.next_u64());
+        match dense.encode(&shared.update_pool, 0, 1, payload.clone()) {
+            Payload::StepFrame { entries, .. } => {
+                for (l, e) in (0..sizes.len()).rev().zip(entries.iter()) {
+                    assert_eq!(e.values[0], sent[l]);
+                }
+            }
+            _ => panic!("dense codec must be the identity"),
+        }
+
+        for spec_str in ["topk:4", "randk:4"] {
+            let spec = CodecSpec::parse(spec_str).unwrap();
+            let codec = spec.build(2, rng.next_u64());
+            let Payload::Compressed(c) =
+                codec.encode(&shared.update_pool, 0, 1, payload.clone())
+            else {
+                panic!("{spec_str} must wrap the frame");
+            };
+            let Payload::StepFrame { open, entries } = c.decode(&shared, 1).unwrap() else {
+                panic!("decode changed the payload kind");
+            };
+            assert!(open.is_none());
+            assert_eq!(entries.len(), sizes.len());
+            let mut from_sender = 0;
+            for (e, l) in entries.iter().zip((0..sizes.len()).rev()) {
+                assert_eq!(e.layer, l, "{spec_str}: entry order scrambled");
+                assert_eq!((e.stamp.worker, e.stamp.version), (0, 1 + l as u64));
+                assert_eq!(e.tau, l as u64);
+                for i in 0..sizes[l] {
+                    let got = e.values[0][i].to_bits();
+                    if got == sent[l][i].to_bits() && sent[l][i].to_bits() != receiver[l][i].to_bits()
+                    {
+                        from_sender += 1;
+                    } else {
+                        assert_eq!(
+                            got,
+                            receiver[l][i].to_bits(),
+                            "{spec_str}: layer {l} coord {i} is neither sender's nor receiver's"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                from_sender,
+                total.div_ceil(4),
+                "{spec_str} must ship exactly ceil(total/K) coordinates ranked across the step"
+            );
+        }
+
+        // int8: one stream over the concatenation, so quantization chunks
+        // span layer boundaries — check against the concatenated order
+        let int8 = CodecSpec::Int8.build(2, rng.next_u64());
+        let Payload::Compressed(c) = int8.encode(&shared.update_pool, 0, 1, payload) else {
+            panic!("int8 must wrap the frame");
+        };
+        let Payload::StepFrame { entries, .. } = c.decode(&shared, 1).unwrap() else {
+            panic!("decode changed the payload kind");
+        };
+        let mut concat_sent: Vec<f32> = Vec::new();
+        let mut concat_got: Vec<f32> = Vec::new();
+        for (e, l) in entries.iter().zip((0..sizes.len()).rev()) {
+            concat_sent.extend_from_slice(&sent[l]);
+            concat_got.extend_from_slice(&e.values[0]);
+        }
+        for (chunk_i, chunk) in concat_sent.chunks(1024).enumerate() {
+            let scale = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let step = scale / 127.0 + 1e-6;
+            for (j, &x) in chunk.iter().enumerate() {
+                let got = concat_got[chunk_i * 1024 + j];
+                assert!((got - x).abs() <= step, "int8 moved {x} to {got} (> one step {step})");
+            }
+        }
+    });
+}
+
+/// All-or-nothing frames: every strict prefix of a compressed StepFrame
+/// blob fails to decode, and a truncated frame on the fabric is rejected at
+/// delivery with the step's opening push-sum weight refunded to the sender
+/// and the receiver's replica untouched — a frame aggregates a whole step,
+/// so a partial apply would desynchronize layers within one step.
+#[test]
+fn prop_step_frame_truncated_blob_rejects_whole_frame_and_refunds() {
+    prop("frame_truncation", 10, |rng| {
+        let sizes = vec![2 + rng.below_usize(40), 2 + rng.below_usize(40)];
+        let codec = CodecSpec::parse("topk:4").unwrap().build(2, rng.next_u64());
+        let fabric = Arc::new(SimFabric::with_codec(
+            LatencyDist::Constant(0.0),
+            0.0,
+            0.0,
+            2,
+            rng.next_u64(),
+            Arc::clone(&codec),
+        ));
+        let (shared, sent, _) = frame_shared(rng, &sizes, fabric);
+        let receiver_before = shared.params[1].flatten();
+
+        let shipped = shared.weights[0].halve();
+        let Payload::Compressed(c) =
+            codec.encode(&shared.update_pool, 0, 1, step_frame(Some(shipped), &sent, 2))
+        else {
+            panic!("topk must wrap the frame");
+        };
+        assert_eq!(c.shipped_w, shipped, "opening weight rides the wrapper in the clear");
+        // every strict prefix is rejected before any layer lands
+        for cut in 0..c.blob.len() {
+            let trunc = Compressed {
+                spec: c.spec.clone(),
+                shipped_w: c.shipped_w,
+                droppable: c.droppable,
+                blob: Arc::new(c.blob[..cut].to_vec()),
+            };
+            assert!(trunc.decode(&shared, 1).is_err(), "prefix of {cut} bytes decoded");
+        }
+
+        // on the fabric: rejected at delivery, weight refunded, no write
+        let cut = rng.below_usize(c.blob.len());
+        let mangled = Payload::Compressed(Compressed {
+            spec: c.spec.clone(),
+            shipped_w: c.shipped_w,
+            droppable: c.droppable,
+            blob: Arc::new(c.blob[..cut].to_vec()),
+        });
+        assert_eq!(shared.fabric.push(&shared, 0, 1, 2, mangled), PushOutcome::Queued);
+        assert_eq!(shared.fabric.deliver_due(&shared, 1, 3), 0, "truncated frame must not apply");
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-5, "opening weight not refunded: {total}");
+        assert_eq!(
+            shared.params[1].flatten(),
+            receiver_before,
+            "a truncated frame must never partially write the receiver's replica"
+        );
+    });
+}
+
+/// Checkpoint quiesce with coalescing on: a frame still OPEN in the link's
+/// builder drains as one zero-delay in-flight StepFrame (mass conserved,
+/// nothing double-counted), and after restore+delivery the receiver carries
+/// the sender's clock provenance. The step then RESUMES: its closing
+/// layer-0 push flushes as a second frame that must find the mixing
+/// fraction the opening frame established — the step mixes whole even when
+/// a checkpoint splits it across two frames.
+#[test]
+fn prop_coalesced_drain_restore_conserves_frame_provenance_and_mass() {
+    prop("frame_drain_restore", 15, |rng| {
+        let dims = vec![2 + rng.below_usize(6), 2 + rng.below_usize(6)];
+        let fabric = Arc::new(SimFabric::with_options(
+            LatencyDist::Constant(0.0),
+            0.0,
+            0.0,
+            2,
+            rng.next_u64(),
+            CodecSpec::Dense.build(2, rng.next_u64()),
+            true,
+        ));
+        let (shared, sent, receiver) = frame_shared(rng, &dims, fabric.clone());
+        let step = 4 + rng.below_usize(20);
+
+        // the step opens: its deepest layer buffers in the frame builder
+        let shipped = shared.weights[0].halve();
+        let out = shared.fabric.push(
+            &shared,
+            0,
+            1,
+            step,
+            Payload::LayerPush {
+                layer: 1,
+                open: Some(shipped),
+                values: Arc::new(vec![sent[1].clone()]),
+                stamp: ClockStamp { worker: 0, step: step as u64, version: 2 },
+                tau: 1,
+            },
+        );
+        assert_eq!(out, PushOutcome::Queued);
+        assert_eq!(fabric.pending_count(), 0, "builder-held, not yet on the link");
+        let (mass, _) = fabric.in_flight_push_sum_mass();
+        assert!((mass - shipped as f64).abs() < 1e-9, "builder weight is in flight");
+
+        // checkpoint quiesce mid-step: the open frame leaves the builder
+        let msgs = shared.fabric.drain(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!((msgs[0].from, msgs[0].to, msgs[0].step), (0, 1, step));
+        assert_eq!(msgs[0].remaining_s, 0.0, "builder frames drain with zero delay left");
+        match &msgs[0].payload {
+            Payload::StepFrame { open, entries } => {
+                assert_eq!(*open, Some(shipped));
+                assert_eq!(entries.len(), 1);
+                assert_eq!(entries[0].layer, 1);
+                assert_eq!((entries[0].stamp.worker, entries[0].stamp.step), (0, step as u64));
+            }
+            _ => panic!("expected the open StepFrame on the drained link"),
+        }
+        assert_eq!(fabric.core().frame_open_mass(), 0.0, "drained weight left the builder");
+
+        shared.fabric.restore(&shared, msgs);
+        assert_eq!(shared.fabric.deliver_due(&shared, 1, step), 1);
+        let frac = shipped / (0.5 + shipped);
+        let got = shared.params[1].layers[1].clock.stamp();
+        assert_eq!((got.worker, got.step), (0, step as u64), "sender provenance survives");
+        for (i, v) in shared.params[1].layers[1].tensors[0].snapshot().data.iter().enumerate() {
+            let want = (1.0 - frac) * receiver[1][i] + frac * sent[1][i];
+            assert!((v - want).abs() < 1e-6, "layer 1 coord {i}: {v} vs {want}");
+        }
+
+        // the step resumes: the closing layer-0 push flushes immediately
+        // and must mix with the SAME fraction the opening frame established
+        let out = shared.fabric.push(
+            &shared,
+            0,
+            1,
+            step,
+            Payload::LayerPush {
+                layer: 0,
+                open: None,
+                values: Arc::new(vec![sent[0].clone()]),
+                stamp: ClockStamp { worker: 0, step: step as u64, version: 3 },
+                tau: 0,
+            },
+        );
+        assert_eq!(out, PushOutcome::Queued);
+        assert_eq!(shared.fabric.deliver_due(&shared, 1, step + 1), 1);
+        for (i, v) in shared.params[1].layers[0].tensors[0].snapshot().data.iter().enumerate() {
+            let want = (1.0 - frac) * receiver[0][i] + frac * sent[0][i];
+            assert!((v - want).abs() < 1e-6, "split step must still mix layer 0: {v} vs {want}");
+        }
+        let got = shared.params[1].layers[0].clock.stamp();
+        assert_eq!((got.worker, got.step), (0, step as u64));
+        let total = shared.weights[0].get() + shared.weights[1].get();
+        assert!((total - 1.0).abs() < 1e-5, "mass conserved across the split step: {total}");
+    });
+}
+
+/// Frames are State-class streams: interleaving compressed StepFrames on a
+/// link must not touch the gradient error-feedback residuals riding the
+/// same link — the EF conservation invariant holds exactly as without
+/// frames, and every residual stream still belongs to the gradient tag.
+#[test]
+fn prop_grad_error_feedback_unclobbered_by_interleaved_frames() {
+    prop("frame_ef_isolation", 15, |rng| {
+        let n = 2 + rng.below_usize(120);
+        let fabric = dense_fabric(rng, 2);
+        let (shared, _, _) = codec_shared(rng, n, fabric);
+        let codec = CodecSpec::parse("topk:4").unwrap().build(2, rng.next_u64());
+        let mut r_before = vec![0.0f32; n];
+        for _round in 0..6 {
+            // a whole-step frame rides the same link between gradient
+            // messages — a State-class stream with no residual of its own
+            let frame_vals = vec![(0..n).map(|_| rng.normal()).collect::<Vec<f32>>()];
+            let Payload::Compressed(c) =
+                codec.encode(&shared.update_pool, 0, 1, step_frame(None, &frame_vals, 3))
+            else {
+                panic!("topk must wrap the frame");
+            };
+            c.decode(&shared, 1).unwrap();
+
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let payload = Payload::GradShare {
+                set: Arc::new(vec![vec![Tensor::from_vec(&[n], x.clone())]]),
+            };
+            let Payload::Compressed(c) = codec.encode(&shared.update_pool, 0, 1, payload)
+            else {
+                panic!("topk must wrap the gradient");
+            };
+            let Payload::GradShare { set } = c.decode(&shared, 1).unwrap() else {
+                panic!("decode changed the payload kind");
+            };
+            let delivered = &set[0][0].data;
+            let state = codec.residual_state();
+            let link = state
+                .iter()
+                .find(|s| s.from == 0 && s.to == 1)
+                .expect("link 0->1 accumulated a residual");
+            let (_, r_after) = &link.streams[0];
+            for i in 0..n {
+                let y = x[i] + r_before[i];
+                if delivered[i].to_bits() == 0.0f32.to_bits() && r_after[i] != 0.0 {
+                    assert_eq!(
+                        r_after[i].to_bits(),
+                        y.to_bits(),
+                        "unsent coordinate {i} must sit in the residual bit-exactly"
+                    );
+                } else {
+                    assert_eq!(
+                        delivered[i].to_bits(),
+                        y.to_bits(),
+                        "sent coordinate {i} must ship the accumulated value"
+                    );
+                }
+            }
+            r_before = r_after.clone();
+        }
+        // frames never grew a residual stream: every key is the grad tag
+        for link in codec.residual_state() {
+            for (key, _) in &link.streams {
+                assert_eq!(key.tag, 3, "State-class frame stream leaked into the EF residuals");
+            }
+        }
     });
 }
